@@ -1,0 +1,58 @@
+//! Quickstart: quantize one LLM-like weight matrix with block-wise NF4 and
+//! with LoRDS at the same parameter budget, and watch LoRDS win after
+//! Algorithm-1 refinement.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use lords::quant::error::{quant_error_nuclear, reduction_ratio_vs};
+use lords::quant::lords::{LordsQuant, RefineCfg};
+use lords::quant::{BlockwiseQuant, Codebook, QuantizedLinear};
+use lords::report::testbed::{llm_like_weight, ModuleShape};
+use lords::util::Rng;
+
+fn main() {
+    // An out-projection-shaped weight with realistic outlier channels.
+    let mut rng = Rng::new(42);
+    let w = llm_like_weight(ModuleShape { name: "Q", n: 256, m: 256 }, &mut rng);
+    let block = 64;
+    let nf4 = Codebook::normal_float(4);
+
+    // --- the baseline the paper breaks: block-wise NF4 -------------------
+    let bw = BlockwiseQuant::quantize(&w, block, &nf4);
+    let e_bw = quant_error_nuclear(&w, &bw.dequantize());
+    println!("block-wise NF4 : nuclear err {e_bw:8.3}  float params {}", bw.float_params());
+
+    // --- LoRDS: SVD init only (recovers block-wise statistics) -----------
+    let (init, _) = LordsQuant::quantize(&w, block, &nf4, RefineCfg { steps: 0, ..Default::default() });
+    let e_init = quant_error_nuclear(&w, &init.dequantize());
+    println!(
+        "LoRDS @ init   : nuclear err {e_init:8.3}  float params {} (rank {})",
+        init.float_params(),
+        init.rank
+    );
+
+    // --- LoRDS after iterative refinement (Algorithm 1) ------------------
+    let (refined, report) =
+        LordsQuant::quantize(&w, block, &nf4, RefineCfg { steps: 300, lr: 0.05, requant_every: 5 });
+    let e_ref = quant_error_nuclear(&w, &refined.dequantize());
+    println!(
+        "LoRDS refined  : nuclear err {e_ref:8.3}  (frobenius {:.4} → {:.4} over {} steps)",
+        report.initial_frob,
+        report.final_frob,
+        report.trace.last().map(|t| t.0).unwrap_or(0),
+    );
+    println!(
+        "reduction ratio vs NF4: {:.1}%  (paper Table 8 reports ~6-12% at 4-bit)",
+        reduction_ratio_vs(&w, &refined.dequantize(), &bw.dequantize())
+    );
+
+    // --- the fused inference kernel --------------------------------------
+    let x = lords::tensor::Matrix::randn(8, 256, 1.0, &mut rng);
+    let y = refined.matmul_transb(&x);
+    println!("fused y = x·Ŵᵀ: {}x{} (no dense Ŵ materialized)", y.rows, y.cols);
+
+    assert!(e_ref < e_bw, "LoRDS must beat block-wise at parity budget");
+    println!("\nOK: LoRDS beats block-wise NF4 at the same scale-parameter budget.");
+}

@@ -1,0 +1,62 @@
+//! Serve batched requests against a LoRDS-quantized model through the
+//! coordinator (router → dynamic batcher → KV admission → prefill/decode),
+//! via the PJRT artifact engine when `artifacts/` exists, falling back to
+//! the native engine otherwise. Prints latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_quantized
+//! ```
+
+use lords::config::ServeCfg;
+use lords::coordinator::{NativeEngine, PjrtEngine, Request, Server};
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::testbed::{model_zoo, Testbed};
+use lords::runtime::executor::Executor;
+use lords::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    lords::util::logging::init();
+    let mut rng = Rng::new(0);
+    let n_requests = 12;
+    let max_new = 24;
+
+    match Executor::spawn("artifacts") {
+        Ok(exec) => {
+            println!("engine: PJRT (AOT Pallas artifacts)");
+            let manifest = lords::runtime::Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
+            let cfg = manifest.model.clone();
+            let tb = Testbed::build("llama3-mini", &cfg, 120, 0);
+            let mut model = tb.model.clone();
+            let cb = Codebook::from_levels(&manifest.lut_name, manifest.lut.clone());
+            model.quantize_lords(cfg.block, &cb, RefineCfg { steps: 30, ..Default::default() }, false);
+            let art = manifest.artifact("lords_prefill_b1").map_err(anyhow::Error::msg)?;
+            let params = lords::runtime::bridge::collect_params(&model, &art.inputs);
+            let engine = PjrtEngine::new(exec.handle(), &manifest, "lords", params)?;
+            let plen = engine.prefill_seq;
+            let reqs: Vec<Request> = (0..n_requests)
+                .map(|i| Request::new(i as u64, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), max_new))
+                .collect();
+            let mut server = Server::new(engine, ServeCfg::default());
+            let report = server.run(reqs)?;
+            report.metrics.print(&report.engine);
+            println!("first completion: {:?}", &report.responses[0].tokens[..8.min(report.responses[0].tokens.len())]);
+        }
+        Err(e) => {
+            println!("engine: native (PJRT unavailable: {e})");
+            let (name, cfg) = model_zoo().remove(0);
+            let tb = Testbed::build(name, &cfg, 120, 0);
+            let mut model = tb.model.clone();
+            let cb = Codebook::normal_float(4);
+            model.quantize_lords(cfg.block, &cb, RefineCfg { steps: 30, ..Default::default() }, false);
+            let plen = cfg.max_seq / 2;
+            let reqs: Vec<Request> = (0..n_requests)
+                .map(|i| Request::new(i as u64, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), max_new))
+                .collect();
+            let mut server = Server::new(NativeEngine::new(model, "lords"), ServeCfg::default());
+            let report = server.run(reqs)?;
+            report.metrics.print(&report.engine);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,330 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts + manifest for Rust.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(``rust/src/runtime``) loads the HLO text via ``HloModuleProto::from_text_file``,
+compiles it on the PJRT CPU client and executes it on the request path.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact inventory
+------------------
+* serving:   ``{mode}_prefill_b{B}`` / ``{mode}_decode_b{B}`` for
+  mode ∈ {lords, nf4, qlora} — the Table-6 three-way comparison, executed by
+  the Rust coordinator with bucketed batch shapes.
+* eval:      ``{mode}_forward`` + ``fp_forward`` — perplexity scoring.
+* training:  ``fp_step`` (testbed pre-training), ``qat_step`` (STE joint
+  W/B/A), ``peft_step`` (B/A only) — loss+grads; AdamW lives in Rust.
+* kernels:   ``{kind}_mm_m{M}`` micro-benchmarks for Figure 2 (LoRDS /
+  blockwise-NF4 / QLoRA Pallas kernels + an fp GEMM roofline reference).
+
+Every artifact is described in ``manifest.txt``: input/output names, dtypes
+and shapes in execution order, plus the model config and the exact codebook
+the codes were produced against. The manifest is the single source of truth
+for the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.blockwise_matmul import blockwise_matmul
+from .kernels.lords_matmul import lords_matmul
+from .kernels.qlora_matmul import qlora_matmul
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big constants as ``{...}``, which the downstream text parser silently
+    reads back as zeros — poisoning any artifact with a baked-in codebook
+    LUT (caught by rust/tests/runtime_roundtrip.rs).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+class ManifestWriter:
+    """Accumulates artifact descriptions and writes ``manifest.txt``."""
+
+    def __init__(self, outdir: str, cfg: M.ModelConfig):
+        self.outdir = outdir
+        self.lines = []
+        self.cfg = cfg
+        self.lines.append("# lords-artifacts v1")
+        self.lines.append(
+            f"model vocab={cfg.vocab} d_model={cfg.d_model} n_layers={cfg.n_layers} "
+            f"n_heads={cfg.n_heads} d_ff={cfg.d_ff} max_seq={cfg.max_seq} "
+            f"block={cfg.block} codebook={cfg.codebook} qlora_rank={M.QLORA_RANK}"
+        )
+        lut = ref.codebook(cfg.codebook)
+        self.lines.append("lut " + cfg.codebook + " " + ",".join(f"{v:.9g}" for v in lut))
+
+    def add(self, name: str, fname: str, ins, outs):
+        self.lines.append(f"artifact {name} {fname}")
+        for nm, dt, shape in ins:
+            dims = ",".join(str(d) for d in shape) if shape else "scalar"
+            self.lines.append(f"in {nm} {_dtype_tag(dt)} {dims}")
+        for nm, dt, shape in outs:
+            dims = ",".join(str(d) for d in shape) if shape else "scalar"
+            self.lines.append(f"out {nm} {_dtype_tag(dt)} {dims}")
+        self.lines.append("end")
+
+    def write(self):
+        path = os.path.join(self.outdir, "manifest.txt")
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+        print(f"[aot] wrote {path}")
+
+
+def lower_artifact(mw: ManifestWriter, name: str, fn, in_specs, force: bool):
+    """Lower ``fn(*flat_inputs)`` and persist HLO text + manifest entry.
+
+    in_specs: list of (name, dtype, shape). fn must accept the flat inputs
+    positionally and return a flat tuple; output specs are derived from the
+    lowered signature.
+    """
+    fname = f"{name}.hlo.txt"
+    path = os.path.join(mw.outdir, fname)
+    avals = [jax.ShapeDtypeStruct(shape, dt) for (_, dt, shape) in in_specs]
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*avals)
+    out_avals = jax.eval_shape(fn, *avals)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    outs = [(f"out{i}", a.dtype, a.shape) for i, a in enumerate(out_avals)]
+    if force or not os.path.exists(path):
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {name}: {len(text)/1e3:.0f} kB in {time.time()-t0:.1f}s")
+    else:
+        print(f"[aot] {name}: exists, skipped")
+    mw.add(name, fname, in_specs, outs)
+
+
+# ---------------------------------------------------------------------------
+# Model artifact builders
+# ---------------------------------------------------------------------------
+
+MODE_NAMES = {
+    "lords": (M.quant_param_names, M.quant_param_shape),
+    "nf4": (M.nf4_param_names, M.nf4_param_shape),
+    "qlora": (M.qlora_param_names, M.qlora_param_shape),
+}
+
+
+def _param_specs(cfg, names_fn, shape_fn):
+    specs = []
+    for n in names_fn(cfg):
+        dt = jnp.int32 if n.endswith(".codes") else jnp.float32
+        specs.append((n, dt, shape_fn(cfg, n)))
+    return specs
+
+
+def build_serving(mw, cfg, mode, prefill_batches, decode_batches, seq, force):
+    names_fn, shape_fn = MODE_NAMES[mode]
+    pspecs = _param_specs(cfg, names_fn, shape_fn)
+    nparams = len(pspecs)
+
+    for b in prefill_batches:
+        def prefill_fn(*flat, _b=b):
+            qparams = dict(zip([s[0] for s in pspecs], flat[:nparams]))
+            tokens = flat[nparams]
+            return M.prefill_mode(cfg, mode, qparams, tokens)
+
+        ins = pspecs + [("tokens", jnp.int32, (b, seq))]
+        lower_artifact(mw, f"{mode}_prefill_b{b}", prefill_fn, ins, force)
+
+    cache_shape = (cfg.n_layers, None, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    for b in decode_batches:
+        cs = tuple(b if d is None else d for d in cache_shape)
+
+        def decode_fn(*flat, _b=b):
+            qparams = dict(zip([s[0] for s in pspecs], flat[:nparams]))
+            token, kc, vc, cur = flat[nparams:]
+            return M.decode_mode(cfg, mode, qparams, token, kc, vc, cur)
+
+        ins = pspecs + [
+            ("token", jnp.int32, (b, 1)),
+            ("k_cache", jnp.float32, cs),
+            ("v_cache", jnp.float32, cs),
+            ("cur", jnp.int32, ()),
+        ]
+        lower_artifact(mw, f"{mode}_decode_b{b}", decode_fn, ins, force)
+
+
+def build_eval(mw, cfg, batch, seq, force):
+    # fp forward (the unquantized reference row of Tables 1/4)
+    fp_specs = [(n, jnp.float32, M.param_shape(cfg, n)) for n in M.param_names(cfg)]
+    nfp = len(fp_specs)
+
+    def fp_fwd(*flat):
+        params = dict(zip([s[0] for s in fp_specs], flat[:nfp]))
+        return (M.forward(cfg, params, flat[nfp]),)
+
+    lower_artifact(mw, "fp_forward", fp_fwd,
+                   fp_specs + [("tokens", jnp.int32, (batch, seq))], force)
+
+    for mode in ("lords", "nf4", "qlora"):
+        names_fn, shape_fn = MODE_NAMES[mode]
+        pspecs = _param_specs(cfg, names_fn, shape_fn)
+        np_ = len(pspecs)
+
+        def fwd(*flat, _mode=mode, _pspecs=pspecs, _np=np_):
+            qparams = dict(zip([s[0] for s in _pspecs], flat[:_np]))
+            return (M.forward_mode(cfg, _mode, qparams, flat[_np]),)
+
+        lower_artifact(mw, f"{mode}_forward", fwd,
+                       pspecs + [("tokens", jnp.int32, (batch, seq))], force)
+
+
+def build_training(mw, cfg, batch, seq, force):
+    tok = [("tokens", jnp.int32, (batch, seq)), ("targets", jnp.int32, (batch, seq))]
+
+    # fp pre-training step
+    fp_names = M.param_names(cfg)
+    fp_specs = [(n, jnp.float32, M.param_shape(cfg, n)) for n in fp_names]
+    fp_fn = M.fp_grad_fn(cfg)
+
+    def fp_step(*flat):
+        return fp_fn(list(flat[: len(fp_specs)]), flat[-2], flat[-1])
+
+    lower_artifact(mw, "fp_step", fp_step, fp_specs + tok, force)
+
+    # QAT step (STE)
+    qat_names = M.qat_param_names(cfg)
+    qat_specs = []
+    for n in qat_names:
+        shape = M.quant_param_shape(cfg, n) if (n.endswith(".B") or n.endswith(".A")) \
+            else M.param_shape(cfg, n)
+        qat_specs.append((n, jnp.float32, shape))
+    qat_fn = M.qat_grad_fn(cfg)
+
+    def qat_step(*flat):
+        return qat_fn(list(flat[: len(qat_specs)]), flat[-2], flat[-1])
+
+    lower_artifact(mw, "qat_step", qat_step, qat_specs + tok, force)
+
+    # PEFT step (B/A only, frozen codes)
+    peft_specs = _param_specs(cfg, M.quant_param_names, M.quant_param_shape)
+    peft_fn = M.peft_grad_fn(cfg)
+
+    def peft_step(*flat):
+        return peft_fn(list(flat[: len(peft_specs)]), flat[-2], flat[-1])
+
+    lower_artifact(mw, "peft_step", peft_step, peft_specs + tok, force)
+
+
+def build_kernels(mw, cfg, m_sweep, n, m, force):
+    """Figure-2 micro-benchmark kernels at the scaled q_proj shape."""
+    block = cfg.block
+    r = ref.parity_rank(n, m, block)
+    lut = ref.codebook(cfg.codebook)
+    llen = len(lut)
+
+    for mm in m_sweep:
+        ins_common = [("x", jnp.float32, (mm, m)), ("codes", jnp.int32, (n, m))]
+        lut_spec = ("lut", jnp.float32, (llen,))
+
+        def lords_fn(x, codes, b, a, lutv):
+            return (lords_matmul(x, codes, b, a, lutv),)
+
+        lower_artifact(mw, f"lords_mm_m{mm}", lords_fn,
+                       ins_common + [("B", jnp.float32, (n, r)),
+                                     ("A", jnp.float32, (r, m)), lut_spec], force)
+
+        def nf4_fn(x, codes, scales, lutv):
+            return (blockwise_matmul(x, codes, scales, lutv, block=block),)
+
+        lower_artifact(mw, f"nf4_mm_m{mm}", nf4_fn,
+                       ins_common + [("scales", jnp.float32, (n, m // block)), lut_spec],
+                       force)
+
+        def qlora_fn(x, codes, scales, la, lb, lutv):
+            return (qlora_matmul(x, codes, scales, la, lb, lutv, block=block),)
+
+        lower_artifact(mw, f"qlora_mm_m{mm}", qlora_fn,
+                       ins_common + [("scales", jnp.float32, (n, m // block)),
+                                     ("lora_a", jnp.float32, (M.QLORA_RANK, m)),
+                                     ("lora_b", jnp.float32, (n, M.QLORA_RANK)), lut_spec],
+                       force)
+
+        def fp_fn(x, w):
+            return (x @ w.T,)
+
+        lower_artifact(mw, f"fp_mm_m{mm}", fp_fn,
+                       [("x", jnp.float32, (mm, m)), ("w", jnp.float32, (n, m))], force)
+
+
+# ---------------------------------------------------------------------------
+# Presets + main
+# ---------------------------------------------------------------------------
+
+PRESETS = {
+    # the main testbed: ~7M params, 4 layers — big enough for real PPL
+    # separation between quant methods, small enough for CPU serving.
+    "default": M.ModelConfig(vocab=512, d_model=256, n_layers=4, n_heads=4,
+                             d_ff=512, max_seq=256, block=64, codebook="nf4"),
+    # minutes-fast preset used by pytest to validate the AOT path end-to-end.
+    "mini": M.ModelConfig(vocab=64, d_model=32, n_layers=1, n_heads=2,
+                          d_ff=64, max_seq=32, block=16, codebook="nf4"),
+}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--outdir", default="../artifacts")
+    p.add_argument("--preset", default="default", choices=sorted(PRESETS))
+    p.add_argument("--force", action="store_true", help="re-lower even if file exists")
+    p.add_argument("--only", default="", help="comma list: serving,eval,training,kernels")
+    args = p.parse_args(argv)
+
+    cfg = PRESETS[args.preset]
+    os.makedirs(args.outdir, exist_ok=True)
+    mw = ManifestWriter(args.outdir, cfg)
+
+    only = set(args.only.split(",")) if args.only else {"serving", "eval", "training", "kernels"}
+    seq = min(128, cfg.max_seq // 2)
+    if "serving" in only:
+        for mode in ("lords", "nf4", "qlora"):
+            build_serving(mw, cfg, mode, prefill_batches=(1, 2, 4),
+                          decode_batches=(1, 2, 4, 8), seq=seq, force=args.force)
+    if "eval" in only:
+        build_eval(mw, cfg, batch=4, seq=seq, force=args.force)
+    if "training" in only:
+        build_training(mw, cfg, batch=8, seq=seq, force=args.force)
+    if "kernels" in only:
+        n = m = 512 if cfg.d_model >= 128 else 64
+        build_kernels(mw, cfg, m_sweep=(64, 256, 1024, 4096) if cfg.d_model >= 128 else (16,),
+                      n=n, m=m, force=args.force)
+    mw.write()
+    print(f"[aot] done: preset={args.preset} outdir={args.outdir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels and their pure-jnp reference oracles.
+
+* ``lords_matmul``     — fused LoRDS dequant-matmul ``x · (Q ⊙ (BA))ᵀ``.
+* ``blockwise_matmul`` — block-wise NF4 baseline (bitsandbytes stand-in).
+* ``qlora_matmul``     — block-wise base + unmergeable additive adapter.
+* ``ref``              — straight-line jnp oracles + codebooks + metrics.
+"""
+
+from . import ref  # noqa: F401
+from .blockwise_matmul import blockwise_matmul  # noqa: F401
+from .lords_matmul import lords_matmul  # noqa: F401
+from .qlora_matmul import qlora_matmul  # noqa: F401

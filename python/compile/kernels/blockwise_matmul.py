@@ -1,0 +1,71 @@
+"""L1 — baseline block-wise (bitsandbytes-NF4 style) dequant-matmul kernel.
+
+``y = x · (lut[Q] ⊙ (s ⊗ 1_{1×B}))ᵀ`` with per-block absmax scales — the
+piecewise-constant scaling LoRDS "breaks". Serves as the bnb-NF4 baseline
+of Figure 2 / Table 6 and as the base path of the QLoRA kernel.
+
+The K tile is constrained to a multiple of the quant block size so each
+grid step sees whole scale blocks; dequantization is then a broadcasted
+multiply of the staged code tile by the repeated scale tile in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .lords_matmul import _tile, DEFAULT_BM, DEFAULT_BN, DEFAULT_BK
+
+
+def _blockwise_kernel(x_ref, q_ref, s_ref, lut_ref, o_ref, *, block):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s_tile = jnp.repeat(s_ref[...], block, axis=1)  # (bn, bk) piecewise-constant
+    w_tile = jnp.take(lut_ref[...], q_ref[...], axis=0) * s_tile
+    o_ref[...] += jnp.dot(x_ref[...], w_tile.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bm", "bn", "bk"))
+def blockwise_matmul(x, codes, scales, lut, *, block,
+                     bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """y[M,n] = x[M,m] · dequant(codes, scales)ᵀ with block-wise scaling.
+
+    Args:
+      x: f32[M, m] activations.
+      codes: int32[n, m] codebook indices.
+      scales: f32[n, m/block] per-block absmax scales.
+      lut: f32[L] codebook.
+      block: quantization block size B (must divide m).
+    """
+    mm, m = x.shape
+    n, m2 = codes.shape
+    assert m == m2 and m % block == 0 and scales.shape == (n, m // block)
+
+    bm = _tile(mm, bm)
+    bn = _tile(n, bn)
+    # K tile must be a multiple of the scale block.
+    bk = max(block, _tile(m, max(bk, block)))
+    while m % bk != 0 or bk % block != 0:
+        bk -= block
+    grid = (mm // bm, n // bn, m // bk)
+
+    return pl.pallas_call(
+        functools.partial(_blockwise_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),             # x
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),             # codes
+            pl.BlockSpec((bn, bk // block), lambda i, j, k: (j, k)),    # scales
+            pl.BlockSpec((lut.shape[0],), lambda i, j, k: (0,)),        # codebook
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, n), jnp.float32),
+        interpret=True,
+    )(x, codes, scales, lut)

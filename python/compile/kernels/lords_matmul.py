@@ -1,0 +1,116 @@
+"""L1 — the LoRDS fused dequant-matmul Pallas kernel.
+
+Computes ``y = x · (Q ⊙ (BA))ᵀ`` without ever materializing the full
+``n × m`` scale matrix ``S = BA`` in HBM: each grid step reconstructs only
+the ``(bn, bk)`` tile of ``S`` it needs, as a rank-r MXU matmul of a ``B``
+row-tile with an ``A`` column-tile held in VMEM.
+
+Hardware adaptation (paper: Triton/CUDA → here: Pallas/TPU)
+-----------------------------------------------------------
+The paper's Triton kernel stages int4 codes + per-block scales in shared
+memory and fuses dequantization into the GEMM main loop of a threadblock
+tile. On TPU the same insight maps to:
+
+* threadblock (M, N) tile + K loop  →  3-D Pallas grid ``(M/bm, N/bn, K/bk)``
+  with the K axis innermost; the HBM↔VMEM schedule the paper wrote with
+  ``cp.async`` is expressed declaratively by the ``BlockSpec`` index maps.
+* shared-memory staging                →  VMEM residency of the ``Q`` code
+  tile, the ``B`` row-tile (bn × r) and the ``A`` column-tile (r × bk).
+* tensor-core WMMA on dequantized fragments → an MXU matmul
+  ``x_tile @ Ŵ_tileᵀ`` in f32 (bf16 on real hardware).
+
+The only extra work LoRDS adds over plain block-wise dequant is the rank-r
+outer product ``B_tile @ A_tile`` — O(r · bn · bk) MACs with r ≤ 24 — which
+is why its latency tracks bitsandbytes-NF4 and beats QLoRA's extra adapter
+GEMM (Figure 2 / Table 6).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for the Rust runtime;
+real-TPU performance is estimated structurally in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. bn/bk are multiples of the MXU lane width (128) on
+# real hardware; trimmed automatically for small problem sizes.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _tile(dim: int, block: int) -> int:
+    """Largest tile ≤ block that divides dim (keeps the grid exact)."""
+    t = min(dim, block)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _lords_kernel(x_ref, q_ref, b_ref, a_ref, lut_ref, o_ref, *, nsteps_k):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] · (lut[q[j,k]] ⊙ (B[j] A[k]))ᵀ."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Rank-r reconstruction of this tile of the scaling manifold: S = BA.
+    s_tile = b_ref[...] @ a_ref[...]  # (bn, bk), r-deep MXU matmul
+    # Codebook gather + elementwise scale = dequantized weight tile in VMEM.
+    w_tile = jnp.take(lut_ref[...], q_ref[...], axis=0) * s_tile
+    o_ref[...] += jnp.dot(x_ref[...], w_tile.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def lords_matmul(x, codes, b, a, lut, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """y[M,n] = x[M,m] · (lut[codes] ⊙ (b @ a))ᵀ, tiled LoRDS dequant-matmul.
+
+    Args:
+      x: activations, f32[M, m].
+      codes: quantized weight codes, int32[n, m] (indices into ``lut``).
+      b: scale factor, f32[n, r].
+      a: scale factor, f32[r, m].
+      lut: codebook levels, f32[L].
+    """
+    mm, m = x.shape
+    n, m2 = codes.shape
+    r = b.shape[1]
+    assert m == m2 and b.shape == (n, r) and a.shape == (r, m), (x.shape, codes.shape, b.shape, a.shape)
+
+    bm, bn, bk = _tile(mm, bm), _tile(n, bn), _tile(m, bk)
+    grid = (mm // bm, n // bn, m // bk)
+
+    return pl.pallas_call(
+        functools.partial(_lords_kernel, nsteps_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # x
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),  # codes
+            pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),   # B row-tile
+            pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),   # A col-tile
+            pl.BlockSpec((lut.shape[0],), lambda i, j, k: (0,)),  # codebook
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, n), jnp.float32),
+        interpret=True,
+    )(x, codes, b, a, lut)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, r: int, lut_len: int) -> int:
+    """Estimated VMEM working set per grid step (f32 activations, i32 codes).
+
+    Used by the perf pass to check the schedule fits the ~16 MiB/core VMEM
+    budget on real TPU hardware (DESIGN.md §9).
+    """
+    return 4 * (bm * bk + bn * r + r * bk + bn * bk + bm * bn + lut_len) + 4 * (bn * bk)
+
+
+def mxu_overhead_ratio(bm: int, bn: int, bk: int, r: int) -> float:
+    """Extra MACs for the rank-r scale product relative to the main GEMM."""
+    return (r * bn * bk) / float(bm * bn * bk)

@@ -1,0 +1,83 @@
+"""L1 — QLoRA baseline kernel: block-wise dequant-matmul + additive adapter.
+
+``y = x · Ŵᵀ + (x · A_lᵀ) · B_lᵀ``. Because the fp adapter cannot be merged
+into the quantized weight (precision mismatch), QLoRA pays the adapter GEMM
+on *every* forward — the structural latency disadvantage LoRDS removes
+(Figure 2 / Table 6).
+
+The adapter contribution is distributed across the K loop using
+``(Σ_k x_k A_kᵀ) B_lᵀ = Σ_k (x_k A_kᵀ) B_lᵀ`` so the kernel needs no scratch
+accumulator; each grid step pays the two extra rank-r MXU matmuls
+(bm×bk×r and bm×r×bn) that model the adapter's extra compute + HBM traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .lords_matmul import _tile, DEFAULT_BM, DEFAULT_BN, DEFAULT_BK
+
+
+def _qlora_kernel(x_ref, q_ref, s_ref, la_ref, lb_ref, lut_ref, o_ref, *, block):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Base path: block-wise NF4 dequant-matmul.
+    s_tile = jnp.repeat(s_ref[...], block, axis=1)
+    w_tile = jnp.take(lut_ref[...], q_ref[...], axis=0) * s_tile
+    acc = jnp.dot(x_ref[...], w_tile.T, preferred_element_type=jnp.float32)
+    # Adapter path: x_tile @ A_lᵀ (bm × r), then @ B_lᵀ (bm × bn).
+    t = jnp.dot(x_ref[...], la_ref[...].T, preferred_element_type=jnp.float32)
+    acc += jnp.dot(t, lb_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bm", "bn", "bk"))
+def qlora_matmul(x, codes, scales, lora_a, lora_b, lut, *, block,
+                 bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """y[M,n] = x · dequant(codes, scales)ᵀ + x · lora_aᵀ · lora_bᵀ.
+
+    Args:
+      x: f32[M, m] activations.
+      codes: int32[n, m] codebook indices.
+      scales: f32[n, m/block] block scales.
+      lora_a: f32[r, m] adapter down-projection.
+      lora_b: f32[n, r] adapter up-projection.
+      lut: f32[L] codebook.
+      block: quantization block size B.
+    """
+    mm, m = x.shape
+    n, m2 = codes.shape
+    r = lora_a.shape[0]
+    assert m == m2 and lora_a.shape == (r, m) and lora_b.shape == (n, r)
+    assert m % block == 0 and scales.shape == (n, m // block)
+
+    bm = _tile(mm, bm)
+    bn = _tile(n, bn)
+    bk = max(block, _tile(m, max(bk, block)))
+    while m % bk != 0 or bk % block != 0:
+        bk -= block
+    grid = (mm // bm, n // bn, m // bk)
+
+    return pl.pallas_call(
+        functools.partial(_qlora_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),           # x
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),           # codes
+            pl.BlockSpec((bn, bk // block), lambda i, j, k: (j, k)),  # scales
+            pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),            # lora A
+            pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),            # lora B
+            pl.BlockSpec((lut.shape[0],), lambda i, j, k: (0,)),      # codebook
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, n), jnp.float32),
+        interpret=True,
+    )(x, codes, scales, lora_a, lora_b, lut)

@@ -1,0 +1,207 @@
+"""Pure-jnp reference implementations (correctness oracles) for every kernel.
+
+These are the ground truth the Pallas kernels (and, transitively, the Rust
+re-implementations) are validated against. Everything here is straight-line
+jax.numpy with no tiling, so it is obviously correct but slow.
+
+Conventions
+-----------
+* Weight matrices are ``W ∈ R^{n×m}`` (out_features × in_features), matching
+  the paper's notation. Activations are ``x ∈ R^{M×m}`` (tokens × in),
+  ``y = x @ Ŵᵀ ∈ R^{M×n}``.
+* Quantized codes ``Q`` are stored as int32 indices into a codebook
+  (look-up table) ``lut``; the dequantized value is ``lut[Q] * S`` where
+  ``S`` is the elementwise scale matrix.
+* Block-wise scaling uses contiguous blocks of size ``B`` along the *row*
+  (in-features) direction, the layout used by bitsandbytes/QLoRA.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from scipy.stats import norm as _scipy_norm
+
+# ---------------------------------------------------------------------------
+# Codebooks (NormalFloat + integer grids)
+# ---------------------------------------------------------------------------
+
+
+def normal_float_codebook(bits: int) -> np.ndarray:
+    """NormalFloat codebook of ``2**bits`` levels, following QLoRA.
+
+    The NFk data type places quantiles of N(0, 1) so that each level is
+    equally probable under a Gaussian weight prior, then rescales to [-1, 1].
+    Like NF4 in bitsandbytes we build an *asymmetric* grid: 2^{k-1} negative
+    levels, 2^{k-1} - 1 positive levels, and an exact zero, so that zero is
+    exactly representable.
+    """
+    n = 1 << bits
+    offset = 0.9677083  # bitsandbytes magic: 1 - 1/(2*16) quantile clip
+    # negative half: 2^{k-1}+1 quantiles of [1-offset .. 0.5], drop the 0.5
+    neg = _scipy_norm.ppf(np.linspace(1 - offset, 0.5, (n // 2) + 1))[:-1]
+    pos = _scipy_norm.ppf(np.linspace(0.5, offset, n // 2))
+    levels = np.concatenate([neg, pos])
+    levels = levels / np.max(np.abs(levels))
+    levels = np.sort(levels)
+    levels[np.argmin(np.abs(levels))] = 0.0  # snap the central level to 0
+    return levels.astype(np.float32)
+
+
+def int_codebook(bits: int) -> np.ndarray:
+    """Symmetric signed-integer grid scaled to [-1, 1] (e.g. INT4 = -7..7)."""
+    qmax = (1 << (bits - 1)) - 1
+    levels = np.arange(-qmax, qmax + 1, dtype=np.float32) / float(qmax)
+    return levels.astype(np.float32)
+
+
+def codebook(name: str) -> np.ndarray:
+    """Look up a codebook by name: ``nf4``, ``nf3``, ``nf2``, ``int4``, ..."""
+    if name.startswith("nf"):
+        return normal_float_codebook(int(name[2:]))
+    if name.startswith("int"):
+        return int_codebook(int(name[3:]))
+    raise ValueError(f"unknown codebook {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Block-wise scaling + quantization (the baseline LoRDS breaks)
+# ---------------------------------------------------------------------------
+
+
+def blockwise_scales(w: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Per-block absmax scales, shape (n, m/block). Zero-safe."""
+    n, m = w.shape
+    assert m % block == 0, (n, m, block)
+    s = jnp.max(jnp.abs(w.reshape(n, m // block, block)), axis=-1)
+    return jnp.where(s == 0.0, 1.0, s)
+
+
+def expand_scales(s: jnp.ndarray, block: int) -> jnp.ndarray:
+    """S = s ⊗ 1_{1×B}: broadcast block scales to the full (n, m) matrix."""
+    return jnp.repeat(s, block, axis=1)
+
+
+def quantize_codes(w: jnp.ndarray, s_full: jnp.ndarray, lut) -> jnp.ndarray:
+    """Q_ij = argmin_v (S_ij · v − W_ij)² — nearest codebook level of W under S.
+
+    This is the argmin form from Algorithm 1; for positive S it coincides
+    with nearest-neighbour of W⊘S in the LUT, but the argmin form stays
+    correct when refinement pushes scale entries negative, so both the
+    reference and the Rust implementation use it verbatim.
+    """
+    lut = jnp.asarray(lut)
+    resid = w[..., None] - s_full[..., None] * lut[None, None, :]
+    return jnp.argmin(resid * resid, axis=-1).astype(jnp.int32)
+
+
+def dequantize(codes: jnp.ndarray, s_full: jnp.ndarray, lut) -> jnp.ndarray:
+    """Ŵ = lut[Q] ⊙ S."""
+    return jnp.asarray(lut)[codes] * s_full
+
+
+def blockwise_quantize(w: jnp.ndarray, block: int, lut):
+    """Full block-wise round trip; returns (codes, block_scales, w_hat)."""
+    s = blockwise_scales(w, block)
+    s_full = expand_scales(s, block)
+    codes = quantize_codes(w, s_full, lut)
+    return codes, s, dequantize(codes, s_full, lut)
+
+
+# ---------------------------------------------------------------------------
+# LoRDS scaling decomposition
+# ---------------------------------------------------------------------------
+
+
+def parity_rank(n: int, m: int, block: int) -> int:
+    """r = ⌊nm / (B(n+m))⌋ — scale-parameter parity with block size B (App. A)."""
+    return max(1, (n * m) // (block * (n + m)))
+
+
+def lords_init(w: jnp.ndarray, block: int, rank: int):
+    """Truncated-SVD initialization of S = BA from block-wise absmax scales.
+
+    Returns (B, A) with B ∈ R^{n×r}, A ∈ R^{r×m} such that BA exactly
+    recovers the block-wise statistics when rank ≥ rank(S) (eq. 3).
+    """
+    s_full = expand_scales(blockwise_scales(w, block), block)
+    u, sv, vt = jnp.linalg.svd(s_full, full_matrices=False)
+    root = jnp.sqrt(sv[:rank])
+    b = u[:, :rank] * root[None, :]
+    a = root[:, None] * vt[:rank, :]
+    return b, a
+
+
+def lords_dequantize(codes, b, a, lut):
+    """Ŵ = lut[Q] ⊙ (BA)."""
+    return jnp.asarray(lut)[codes] * (b @ a)
+
+
+# ---------------------------------------------------------------------------
+# Matmul oracles (what the Pallas kernels must reproduce)
+# ---------------------------------------------------------------------------
+
+
+def lords_matmul_ref(x, codes, b, a, lut):
+    """y = x · (Q ⊙ (BA))ᵀ — the LoRDS fused dequant-matmul."""
+    w_hat = jnp.asarray(lut)[codes] * (b @ a)
+    return x @ w_hat.T
+
+
+def blockwise_matmul_ref(x, codes, scales, lut, block):
+    """y = x · Ŵᵀ with block-wise scales (the bnb-NF4 baseline)."""
+    w_hat = jnp.asarray(lut)[codes] * expand_scales(scales, block)
+    return x @ w_hat.T
+
+
+def qlora_matmul_ref(x, codes, scales, lut, block, lora_a, lora_b):
+    """y = x · Ŵᵀ + (x · A_lᵀ) · B_lᵀ — NF4 base plus the unmergeable adapter.
+
+    lora_a ∈ R^{r×m}, lora_b ∈ R^{n×r}; the adapter path is the extra work
+    QLoRA pays on every forward because the fp adapter cannot be merged
+    into the quantized weight.
+    """
+    base = blockwise_matmul_ref(x, codes, scales, lut, block)
+    return base + (x @ lora_a.T) @ lora_b.T
+
+
+# ---------------------------------------------------------------------------
+# STE fake-quant (eqs. 4–5) reference
+# ---------------------------------------------------------------------------
+
+
+def fake_quant(w, b, a, lut):
+    """Ŵ = ROUND(W ⊘ (BA)) ⊙ (BA) with ROUND = nearest codebook level."""
+    s = b @ a
+    codes = quantize_codes(w, s, lut)
+    return jnp.asarray(lut)[codes] * s
+
+
+def ste_grads(w, b, a, lut, g):
+    """Reference STE gradients of a loss L with ∂L/∂Ŵ = g (eqs. 4–5).
+
+    ∇_W L ≈ g;  ∇_S L ≈ g ⊙ (Q − W ⊘ S);  ∇_B = (∇_S) Aᵀ;  ∇_A = Bᵀ (∇_S).
+    """
+    s = b @ a
+    q = jnp.asarray(lut)[quantize_codes(w, s, lut)]
+    gs = g * (q - w / s)
+    return g, gs @ a.T, b.T @ gs
+
+
+# ---------------------------------------------------------------------------
+# Error metrics
+# ---------------------------------------------------------------------------
+
+
+def nuclear_norm(x) -> jnp.ndarray:
+    return jnp.sum(jnp.linalg.svd(x, compute_uv=False))
+
+
+def quant_error_nuclear(w, w_hat) -> jnp.ndarray:
+    """‖W − Ŵ‖_* — the paper's QuantError metric (Table 2)."""
+    return nuclear_norm(w - w_hat)
+
+
+def reduction_ratio(w, w_hat, w_nf4) -> jnp.ndarray:
+    """1 − ‖W−Ŵ‖_* / ‖W−nf4(W)‖_* (Appendix B, Tables 8–9)."""
+    return 1.0 - nuclear_norm(w - w_hat) / nuclear_norm(w - w_nf4)

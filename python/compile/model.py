@@ -1,0 +1,556 @@
+"""L2 — Llama-style decoder-only transformer with LoRDS fake-quant linears.
+
+This is the build-time JAX model. It exists to be lowered once by
+``aot.py`` into HLO-text artifacts that the Rust runtime executes; Python
+never runs on the request path.
+
+Three operating modes, all sharing the same parameter layout:
+
+* ``forward``        — full-precision forward (testbed pre-training, the
+                       fp baseline serving artifact).
+* ``forward_lords``  — serving forward: every block linear is
+                       ``x · (lut[Q] ⊙ (BA))ᵀ`` with frozen int codes; this
+                       is what the prefill/decode artifacts lower.
+* ``qat_loss`` / ``peft_loss`` — training losses. QAT fake-quantizes W
+                       through the STE rule of eqs. (4)–(5) and
+                       differentiates (W, B, A) jointly; PEFT freezes the
+                       codes and differentiates (B, A) only (the update is
+                       exactly the paper's multiplicative ΔW = Q ⊙ (B'A'−BA)).
+
+Parameter layout (per layer ``l``):
+  attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down
+plus ``tok_emb``, ``final_norm``, ``lm_head``. Linears are stored as
+``(out, in)`` matrices, matching the paper's W ∈ R^{n×m} convention.
+
+The deterministic flattening order used for the AOT artifact signatures is
+defined by :func:`param_names` / :func:`quant_param_names` and recorded in
+the artifact manifest consumed by ``rust/src/runtime``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-Llama architecture used as the quantization testbed."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    # quantization knobs (used by fake-quant modes)
+    codebook: str = "nf4"
+    block: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def linear_shapes(self) -> Dict[str, tuple]:
+        d, f = self.d_model, self.d_ff
+        return {
+            "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "w_gate": (f, d), "w_up": (f, d), "w_down": (d, f),
+        }
+
+
+LINEAR_NAMES = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction / flattening (deterministic order for the manifest)
+# ---------------------------------------------------------------------------
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Full-precision parameter order: the AOT artifact input signature."""
+    names = ["tok_emb"]
+    for l in range(cfg.n_layers):
+        names.append(f"l{l}.attn_norm")
+        for w in LINEAR_NAMES:
+            names.append(f"l{l}.{w}")
+        names.append(f"l{l}.mlp_norm")
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def param_shape(cfg: ModelConfig, name: str) -> tuple:
+    if name in ("tok_emb", "lm_head"):
+        return (cfg.vocab, cfg.d_model)
+    if name == "final_norm":
+        return (cfg.d_model,)
+    _, field = name.split(".")
+    if field.endswith("norm"):
+        return (cfg.d_model,)
+    return cfg.linear_shapes()[field]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Scaled-Gaussian init (0.02, shrunk on residual-out projections)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    resid_scale = 0.02 / np.sqrt(2.0 * cfg.n_layers)
+    for name in param_names(cfg):
+        shape = param_shape(cfg, name)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = resid_scale if name.split(".")[-1] in ("wo", "w_down") else 0.02
+            params[name] = jnp.asarray(rng.standard_normal(shape) * std, jnp.float32)
+    return params
+
+
+def lords_rank(cfg: ModelConfig, name: str) -> int:
+    n, m = param_shape(cfg, name)
+    return ref.parity_rank(n, m, cfg.block)
+
+
+def quant_param_names(cfg: ModelConfig) -> List[str]:
+    """Quantized-model parameter order (serving + PEFT artifacts).
+
+    Block linears expand to ``{name}.codes`` (int32), ``{name}.B``,
+    ``{name}.A``; everything else stays a single fp32 tensor.
+    """
+    names = []
+    for name in param_names(cfg):
+        if "." in name and name.split(".")[1] in LINEAR_NAMES:
+            names += [f"{name}.codes", f"{name}.B", f"{name}.A"]
+        else:
+            names.append(name)
+    return names
+
+
+def quant_param_shape(cfg: ModelConfig, qname: str) -> tuple:
+    base, _, kind = qname.rpartition(".")
+    if kind in ("codes", "B", "A") and base:
+        n, m = param_shape(cfg, base)
+        r = lords_rank(cfg, base)
+        return {"codes": (n, m), "B": (n, r), "A": (r, m)}[kind]
+    return param_shape(cfg, qname)
+
+
+def quantize_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """LoRDS-quantize every block linear (SVD init, no refinement).
+
+    Refinement happens in Rust (Algorithm 1) or via the QAT/PEFT artifacts;
+    this produces the initial quantized checkpoint.
+    """
+    lut = jnp.asarray(ref.codebook(cfg.codebook))
+    out: Dict[str, jnp.ndarray] = {}
+    for name in param_names(cfg):
+        w = params[name]
+        if "." in name and name.split(".")[1] in LINEAR_NAMES:
+            r = lords_rank(cfg, name)
+            b, a = ref.lords_init(w, cfg.block, r)
+            codes = ref.quantize_codes(w, b @ a, lut)
+            out[f"{name}.codes"] = codes
+            out[f"{name}.B"] = b
+            out[f"{name}.A"] = a
+        else:
+            out[name] = w
+    return out
+
+
+# --- block-wise NF4 + QLoRA serving layouts (Table 6 / Fig. 2 baselines) ---
+
+QLORA_RANK = 16
+
+
+def nf4_param_names(cfg: ModelConfig) -> List[str]:
+    """bitsandbytes-style layout: ``codes`` + per-block ``scales``."""
+    names = []
+    for name in param_names(cfg):
+        if "." in name and name.split(".")[1] in LINEAR_NAMES:
+            names += [f"{name}.codes", f"{name}.scales"]
+        else:
+            names.append(name)
+    return names
+
+
+def nf4_param_shape(cfg: ModelConfig, qname: str) -> tuple:
+    base, _, kind = qname.rpartition(".")
+    if kind in ("codes", "scales") and base:
+        n, m = param_shape(cfg, base)
+        return {"codes": (n, m), "scales": (n, m // cfg.block)}[kind]
+    return param_shape(cfg, qname)
+
+
+def qlora_param_names(cfg: ModelConfig) -> List[str]:
+    """QLoRA layout: NF4 base + unmergeable fp adapter per linear."""
+    names = []
+    for name in param_names(cfg):
+        if "." in name and name.split(".")[1] in LINEAR_NAMES:
+            names += [f"{name}.codes", f"{name}.scales", f"{name}.lora_a", f"{name}.lora_b"]
+        else:
+            names.append(name)
+    return names
+
+
+def qlora_param_shape(cfg: ModelConfig, qname: str) -> tuple:
+    base, _, kind = qname.rpartition(".")
+    if kind in ("codes", "scales", "lora_a", "lora_b") and base:
+        n, m = param_shape(cfg, base)
+        return {
+            "codes": (n, m),
+            "scales": (n, m // cfg.block),
+            "lora_a": (QLORA_RANK, m),
+            "lora_b": (n, QLORA_RANK),
+        }[kind]
+    return param_shape(cfg, qname)
+
+
+def nf4_quantize_params(cfg: ModelConfig, params):
+    lut = jnp.asarray(ref.codebook(cfg.codebook))
+    out = {}
+    for name in param_names(cfg):
+        w = params[name]
+        if "." in name and name.split(".")[1] in LINEAR_NAMES:
+            codes, scales, _ = ref.blockwise_quantize(w, cfg.block, lut)
+            out[f"{name}.codes"] = codes
+            out[f"{name}.scales"] = scales
+        else:
+            out[name] = w
+    return out
+
+
+def qlora_quantize_params(cfg: ModelConfig, params, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    out = nf4_quantize_params(cfg, params)
+    for name in param_names(cfg):
+        if "." in name and name.split(".")[1] in LINEAR_NAMES:
+            n, m = param_shape(cfg, name)
+            # LoRA init: A ~ N(0, 1/r), B = 0 (standard Kaiming-zero pairing)
+            out[f"{name}.lora_a"] = jnp.asarray(
+                rng.standard_normal((QLORA_RANK, m)) / np.sqrt(QLORA_RANK), jnp.float32)
+            out[f"{name}.lora_b"] = jnp.zeros((n, QLORA_RANK), jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# STE fake-quant primitive (eqs. 4–5)
+# ---------------------------------------------------------------------------
+
+
+def make_fake_quant(lut: jnp.ndarray):
+    """Returns the STE fake-quant fn Ŵ = ROUND(W ⊘ (BA)) ⊙ (BA) for one LUT."""
+
+    @jax.custom_vjp
+    def fake_quant(w, b, a):
+        s = b @ a
+        q = lut[ref.quantize_codes(w, s, lut)]
+        return q * s
+
+    def fwd(w, b, a):
+        s = b @ a
+        q = lut[ref.quantize_codes(w, s, lut)]
+        return q * s, (q, w, s, b, a)
+
+    def bwd(res, g):
+        q, w, s, b, a = res
+        # eq. (4): ∇_W ≈ g  |  eq. (5): ∇_S ≈ g ⊙ (Q − W ⊘ S), chained to B, A.
+        gs = g * (q - w / s)
+        return g, gs @ a.T, b.T @ gs
+
+    fake_quant.defvjp(fwd, bwd)
+    return fake_quant
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, gamma, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * gamma
+
+
+def rope(x, pos, theta):
+    """Rotary embedding; x: [b, seq, heads, head_dim], pos: [seq]."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]  # [seq, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _linear(w, x):
+    """Apply an effective weight; QLoRA weights are (base, lora_a, lora_b)
+    tuples whose adapter path runs as separate matmuls (unmergeable)."""
+    if isinstance(w, tuple):
+        base, la, lb = w
+        return x @ base.T + (x @ la.T) @ lb.T
+    return x @ w.T
+
+
+def _block_forward(cfg, x, pos, lw, kv=None):
+    """One transformer block. ``lw`` maps field → effective fp weight.
+
+    kv: optional (k_cache, v_cache, cur_pos) for incremental decoding with
+    caches of static length ``cfg.max_seq``; returns (x, new_k, new_v).
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    hx = rmsnorm(x, lw["attn_norm"])
+    q = _linear(lw["wq"], hx).reshape(b, s, h, hd)
+    k = _linear(lw["wk"], hx).reshape(b, s, h, hd)
+    v = _linear(lw["wv"], hx).reshape(b, s, h, hd)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    if kv is None:
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+        mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+        scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+        att = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, axis=-1), v)
+        new_k, new_v = k, v
+    else:
+        k_cache, v_cache, cur = kv
+        new_k = jax.lax.dynamic_update_slice(k_cache, k, (0, cur, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(v_cache, v, (0, cur, 0, 0))
+        # causal within the fresh chunk + visibility of all cached history
+        kpos = jnp.arange(k_cache.shape[1])[None, :]
+        qpos = cur + jnp.arange(s)[:, None]
+        mask = kpos <= qpos
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, new_k) / jnp.sqrt(float(hd))
+        scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+        att = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, axis=-1), new_v)
+    x = x + _linear(lw["wo"], att.reshape(b, s, d))
+
+    hx = rmsnorm(x, lw["mlp_norm"])
+    gate = jax.nn.silu(_linear(lw["w_gate"], hx))
+    up = _linear(lw["w_up"], hx)
+    x = x + _linear(lw["w_down"], gate * up)
+    return x, new_k, new_v
+
+
+def _effective_weights(cfg, params, mode, lut=None, fake_quant=None):
+    """Per-layer dict of *effective* fp weights under the given mode.
+
+    mode: 'fp'    — params are fp tensors, used as-is.
+          'lords' — params are quantized (codes/B/A); Ŵ = lut[Q] ⊙ (BA).
+          'qat'   — params carry both W and (B, A); Ŵ = fake_quant(W, B, A).
+    """
+    layers = []
+    for l in range(cfg.n_layers):
+        lw = {}
+        for field in ("attn_norm", "mlp_norm"):
+            lw[field] = params[f"l{l}.{field}"]
+        for field in LINEAR_NAMES:
+            key = f"l{l}.{field}"
+            if mode == "fp":
+                lw[field] = params[key]
+            elif mode == "lords":
+                s = params[f"{key}.B"] @ params[f"{key}.A"]
+                lw[field] = jnp.take(lut, params[f"{key}.codes"], axis=0) * s
+            elif mode == "nf4":
+                s_full = jnp.repeat(params[f"{key}.scales"], cfg.block, axis=1)
+                lw[field] = jnp.take(lut, params[f"{key}.codes"], axis=0) * s_full
+            elif mode == "qlora":
+                s_full = jnp.repeat(params[f"{key}.scales"], cfg.block, axis=1)
+                base = jnp.take(lut, params[f"{key}.codes"], axis=0) * s_full
+                # the unmergeable adapter: effective W = Ŵ + B_l A_l, but the
+                # adapter matmul cannot be folded at serving time — model the
+                # extra work by keeping the two paths separate (see _block_qlora)
+                lw[field] = (base, params[f"{key}.lora_a"], params[f"{key}.lora_b"])
+            elif mode == "qat":
+                lw[field] = fake_quant(params[key], params[f"{key}.B"], params[f"{key}.A"])
+            else:
+                raise ValueError(mode)
+        layers.append(lw)
+    return layers
+
+
+def _trunk(cfg, params, layers, tokens, kv_caches=None, cur=None):
+    """Shared embedding → blocks → final-norm → logits pipeline."""
+    x = jnp.take(params["tok_emb"], tokens, axis=0)
+    s = tokens.shape[1]
+    pos = jnp.arange(s) if cur is None else cur + jnp.arange(s)
+    new_ks, new_vs = [], []
+    for l, lw in enumerate(layers):
+        kv = None if kv_caches is None else (kv_caches[0][l], kv_caches[1][l], cur)
+        x, nk, nv = _block_forward(cfg, x, pos, lw, kv)
+        new_ks.append(nk)
+        new_vs.append(nv)
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["lm_head"].T
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+# ---------------------------------------------------------------------------
+# Public forwards / losses
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Full-precision forward; logits [b, s, vocab]."""
+    layers = _effective_weights(cfg, params, "fp")
+    logits, _, _ = _trunk(cfg, params, layers, tokens)
+    return logits
+
+
+def forward_mode(cfg: ModelConfig, mode: str, qparams, tokens):
+    """Serving forward on a quantized checkpoint; mode ∈ {lords, nf4, qlora}."""
+    lut = jnp.asarray(ref.codebook(cfg.codebook))
+    layers = _effective_weights(cfg, qparams, mode, lut=lut)
+    logits, _, _ = _trunk(cfg, qparams, layers, tokens)
+    return logits
+
+
+def forward_lords(cfg: ModelConfig, qparams, tokens):
+    return forward_mode(cfg, "lords", qparams, tokens)
+
+
+def prefill_mode(cfg: ModelConfig, mode: str, qparams, tokens):
+    """Prefill: logits for the last position + populated KV caches.
+
+    Caches have static length ``cfg.max_seq`` so decode steps keep a fixed
+    signature. Returns (last_logits [b, vocab], k_cache, v_cache) with
+    caches shaped [L, b, max_seq, h, hd].
+    """
+    lut = jnp.asarray(ref.codebook(cfg.codebook))
+    layers = _effective_weights(cfg, qparams, mode, lut=lut)
+    b = tokens.shape[0]
+    k0 = jnp.zeros((cfg.n_layers, b, cfg.max_seq, cfg.n_heads, cfg.head_dim), jnp.float32)
+    v0 = jnp.zeros_like(k0)
+    logits, ks, vs = _trunk(cfg, qparams, layers, tokens,
+                            kv_caches=(k0, v0), cur=jnp.int32(0))
+    return logits[:, -1, :], ks, vs
+
+
+def decode_mode(cfg: ModelConfig, mode: str, qparams, token, k_cache, v_cache, cur):
+    """One decode step: token [b, 1] appended at position ``cur`` (int32)."""
+    lut = jnp.asarray(ref.codebook(cfg.codebook))
+    layers = _effective_weights(cfg, qparams, mode, lut=lut)
+    logits, ks, vs = _trunk(cfg, qparams, layers, token,
+                            kv_caches=(k_cache, v_cache), cur=cur)
+    return logits[:, -1, :], ks, vs
+
+
+def lm_loss(logits, targets):
+    """Mean token cross-entropy; targets [b, s] int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def fp_loss(cfg, params, tokens, targets):
+    return lm_loss(forward(cfg, params, tokens), targets)
+
+
+def qat_loss(cfg: ModelConfig, params, tokens, targets):
+    """QAT objective: fake-quant every block linear via STE, differentiate
+    jointly w.r.t. W, B, A (Section 3.3)."""
+    lut = jnp.asarray(ref.codebook(cfg.codebook))
+    fq = make_fake_quant(lut)
+    layers = _effective_weights(cfg, params, "qat", fake_quant=fq)
+    logits, _, _ = _trunk(cfg, params, layers, tokens)
+    return lm_loss(logits, targets)
+
+
+def peft_loss(cfg: ModelConfig, qparams, tokens, targets):
+    """PEFT objective on frozen codes: exactly differentiable in (B, A) —
+    the multiplicative update ΔW = Q ⊙ (B'A' − BA) of Section 3.4."""
+    logits = forward_lords(cfg, qparams, tokens)
+    return lm_loss(logits, targets)
+
+
+# ---------------------------------------------------------------------------
+# Grad functions (lowered by aot.py; the optimizer lives in Rust)
+# ---------------------------------------------------------------------------
+
+
+def peft_trainable(cfg: ModelConfig) -> List[str]:
+    """Names of the PEFT-trainable tensors (every linear's B and A)."""
+    return [n for n in quant_param_names(cfg) if n.endswith(".B") or n.endswith(".A")]
+
+
+def qat_param_names(cfg: ModelConfig) -> List[str]:
+    """QAT artifact signature: fp params plus (B, A) per block linear."""
+    return param_names(cfg) + [
+        f"l{l}.{w}.{ba}" for l in range(cfg.n_layers) for w in LINEAR_NAMES for ba in ("B", "A")
+    ]
+
+
+def qat_trainable(cfg: ModelConfig) -> List[str]:
+    """QAT trains W jointly with B and A for every block linear."""
+    return [
+        f"l{l}.{w}{suffix}"
+        for l in range(cfg.n_layers)
+        for w in LINEAR_NAMES
+        for suffix in ("", ".B", ".A")
+    ]
+
+
+def peft_grad_fn(cfg: ModelConfig):
+    """(qparam_list, tokens, targets) → (loss, *grads over peft_trainable)."""
+    qnames = quant_param_names(cfg)
+    tnames = peft_trainable(cfg)
+
+    def fn(plist, tokens, targets):
+        qparams = dict(zip(qnames, plist))
+
+        def loss_of(tvals):
+            merged = dict(qparams)
+            merged.update(dict(zip(tnames, tvals)))
+            return peft_loss(cfg, merged, tokens, targets)
+
+        tvals = [qparams[n] for n in tnames]
+        loss, grads = jax.value_and_grad(loss_of)(tvals)
+        return (loss, *grads)
+
+    return fn
+
+
+def qat_grad_fn(cfg: ModelConfig):
+    """(qat_param_list, tokens, targets) → (loss, *grads over qat_trainable)."""
+    names = qat_param_names(cfg)
+    tnames = qat_trainable(cfg)
+
+    def fn(plist, tokens, targets):
+        params = dict(zip(names, plist))
+
+        def loss_of(tvals):
+            merged = dict(params)
+            merged.update(dict(zip(tnames, tvals)))
+            return qat_loss(cfg, merged, tokens, targets)
+
+        tvals = [params[n] for n in tnames]
+        loss, grads = jax.value_and_grad(loss_of)(tvals)
+        return (loss, *grads)
+
+    return fn
+
+
+def fp_grad_fn(cfg: ModelConfig):
+    """Full-precision pre-training step: grads for every parameter."""
+    names = param_names(cfg)
+
+    def fn(plist, tokens, targets):
+        def loss_of(tvals):
+            return fp_loss(cfg, dict(zip(names, tvals)), tokens, targets)
+
+        loss, grads = jax.value_and_grad(loss_of)(list(plist))
+        return (loss, *grads)
+
+    return fn

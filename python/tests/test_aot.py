@@ -1,0 +1,94 @@
+"""AOT pipeline: manifest consistency + HLO text well-formedness.
+
+Uses the ``mini`` preset (seconds, not minutes). The full round-trip —
+loading these artifacts through PJRT from Rust — is covered by
+``rust/tests/runtime_roundtrip.rs``.
+"""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("arts"))
+    aot.main(["--preset", "mini", "--outdir", d])
+    return d
+
+
+def _parse_manifest(path):
+    arts = {}
+    cur = None
+    model_line = None
+    lut = None
+    with open(path) as f:
+        for line in f:
+            parts = line.strip().split()
+            if not parts or parts[0].startswith("#"):
+                continue
+            if parts[0] == "model":
+                model_line = dict(kv.split("=") for kv in parts[1:])
+            elif parts[0] == "lut":
+                lut = [float(v) for v in parts[2].split(",")]
+            elif parts[0] == "artifact":
+                cur = {"file": parts[2], "in": [], "out": []}
+                arts[parts[1]] = cur
+            elif parts[0] in ("in", "out"):
+                shape = [] if parts[3] == "scalar" else [int(d) for d in parts[3].split(",")]
+                cur[parts[0]].append((parts[1], parts[2], shape))
+            elif parts[0] == "end":
+                cur = None
+    return model_line, lut, arts
+
+
+def test_manifest_and_files(outdir):
+    model, lut, arts = _parse_manifest(os.path.join(outdir, "manifest.txt"))
+    assert model["codebook"] == "nf4" and len(lut) == 16
+    expected = {"fp_forward", "lords_forward", "nf4_forward", "qlora_forward",
+                "fp_step", "qat_step", "peft_step",
+                "lords_prefill_b1", "lords_decode_b8", "qlora_decode_b1"}
+    assert expected.issubset(arts.keys())
+    for name, a in arts.items():
+        path = os.path.join(outdir, a["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text, name
+
+
+def test_manifest_signatures(outdir):
+    cfg = aot.PRESETS["mini"]
+    model, lut, arts = _parse_manifest(os.path.join(outdir, "manifest.txt"))
+
+    # serving artifact inputs = quant params + tokens (+ caches for decode)
+    names = M.quant_param_names(cfg)
+    pre = arts["lords_prefill_b2"]
+    assert [i[0] for i in pre["in"]][: len(names)] == names
+    assert pre["in"][-1][0] == "tokens" and pre["in"][-1][2][0] == 2
+
+    dec = arts["lords_decode_b4"]
+    tail = [i[0] for i in dec["in"]][-4:]
+    assert tail == ["token", "k_cache", "v_cache", "cur"]
+    # prefill outputs: last_logits, k_cache, v_cache
+    assert len(pre["out"]) == 3
+    assert pre["out"][0][2] == [2, cfg.vocab]
+
+    # training artifacts: loss + one grad per trainable
+    peft = arts["peft_step"]
+    assert len(peft["out"]) == 1 + len(M.peft_trainable(cfg))
+    qat = arts["qat_step"]
+    assert len(qat["out"]) == 1 + len(M.qat_trainable(cfg))
+
+    # codes inputs are i32, everything else f32
+    for nm, dt, _ in pre["in"]:
+        assert dt == ("i32" if nm.endswith(".codes") or nm == "tokens" else "f32"), nm
+
+
+def test_incremental_skip(outdir, capsys):
+    """Re-running aot without --force must skip existing HLO files."""
+    aot.main(["--preset", "mini", "--outdir", outdir, "--only", "eval"])
+    out = capsys.readouterr().out
+    assert "exists, skipped" in out

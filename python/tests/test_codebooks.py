@@ -1,0 +1,51 @@
+"""Codebook construction properties (NF4/NF2/INTk)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_normal_float_shape_and_range(bits):
+    lut = ref.normal_float_codebook(bits)
+    assert lut.shape == (1 << bits,)
+    assert lut.min() == -1.0 and lut.max() == 1.0
+    assert np.all(np.diff(lut) > 0), "levels must be strictly increasing"
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_normal_float_contains_exact_zero(bits):
+    lut = ref.normal_float_codebook(bits)
+    assert 0.0 in lut.tolist(), "zero must be exactly representable"
+
+
+def test_nf4_matches_published_levels():
+    """Spot-check against the bitsandbytes NF4 levels (sign-mirrored variant)."""
+    lut = ref.normal_float_codebook(4)
+    published = np.sort(-np.array([
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.72295683622360229, 1.0,
+    ]))
+    assert np.allclose(np.sort(np.abs(lut)), np.sort(np.abs(published)), atol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 8])
+def test_int_codebook(bits):
+    lut = ref.int_codebook(bits)
+    qmax = (1 << (bits - 1)) - 1
+    assert lut.shape == (2 * qmax + 1,)
+    assert lut[0] == -1.0 and lut[-1] == 1.0 and 0.0 in lut.tolist()
+    # uniform spacing
+    assert np.allclose(np.diff(lut), 1.0 / qmax)
+
+
+def test_codebook_lookup_by_name():
+    assert ref.codebook("nf4").shape == (16,)
+    assert ref.codebook("nf2").shape == (4,)
+    assert ref.codebook("int4").shape == (15,)
+    with pytest.raises(ValueError):
+        ref.codebook("fp4")

@@ -1,0 +1,128 @@
+"""L2 model: shapes, quantized-forward consistency, prefill/decode equality,
+PEFT/QAT gradient plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=48,
+                    max_seq=32, block=16, codebook="nf4")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 16)), jnp.int32)
+
+
+def test_forward_shape(params, tokens):
+    logits = M.forward(CFG, params, tokens)
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_quantized_forward_close_to_fp(params, tokens):
+    """4-bit LoRDS logits should stay close to fp logits on a tiny model."""
+    qparams = M.quantize_params(CFG, params)
+    lfp = M.forward(CFG, params, tokens)
+    lq = M.forward_mode(CFG, "lords", qparams, tokens)
+    # small-weight regime: quantization noise must not blow up the logits
+    assert float(jnp.max(jnp.abs(lfp - lq))) < 0.5 * float(jnp.max(jnp.abs(lfp)) + 1.0)
+
+
+@pytest.mark.parametrize("mode,quantizer", [
+    ("lords", M.quantize_params),
+    ("nf4", M.nf4_quantize_params),
+    ("qlora", M.qlora_quantize_params),
+])
+def test_prefill_decode_matches_full_forward(params, tokens, mode, quantizer):
+    """Incremental decoding must agree with the full causal forward."""
+    qparams = quantizer(CFG, params)
+    full = M.forward_mode(CFG, mode, qparams, tokens)
+
+    s = tokens.shape[1]
+    last, kc, vc = M.prefill_mode(CFG, mode, qparams, tokens[:, : s - 1])
+    np.testing.assert_allclose(last, full[:, s - 2, :], rtol=1e-4, atol=1e-4)
+
+    logit, kc, vc = M.decode_mode(CFG, mode, qparams, tokens[:, s - 1 :],
+                                  kc, vc, jnp.int32(s - 1))
+    np.testing.assert_allclose(logit, full[:, s - 1, :], rtol=1e-4, atol=1e-4)
+
+
+def test_qlora_zero_adapter_equals_nf4(params, tokens):
+    """With B_l = 0 the QLoRA forward must equal the plain NF4 forward."""
+    nf4 = M.nf4_quantize_params(CFG, params)
+    ql = M.qlora_quantize_params(CFG, params)
+    l1 = M.forward_mode(CFG, "nf4", nf4, tokens)
+    l2 = M.forward_mode(CFG, "qlora", ql, tokens)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+
+
+def test_peft_grads_cover_exactly_ba(params, tokens):
+    qparams = M.quantize_params(CFG, params)
+    fn = M.peft_grad_fn(CFG)
+    qnames = M.quant_param_names(CFG)
+    plist = [qparams[n] for n in qnames]
+    targets = jnp.roll(tokens, -1, axis=1)
+    out = fn(plist, tokens, targets)
+    loss, grads = out[0], out[1:]
+    tnames = M.peft_trainable(CFG)
+    assert len(grads) == len(tnames)
+    assert np.isfinite(float(loss))
+    # at least the A matrices get signal (B can start near-dense too)
+    nonzero = sum(float(jnp.max(jnp.abs(g))) > 0 for g in grads)
+    assert nonzero >= len(grads) // 2
+
+
+def test_qat_grads_shapes(params, tokens):
+    qparams = M.quantize_params(CFG, params)
+    names = M.qat_param_names(CFG)
+    merged = dict(params)
+    for n in names:
+        if n.endswith(".B") or n.endswith(".A"):
+            merged[n] = qparams[n]
+    fn = M.qat_grad_fn(CFG)
+    plist = [merged[n] for n in names]
+    targets = jnp.roll(tokens, -1, axis=1)
+    out = fn(plist, tokens, targets)
+    loss, grads = out[0], out[1:]
+    tnames = M.qat_trainable(CFG)
+    assert len(grads) == len(tnames)
+    for g, n in zip(grads, tnames):
+        key = n
+        expected = merged[key].shape
+        assert g.shape == expected, (n, g.shape, expected)
+    assert np.isfinite(float(loss))
+
+
+def test_param_name_order_is_stable():
+    names = M.param_names(CFG)
+    assert names[0] == "tok_emb" and names[-1] == "lm_head"
+    qnames = M.quant_param_names(CFG)
+    assert f"l0.wq.codes" in qnames and qnames.index("l0.wq.codes") < qnames.index("l0.wq.B")
+
+
+def test_parity_rank_matches_paper_table7():
+    """Appendix A, Table 7: exact ranks for the paper's real module shapes."""
+    cases = [
+        (4096, 4096, 128, 16), (4096, 4096, 256, 8),
+        (1024, 4096, 128, 6), (1024, 4096, 256, 3),
+        (14336, 4096, 128, 24), (14336, 4096, 256, 12),
+        (4096, 14336, 128, 24), (4096, 14336, 256, 12),
+        (12288, 4096, 128, 24), (12288, 4096, 256, 12),
+        (4096, 2560, 128, 12), (4096, 2560, 256, 6),
+        (1024, 2560, 128, 5), (1024, 2560, 256, 2),
+        (9728, 2560, 128, 15), (9728, 2560, 256, 7),
+        (2560, 9728, 128, 15), (2560, 9728, 256, 7),
+    ]
+    from compile.kernels import ref
+    for n, m, block, want in cases:
+        assert ref.parity_rank(n, m, block) == want, (n, m, block)

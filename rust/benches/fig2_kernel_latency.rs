@@ -1,0 +1,161 @@
+//! Figure 2 — operator latency vs token count M for the scaled q_proj
+//! shape: bitsandbytes-NF4 (blockwise), QLoRA (blockwise + adapter), and
+//! LoRDS fused dequant-matmul.
+//!
+//! Two backends per point:
+//! * native — the fused Rust kernels (`BlockwiseQuant::matmul_transb`,
+//!   `QloraLinear::forward`, `LordsQuant::matmul_transb`);
+//! * pjrt   — the AOT-lowered Pallas kernels (`{kind}_mm_m{M}` artifacts).
+//!
+//! Expected shape: LoRDS tracks NF4 within a few % (rank-r scale product
+//! only) while QLoRA sits strictly above both (extra adapter GEMMs).
+
+use lords::bench::harness::{banner, bench_fn};
+use lords::bench::TableBuilder;
+use lords::quant::baselines::QloraLinear;
+use lords::quant::lords::{LordsQuant, RefineCfg};
+use lords::quant::{BlockwiseQuant, Codebook};
+use lords::report::testbed::{full_mode, llm_like_weight, ModuleShape};
+use lords::runtime::executor::Executor;
+use lords::runtime::HostTensor;
+use lords::tensor::Matrix;
+use lords::util::Rng;
+
+fn main() {
+    lords::util::logging::init();
+    banner("Figure 2", "kernel latency vs processed tokens M (q_proj shape)");
+
+    let full = full_mode();
+    let (n, m, block) = (512usize, 512usize, 64usize);
+    let m_sweep: Vec<usize> = if full { vec![64, 256, 1024, 4096] } else { vec![64, 256, 1024] };
+    let cb = Codebook::normal_float(4);
+    let mut rng = Rng::new(0);
+    let w = llm_like_weight(ModuleShape { name: "Q", n, m }, &mut rng);
+
+    let bw = BlockwiseQuant::quantize(&w, block, &cb);
+    let (lords, _) = LordsQuant::quantize(&w, block, &cb, RefineCfg { steps: 30, ..Default::default() });
+    let mut qlora = QloraLinear::new(&w, block, 16, &cb, &mut rng);
+    rng.fill_normal(&mut qlora.lora_b.data, 0.0, 0.01);
+
+    let mut t = TableBuilder::new("Figure 2 — native fused kernels (ms per call)")
+        .headers(&["M", "bnb NF4", "QLoRA", "LoRDS", "LoRDS/NF4", "QLoRA/NF4"]);
+    for &mm in &m_sweep {
+        let x = Matrix::randn(mm, m, 1.0, &mut rng);
+        let (wu, me) = (0.1, if full { 1.0 } else { 0.4 });
+        let r_nf4 = bench_fn("nf4", wu, me, || {
+            std::hint::black_box(bw.matmul_transb(&x));
+        });
+        let r_qlora = bench_fn("qlora", wu, me, || {
+            std::hint::black_box(qlora.forward(&x));
+        });
+        let r_lords = bench_fn("lords", wu, me, || {
+            std::hint::black_box(lords.matmul_transb(&x));
+        });
+        eprintln!(
+            "[fig2] native M={mm}: nf4 {:.2}ms qlora {:.2}ms lords {:.2}ms",
+            r_nf4.mean_ms(),
+            r_qlora.mean_ms(),
+            r_lords.mean_ms()
+        );
+        t.row(vec![
+            mm.to_string(),
+            format!("{:.3}", r_nf4.mean_ms()),
+            format!("{:.3}", r_qlora.mean_ms()),
+            format!("{:.3}", r_lords.mean_ms()),
+            format!("{:.2}x", r_lords.mean_s / r_nf4.mean_s),
+            format!("{:.2}x", r_qlora.mean_s / r_nf4.mean_s),
+        ]);
+    }
+    t.print();
+
+    // PJRT path (Pallas kernels lowered to HLO)
+    match Executor::spawn("artifacts") {
+        Ok(exec) => {
+            let manifest = lords::runtime::Manifest::load("artifacts").unwrap();
+            let h = exec.handle();
+            let mut t2 = TableBuilder::new("Figure 2 — PJRT Pallas kernels (ms per call)")
+                .headers(&["M", "fp GEMM", "bnb NF4", "QLoRA", "LoRDS", "LoRDS/NF4", "QLoRA/NF4"]);
+            // kernel artifacts were lowered at n=m=512, block=64, r=parity
+            let r = lords::quant::parity_rank(512, 512, 64);
+            let mut rng2 = Rng::new(3);
+            let codes: Vec<i32> = (0..512 * 512).map(|_| rng2.below(16) as i32).collect();
+            let bmat: Vec<f32> = (0..512 * r).map(|_| rng2.normal() * 0.1 + 0.5).collect();
+            let amat: Vec<f32> = (0..r * 512).map(|_| rng2.normal() * 0.1 + 0.5).collect();
+            let scales: Vec<f32> = (0..512 * 8).map(|_| rng2.f32() + 0.1).collect();
+            let la: Vec<f32> = (0..16 * 512).map(|_| rng2.normal() * 0.02).collect();
+            let lb: Vec<f32> = (0..512 * 16).map(|_| rng2.normal() * 0.02).collect();
+            let lut = manifest.lut.clone();
+            for &mm in &m_sweep {
+                if manifest.artifact(&format!("lords_mm_m{mm}")).is_err() {
+                    continue;
+                }
+                let x: Vec<f32> = (0..mm * 512).map(|_| rng2.normal()).collect();
+                let wfp: Vec<f32> = (0..512 * 512).map(|_| rng2.normal() * 0.02).collect();
+                let run = |name: String, inputs: Vec<HostTensor>| {
+                    let h = h.clone();
+                    h.warm(&name).unwrap();
+                    let label = name.clone();
+                    bench_fn(&label, 0.2, if full { 1.5 } else { 0.6 }, move || {
+                        h.execute(&name, inputs.clone()).unwrap();
+                    })
+                };
+                let r_fp = run(
+                    format!("fp_mm_m{mm}"),
+                    vec![
+                        HostTensor::F32(x.clone(), vec![mm, 512]),
+                        HostTensor::F32(wfp.clone(), vec![512, 512]),
+                    ],
+                );
+                let r_lords = run(
+                    format!("lords_mm_m{mm}"),
+                    vec![
+                        HostTensor::F32(x.clone(), vec![mm, 512]),
+                        HostTensor::I32(codes.clone(), vec![512, 512]),
+                        HostTensor::F32(bmat.clone(), vec![512, r]),
+                        HostTensor::F32(amat.clone(), vec![r, 512]),
+                        HostTensor::F32(lut.clone(), vec![lut.len()]),
+                    ],
+                );
+                let r_nf4 = run(
+                    format!("nf4_mm_m{mm}"),
+                    vec![
+                        HostTensor::F32(x.clone(), vec![mm, 512]),
+                        HostTensor::I32(codes.clone(), vec![512, 512]),
+                        HostTensor::F32(scales.clone(), vec![512, 8]),
+                        HostTensor::F32(lut.clone(), vec![lut.len()]),
+                    ],
+                );
+                let r_qlora = run(
+                    format!("qlora_mm_m{mm}"),
+                    vec![
+                        HostTensor::F32(x.clone(), vec![mm, 512]),
+                        HostTensor::I32(codes.clone(), vec![512, 512]),
+                        HostTensor::F32(scales.clone(), vec![512, 8]),
+                        HostTensor::F32(la.clone(), vec![16, 512]),
+                        HostTensor::F32(lb.clone(), vec![512, 16]),
+                        HostTensor::F32(lut.clone(), vec![lut.len()]),
+                    ],
+                );
+                eprintln!(
+                    "[fig2] pjrt M={mm}: fp {:.2} nf4 {:.2} qlora {:.2} lords {:.2} (ms)",
+                    r_fp.mean_ms(),
+                    r_nf4.mean_ms(),
+                    r_qlora.mean_ms(),
+                    r_lords.mean_ms()
+                );
+                t2.row(vec![
+                    mm.to_string(),
+                    format!("{:.3}", r_fp.mean_ms()),
+                    format!("{:.3}", r_nf4.mean_ms()),
+                    format!("{:.3}", r_qlora.mean_ms()),
+                    format!("{:.3}", r_lords.mean_ms()),
+                    format!("{:.2}x", r_lords.mean_s / r_nf4.mean_s),
+                    format!("{:.2}x", r_qlora.mean_s / r_nf4.mean_s),
+                ]);
+            }
+            t2.print();
+        }
+        Err(e) => eprintln!("[fig2] PJRT sweep skipped ({e}) — run `make artifacts`"),
+    }
+    println!("\n(shape check: LoRDS/NF4 ≈ 1.0x, QLoRA/NF4 > 1.0x across the sweep)");
+}

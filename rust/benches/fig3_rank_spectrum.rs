@@ -1,0 +1,95 @@
+//! Figure 3 — singular-value spectrum of the weight update ΔW after PEFT:
+//! QLoRA's additive update truncates exactly at its rank; LoRDS's
+//! multiplicative update Q ⊙ (B'A' − BA) spreads over the full dimension
+//! (long tail), despite the same trainable budget.
+//!
+//! Output: normalized singular values σ_i/σ_1 at log-spaced indices plus
+//! the effective rank (count of σ_i > 1e-3 σ_1).
+
+use lords::bench::harness::banner;
+use lords::bench::TableBuilder;
+use lords::config::TrainCfg;
+use lords::linalg::svd;
+use lords::model::LinearWeight;
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::testbed::{full_mode, model_zoo, Testbed};
+use lords::train::{NativeTrainer, TrainKind};
+
+fn main() {
+    lords::util::logging::init();
+    banner("Figure 3", "ΔW singular spectrum after PEFT (first wq)");
+
+    let full = full_mode();
+    let (name, cfg) = model_zoo().remove(0);
+    let tb = Testbed::build(name, &cfg, if full { 300 } else { 120 }, 0);
+    let target = lords::data::corpus::Corpus::generate(
+        lords::data::corpus::CorpusKind::Ptb,
+        cfg.vocab,
+        60_000,
+        5_000,
+        77,
+    );
+    let rank = 16;
+    let steps = if full { 150 } else { 50 };
+    let tcfg = TrainCfg { steps, batch: 8, seq: 64, peak_lr: 1e-3, ..Default::default() };
+    let cb = Codebook::normal_float(4);
+
+    let mut rows: Vec<(String, Vec<f32>, usize)> = Vec::new();
+    for method in ["QLoRA", "LoRDS"] {
+        let mut model = tb.model.clone();
+        // effective weight before adaptation
+        let w_before = model.layers[0].wq.effective();
+        match method {
+            "QLoRA" => model.quantize_qlora(cfg.block, rank, &cb, 0),
+            _ => model.quantize_lords(
+                cfg.block,
+                &cb,
+                RefineCfg { steps: 60, ..Default::default() },
+                false,
+            ),
+        }
+        let w_q = model.layers[0].wq.effective(); // post-quant pre-peft
+        let mut tr = NativeTrainer::new(tcfg.clone(), TrainKind::Peft);
+        tr.run(&mut model, &target);
+        let w_after = model.layers[0].wq.effective();
+        let dw = w_after.sub(&w_q);
+        let sv = svd(&dw).s;
+        let s1 = sv[0].max(1e-20);
+        let eff = sv.iter().filter(|&&s| s > 1e-3 * s1).count();
+        let norm: Vec<f32> = sv.iter().map(|&s| s / s1).collect();
+        eprintln!(
+            "[fig3] {method}: ΔW‖F {:.4} (rel {:.4}), effective rank {eff}/{}",
+            dw.frob_norm(),
+            dw.frob_norm() / w_before.frob_norm(),
+            sv.len()
+        );
+        rows.push((method.to_string(), norm, eff));
+    }
+
+    // spectrum series at log-spaced indices
+    let d = rows[0].1.len();
+    let idxs: Vec<usize> = {
+        let mut v = vec![0usize, 1, 2, 4, 8, rank - 1, rank, rank + 1];
+        let mut k = rank * 2;
+        while k < d {
+            v.push(k);
+            k *= 2;
+        }
+        v.push(d - 1);
+        v.retain(|&i| i < d);
+        v.dedup();
+        v
+    };
+    let mut headers = vec!["Method".to_string(), "eff.rank".to_string()];
+    headers.extend(idxs.iter().map(|i| format!("σ{}", i + 1)));
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = TableBuilder::new("Figure 3 — normalized singular values of ΔW").headers(&headers_ref);
+    for (method, norm, eff) in &rows {
+        let mut row = vec![method.clone(), format!("{eff}/{d}")];
+        row.extend(idxs.iter().map(|&i| format!("{:.4}", norm[i])));
+        t.row(row);
+    }
+    t.print();
+    println!("\n(shape check: QLoRA σ collapses ~0 right after σ{rank}; LoRDS keeps a long tail)");
+}

@@ -1,0 +1,88 @@
+//! Table 1 — PTQ comparison: NF4 / GPTQ / AWQ / LoftQ / LoRDS across the
+//! model zoo at (equivalent) block sizes 64 and 128 (the paper's 128/256,
+//! scaled to our matrix sizes), reporting Wiki/PTB perplexity and the
+//! 7-task zero-shot average.
+//!
+//! Expected shape (paper): LoRDS leads the average at strict parameter
+//! parity; LoftQ is competitive but uses a much larger float budget.
+//! `FULL=1 cargo bench --bench table1_ptq` runs the full zoo.
+
+use lords::bench::table::f2;
+use lords::bench::TableBuilder;
+use lords::config::{QuantCfg, QuantMethod};
+use lords::report::methods::{quantize_model, CalibSet};
+use lords::report::testbed::{eval_model, full_mode, model_zoo, Testbed};
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner("Table 1", "PTQ: perplexity + zero-shot accuracy");
+
+    let full = full_mode();
+    let zoo = model_zoo();
+    let models: Vec<_> = if full { zoo } else { zoo.into_iter().take(1).collect() };
+    let blocks: Vec<usize> = if full { vec![64, 128] } else { vec![64] };
+    let pretrain = if full { 300 } else { 120 };
+    let per_task = if full { 40 } else { 16 };
+    let ppl_windows = if full { 24 } else { 8 };
+    let methods = [
+        QuantMethod::Nf4Blockwise,
+        QuantMethod::Gptq,
+        QuantMethod::Awq,
+        QuantMethod::LoftQ,
+        QuantMethod::Lords,
+    ];
+
+    // Two regimes: nf4 (the paper's bit width — near-lossless at our testbed
+    // scale, as 4-bit is for 8B models) and nf3, where our smaller matrices
+    // reach the same *relative damage level* the paper's 4-bit tables show,
+    // so the method ordering becomes visible. See EXPERIMENTS.md §T1.
+    let codebooks: Vec<&str> = if full { vec!["nf4", "nf3"] } else { vec!["nf3"] };
+
+    for (name, cfg) in &models {
+        let tb = Testbed::build(name, cfg, pretrain, 0);
+        let fp = eval_model(&tb.model, &tb, ppl_windows, per_task);
+        for &block in &blocks {
+            for &cbname in &codebooks {
+            let mut t = TableBuilder::new(&format!("Table 1 — {name}, block {block}, {cbname}"))
+                .headers(&["Method", "Wiki ↓", "PTB ↓", "Avg ↑", "#Float"]);
+            t.row(vec![
+                "fp32 (ref)".into(),
+                fp.wiki.display(),
+                fp.ptb.display(),
+                f2(fp.avg),
+                "-".into(),
+            ]);
+            for method in methods {
+                let qcfg = QuantCfg {
+                    method,
+                    block,
+                    codebook: cbname.into(),
+                    refine_steps: if full { 300 } else { 80 },
+                    adapter_rank: 16,
+                    ..Default::default()
+                };
+                let calib = CalibSet::synthetic(&[cfg.d_model, cfg.d_ff], 128, 7);
+                let mut model = tb.model.clone();
+                let (_, secs) =
+                    lords::util::stats::timed(|| quantize_model(&mut model, &qcfg, Some(&calib), 0));
+                let e = eval_model(&model, &tb, ppl_windows, per_task);
+                eprintln!(
+                    "[table1] {name} b{block} {:<6} quantized in {secs:5.1}s  wiki {:>8} avg {:.2}",
+                    method.name(),
+                    e.wiki.display(),
+                    e.avg
+                );
+                t.row(vec![
+                    method.name().into(),
+                    e.wiki.display(),
+                    e.ptb.display(),
+                    f2(e.avg),
+                    lords::bench::table::thousands(model.float_params()),
+                ]);
+            }
+            t.print();
+            }
+        }
+    }
+    println!("\n(shape check: LoRDS should lead Avg at parity budget; see EXPERIMENTS.md)");
+}

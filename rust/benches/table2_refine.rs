@@ -1,0 +1,75 @@
+//! Table 2 — impact of iterative refinement (Algorithm 1): QuantError
+//! (nuclear norm of the residual, averaged over modules), Wiki PPL, and
+//! average accuracy, with refinement off (SVD init only) vs on.
+//!
+//! Expected shape: refinement strictly reduces QuantError and Wiki PPL and
+//! lifts the average, at every block size.
+
+use lords::bench::table::f2;
+use lords::bench::TableBuilder;
+use lords::model::LinearWeight;
+use lords::quant::error::quant_error_nuclear;
+use lords::quant::lords::RefineCfg;
+use lords::quant::{Codebook, QuantizedLinear};
+use lords::report::testbed::{eval_model, full_mode, model_zoo, Testbed};
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner("Table 2", "iterative refinement: QuantError / PPL / Avg");
+
+    let full = full_mode();
+    let zoo = model_zoo();
+    let models: Vec<_> = if full { zoo } else { zoo.into_iter().take(1).collect() };
+    let blocks: Vec<usize> = if full { vec![64, 128] } else { vec![64] };
+    let pretrain = if full { 300 } else { 120 };
+    let refine_steps = if full { 500 } else { 120 };
+
+    let mut t = TableBuilder::new("Table 2 — refinement impact")
+        .headers(&["Model", "BlockSize", "Iter.", "QuantError ↓", "Wiki ↓", "Avg ↑"]);
+
+    for (name, cfg) in &models {
+        let tb = Testbed::build(name, cfg, pretrain, 0);
+        for &block in &blocks {
+            for (iter_label, steps) in [("-", 0usize), ("yes", refine_steps)] {
+                let cb = Codebook::normal_float(3); // nf3: the separation regime at testbed scale (see EXPERIMENTS.md §T1)
+                let mut model = tb.model.clone();
+                // snapshot the dense weights for the error metric
+                let dense: Vec<_> = model
+                    .layers
+                    .iter()
+                    .flat_map(|l| l.linears().into_iter().map(|(_, w)| w.effective()))
+                    .collect();
+                model.quantize_lords(block, &cb, RefineCfg { steps, lr: 0.05, requant_every: 5 }, false);
+                let mut err = 0.0f32;
+                let mut count = 0;
+                for (lw, w0) in model
+                    .layers
+                    .iter()
+                    .flat_map(|l| l.linears().into_iter().map(|(_, w)| w))
+                    .zip(&dense)
+                {
+                    if let LinearWeight::Lords { q, .. } = lw {
+                        err += quant_error_nuclear(w0, &q.dequantize());
+                        count += 1;
+                    }
+                }
+                err /= count as f32;
+                let e = eval_model(&model, &tb, 8, 16);
+                eprintln!(
+                    "[table2] {name} b{block} iter={iter_label} err {err:.3} wiki {}",
+                    e.wiki.display()
+                );
+                t.row(vec![
+                    name.to_string(),
+                    block.to_string(),
+                    iter_label.into(),
+                    f2(err),
+                    e.wiki.display(),
+                    f2(e.avg),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("\n(shape check: 'yes' rows must beat '-' rows on all three metrics)");
+}

@@ -1,0 +1,78 @@
+//! Table 3 — ultra-low-bit quantization on the Llama-like testbed:
+//! 3 / 2.5 / 2.25-bit mixed-precision schedules (NF4 on a layer prefix,
+//! NF2 on the rest), comparing plain NormalFloat, LoftQ (rank-16 adapters),
+//! and LoRDS, with #Float accounting and divergence ("N.A.") detection.
+//!
+//! Expected shape: block-wise NF collapses (N.A. or huge PPL), LoftQ decays
+//! fast, LoRDS degrades gracefully and leads at every bit width.
+
+use lords::bench::table::f2;
+use lords::bench::table::thousands;
+use lords::bench::TableBuilder;
+use lords::model::LinearWeight;
+use lords::quant::baselines::loftq_quantize;
+use lords::quant::lords::RefineCfg;
+use lords::quant::mixed::MixedSchedule;
+use lords::quant::{BlockwiseQuant, LordsQuant};
+use lords::report::testbed::{eval_model, full_mode, model_zoo, Testbed};
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner("Table 3", "ultra-low-bit (mixed NF4/NF2) robustness");
+
+    let full = full_mode();
+    let (name, cfg) = model_zoo().remove(0);
+    let pretrain = if full { 300 } else { 120 };
+    let tb = Testbed::build(name, &cfg, pretrain, 0);
+    let block = 64;
+    let refine = RefineCfg { steps: if full { 300 } else { 120 }, lr: 0.05, requant_every: 5 };
+    let bits_list: Vec<f32> = if full { vec![3.0, 2.5, 2.25, 2.0] } else { vec![3.0, 2.25] };
+
+    let mut t = TableBuilder::new("Table 3 — reduced bit-widths (Llama-like, block 64)")
+        .headers(&["Bit", "Method", "#Float", "Wiki ↓", "PTB ↓", "Avg ↑"]);
+
+    for &bits in &bits_list {
+        let sched = MixedSchedule::for_bits(bits, cfg.n_layers);
+        for method in ["NormalFloat", "LoftQ", "LoRDS"] {
+            let mut model = tb.model.clone();
+            match method {
+                "NormalFloat" => model.map_linears_by_layer(|li, w| {
+                    LinearWeight::Blockwise(BlockwiseQuant::quantize(
+                        w,
+                        block,
+                        &sched.codebook_for_layer(li),
+                    ))
+                }),
+                "LoftQ" => model.map_linears_by_layer(|li, w| {
+                    let a = loftq_quantize(w, block, 16, 5, &sched.codebook_for_layer(li));
+                    LinearWeight::Qlora(lords::quant::baselines::QloraLinear {
+                        base: a.base,
+                        lora_a: a.lora_a,
+                        lora_b: a.lora_b,
+                        scaling: 1.0,
+                    })
+                }),
+                _ => model.map_linears_by_layer(|li, w| {
+                    let (q, _) = LordsQuant::quantize(w, block, &sched.codebook_for_layer(li), refine);
+                    LinearWeight::Lords { q, shadow_w: None }
+                }),
+            }
+            let e = eval_model(&model, &tb, 8, if full { 40 } else { 16 });
+            eprintln!(
+                "[table3] {bits}-bit {method:<11} wiki {:>9} avg {:.2}",
+                e.wiki.display(),
+                e.avg
+            );
+            t.row(vec![
+                sched.bits_label.clone(),
+                method.into(),
+                thousands(model.float_params()),
+                e.wiki.display(),
+                e.ptb.display(),
+                f2(e.avg),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(shape check: NF collapses, LoRDS stays usable at every bit width)");
+}

@@ -1,0 +1,128 @@
+//! Table 6 — end-to-end inference throughput through the coordinator:
+//! bnb-NF4 / QLoRA / LoRDS weight formats, prefill + decode + total
+//! tokens/s. Three "machines" = three operating points (thread counts on
+//! the native engine; plus the PJRT engine when artifacts are present).
+//!
+//! Expected shape: LoRDS ≈ NF4 (rank-r scale reconstruction is the only
+//! extra work) and both beat QLoRA (which pays two extra adapter GEMMs per
+//! linear per token).
+
+use lords::bench::TableBuilder;
+use lords::config::ServeCfg;
+use lords::coordinator::{NativeEngine, PjrtEngine, Request, Server};
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::testbed::{full_mode, model_zoo, Testbed};
+use lords::runtime::executor::Executor;
+use lords::util::Rng;
+
+fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| Request::new(i as u64, (0..prompt_len).map(|_| rng.below(vocab)).collect(), max_new))
+        .collect()
+}
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner("Table 6", "end-to-end serving throughput (batch, prefill+decode)");
+
+    let full = full_mode();
+    let (name, cfg) = model_zoo().remove(0);
+    let tb = Testbed::build(name, &cfg, if full { 300 } else { 120 }, 0);
+    let n_requests = if full { 16 } else { 8 };
+    let max_new = if full { 32 } else { 16 };
+    let prompt_len = cfg.max_seq / 2;
+    let cb = Codebook::normal_float(4);
+
+    let mut t = TableBuilder::new("Table 6 — serving throughput (native engine)")
+        .headers(&["Engine", "Method", "Prefill tok/s", "Decode tok/s", "Total tok/s"]);
+
+    for format in ["nf4", "qlora", "lords"] {
+        let mut model = tb.model.clone();
+        match format {
+            "nf4" => model.quantize_blockwise(cfg.block, &cb),
+            "qlora" => {
+                model.quantize_qlora(cfg.block, cfg.qlora_rank, &cb, 0);
+                // non-zero adapters (post-finetuning state = the paper's setting)
+                let mut rng = Rng::new(7);
+                for layer in model.layers.iter_mut() {
+                    for (_, lw) in layer.linears_mut() {
+                        if let lords::model::LinearWeight::Qlora(q) = lw {
+                            rng.fill_normal(&mut q.lora_b.data, 0.0, 0.01);
+                        }
+                    }
+                }
+            }
+            _ => model.quantize_lords(cfg.block, &cb, RefineCfg { steps: 30, ..Default::default() }, false),
+        }
+        let mut server = Server::new(NativeEngine::new(model, format), ServeCfg::default());
+        let report = server.run(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
+        let m = &report.metrics;
+        eprintln!("[table6] native/{format}: total {:.1} tok/s", m.total_tps());
+        t.row(vec![
+            "native".into(),
+            label(format),
+            format!("{:.1}", m.prefill_tps()),
+            format!("{:.1}", m.decode_tps()),
+            format!("{:.1}", m.total_tps()),
+        ]);
+    }
+    t.print();
+
+    // PJRT operating point (uses the AOT artifacts if present)
+    match Executor::spawn("artifacts") {
+        Ok(exec) => {
+            let manifest = lords::runtime::Manifest::load("artifacts").unwrap();
+            let mcfg = manifest.model.clone();
+            let tbp = Testbed::build("llama3-mini", &mcfg, if full { 300 } else { 120 }, 0);
+            let mut t2 = TableBuilder::new("Table 6 — serving throughput (PJRT engine)")
+                .headers(&["Engine", "Method", "Prefill tok/s", "Decode tok/s", "Total tok/s"]);
+            for format in ["nf4", "qlora", "lords"] {
+                let mut model = tbp.model.clone();
+                let cb = Codebook::from_levels(&manifest.lut_name, manifest.lut.clone());
+                match format {
+                    "nf4" => model.quantize_blockwise(mcfg.block, &cb),
+                    "qlora" => model.quantize_qlora(mcfg.block, mcfg.qlora_rank, &cb, 0),
+                    _ => model.quantize_lords(
+                        mcfg.block,
+                        &cb,
+                        RefineCfg { steps: 30, ..Default::default() },
+                        false,
+                    ),
+                }
+                let art = manifest.artifact(&format!("{format}_prefill_b1")).unwrap();
+                let params = lords::runtime::bridge::collect_params(&model, &art.inputs);
+                let engine = PjrtEngine::new(exec.handle(), &manifest, format, params).unwrap();
+                let plen = engine.prefill_seq;
+                let mut server = Server::new(engine, ServeCfg::default());
+                let reqs = requests(n_requests.min(8), plen, max_new, mcfg.vocab, 2);
+                match server.run(reqs) {
+                    Ok(report) => {
+                        let m = &report.metrics;
+                        eprintln!("[table6] pjrt/{format}: total {:.1} tok/s", m.total_tps());
+                        t2.row(vec![
+                            "pjrt".into(),
+                            label(format),
+                            format!("{:.1}", m.prefill_tps()),
+                            format!("{:.1}", m.decode_tps()),
+                            format!("{:.1}", m.total_tps()),
+                        ]);
+                    }
+                    Err(e) => eprintln!("[table6] pjrt/{format} failed: {e:#}"),
+                }
+            }
+            t2.print();
+        }
+        Err(e) => eprintln!("[table6] PJRT engine skipped ({e})  — run `make artifacts`"),
+    }
+    println!("\n(shape check: LoRDS ≈ NF4 > QLoRA on decode and total)");
+}
+
+fn label(f: &str) -> String {
+    match f {
+        "nf4" => "bnb NF4".into(),
+        "qlora" => "QLoRA".into(),
+        _ => "LoRDS".into(),
+    }
+}

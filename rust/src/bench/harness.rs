@@ -1,0 +1,106 @@
+//! Timing harness: adaptive warmup, fixed-duration measurement, and stable
+//! statistics — enough of criterion's core loop for `cargo bench` targets
+//! with `harness = false`.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+
+    pub fn print(&self) {
+        println!(
+            "  {:<32} {:>10.3} ms/iter  (p50 {:.3}, p99 {:.3}, ±{:.3}, n={})",
+            self.name,
+            self.mean_ms(),
+            self.p50_s * 1e3,
+            self.p99_s * 1e3,
+            self.std_s * 1e3,
+            self.iters
+        );
+    }
+}
+
+/// Benchmark a closure: `warmup` seconds of warmup, then measure for
+/// `measure` seconds (at least 5 iterations).
+pub fn bench_fn(name: &str, warmup: f64, measure: f64, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < warmup {
+        f();
+    }
+    // measure
+    let mut samples = Summary::new();
+    let t1 = Instant::now();
+    let mut iters = 0usize;
+    while t1.elapsed().as_secs_f64() < measure || iters < 5 {
+        let s = Instant::now();
+        f();
+        samples.add(s.elapsed().as_secs_f64());
+        iters += 1;
+        if iters >= 100_000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: samples.mean(),
+        p50_s: samples.p50(),
+        p99_s: samples.p99(),
+        std_s: samples.std(),
+    }
+}
+
+/// Convenience: run `f` once and report the duration (for long end-to-end
+/// benches where repetition is impractical).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Standard bench banner so all `cargo bench` targets look alike.
+pub fn banner(id: &str, what: &str) {
+    println!("\n================================================================");
+    println!("  {id}: {what}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench_fn("spin", 0.01, 0.05, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s > 0.0 && r.mean_s < 0.1);
+        assert!(r.p50_s <= r.p99_s + 1e-9);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 7);
+        assert_eq!(v, 7);
+        assert!(d.as_nanos() > 0);
+    }
+}

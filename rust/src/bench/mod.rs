@@ -1,0 +1,9 @@
+//! Benchmark harness (criterion substitute): warmup + timed iterations with
+//! mean/p50/p99 reporting, plus the markdown table renderer the paper-table
+//! benches share.
+
+pub mod harness;
+pub mod table;
+
+pub use harness::{bench_fn, BenchResult};
+pub use table::TableBuilder;

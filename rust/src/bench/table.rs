@@ -1,0 +1,112 @@
+//! Markdown table rendering for the paper-table benches — every bench prints
+//! rows in the same layout as the paper so before/after comparison is
+//! eyeball-able (EXPERIMENTS.md records both).
+
+#[derive(Clone, Debug, Default)]
+pub struct TableBuilder {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(title: &str) -> TableBuilder {
+        TableBuilder { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn headers(mut self, hs: &[&str]) -> Self {
+        self.headers = hs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n### {}\n\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers shared by benches.
+pub fn f2(v: f32) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f1(v: f32) -> String {
+    format!("{v:.1}")
+}
+
+pub fn millions(params: usize) -> String {
+    format!("{:.1}M", params as f64 / 1e6)
+}
+
+pub fn thousands(params: usize) -> String {
+    if params >= 1_000_000 {
+        millions(params)
+    } else {
+        format!("{:.1}k", params as f64 / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = TableBuilder::new("Table X").headers(&["Method", "Wiki ↓", "Avg ↑"]);
+        t.row(vec!["NF4".into(), "7.90".into(), "64.85".into()]);
+        t.row(vec!["LoRDS".into(), "7.77".into(), "65.37".into()]);
+        let s = t.render();
+        assert!(s.contains("### Table X"));
+        assert!(s.contains("| NF4 "));
+        assert!(s.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = TableBuilder::new("t").headers(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn number_formats() {
+        assert_eq!(f2(7.768), "7.77");
+        assert_eq!(millions(84_000_000), "84.0M");
+        assert_eq!(thousands(5_300), "5.3k");
+    }
+}

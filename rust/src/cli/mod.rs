@@ -1,0 +1,126 @@
+//! Dependency-free command-line parsing (`clap` substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed getters and generated `--help` text.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse the process args; the first non-flag token is the subcommand.
+    pub fn parse_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// Subcommand descriptor for help rendering.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+pub fn render_help(bin: &str, about: &str, cmds: &[Command]) -> String {
+    let mut s = format!("{about}\n\nUSAGE: {bin} <command> [--flags]\n\nCOMMANDS:\n");
+    for c in cmds {
+        s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+    }
+    s.push_str("\nCommon flags: --seed N  --threads N  --artifacts DIR  --config FILE\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // greedy `--key value` semantics: positionals go before flags, and a
+        // boolean flag either trails or uses the `=` form.
+        let a = parse("quantize input.bin --method lords --block 128 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+        assert_eq!(a.get("method"), Some("lords"));
+        assert_eq!(a.get_usize("block", 64), 128);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["input.bin"]);
+        let b = parse("quantize --verbose=true input.bin");
+        assert!(b.get_bool("verbose"));
+        assert_eq!(b.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --port=8080 --rate=2.5");
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert!((a.get_f32("rate", 0.0) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.get_or("method", "nf4"), "nf4");
+        assert_eq!(a.get_usize("block", 64), 64);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("run --fast");
+        assert!(a.get_bool("fast"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Run configuration: a TOML-subset parser (the vendored set has no `serde`
+//! or `toml`) plus the typed configs used by the CLI, trainers, and server.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! integer, float, and boolean values, `#` comments. That covers every
+//! config this project ships (see `configs/*.toml`).
+
+pub mod toml;
+pub mod types;
+
+pub use toml::TomlDoc;
+pub use types::{ModelCfg, QuantCfg, QuantMethod, ServeCfg, TrainCfg};

@@ -1,0 +1,196 @@
+//! Minimal TOML-subset parser.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        if let Value::Str(s) = self {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            Value::Float(v) if v.fract() == 0.0 => Some(*v as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        if let Value::Bool(b) = self {
+            Some(*b)
+        } else {
+            None
+        }
+    }
+}
+
+/// Parsed document: section → key → value. Root-level keys live in "".
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: malformed section header", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .ok_or_else(|| format!("line {}: cannot parse value {:?}", lineno + 1, v.trim()))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &str) -> Result<TomlDoc, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_i64()).map(|v| v as usize).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, section: &str, key: &str, default: f32) -> f32 {
+        self.get(section, key).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Some(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Some(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Some(Value::Float(v));
+    }
+    // bare string (common for method names)
+    if s.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-' || c == '.') {
+        return Some(Value::Str(s.to_string()));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# top comment
+name = "lords-serve"
+threads = 8
+
+[quant]
+method = lords      # bare string
+block = 128
+lr = 0.05
+refine = true
+
+[serve]
+max_batch = 8
+timeout_ms = 5.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.str_or("", "name", ""), "lords-serve");
+        assert_eq!(d.usize_or("", "threads", 0), 8);
+        assert_eq!(d.str_or("quant", "method", ""), "lords");
+        assert_eq!(d.usize_or("quant", "block", 0), 128);
+        assert!((d.f32_or("quant", "lr", 0.0) - 0.05).abs() < 1e-7);
+        assert!(d.bool_or("quant", "refine", false));
+        assert!((d.f32_or("serve", "timeout_ms", 0.0) - 5.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.usize_or("x", "y", 7), 7);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("key").is_err());
+        assert!(TomlDoc::parse("[open").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let d = TomlDoc::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(d.str_or("", "tag", ""), "a#b");
+    }
+}

@@ -1,0 +1,266 @@
+//! Typed configuration structs assembled from a [`TomlDoc`] + CLI overrides.
+
+use super::toml::TomlDoc;
+
+/// Which quantization method to run (Table 1's method column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMethod {
+    Nf4Blockwise,
+    Int4Blockwise,
+    Gptq,
+    Awq,
+    LoftQ,
+    QPissa,
+    QLora,
+    Lords,
+}
+
+impl QuantMethod {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "nf4" | "normalfloat" | "blockwise" => QuantMethod::Nf4Blockwise,
+            "int4" => QuantMethod::Int4Blockwise,
+            "gptq" => QuantMethod::Gptq,
+            "awq" => QuantMethod::Awq,
+            "loftq" => QuantMethod::LoftQ,
+            "qpissa" => QuantMethod::QPissa,
+            "qlora" => QuantMethod::QLora,
+            "lords" => QuantMethod::Lords,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantMethod::Nf4Blockwise => "NF4",
+            QuantMethod::Int4Blockwise => "INT4",
+            QuantMethod::Gptq => "GPTQ",
+            QuantMethod::Awq => "AWQ",
+            QuantMethod::LoftQ => "LoftQ",
+            QuantMethod::QPissa => "QPiSSA",
+            QuantMethod::QLora => "QLoRA",
+            QuantMethod::Lords => "LoRDS",
+        }
+    }
+}
+
+/// Quantization run configuration (PTQ / Algorithm 1 knobs).
+#[derive(Clone, Debug)]
+pub struct QuantCfg {
+    pub method: QuantMethod,
+    pub codebook: String,
+    pub block: usize,
+    /// LoRDS refinement steps T (0 = SVD init only).
+    pub refine_steps: usize,
+    /// Refinement learning rate η (paper: 0.05).
+    pub refine_lr: f32,
+    /// Adapter rank for LoftQ/QPiSSA/QLoRA baselines (paper: 16).
+    pub adapter_rank: usize,
+    /// Parameter-aligned LoRDS† (Appendix B): add the adapter budget to r.
+    pub parity_with_adapter: bool,
+}
+
+impl Default for QuantCfg {
+    fn default() -> Self {
+        QuantCfg {
+            method: QuantMethod::Lords,
+            codebook: "nf4".into(),
+            block: 64,
+            refine_steps: 100,
+            refine_lr: 0.05,
+            adapter_rank: 16,
+            parity_with_adapter: false,
+        }
+    }
+}
+
+impl QuantCfg {
+    pub fn from_doc(doc: &TomlDoc) -> Self {
+        let d = QuantCfg::default();
+        QuantCfg {
+            method: QuantMethod::parse(&doc.str_or("quant", "method", "lords"))
+                .unwrap_or(QuantMethod::Lords),
+            codebook: doc.str_or("quant", "codebook", &d.codebook),
+            block: doc.usize_or("quant", "block", d.block),
+            refine_steps: doc.usize_or("quant", "refine_steps", d.refine_steps),
+            refine_lr: doc.f32_or("quant", "refine_lr", d.refine_lr),
+            adapter_rank: doc.usize_or("quant", "adapter_rank", d.adapter_rank),
+            parity_with_adapter: doc.bool_or("quant", "parity_with_adapter", d.parity_with_adapter),
+        }
+    }
+}
+
+/// Testbed model architecture (must match the AOT manifest for PJRT paths).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub block: usize,
+    pub codebook: String,
+    pub qlora_rank: usize,
+}
+
+impl Default for ModelCfg {
+    fn default() -> Self {
+        ModelCfg {
+            vocab: 512,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 256,
+            block: 64,
+            codebook: "nf4".into(),
+            qlora_rank: 16,
+        }
+    }
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Self {
+        let d = ModelCfg::default();
+        ModelCfg {
+            vocab: doc.usize_or("model", "vocab", d.vocab),
+            d_model: doc.usize_or("model", "d_model", d.d_model),
+            n_layers: doc.usize_or("model", "n_layers", d.n_layers),
+            n_heads: doc.usize_or("model", "n_heads", d.n_heads),
+            d_ff: doc.usize_or("model", "d_ff", d.d_ff),
+            max_seq: doc.usize_or("model", "max_seq", d.max_seq),
+            block: doc.usize_or("model", "block", d.block),
+            codebook: doc.str_or("model", "codebook", &d.codebook),
+            qlora_rank: doc.usize_or("model", "qlora_rank", d.qlora_rank),
+        }
+    }
+}
+
+/// Training protocol knobs (QAT §4.2 / PEFT §4.3, scaled to the testbed).
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub peak_lr: f32,
+    pub warmup_ratio: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 300,
+            batch: 8,
+            seq: 128,
+            peak_lr: 1e-3,
+            warmup_ratio: 0.1,
+            weight_decay: 0.0,
+            seed: 0,
+            log_every: 25,
+        }
+    }
+}
+
+impl TrainCfg {
+    pub fn from_doc(doc: &TomlDoc, section: &str) -> Self {
+        let d = TrainCfg::default();
+        TrainCfg {
+            steps: doc.usize_or(section, "steps", d.steps),
+            batch: doc.usize_or(section, "batch", d.batch),
+            seq: doc.usize_or(section, "seq", d.seq),
+            peak_lr: doc.f32_or(section, "peak_lr", d.peak_lr),
+            warmup_ratio: doc.f32_or(section, "warmup_ratio", d.warmup_ratio),
+            weight_decay: doc.f32_or(section, "weight_decay", d.weight_decay),
+            seed: doc.usize_or(section, "seed", d.seed as usize) as u64,
+            log_every: doc.usize_or(section, "log_every", d.log_every),
+        }
+    }
+}
+
+/// Serving coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// Batch-size buckets available as decode artifacts.
+    pub decode_buckets: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    /// Max time a request waits for batchmates before dispatch (µs).
+    pub batch_window_us: u64,
+    pub max_queue: usize,
+    /// Max new tokens per request (hard cap).
+    pub max_new_tokens: usize,
+    pub workers: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            decode_buckets: vec![1, 2, 4, 8],
+            prefill_buckets: vec![1, 2, 4],
+            batch_window_us: 2_000,
+            max_queue: 256,
+            max_new_tokens: 128,
+            workers: 1,
+        }
+    }
+}
+
+impl ServeCfg {
+    pub fn from_doc(doc: &TomlDoc) -> Self {
+        let d = ServeCfg::default();
+        ServeCfg {
+            batch_window_us: doc.usize_or("serve", "batch_window_us", d.batch_window_us as usize)
+                as u64,
+            max_queue: doc.usize_or("serve", "max_queue", d.max_queue),
+            max_new_tokens: doc.usize_or("serve", "max_new_tokens", d.max_new_tokens),
+            workers: doc.usize_or("serve", "workers", d.workers),
+            ..d
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(QuantMethod::parse("LoRDS"), Some(QuantMethod::Lords));
+        assert_eq!(QuantMethod::parse("nf4"), Some(QuantMethod::Nf4Blockwise));
+        assert_eq!(QuantMethod::parse("unknown"), None);
+        assert_eq!(QuantMethod::Lords.name(), "LoRDS");
+    }
+
+    #[test]
+    fn configs_from_doc() {
+        let doc = TomlDoc::parse(
+            "[quant]\nmethod = gptq\nblock = 256\n[model]\nd_model = 128\n[serve]\nmax_queue = 9\n[qat]\nsteps = 77\n",
+        )
+        .unwrap();
+        let q = QuantCfg::from_doc(&doc);
+        assert_eq!(q.method, QuantMethod::Gptq);
+        assert_eq!(q.block, 256);
+        let m = ModelCfg::from_doc(&doc);
+        assert_eq!(m.d_model, 128);
+        assert_eq!(m.vocab, 512);
+        let s = ServeCfg::from_doc(&doc);
+        assert_eq!(s.max_queue, 9);
+        let t = TrainCfg::from_doc(&doc, "qat");
+        assert_eq!(t.steps, 77);
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let m = ModelCfg::default();
+        assert_eq!(m.d_model % m.n_heads, 0);
+        let s = ServeCfg::default();
+        assert!(s.decode_buckets.windows(2).all(|w| w[0] < w[1]));
+    }
+}

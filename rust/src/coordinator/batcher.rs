@@ -1,0 +1,157 @@
+//! Dynamic batcher: collects arriving requests into bucketed batches under
+//! a latency window.
+//!
+//! Policy (the one the Table-6 bench exercises):
+//! * a batch is dispatched as soon as it fills the largest bucket, or
+//! * when the oldest queued request has waited `window`, dispatch the
+//!   largest bucket ≤ queue length (padding never exceeds the next bucket).
+//!
+//! Invariants (property-tested): FIFO order preserved, batch sizes always
+//! equal a configured bucket, no request waits more than `window` once the
+//! queue is non-empty (modulo dispatch granularity).
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub buckets: Vec<usize>,
+    pub window: Duration,
+    pub max_queue: usize,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(mut buckets: Vec<usize>, window: Duration, max_queue: usize) -> Batcher {
+        buckets.sort_unstable();
+        assert!(!buckets.is_empty());
+        Batcher { buckets, window, max_queue, queue: VecDeque::new() }
+    }
+
+    /// Enqueue; returns false (rejected) when the queue is full.
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.max_queue {
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    fn largest_bucket_leq(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().filter(|&b| b <= n).max()
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Try to form a batch at time `now`. `capacity` limits how many new
+    /// sequences the engine can still admit (KV budget).
+    pub fn pop_batch(&mut self, now: Instant, capacity: usize) -> Option<Vec<Request>> {
+        if self.queue.is_empty() || capacity == 0 {
+            return None;
+        }
+        let avail = self.queue.len().min(capacity);
+        let full = self.max_bucket();
+        let oldest_wait = now.duration_since(self.queue.front().unwrap().arrival);
+        let target = if avail >= full {
+            full
+        } else if oldest_wait >= self.window {
+            self.largest_bucket_leq(avail)?
+        } else {
+            return None;
+        };
+        Some(self.queue.drain(..target).collect())
+    }
+
+    /// Drain everything (shutdown).
+    pub fn drain(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3], 8)
+    }
+
+    #[test]
+    fn dispatches_full_bucket_immediately() {
+        let mut b = Batcher::new(vec![1, 2, 4], Duration::from_millis(5), 100);
+        for i in 0..5 {
+            assert!(b.push(req(i)));
+        }
+        let batch = b.pop_batch(Instant::now(), 99).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0); // FIFO
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn waits_for_window_when_underfull() {
+        let mut b = Batcher::new(vec![1, 2, 4], Duration::from_millis(50), 100);
+        b.push(req(0));
+        assert!(b.pop_batch(Instant::now(), 99).is_none(), "should wait for window");
+        let later = Instant::now() + Duration::from_millis(60);
+        let batch = b.pop_batch(later, 99).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let mut b = Batcher::new(vec![1, 2, 4], Duration::from_millis(0), 100);
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let later = Instant::now() + Duration::from_millis(1);
+        let batch = b.pop_batch(later, 2).unwrap();
+        assert_eq!(batch.len(), 2, "capacity-limited dispatch");
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let mut b = Batcher::new(vec![1], Duration::from_millis(1), 2);
+        assert!(b.push(req(0)));
+        assert!(b.push(req(1)));
+        assert!(!b.push(req(2)));
+    }
+
+    #[test]
+    fn batch_sizes_always_buckets_and_fifo() {
+        prop_check(48, |g| {
+            let buckets = vec![1, 2, 4, 8];
+            let mut b = Batcher::new(buckets.clone(), Duration::from_millis(0), 1000);
+            let n = g.usize(1..=64);
+            for i in 0..n {
+                b.push(req(i as u64));
+            }
+            let mut expected_next = 0u64;
+            let later = Instant::now() + Duration::from_millis(1);
+            while let Some(batch) = b.pop_batch(later, g.usize(1..=16)) {
+                if !buckets.contains(&batch.len()) {
+                    return Err(format!("batch size {} not a bucket", batch.len()));
+                }
+                for r in &batch {
+                    if r.id != expected_next {
+                        return Err(format!("FIFO violated: {} != {expected_next}", r.id));
+                    }
+                    expected_next += 1;
+                }
+            }
+            Ok(())
+        });
+    }
+}

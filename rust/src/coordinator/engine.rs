@@ -1,0 +1,321 @@
+//! Execution engines behind the coordinator: the pure-Rust model and the
+//! PJRT artifact path (bucketed prefill/decode executables, per-sequence
+//! host-side KV slabs packed into batch tensors per step).
+
+use super::request::greedy;
+use crate::model::{KvCache, Model};
+use crate::runtime::{ExecutorHandle, HostTensor, Manifest};
+use std::collections::HashMap;
+
+/// In-flight sequence state owned by the server.
+#[derive(Clone, Debug)]
+pub struct SeqState {
+    pub id: u64,
+    /// prompt + generated tokens
+    pub tokens: Vec<usize>,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub last_logits: Vec<f32>,
+}
+
+impl SeqState {
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated() >= self.max_new
+    }
+
+    pub fn next_token(&self) -> usize {
+        greedy(&self.last_logits)
+    }
+}
+
+pub trait Engine {
+    /// Max total sequence length supported.
+    fn max_seq(&self) -> usize;
+    /// Prefill each sequence's prompt; fills `last_logits`.
+    fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()>;
+    /// One decode step for all sequences (token already appended by the
+    /// server); refreshes `last_logits`.
+    fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()>;
+    /// Free per-sequence state.
+    fn release(&mut self, id: u64);
+    fn name(&self) -> String;
+}
+
+// ---------------------------------------------------------------- native
+
+/// Rust-native engine: per-sequence dense KV caches on the `model::Model`.
+pub struct NativeEngine {
+    pub model: Model,
+    caches: HashMap<u64, KvCache>,
+    label: String,
+}
+
+impl NativeEngine {
+    pub fn new(model: Model, label: &str) -> NativeEngine {
+        NativeEngine { model, caches: HashMap::new(), label: label.to_string() }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn max_seq(&self) -> usize {
+        self.model.cfg.max_seq
+    }
+
+    fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        for s in seqs.iter_mut() {
+            let mut cache = KvCache::new(&self.model.cfg);
+            s.last_logits = self.model.prefill(&s.tokens[..s.prompt_len], &mut cache);
+            self.caches.insert(s.id, cache);
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        for s in seqs.iter_mut() {
+            let cache = self.caches.get_mut(&s.id).expect("prefilled");
+            let tok = *s.tokens.last().unwrap();
+            s.last_logits = self.model.decode(tok, cache);
+        }
+        Ok(())
+    }
+
+    fn release(&mut self, id: u64) {
+        self.caches.remove(&id);
+    }
+
+    fn name(&self) -> String {
+        format!("native/{}", self.label)
+    }
+}
+
+// ---------------------------------------------------------------- pjrt
+
+/// Host-side KV slab for one sequence: [L, max_seq, h, hd] flattened, plus
+/// the current length.
+struct KvSlab {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+/// PJRT engine executing `{mode}_prefill_b*` / `{mode}_decode_b*` artifacts.
+///
+/// Restrictions mirrored from the artifact shapes: prompts must be exactly
+/// the prefill sequence length (the Table-6 protocol uses fixed-length
+/// inputs), and batch sizes are padded up to the nearest bucket.
+pub struct PjrtEngine {
+    handle: ExecutorHandle,
+    pub mode: String,
+    /// model params in manifest order for the serving artifacts.
+    params: Vec<HostTensor>,
+    prefill_buckets: Vec<usize>,
+    decode_buckets: Vec<usize>,
+    pub prefill_seq: usize,
+    max_seq: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    vocab: usize,
+    slabs: HashMap<u64, KvSlab>,
+}
+
+impl PjrtEngine {
+    /// `params` must match the `{mode}_prefill_b*` artifact's leading inputs
+    /// (use `runtime::bridge::collect_params`).
+    pub fn new(
+        handle: ExecutorHandle,
+        manifest: &Manifest,
+        mode: &str,
+        params: Vec<HostTensor>,
+    ) -> anyhow::Result<PjrtEngine> {
+        let m = &manifest.model;
+        let mut prefill_buckets = vec![];
+        let mut decode_buckets = vec![];
+        let mut prefill_seq = 0;
+        for (name, art) in &manifest.artifacts {
+            if let Some(b) = name.strip_prefix(&format!("{mode}_prefill_b")) {
+                prefill_buckets.push(b.parse()?);
+                prefill_seq = art.inputs.last().unwrap().dims[1];
+            } else if let Some(b) = name.strip_prefix(&format!("{mode}_decode_b")) {
+                decode_buckets.push(b.parse()?);
+            }
+        }
+        anyhow::ensure!(!prefill_buckets.is_empty(), "no {mode} prefill artifacts");
+        prefill_buckets.sort_unstable();
+        decode_buckets.sort_unstable();
+        Ok(PjrtEngine {
+            handle,
+            mode: mode.to_string(),
+            params,
+            prefill_buckets,
+            decode_buckets,
+            prefill_seq,
+            max_seq: m.max_seq,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            head_dim: m.d_model / m.n_heads,
+            vocab: m.vocab,
+            slabs: HashMap::new(),
+        })
+    }
+
+    pub fn decode_buckets(&self) -> &[usize] {
+        &self.decode_buckets
+    }
+
+    fn bucket_geq(buckets: &[usize], n: usize) -> usize {
+        buckets.iter().copied().find(|&b| b >= n).unwrap_or(*buckets.last().unwrap())
+    }
+
+    fn slab_elems(&self) -> usize {
+        self.n_layers * self.max_seq * self.n_heads * self.head_dim
+    }
+
+    /// Pack per-seq slabs into [L, b, S, h, hd].
+    fn pack(&self, ids: &[u64], b: usize) -> (Vec<f32>, Vec<f32>) {
+        let per_pos = self.n_heads * self.head_dim;
+        let per_layer_seq = self.max_seq * per_pos;
+        let total = self.n_layers * b * per_layer_seq;
+        let mut k = vec![0.0f32; total];
+        let mut v = vec![0.0f32; total];
+        for (bi, id) in ids.iter().enumerate() {
+            let slab = &self.slabs[id];
+            for l in 0..self.n_layers {
+                let src = l * per_layer_seq;
+                let dst = (l * b + bi) * per_layer_seq;
+                k[dst..dst + per_layer_seq].copy_from_slice(&slab.k[src..src + per_layer_seq]);
+                v[dst..dst + per_layer_seq].copy_from_slice(&slab.v[src..src + per_layer_seq]);
+            }
+        }
+        (k, v)
+    }
+
+    fn unpack(&mut self, ids: &[u64], b: usize, k: &[f32], v: &[f32], new_len: usize) {
+        let per_pos = self.n_heads * self.head_dim;
+        let per_layer_seq = self.max_seq * per_pos;
+        for (bi, id) in ids.iter().enumerate() {
+            let slab = self.slabs.get_mut(id).unwrap();
+            for l in 0..self.n_layers {
+                let dst = l * per_layer_seq;
+                let src = (l * b + bi) * per_layer_seq;
+                slab.k[dst..dst + per_layer_seq].copy_from_slice(&k[src..src + per_layer_seq]);
+                slab.v[dst..dst + per_layer_seq].copy_from_slice(&v[src..src + per_layer_seq]);
+            }
+            slab.len = new_len;
+        }
+    }
+
+    fn cache_dims(&self, b: usize) -> Vec<usize> {
+        vec![self.n_layers, b, self.max_seq, self.n_heads, self.head_dim]
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        let mut idx = 0;
+        while idx < seqs.len() {
+            let n = (seqs.len() - idx).min(*self.prefill_buckets.last().unwrap());
+            let b = Self::bucket_geq(&self.prefill_buckets, n);
+            let chunk = &mut seqs[idx..(idx + n)];
+            // tokens [b, prefill_seq] (pad rows by repeating the last seq)
+            let mut toks = Vec::with_capacity(b * self.prefill_seq);
+            for s in chunk.iter() {
+                anyhow::ensure!(
+                    s.prompt_len == self.prefill_seq,
+                    "pjrt prefill requires prompt_len == {} (got {})",
+                    self.prefill_seq,
+                    s.prompt_len
+                );
+                toks.extend(s.tokens[..s.prompt_len].iter().map(|&t| t as i32));
+            }
+            for _ in n..b {
+                let last = toks[toks.len() - self.prefill_seq..].to_vec();
+                toks.extend(last);
+            }
+            let mut inputs = self.params.clone();
+            inputs.push(HostTensor::I32(toks, vec![b, self.prefill_seq]));
+            let art = format!("{}_prefill_b{b}", self.mode);
+            let out = self.handle.execute(&art, inputs)?;
+            let logits = out[0].f32s();
+            let kc = out[1].f32s();
+            let vc = out[2].f32s();
+            let ids: Vec<u64> = chunk.iter().map(|s| s.id).collect();
+            for s in chunk.iter() {
+                self.slabs.insert(
+                    s.id,
+                    KvSlab { k: vec![0.0; self.slab_elems()], v: vec![0.0; self.slab_elems()], len: 0 },
+                );
+            }
+            self.unpack(&ids, b, kc, vc, self.prefill_seq);
+            for (bi, s) in chunk.iter_mut().enumerate() {
+                s.last_logits = logits[bi * self.vocab..(bi + 1) * self.vocab].to_vec();
+            }
+            idx += n;
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        let max_bucket = *self.decode_buckets.last().unwrap();
+        // continuous batching admits sequences at different times, so the
+        // running set can be ragged in cache position; each decode artifact
+        // takes a single `cur`, so group same-position sequences per call.
+        seqs.sort_by_key(|s| self.slabs[&s.id].len);
+        let mut idx = 0;
+        while idx < seqs.len() {
+            let cur0 = self.slabs[&seqs[idx].id].len;
+            let mut n = 1;
+            while idx + n < seqs.len()
+                && n < max_bucket
+                && self.slabs[&seqs[idx + n].id].len == cur0
+            {
+                n += 1;
+            }
+            let b = Self::bucket_geq(&self.decode_buckets, n);
+            let chunk = &mut seqs[idx..idx + n];
+            let ids: Vec<u64> = chunk.iter().map(|s| s.id).collect();
+            let cur = cur0;
+            anyhow::ensure!(cur < self.max_seq, "KV slab full");
+            let mut toks: Vec<i32> = chunk.iter().map(|s| *s.tokens.last().unwrap() as i32).collect();
+            // pad ids by repeating the first sequence (results discarded)
+            let mut padded_ids = ids.clone();
+            while padded_ids.len() < b {
+                padded_ids.push(ids[0]);
+                toks.push(toks[0]);
+            }
+            let (k, v) = self.pack(&padded_ids, b);
+            let dims = self.cache_dims(b);
+            let mut inputs = self.params.clone();
+            inputs.push(HostTensor::I32(toks, vec![b, 1]));
+            inputs.push(HostTensor::F32(k, dims.clone()));
+            inputs.push(HostTensor::F32(v, dims));
+            inputs.push(HostTensor::scalar_i32(cur as i32));
+            let art = format!("{}_decode_b{b}", self.mode);
+            let out = self.handle.execute(&art, inputs)?;
+            let logits = out[0].f32s();
+            // only unpack the real (non-padded) sequences
+            self.unpack(&ids, b, out[1].f32s(), out[2].f32s(), cur + 1);
+            for (bi, s) in chunk.iter_mut().enumerate() {
+                s.last_logits = logits[bi * self.vocab..(bi + 1) * self.vocab].to_vec();
+            }
+            idx += n;
+        }
+        Ok(())
+    }
+
+    fn release(&mut self, id: u64) {
+        self.slabs.remove(&id);
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt/{}", self.mode)
+    }
+}

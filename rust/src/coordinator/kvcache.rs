@@ -1,0 +1,153 @@
+//! Paged KV-cache block allocator (admission control).
+//!
+//! The cache budget is divided into fixed-size token blocks; a sequence of
+//! length L holds ⌈L / block_tokens⌉ blocks per layer-group. The allocator
+//! decides admission (can a new sequence's worst case fit?) and tracks
+//! per-sequence block lists so completion frees exactly what was taken.
+//! Invariants (property-tested): never exceeds capacity, no double-free,
+//! no block owned by two sequences.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct KvBlockAllocator {
+    /// total blocks in the pool.
+    capacity: usize,
+    /// tokens per block.
+    pub block_tokens: usize,
+    free: Vec<usize>,
+    owned: HashMap<u64, Vec<usize>>,
+}
+
+impl KvBlockAllocator {
+    pub fn new(capacity: usize, block_tokens: usize) -> KvBlockAllocator {
+        KvBlockAllocator {
+            capacity,
+            block_tokens,
+            free: (0..capacity).rev().collect(),
+            owned: HashMap::new(),
+        }
+    }
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    /// Can a sequence with this worst-case token count be admitted?
+    pub fn can_admit(&self, worst_case_tokens: usize) -> bool {
+        self.blocks_for(worst_case_tokens) <= self.free.len()
+    }
+
+    /// Reserve blocks for sequence `seq` to cover `tokens` total tokens.
+    /// Grows the existing reservation; returns false (no change) if the pool
+    /// cannot satisfy it.
+    pub fn reserve(&mut self, seq: u64, tokens: usize) -> bool {
+        let need = self.blocks_for(tokens);
+        let have = self.owned.get(&seq).map(|v| v.len()).unwrap_or(0);
+        if need <= have {
+            return true;
+        }
+        let extra = need - have;
+        if extra > self.free.len() {
+            return false;
+        }
+        let list = self.owned.entry(seq).or_default();
+        for _ in 0..extra {
+            list.push(self.free.pop().unwrap());
+        }
+        true
+    }
+
+    /// Release all blocks owned by `seq`. Panics on double-free.
+    pub fn release(&mut self, seq: u64) {
+        let blocks = self.owned.remove(&seq).unwrap_or_else(|| panic!("double free of seq {seq}"));
+        self.free.extend(blocks);
+        debug_assert!(self.free.len() <= self.capacity);
+    }
+
+    pub fn active_sequences(&self) -> usize {
+        self.owned.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn basic_reserve_release() {
+        let mut a = KvBlockAllocator::new(10, 16);
+        assert!(a.reserve(1, 40)); // 3 blocks
+        assert_eq!(a.used_blocks(), 3);
+        assert!(a.reserve(1, 50)); // grow to 4
+        assert_eq!(a.used_blocks(), 4);
+        assert!(a.reserve(1, 20)); // shrink request = no-op
+        assert_eq!(a.used_blocks(), 4);
+        a.release(1);
+        assert_eq!(a.used_blocks(), 0);
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let mut a = KvBlockAllocator::new(4, 8);
+        assert!(a.can_admit(32));
+        assert!(!a.can_admit(33));
+        assert!(a.reserve(1, 24)); // 3 blocks
+        assert!(!a.reserve(2, 16)); // needs 2, only 1 free
+        assert!(a.reserve(2, 8));
+        assert_eq!(a.free_blocks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = KvBlockAllocator::new(4, 8);
+        a.reserve(7, 8);
+        a.release(7);
+        a.release(7);
+    }
+
+    #[test]
+    fn never_exceeds_capacity_and_no_shared_blocks() {
+        prop_check(64, |g| {
+            let cap = g.usize(1..=32);
+            let mut a = KvBlockAllocator::new(cap, 8);
+            let mut live: Vec<u64> = Vec::new();
+            for step in 0..80 {
+                if g.bool() || live.is_empty() {
+                    let seq = step as u64;
+                    let toks = g.usize(1..=64);
+                    if a.reserve(seq, toks) && !live.contains(&seq) {
+                        live.push(seq);
+                    }
+                } else {
+                    let idx = g.usize(0..=live.len() - 1);
+                    let seq = live.swap_remove(idx);
+                    a.release(seq);
+                }
+                if a.used_blocks() + a.free_blocks() != cap {
+                    return Err(format!("leak: used {} free {} cap {cap}", a.used_blocks(), a.free_blocks()));
+                }
+                // ownership disjointness
+                let mut seen = std::collections::HashSet::new();
+                for blocks in a.owned.values() {
+                    for b in blocks {
+                        if !seen.insert(*b) {
+                            return Err(format!("block {b} owned twice"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

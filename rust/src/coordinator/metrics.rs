@@ -1,0 +1,70 @@
+//! Serving metrics: per-phase token throughput + request latency summaries
+//! — exactly the Prefill / Decode / Total tokens-per-second columns of
+//! Table 6, plus p50/p99 request latency for the serving example.
+
+use crate::util::Summary;
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub wall_secs: f64,
+    pub completed: usize,
+    pub rejected: usize,
+    pub latency: Summary,
+    pub queue_wait: Summary,
+}
+
+impl ServeMetrics {
+    pub fn prefill_tps(&self) -> f64 {
+        self.prefill_tokens as f64 / self.prefill_secs.max(1e-12)
+    }
+
+    pub fn decode_tps(&self) -> f64 {
+        self.decode_tokens as f64 / self.decode_secs.max(1e-12)
+    }
+
+    /// Total throughput over wall-clock (the paper's Total column).
+    pub fn total_tps(&self) -> f64 {
+        (self.prefill_tokens + self.decode_tokens) as f64 / self.wall_secs.max(1e-12)
+    }
+
+    pub fn print(&self, label: &str) {
+        println!(
+            "  {label:<16} prefill {:>9.1} tok/s | decode {:>8.1} tok/s | total {:>8.1} tok/s | p50 {:.1}ms p99 {:.1}ms | done {} rej {}",
+            self.prefill_tps(),
+            self.decode_tps(),
+            self.total_tps(),
+            self.latency.p50() * 1e3,
+            self.latency.p99() * 1e3,
+            self.completed,
+            self.rejected,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut m = ServeMetrics::default();
+        m.prefill_tokens = 1000;
+        m.prefill_secs = 0.5;
+        m.decode_tokens = 100;
+        m.decode_secs = 2.0;
+        m.wall_secs = 2.5;
+        assert!((m.prefill_tps() - 2000.0).abs() < 1e-9);
+        assert!((m.decode_tps() - 50.0).abs() < 1e-9);
+        assert!((m.total_tps() - 440.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let m = ServeMetrics::default();
+        assert!(m.prefill_tps().is_finite());
+    }
+}

@@ -1,0 +1,24 @@
+//! The serving coordinator — the L3 deployment layer around the quantized
+//! model (the vLLM-router-shaped component of this reproduction):
+//!
+//! * [`request`]  — request/response types and greedy sampling.
+//! * [`kvcache`]  — paged KV-block allocator (admission control: how many
+//!   concurrent sequences fit the cache budget; no-double-free invariants).
+//! * [`batcher`]  — dynamic batcher: arrival queue → bucketed batches under
+//!   a latency window (continuous batching at the decode step level).
+//! * [`engine`]   — the execution backends: native Rust model or PJRT
+//!   artifacts (bucketed prefill/decode executables).
+//! * [`server`]   — the serving loop: admit → prefill → interleaved decode
+//!   → complete, with per-phase throughput metrics (Table 6's columns).
+//! * [`metrics`]  — latency/throughput accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use engine::{Engine, NativeEngine, PjrtEngine};
+pub use request::{Request, Response};
+pub use server::{ServeReport, Server};

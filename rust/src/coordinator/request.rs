@@ -1,0 +1,61 @@
+//! Request/response types + sampling.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub max_new_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, arrival: Instant::now() }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<usize>,
+    /// seconds spent in queue before prefill started
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+}
+
+impl Response {
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.decode_s
+    }
+}
+
+/// Greedy (argmax) sampling — deterministic, used by all benches.
+pub fn greedy(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        assert_eq!(greedy(&[0.1, 2.0, -1.0, 1.9]), 1);
+        assert_eq!(greedy(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn response_total() {
+        let r = Response { id: 0, prompt_len: 4, tokens: vec![], queue_s: 0.1, prefill_s: 0.2, decode_s: 0.3 };
+        assert!((r.total_s() - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic data substrate standing in for the paper's corpora (see
+//! DESIGN.md §3 for the substitution rationale):
+//!
+//! * [`corpus`] — Markov-Zipf token streams (two entropy presets = the
+//!   WikiText-2 vs PTB pair), batching, and a calibration sampler.
+//! * [`tasks`]  — a 7-task "commonsense-style" suite scored by LM
+//!   likelihood, mirroring the zero-shot accuracy columns.
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::{Corpus, CorpusKind};
+pub use tasks::{TaskSuite, TaskExample};

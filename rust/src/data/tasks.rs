@@ -1,0 +1,152 @@
+//! Synthetic "commonsense-style" evaluation suite.
+//!
+//! Seven tasks mirror the paper's zero-shot columns (BoolQ, PIQA, SIQA/HS,
+//! WG, ARC-e, ARC-c, OBQA in spirit): each example is a context token
+//! sequence plus K candidate continuations, exactly one of which follows the
+//! corpus's Markov dynamics; the model answers by likelihood, so accuracy
+//! measures how much of the learned distribution survives quantization —
+//! the same mechanism lm-eval-harness uses.
+//!
+//! Task difficulty is controlled by (a) continuation length and (b) how
+//! distractors are drawn (uniform = easy, Zipf-plausible = hard), producing
+//! an accuracy spread comparable to the paper's 30–85% range.
+
+use super::corpus::Corpus;
+use crate::util::Rng;
+
+/// One multiple-choice example.
+#[derive(Clone, Debug)]
+pub struct TaskExample {
+    pub context: Vec<usize>,
+    /// candidate continuations; `answer` indexes the correct one.
+    pub choices: Vec<Vec<usize>>,
+    pub answer: usize,
+}
+
+/// A named task = a bag of examples with a shared difficulty profile.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: &'static str,
+    pub examples: Vec<TaskExample>,
+}
+
+/// The 7-task suite.
+#[derive(Clone, Debug)]
+pub struct TaskSuite {
+    pub tasks: Vec<Task>,
+}
+
+struct TaskSpec {
+    name: &'static str,
+    ctx_len: usize,
+    cont_len: usize,
+    n_choices: usize,
+    /// true → distractors sampled Zipf-plausibly (harder)
+    hard_negatives: bool,
+}
+
+const SPECS: [TaskSpec; 7] = [
+    TaskSpec { name: "BoolQ", ctx_len: 24, cont_len: 2, n_choices: 2, hard_negatives: false },
+    TaskSpec { name: "PIQA", ctx_len: 16, cont_len: 4, n_choices: 2, hard_negatives: true },
+    TaskSpec { name: "HS", ctx_len: 20, cont_len: 6, n_choices: 4, hard_negatives: true },
+    TaskSpec { name: "WG", ctx_len: 12, cont_len: 3, n_choices: 2, hard_negatives: true },
+    TaskSpec { name: "ARC-e", ctx_len: 16, cont_len: 3, n_choices: 4, hard_negatives: false },
+    TaskSpec { name: "ARC-c", ctx_len: 16, cont_len: 5, n_choices: 4, hard_negatives: true },
+    TaskSpec { name: "OBQA", ctx_len: 10, cont_len: 6, n_choices: 4, hard_negatives: true },
+];
+
+impl TaskSuite {
+    /// Build the suite from held-out corpus text so the correct continuation
+    /// is genuinely on-distribution.
+    pub fn generate(corpus: &Corpus, per_task: usize, seed: u64) -> TaskSuite {
+        let mut rng = Rng::new(seed ^ 0x7A5C);
+        let text = &corpus.eval;
+        let tasks = SPECS
+            .iter()
+            .map(|spec| {
+                let examples = (0..per_task)
+                    .map(|_| {
+                        let total = spec.ctx_len + spec.cont_len;
+                        let start = rng.below(text.len() - total - 1);
+                        let context = text[start..start + spec.ctx_len].to_vec();
+                        let correct = text[start + spec.ctx_len..start + total].to_vec();
+                        let answer = rng.below(spec.n_choices);
+                        let choices = (0..spec.n_choices)
+                            .map(|c| {
+                                if c == answer {
+                                    correct.clone()
+                                } else if spec.hard_negatives {
+                                    // a plausible span from elsewhere in text
+                                    let s2 = rng.below(text.len() - spec.cont_len - 1);
+                                    text[s2..s2 + spec.cont_len].to_vec()
+                                } else {
+                                    (0..spec.cont_len).map(|_| rng.below(corpus.vocab)).collect()
+                                }
+                            })
+                            .collect();
+                        TaskExample { context, choices, answer }
+                    })
+                    .collect();
+                Task { name: spec.name, examples }
+            })
+            .collect();
+        TaskSuite { tasks }
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.tasks.iter().map(|t| t.name).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusKind;
+
+    fn suite() -> TaskSuite {
+        let c = Corpus::generate(CorpusKind::Wiki, 64, 4000, 2000, 0);
+        TaskSuite::generate(&c, 20, 1)
+    }
+
+    #[test]
+    fn seven_tasks_with_examples() {
+        let s = suite();
+        assert_eq!(s.tasks.len(), 7);
+        assert_eq!(s.names(), vec!["BoolQ", "PIQA", "HS", "WG", "ARC-e", "ARC-c", "OBQA"]);
+        for t in &s.tasks {
+            assert_eq!(t.examples.len(), 20);
+        }
+    }
+
+    #[test]
+    fn answers_are_valid_indices() {
+        let s = suite();
+        for t in &s.tasks {
+            for e in &t.examples {
+                assert!(e.answer < e.choices.len());
+                let lens: Vec<usize> = e.choices.iter().map(|c| c.len()).collect();
+                assert!(lens.iter().all(|&l| l == lens[0]), "choices must be same length");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = suite();
+        let b = suite();
+        assert_eq!(a.tasks[3].examples[5].context, b.tasks[3].examples[5].context);
+        assert_eq!(a.tasks[3].examples[5].answer, b.tasks[3].examples[5].answer);
+    }
+
+    #[test]
+    fn correct_choice_comes_from_text() {
+        let c = Corpus::generate(CorpusKind::Wiki, 64, 4000, 2000, 0);
+        let s = TaskSuite::generate(&c, 10, 1);
+        // the correct continuation must be a subsequence of eval text
+        let hay = &c.eval;
+        let ex = &s.tasks[0].examples[0];
+        let needle = &ex.choices[ex.answer];
+        let found = hay.windows(needle.len()).any(|w| w == needle.as_slice());
+        assert!(found);
+    }
+}

@@ -1,0 +1,167 @@
+//! Evaluation harness: perplexity over corpus eval splits and zero-shot
+//! likelihood-scored accuracy over the task suite — the two metric families
+//! of Tables 1–5. Includes the divergence detector behind the paper's
+//! "N.A." entries (Table 3).
+
+use crate::data::corpus::Corpus;
+use crate::data::tasks::{TaskExample, TaskSuite};
+use crate::model::loss::cross_entropy_fwd;
+use crate::model::Model;
+
+/// PPL above this (or non-finite loss) is reported as divergence (the
+/// paper's N.A. rows in Table 3).
+pub const DIVERGENCE_PPL: f32 = 1e4;
+
+#[derive(Clone, Debug)]
+pub struct PplResult {
+    pub ppl: f32,
+    pub mean_nll: f32,
+    pub tokens: usize,
+    pub diverged: bool,
+}
+
+impl PplResult {
+    pub fn display(&self) -> String {
+        if self.diverged {
+            "N.A.".into()
+        } else {
+            format!("{:.2}", self.ppl)
+        }
+    }
+}
+
+/// Perplexity of `model` on the eval split of `corpus`.
+pub fn perplexity(model: &Model, corpus: &Corpus, seq: usize, max_windows: usize) -> PplResult {
+    let windows = corpus.eval_windows(seq, max_windows);
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    for (tokens, targets) in &windows {
+        let logits = model.forward(tokens, 1, tokens.len());
+        let (nll, _) = cross_entropy_fwd(&logits, targets);
+        if !nll.is_finite() {
+            return PplResult { ppl: f32::INFINITY, mean_nll: f32::INFINITY, tokens: 0, diverged: true };
+        }
+        total_nll += nll as f64 * targets.len() as f64;
+        total_tokens += targets.len();
+    }
+    let mean = (total_nll / total_tokens.max(1) as f64) as f32;
+    let ppl = mean.exp();
+    PplResult { ppl, mean_nll: mean, tokens: total_tokens, diverged: !ppl.is_finite() || ppl > DIVERGENCE_PPL }
+}
+
+/// Log-likelihood of `continuation` given `context` under `model`.
+fn continuation_logprob(model: &Model, context: &[usize], continuation: &[usize]) -> f32 {
+    let mut full = context.to_vec();
+    full.extend_from_slice(continuation);
+    let logits = model.forward(&full, 1, full.len());
+    // score positions context.len()-1 .. full.len()-2 predicting continuation
+    let mut lp = 0.0f32;
+    for (k, &tok) in continuation.iter().enumerate() {
+        let row = logits.row(context.len() + k - 1);
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let denom: f32 = row.iter().map(|&v| (v - maxv).exp()).sum();
+        lp += row[tok] - maxv - denom.ln();
+    }
+    lp
+}
+
+/// Zero-shot accuracy on one example: argmax over choice likelihoods.
+pub fn score_example(model: &Model, ex: &TaskExample) -> bool {
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for (c, choice) in ex.choices.iter().enumerate() {
+        let lp = continuation_logprob(model, &ex.context, choice);
+        if lp > best.0 {
+            best = (lp, c);
+        }
+    }
+    best.1 == ex.answer
+}
+
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    /// (task name, accuracy %)
+    pub per_task: Vec<(&'static str, f32)>,
+    pub average: f32,
+}
+
+/// Accuracy over the full suite (the Avg ↑ column).
+pub fn evaluate_suite(model: &Model, suite: &TaskSuite) -> SuiteResult {
+    let mut per_task = Vec::with_capacity(suite.tasks.len());
+    for task in &suite.tasks {
+        let correct = task.examples.iter().filter(|e| score_example(model, e)).count();
+        per_task.push((task.name, 100.0 * correct as f32 / task.examples.len().max(1) as f32));
+    }
+    let average = per_task.iter().map(|(_, a)| a).sum::<f32>() / per_task.len().max(1) as f32;
+    SuiteResult { per_task, average }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::data::corpus::CorpusKind;
+    use crate::data::TaskSuite;
+
+    fn tiny() -> (Model, Corpus) {
+        let cfg = ModelCfg {
+            vocab: 48,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 64,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let model = Model::init(&cfg, 0);
+        let corpus = Corpus::generate(CorpusKind::Wiki, 48, 4000, 1500, 0);
+        (model, corpus)
+    }
+
+    #[test]
+    fn untrained_ppl_near_uniform() {
+        let (model, corpus) = tiny();
+        let r = perplexity(&model, &corpus, 32, 4);
+        assert!(!r.diverged);
+        // untrained model ≈ uniform over vocab
+        assert!((r.ppl - 48.0).abs() < 24.0, "ppl {}", r.ppl);
+    }
+
+    #[test]
+    fn untrained_accuracy_near_chance() {
+        let (model, corpus) = tiny();
+        let suite = TaskSuite::generate(&corpus, 12, 0);
+        let res = evaluate_suite(&model, &suite);
+        assert_eq!(res.per_task.len(), 7);
+        // chance is 25–50% depending on n_choices; untrained should be in a
+        // broad band around it
+        assert!(res.average > 10.0 && res.average < 75.0, "avg {}", res.average);
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let (mut model, corpus) = tiny();
+        // blow up the lm head → NaN/huge logits
+        for v in model.lm_head.data.iter_mut() {
+            *v *= 1e20;
+        }
+        let r = perplexity(&model, &corpus, 16, 2);
+        assert!(r.diverged);
+        assert_eq!(r.display(), "N.A.");
+    }
+
+    #[test]
+    fn continuation_logprob_is_additive() {
+        let (model, _) = tiny();
+        let ctx = vec![1usize, 2, 3];
+        let a = continuation_logprob(&model, &ctx, &[4]);
+        let b = {
+            let mut c2 = ctx.clone();
+            c2.push(4);
+            continuation_logprob(&model, &c2, &[5])
+        };
+        let ab = continuation_logprob(&model, &ctx, &[4, 5]);
+        assert!((ab - (a + b)).abs() < 1e-3, "{ab} vs {}", a + b);
+    }
+}

@@ -1,0 +1,52 @@
+//! # LoRDS — Low-Rank Decomposed Scaling
+//!
+//! A full-system reproduction of *"Breaking the Blocks: Continuous Low-Rank
+//! Decomposed Scaling for Unified LLM Quantization and Adaptation"* as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) implementing the
+//!   fused `x · (Q ⊙ (BA))ᵀ` dequant-matmul, AOT-lowered to HLO text.
+//! * **L2** — JAX model + train steps (`python/compile/model.py`), lowered
+//!   once by `python/compile/aot.py`; Python never runs at inference time.
+//! * **L3** — this crate: the quantization library (LoRDS + all baselines),
+//!   a tiny-LLM training/eval testbed, the PJRT runtime, and a serving
+//!   coordinator (router, batcher, KV cache, scheduler).
+//!
+//! The crate is self-contained after `make artifacts`: the only external
+//! dependency is the `xla` PJRT binding.
+//!
+//! ## Module map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`util`] | RNG, thread pool, stats, logging, property-test harness |
+//! | [`cli`] | dependency-free argument parser |
+//! | [`config`] | TOML-subset parser + typed run configs |
+//! | [`tensor`] | row-major f32 matrices, threaded blocked GEMM |
+//! | [`linalg`] | Jacobi SVD, truncated SVD, norms |
+//! | [`optim`] | AdamW / SGD / LR schedules |
+//! | [`quant`] | **the paper**: codebooks, block-wise quant, LoRDS (Alg. 1), STE, mixed precision, GPTQ/AWQ/LoftQ/QPiSSA/QLoRA baselines, error metrics |
+//! | [`model`] | Llama-style transformer with manual backward + quantized linears |
+//! | [`data`] | synthetic corpus, calibration sampler, task suite |
+//! | [`train`] | LM pre-training, QAT, PEFT trainers |
+//! | [`eval`] | perplexity + zero-shot-style accuracy harness |
+//! | [`runtime`] | PJRT client, artifact manifest, executable cache |
+//! | [`coordinator`] | request router, dynamic batcher, prefill/decode scheduler, KV-block allocator, metrics |
+//! | [`bench`] | timing harness + markdown table rendering |
+//! | [`report`] | paper-style table renderers shared by benches |
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod optim;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,10 @@
+//! Numerical linear algebra substrate: one-sided Jacobi SVD (full +
+//! truncated), Householder QR, and the norm toolkit (nuclear norm is the
+//! paper's QuantError metric).
+
+pub mod norms;
+pub mod qr;
+pub mod svd;
+
+pub use norms::{nuclear_norm, spectral_norm};
+pub use svd::{svd, truncated_svd, Svd};

@@ -1,0 +1,85 @@
+//! Matrix norms. The nuclear norm ‖·‖_* (sum of singular values) is the
+//! paper's QuantError metric (Table 2, Appendix B); spectral norm backs the
+//! divergence detector used in the ultra-low-bit experiments.
+
+use super::svd::svd;
+use crate::tensor::Matrix;
+
+/// Nuclear norm ‖A‖_* = Σᵢ σᵢ.
+pub fn nuclear_norm(a: &Matrix) -> f32 {
+    svd(a).s.iter().sum()
+}
+
+/// Spectral norm ‖A‖₂ = σ₁ via power iteration (cheaper than full SVD).
+pub fn spectral_norm(a: &Matrix) -> f32 {
+    let n = a.cols;
+    if n == 0 || a.rows == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = (0..n).map(|i| ((i * 2654435761) % 1000) as f32 / 1000.0 + 0.1).collect();
+    let mut sigma = 0.0f32;
+    for _ in 0..64 {
+        // u = A v ; v = Aᵀ u ; sigma = |u|
+        let u: Vec<f32> = (0..a.rows)
+            .map(|i| a.row(i).iter().zip(&v).map(|(&w, &x)| w * x).sum())
+            .collect();
+        let un: f32 = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if un == 0.0 {
+            return 0.0;
+        }
+        let mut vn = vec![0.0f32; n];
+        for (i, &ui) in u.iter().enumerate() {
+            for (j, vj) in vn.iter_mut().enumerate() {
+                *vj += a.at(i, j) * ui;
+            }
+        }
+        let norm: f32 = vn.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        let new_sigma = norm / un;
+        for (vj, &nj) in v.iter_mut().zip(&vn) {
+            *vj = nj / norm;
+        }
+        if (new_sigma - sigma).abs() <= 1e-5 * new_sigma.max(1e-12) {
+            return new_sigma;
+        }
+        sigma = new_sigma;
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn nuclear_of_diagonal() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((nuclear_norm(&a) - 7.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nuclear_geq_frobenius() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(10, 14, 1.0, &mut rng);
+        assert!(nuclear_norm(&a) >= a.frob_norm() - 1e-4);
+    }
+
+    #[test]
+    fn spectral_matches_svd_top() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(12, 9, 1.0, &mut rng);
+        let top = svd(&a).s[0];
+        let sp = spectral_norm(&a);
+        assert!((sp - top).abs() / top < 1e-3, "{sp} vs {top}");
+    }
+
+    #[test]
+    fn spectral_leq_frobenius() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(8, 8, 1.0, &mut rng);
+        assert!(spectral_norm(&a) <= a.frob_norm() + 1e-4);
+    }
+}

@@ -1,0 +1,183 @@
+//! Householder QR decomposition. Used by GPTQ's Hessian handling (as a
+//! robust fallback to Cholesky on near-singular calibration Hessians) and
+//! available as a general substrate.
+
+use crate::tensor::Matrix;
+
+/// Thin QR: A (m×n, m ≥ n) = Q (m×n, orthonormal cols) · R (n×n, upper).
+pub fn qr(a: &Matrix) -> (Matrix, Matrix) {
+    let m = a.rows;
+    let n = a.cols;
+    assert!(m >= n, "thin QR requires m >= n (got {m}x{n})");
+    let mut r = a.clone();
+    // accumulate Q by applying the Householder reflectors to I
+    let mut q = Matrix::eye(m);
+
+    for k in 0..n {
+        // Householder vector for column k below the diagonal
+        let mut norm: f64 = 0.0;
+        for i in k..m {
+            norm += (r.at(i, k) as f64).powi(2);
+        }
+        let norm = norm.sqrt() as f32;
+        if norm == 0.0 {
+            continue;
+        }
+        let alpha = if r.at(k, k) > 0.0 { -norm } else { norm };
+        let mut v = vec![0.0f32; m];
+        for i in k..m {
+            v[i] = r.at(i, k);
+        }
+        v[k] -= alpha;
+        let vnorm2: f32 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        // R = (I - 2vvᵀ/|v|²) R
+        for j in k..n {
+            let dot: f32 = (k..m).map(|i| v[i] * r.at(i, j)).sum();
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                *r.at_mut(i, j) -= c * v[i];
+            }
+        }
+        // Q = Q (I - 2vvᵀ/|v|²)
+        for i in 0..m {
+            let dot: f32 = (k..m).map(|j| q.at(i, j) * v[j]).sum();
+            let c = 2.0 * dot / vnorm2;
+            for j in k..m {
+                *q.at_mut(i, j) -= c * v[j];
+            }
+        }
+    }
+    // thin factors
+    let q_thin = q.cols_range(0, n);
+    let mut r_thin = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin.set(i, j, r.at(i, j));
+        }
+    }
+    (q_thin, r_thin)
+}
+
+/// Cholesky factorization of a symmetric positive-definite matrix: A = L Lᵀ.
+/// Returns None if the matrix is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows;
+    assert_eq!(n, a.cols);
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt() as f32);
+            } else {
+                l.set(i, j, (sum / l.at(j, j) as f64) as f32);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for j in 0..i {
+            sum -= l.at(i, j) as f64 * y[j] as f64;
+        }
+        y[i] = (sum / l.at(i, i) as f64) as f32;
+    }
+    y
+}
+
+/// Solve Lᵀ x = y (back substitution).
+pub fn solve_upper_t(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for j in (i + 1)..n {
+            sum -= l.at(j, i) as f64 * x[j] as f64;
+        }
+        x[i] = (sum / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_at_b};
+    use crate::util::prop::assert_allclose;
+    use crate::util::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(12, 7, 1.0, &mut rng);
+        let (q, r) = qr(&a);
+        let rec = matmul(&q, &r);
+        assert_allclose(&rec.data, &a.data, 1e-4, 1e-4, "QR");
+        // Q orthonormal
+        let qtq = matmul_at_b(&q, &q);
+        for i in 0..7 {
+            for j in 0..7 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+        // R upper triangular
+        for i in 0..7 {
+            for j in 0..i {
+                assert!(r.at(i, j).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(1);
+        let b = Matrix::randn(8, 8, 1.0, &mut rng);
+        // SPD: BBᵀ + n·I
+        let mut spd = crate::tensor::matmul_transb(&b, &b);
+        for i in 0..8 {
+            *spd.at_mut(i, i) += 8.0;
+        }
+        let l = cholesky(&spd).expect("SPD");
+        let rec = crate::tensor::matmul_transb(&l, &l);
+        assert_allclose(&rec.data, &spd.data, 1e-4, 1e-3, "LLᵀ");
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(2);
+        let b = Matrix::randn(6, 6, 1.0, &mut rng);
+        let mut spd = crate::tensor::matmul_transb(&b, &b);
+        for i in 0..6 {
+            *spd.at_mut(i, i) += 6.0;
+        }
+        let l = cholesky(&spd).unwrap();
+        let rhs: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+        let y = solve_lower(&l, &rhs);
+        let x = solve_upper_t(&l, &y);
+        // check A x = rhs
+        let ax = crate::tensor::gemm::matvec(&spd, &x);
+        assert_allclose(&ax, &rhs, 1e-3, 1e-3, "cholesky solve");
+    }
+}

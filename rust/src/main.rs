@@ -1,0 +1,300 @@
+//! `lords` — the command-line launcher for the LoRDS framework.
+//!
+//! Subcommands cover the whole lifecycle the paper unifies:
+//! pre-train a testbed → PTQ-quantize (any method) → QAT recover →
+//! PEFT adapt → serve through the coordinator (native or PJRT engine).
+
+use lords::cli::{render_help, Args, Command};
+use lords::config::{ModelCfg, QuantCfg, QuantMethod, ServeCfg, TomlDoc, TrainCfg};
+use lords::coordinator::{NativeEngine, PjrtEngine, Request, Server};
+use lords::data::corpus::{Corpus, CorpusKind};
+use lords::data::TaskSuite;
+use lords::report::methods::{quantize_model, CalibSet};
+use lords::report::testbed::Testbed;
+use lords::runtime::executor::Executor;
+use lords::train::{NativeTrainer, TrainKind};
+use lords::util::Rng;
+
+const COMMANDS: &[Command] = &[
+    Command { name: "pretrain", about: "pre-train the tiny-Llama testbed on the synthetic corpus" },
+    Command { name: "quantize", about: "PTQ-quantize the testbed with --method and report PPL/acc" },
+    Command { name: "qat", about: "quantization-aware training (LoRDS STE or INT4 baseline)" },
+    Command { name: "peft", about: "PEFT fine-tune scaling factors (LoRDS) vs QLoRA adapters" },
+    Command { name: "serve", about: "serve batched requests (--engine native|pjrt, --format lords|nf4|qlora)" },
+    Command { name: "eval", about: "evaluate a checkpoint: perplexity + 7-task zero-shot suite" },
+    Command { name: "rank-table", about: "print Appendix-A Table 7 (parity ranks, exact paper shapes)" },
+    Command { name: "info", about: "environment + artifact manifest summary" },
+];
+
+fn main() {
+    lords::util::logging::init();
+    let args = Args::parse_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let result = match sub.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "quantize" => cmd_quantize(&args),
+        "qat" => cmd_qat(&args),
+        "peft" => cmd_peft(&args),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "rank-table" => cmd_rank_table(),
+        "info" => cmd_info(&args),
+        _ => {
+            print!("{}", render_help("lords", "LoRDS: unified LLM quantization + adaptation", COMMANDS));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn model_cfg(args: &Args) -> ModelCfg {
+    match args.get("config") {
+        Some(path) => match TomlDoc::load(path) {
+            Ok(doc) => ModelCfg::from_doc(&doc),
+            Err(e) => {
+                eprintln!("config: {e}; using defaults");
+                ModelCfg::default()
+            }
+        },
+        None => ModelCfg::default(),
+    }
+}
+
+fn cmd_pretrain(args: &Args) -> anyhow::Result<()> {
+    let cfg = model_cfg(args);
+    let steps = args.get_usize("steps", 300);
+    let seed = args.get_u64("seed", 0);
+    let tb = Testbed::build(args.get_or("name", "llama3-mini"), &cfg, steps, seed);
+    let ppl = lords::eval::perplexity(&tb.model, &tb.wiki, 64, 16);
+    println!("pre-trained {} for {steps} steps; wiki PPL {}", tb.name, ppl.display());
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
+    let cfg = model_cfg(args);
+    let steps = args.get_usize("pretrain-steps", 300);
+    let tb = Testbed::build(args.get_or("name", "llama3-mini"), &cfg, steps, args.get_u64("seed", 0));
+    let method = QuantMethod::parse(args.get_or("method", "lords"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let qcfg = QuantCfg {
+        method,
+        block: args.get_usize("block", cfg.block),
+        refine_steps: args.get_usize("refine-steps", 100),
+        refine_lr: args.get_f32("refine-lr", 0.05),
+        adapter_rank: args.get_usize("adapter-rank", 16),
+        ..Default::default()
+    };
+    let dims: Vec<usize> = vec![cfg.d_model, cfg.d_ff];
+    let calib = CalibSet::synthetic(&dims, 128, 7);
+    let mut model = tb.model.clone();
+    let (_, secs) = lords::util::stats::timed(|| quantize_model(&mut model, &qcfg, Some(&calib), 0));
+    let ppl = lords::eval::perplexity(&model, &tb.wiki, 64, 16);
+    let acc = lords::eval::evaluate_suite(&model, &tb.suite);
+    println!(
+        "{} (block {}): quantized in {secs:.1}s | wiki PPL {} | avg acc {:.2}% | float params {}",
+        method.name(),
+        qcfg.block,
+        ppl.display(),
+        acc.average,
+        model.float_params()
+    );
+    Ok(())
+}
+
+fn cmd_qat(args: &Args) -> anyhow::Result<()> {
+    let cfg = model_cfg(args);
+    let tb = Testbed::build(args.get_or("name", "llama3-mini"), &cfg, args.get_usize("pretrain-steps", 300), 0);
+    let mut model = tb.model.clone();
+    let cb = lords::quant::Codebook::by_name(&cfg.codebook).unwrap();
+    let refine = lords::quant::lords::RefineCfg {
+        steps: args.get_usize("refine-steps", 50),
+        ..Default::default()
+    };
+    model.quantize_lords(cfg.block, &cb, refine, true);
+    let before = lords::eval::perplexity(&model, &tb.wiki, 64, 8);
+    let tcfg = TrainCfg {
+        steps: args.get_usize("steps", 100),
+        peak_lr: args.get_f32("lr", 2e-4),
+        warmup_ratio: 0.3,
+        ..Default::default()
+    };
+    let mut tr = NativeTrainer::new(tcfg, TrainKind::Qat);
+    let log = tr.run(&mut model, &tb.wiki);
+    let after = lords::eval::perplexity(&model, &tb.wiki, 64, 8);
+    println!("QAT: PPL {} -> {} (final loss {:.3})", before.display(), after.display(), log.final_loss);
+    Ok(())
+}
+
+fn cmd_peft(args: &Args) -> anyhow::Result<()> {
+    let cfg = model_cfg(args);
+    let tb = Testbed::build(args.get_or("name", "llama3-mini"), &cfg, args.get_usize("pretrain-steps", 300), 0);
+    // adaptation target: the higher-entropy corpus (distribution shift)
+    let target = Corpus::generate(CorpusKind::Ptb, cfg.vocab, 50_000, 10_000, 99);
+    let method = args.get_or("method", "lords");
+    let mut model = tb.model.clone();
+    let cb = lords::quant::Codebook::by_name(&cfg.codebook).unwrap();
+    match method {
+        "qlora" => model.quantize_qlora(cfg.block, 16, &cb, 0),
+        _ => model.quantize_lords(
+            cfg.block,
+            &cb,
+            lords::quant::lords::RefineCfg { steps: 50, ..Default::default() },
+            false,
+        ),
+    }
+    let before = lords::eval::perplexity(&model, &target, 64, 8);
+    let tcfg = TrainCfg {
+        steps: args.get_usize("steps", 150),
+        peak_lr: args.get_f32("lr", 1e-3),
+        ..Default::default()
+    };
+    let mut tr = NativeTrainer::new(tcfg, TrainKind::Peft);
+    tr.run(&mut model, &target);
+    let after = lords::eval::perplexity(&model, &target, 64, 8);
+    println!(
+        "PEFT/{method}: target PPL {} -> {} | #Train {} | #Float {}",
+        before.display(),
+        after.display(),
+        model.train_params(),
+        model.float_params()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = model_cfg(args);
+    let serve_cfg = ServeCfg::default();
+    let n_requests = args.get_usize("requests", 16);
+    let max_new = args.get_usize("max-new", 32);
+    let engine_kind = args.get_or("engine", "native");
+    let format = args.get_or("format", "lords");
+    let mut rng = Rng::new(args.get_u64("seed", 0));
+
+    if engine_kind == "pjrt" {
+        let dir = args.get_or("artifacts", "artifacts");
+        let exec = Executor::spawn(dir)?;
+        let manifest = lords::runtime::Manifest::load(dir).map_err(anyhow::Error::msg)?;
+        let mcfg = manifest.model.clone();
+        let tb = Testbed::build("llama3-mini", &mcfg, args.get_usize("pretrain-steps", 300), 0);
+        let mut model = tb.model.clone();
+        let cb = lords::quant::Codebook::from_levels(&manifest.lut_name, manifest.lut.clone());
+        match format {
+            "nf4" => model.quantize_blockwise(mcfg.block, &cb),
+            "qlora" => model.quantize_qlora(mcfg.block, mcfg.qlora_rank, &cb, 0),
+            _ => model.quantize_lords(
+                mcfg.block,
+                &cb,
+                lords::quant::lords::RefineCfg { steps: 30, ..Default::default() },
+                false,
+            ),
+        }
+        let art = manifest.artifact(&format!("{format}_prefill_b1")).map_err(anyhow::Error::msg)?;
+        let params = lords::runtime::bridge::collect_params(&model, &art.inputs);
+        let engine = PjrtEngine::new(exec.handle(), &manifest, format, params)?;
+        let prompt_len = engine.prefill_seq;
+        let reqs: Vec<Request> = (0..n_requests)
+            .map(|i| {
+                Request::new(i as u64, (0..prompt_len).map(|_| rng.below(mcfg.vocab)).collect(), max_new)
+            })
+            .collect();
+        let mut server = Server::new(engine, serve_cfg);
+        let report = server.run(reqs)?;
+        report.metrics.print(&report.engine);
+    } else {
+        let tb = Testbed::build("llama3-mini", &cfg, args.get_usize("pretrain-steps", 300), 0);
+        let mut model = tb.model.clone();
+        let cb = lords::quant::Codebook::by_name(&cfg.codebook).unwrap();
+        match format {
+            "nf4" => model.quantize_blockwise(cfg.block, &cb),
+            "qlora" => model.quantize_qlora(cfg.block, cfg.qlora_rank, &cb, 0),
+            "fp" => {}
+            _ => model.quantize_lords(
+                cfg.block,
+                &cb,
+                lords::quant::lords::RefineCfg { steps: 30, ..Default::default() },
+                false,
+            ),
+        }
+        let prompt_len = cfg.max_seq / 2;
+        let reqs: Vec<Request> = (0..n_requests)
+            .map(|i| {
+                Request::new(i as u64, (0..prompt_len).map(|_| rng.below(cfg.vocab)).collect(), max_new)
+            })
+            .collect();
+        let mut server = Server::new(NativeEngine::new(model, format), serve_cfg);
+        let report = server.run(reqs)?;
+        report.metrics.print(&report.engine);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let cfg = model_cfg(args);
+    let tb = Testbed::build(args.get_or("name", "llama3-mini"), &cfg, args.get_usize("pretrain-steps", 300), 0);
+    let wiki = lords::eval::perplexity(&tb.model, &tb.wiki, 64, 16);
+    let ptb = lords::eval::perplexity(&tb.model, &tb.ptb, 64, 16);
+    let suite = TaskSuite::generate(&tb.wiki, 40, 2);
+    let acc = lords::eval::evaluate_suite(&tb.model, &suite);
+    println!("wiki PPL {} | ptb PPL {}", wiki.display(), ptb.display());
+    for (name, a) in &acc.per_task {
+        println!("  {name:<6} {a:5.1}%");
+    }
+    println!("  Avg    {:5.1}%", acc.average);
+    Ok(())
+}
+
+fn cmd_rank_table() -> anyhow::Result<()> {
+    use lords::quant::parity_rank;
+    let mut t = lords::bench::TableBuilder::new("Table 7 — parity ranks (exact paper shapes)")
+        .headers(&["Model", "Module", "shape", "B=128", "B=256"]);
+    let rows: &[(&str, &str, usize, usize)] = &[
+        ("Llama3-8B", "Q/O", 4096, 4096),
+        ("Llama3-8B", "K/V", 1024, 4096),
+        ("Llama3-8B", "Up/Gate", 14336, 4096),
+        ("Llama3-8B", "Down", 4096, 14336),
+        ("Qwen3-8B", "Q/O", 4096, 4096),
+        ("Qwen3-8B", "K/V", 1024, 4096),
+        ("Qwen3-8B", "Up/Gate", 12288, 4096),
+        ("Qwen3-8B", "Down", 4096, 12288),
+        ("Qwen3-4B", "Q", 4096, 2560),
+        ("Qwen3-4B", "O", 2560, 4096),
+        ("Qwen3-4B", "K/V", 1024, 2560),
+        ("Qwen3-4B", "Up/Gate", 9728, 2560),
+        ("Qwen3-4B", "Down", 2560, 9728),
+    ];
+    for (model, module, n, m) in rows {
+        t.row(vec![
+            model.to_string(),
+            module.to_string(),
+            format!("{n}x{m}"),
+            parity_rank(*n, *m, 128).to_string(),
+            parity_rank(*n, *m, 256).to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    println!("lords {} — three-layer Rust+JAX+Pallas LoRDS reproduction", env!("CARGO_PKG_VERSION"));
+    println!("threads: {}", lords::util::ThreadPool::global().size());
+    let dir = args.get_or("artifacts", "artifacts");
+    match lords::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} entries | model d={} L={} vocab={} | codebook {} ({} levels)",
+                m.artifacts.len(),
+                m.model.d_model,
+                m.model.n_layers,
+                m.model.vocab,
+                m.lut_name,
+                m.lut.len()
+            );
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    Ok(())
+}

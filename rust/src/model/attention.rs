@@ -1,0 +1,323 @@
+//! Rotary embeddings + causal multi-head self-attention, forward and
+//! backward (softmax Jacobian handled row-wise), plus the incremental
+//! (KV-cache) attention used by the serving path.
+//!
+//! Shapes: a sequence is S×D row-major; heads are contiguous hd-sized column
+//! groups. RoPE matches `python/compile/model.py`: pairs (2i, 2i+1) rotated
+//! by θ_i(pos) = pos / theta^(2i/hd).
+
+use crate::tensor::Matrix;
+
+/// Apply RoPE in place to an S×D matrix of H heads, positions pos0..pos0+S.
+pub fn rope_fwd(x: &mut Matrix, n_heads: usize, pos0: usize, theta: f32) {
+    rope_apply(x, n_heads, pos0, theta, false);
+}
+
+/// RoPE backward = rotation by −θ (the transpose of an orthogonal map).
+pub fn rope_bwd(g: &mut Matrix, n_heads: usize, pos0: usize, theta: f32) {
+    rope_apply(g, n_heads, pos0, theta, true);
+}
+
+fn rope_apply(x: &mut Matrix, n_heads: usize, pos0: usize, theta: f32, inverse: bool) {
+    let d = x.cols;
+    let hd = d / n_heads;
+    assert_eq!(d % n_heads, 0);
+    for s in 0..x.rows {
+        let pos = (pos0 + s) as f32;
+        let row = x.row_mut(s);
+        for h in 0..n_heads {
+            let base = h * hd;
+            for i in 0..hd / 2 {
+                let freq = 1.0 / theta.powf(2.0 * i as f32 / hd as f32);
+                let ang = pos * freq;
+                let (sin, cos) = ang.sin_cos();
+                let sin = if inverse { -sin } else { sin };
+                let x1 = row[base + 2 * i];
+                let x2 = row[base + 2 * i + 1];
+                row[base + 2 * i] = x1 * cos - x2 * sin;
+                row[base + 2 * i + 1] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+/// Cache for attention backward: post-softmax probabilities per head.
+pub struct AttnCache {
+    /// probs[h]: S×S row-stochastic (causal-masked softmax).
+    pub probs: Vec<Matrix>,
+}
+
+/// Causal self-attention over one sequence: q, k, v are S×D (post-RoPE).
+/// Returns (out S×D, cache).
+pub fn attention_fwd(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> (Matrix, AttnCache) {
+    let s = q.rows;
+    let d = q.cols;
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Matrix::zeros(s, d);
+    let mut probs = Vec::with_capacity(n_heads);
+    for h in 0..n_heads {
+        let base = h * hd;
+        let mut p = Matrix::zeros(s, s);
+        for i in 0..s {
+            // scores for row i over keys 0..=i (causal)
+            let qi = &q.row(i)[base..base + hd];
+            let mut maxv = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let kj = &k.row(j)[base..base + hd];
+                let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                let sc = dot * scale;
+                p.set(i, j, sc);
+                maxv = maxv.max(sc);
+            }
+            let mut denom = 0.0f32;
+            for j in 0..=i {
+                let e = (p.at(i, j) - maxv).exp();
+                p.set(i, j, e);
+                denom += e;
+            }
+            let inv = 1.0 / denom;
+            for j in 0..=i {
+                *p.at_mut(i, j) *= inv;
+            }
+            // out_i = Σ_j p_ij v_j
+            let out_row = &mut out.row_mut(i)[base..base + hd];
+            for j in 0..=i {
+                let pij = p.at(i, j);
+                if pij == 0.0 {
+                    continue;
+                }
+                let vj = &v.row(j)[base..base + hd];
+                for (o, &vv) in out_row.iter_mut().zip(vj) {
+                    *o += pij * vv;
+                }
+            }
+        }
+        probs.push(p);
+    }
+    (out, AttnCache { probs })
+}
+
+/// Backward through causal attention: returns (dq, dk, dv), all S×D.
+pub fn attention_bwd(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    cache: &AttnCache,
+    g: &Matrix,
+    n_heads: usize,
+) -> (Matrix, Matrix, Matrix) {
+    let s = q.rows;
+    let d = q.cols;
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dq = Matrix::zeros(s, d);
+    let mut dk = Matrix::zeros(s, d);
+    let mut dv = Matrix::zeros(s, d);
+    for h in 0..n_heads {
+        let base = h * hd;
+        let p = &cache.probs[h];
+        for i in 0..s {
+            let gi = &g.row(i)[base..base + hd];
+            // dp_ij = g_i · v_j ; dv_j += p_ij g_i
+            let mut dp = vec![0.0f32; i + 1];
+            for j in 0..=i {
+                let vj = &v.row(j)[base..base + hd];
+                dp[j] = gi.iter().zip(vj).map(|(a, b)| a * b).sum();
+                let pij = p.at(i, j);
+                let dvj = &mut dv.row_mut(j)[base..base + hd];
+                for (o, &gv) in dvj.iter_mut().zip(gi) {
+                    *o += pij * gv;
+                }
+            }
+            // softmax backward: ds_ij = p_ij (dp_ij − Σ_k p_ik dp_ik)
+            let dot: f32 = (0..=i).map(|j| p.at(i, j) * dp[j]).sum();
+            // dq_i += Σ_j ds_ij k_j · scale ; dk_j += ds_ij q_i · scale
+            let qi: Vec<f32> = q.row(i)[base..base + hd].to_vec();
+            let dqi = &mut dq.row_mut(i)[base..base + hd];
+            for j in 0..=i {
+                let ds = p.at(i, j) * (dp[j] - dot) * scale;
+                if ds == 0.0 {
+                    continue;
+                }
+                let kj = &k.row(j)[base..base + hd];
+                for (o, &kv) in dqi.iter_mut().zip(kj) {
+                    *o += ds * kv;
+                }
+                let dkj = &mut dk.row_mut(j)[base..base + hd];
+                for (o, &qv) in dkj.iter_mut().zip(&qi) {
+                    *o += ds * qv;
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+/// Incremental attention for decode: one query row attends over `len`
+/// cached keys/values (cap×D matrices, rows 0..len valid). q: 1×D post-RoPE.
+pub fn attention_decode(
+    q: &Matrix,
+    k_cache: &Matrix,
+    v_cache: &Matrix,
+    len: usize,
+    n_heads: usize,
+) -> Matrix {
+    let d = q.cols;
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Matrix::zeros(1, d);
+    for h in 0..n_heads {
+        let base = h * hd;
+        let qh = &q.row(0)[base..base + hd];
+        let mut scores = vec![0.0f32; len];
+        let mut maxv = f32::NEG_INFINITY;
+        for (j, sc) in scores.iter_mut().enumerate() {
+            let kj = &k_cache.row(j)[base..base + hd];
+            *sc = qh.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+            maxv = maxv.max(*sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - maxv).exp();
+            denom += *sc;
+        }
+        let inv = 1.0 / denom;
+        let oh = &mut out.row_mut(0)[base..base + hd];
+        for (j, &sc) in scores.iter().enumerate() {
+            let w = sc * inv;
+            let vj = &v_cache.row(j)[base..base + hd];
+            for (o, &vv) in oh.iter_mut().zip(vj) {
+                *o += w * vv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rope_roundtrip() {
+        let mut rng = Rng::new(0);
+        let x0 = Matrix::randn(5, 16, 1.0, &mut rng);
+        let mut x = x0.clone();
+        rope_fwd(&mut x, 2, 3, 10000.0);
+        rope_bwd(&mut x, 2, 3, 10000.0);
+        crate::util::prop::assert_allclose(&x.data, &x0.data, 1e-5, 1e-5, "rope inverse");
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::new(1);
+        let x0 = Matrix::randn(4, 8, 1.0, &mut rng);
+        let mut x = x0.clone();
+        rope_fwd(&mut x, 2, 0, 10000.0);
+        assert!((x.frob_norm() - x0.frob_norm()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // dot(rope(q, p1), rope(k, p2)) depends only on p1 − p2
+        let mut rng = Rng::new(2);
+        let q0 = Matrix::randn(1, 8, 1.0, &mut rng);
+        let k0 = Matrix::randn(1, 8, 1.0, &mut rng);
+        let dot_at = |pq: usize, pk: usize| -> f32 {
+            let mut q = q0.clone();
+            let mut k = k0.clone();
+            rope_fwd(&mut q, 1, pq, 100.0);
+            rope_fwd(&mut k, 1, pk, 100.0);
+            q.row(0).iter().zip(k.row(0)).map(|(a, b)| a * b).sum()
+        };
+        assert!((dot_at(5, 3) - dot_at(9, 7)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn attention_rows_sum_to_one_and_causal() {
+        let mut rng = Rng::new(3);
+        let s = 6;
+        let q = Matrix::randn(s, 8, 1.0, &mut rng);
+        let k = Matrix::randn(s, 8, 1.0, &mut rng);
+        let v = Matrix::randn(s, 8, 1.0, &mut rng);
+        let (_, cache) = attention_fwd(&q, &k, &v, 2);
+        for p in &cache.probs {
+            for i in 0..s {
+                let sum: f32 = (0..s).map(|j| p.at(i, j)).sum();
+                assert!((sum - 1.0).abs() < 1e-5);
+                for j in i + 1..s {
+                    assert_eq!(p.at(i, j), 0.0, "causality violated at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_grads_match_finite_difference() {
+        let mut rng = Rng::new(4);
+        let s = 4;
+        let d = 8;
+        let q = Matrix::randn(s, d, 0.5, &mut rng);
+        let k = Matrix::randn(s, d, 0.5, &mut rng);
+        let v = Matrix::randn(s, d, 0.5, &mut rng);
+        let upstream = Matrix::randn(s, d, 1.0, &mut rng);
+        let loss = |q: &Matrix, k: &Matrix, v: &Matrix| -> f32 {
+            let (o, _) = attention_fwd(q, k, v, 2);
+            o.data.iter().zip(&upstream.data).map(|(a, b)| a * b).sum()
+        };
+        let (_, cache) = attention_fwd(&q, &k, &v, 2);
+        let (dq, dk, dv) = attention_bwd(&q, &k, &v, &cache, &upstream, 2);
+        let eps = 1e-3;
+        let checks: [(&Matrix, Box<dyn Fn(&mut Matrix) -> &mut f32>, f32); 3] = [
+            (&dq, Box::new(|m: &mut Matrix| m.at_mut(2, 3)), 0.0),
+            (&dk, Box::new(|m: &mut Matrix| m.at_mut(1, 6)), 0.0),
+            (&dv, Box::new(|m: &mut Matrix| m.at_mut(0, 4)), 0.0),
+        ];
+        // dq check
+        for (idx, (grad, pick, _)) in checks.into_iter().enumerate() {
+            let (mut p1, mut m1) = (q.clone(), q.clone());
+            let (mut p2, mut m2) = (k.clone(), k.clone());
+            let (mut p3, mut m3) = (v.clone(), v.clone());
+            let (fd, an) = match idx {
+                0 => {
+                    *pick(&mut p1) += eps;
+                    *pick(&mut m1) -= eps;
+                    ((loss(&p1, &k, &v) - loss(&m1, &k, &v)) / (2.0 * eps), grad.at(2, 3))
+                }
+                1 => {
+                    *pick(&mut p2) += eps;
+                    *pick(&mut m2) -= eps;
+                    ((loss(&q, &p2, &v) - loss(&q, &m2, &v)) / (2.0 * eps), grad.at(1, 6))
+                }
+                _ => {
+                    *pick(&mut p3) += eps;
+                    *pick(&mut m3) -= eps;
+                    ((loss(&q, &k, &p3) - loss(&q, &k, &m3)) / (2.0 * eps), grad.at(0, 4))
+                }
+            };
+            assert!((fd - an).abs() < 3e-2 * fd.abs().max(0.5), "grad {idx}: fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn decode_matches_full_attention_last_row() {
+        let mut rng = Rng::new(5);
+        let s = 7;
+        let d = 8;
+        let q = Matrix::randn(s, d, 0.5, &mut rng);
+        let k = Matrix::randn(s, d, 0.5, &mut rng);
+        let v = Matrix::randn(s, d, 0.5, &mut rng);
+        let (full, _) = attention_fwd(&q, &k, &v, 2);
+        let q_last = q.slice(s - 1, s, 0, d);
+        let out = attention_decode(&q_last, &k, &v, s, 2);
+        crate::util::prop::assert_allclose(
+            out.row(0),
+            full.row(s - 1),
+            1e-4,
+            1e-4,
+            "decode vs full",
+        );
+    }
+}

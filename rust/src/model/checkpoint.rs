@@ -1,0 +1,173 @@
+//! Dense-model checkpointing (tiny binary format, f32 little-endian).
+//!
+//! Only dense models are checkpointed — quantized representations are
+//! cheap to re-derive and keeping a single canonical format avoids version
+//! skew. Used to memoize the pre-trained testbed models that every paper
+//! table starts from.
+
+use super::{LinearWeight, Model};
+use crate::config::ModelCfg;
+use crate::tensor::Matrix;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"LORDSCK1";
+
+fn write_mat(w: &mut impl Write, m: &Matrix) -> std::io::Result<()> {
+    w.write_all(&(m.rows as u32).to_le_bytes())?;
+    w.write_all(&(m.cols as u32).to_le_bytes())?;
+    for v in &m.data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_mat(r: &mut impl Read) -> std::io::Result<Matrix> {
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let rows = u32::from_le_bytes(b4) as usize;
+    r.read_exact(&mut b4)?;
+    let cols = u32::from_le_bytes(b4) as usize;
+    let mut data = vec![0f32; rows * cols];
+    for v in data.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *v = f32::from_le_bytes(b4);
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn write_vec(w: &mut impl Write, v: &[f32]) -> std::io::Result<()> {
+    write_mat(w, &Matrix::from_vec(1, v.len(), v.to_vec()))
+}
+
+fn read_vec(r: &mut impl Read) -> std::io::Result<Vec<f32>> {
+    Ok(read_mat(r)?.data)
+}
+
+impl Model {
+    /// Serialize (dense linears only — panics otherwise).
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        for v in [
+            self.cfg.vocab,
+            self.cfg.d_model,
+            self.cfg.n_layers,
+            self.cfg.n_heads,
+            self.cfg.d_ff,
+            self.cfg.max_seq,
+            self.cfg.block,
+        ] {
+            f.write_all(&(v as u32).to_le_bytes())?;
+        }
+        write_mat(&mut f, &self.tok_emb)?;
+        write_mat(&mut f, &self.lm_head)?;
+        write_vec(&mut f, &self.final_norm)?;
+        for layer in &self.layers {
+            write_vec(&mut f, &layer.attn_norm)?;
+            write_vec(&mut f, &layer.mlp_norm)?;
+            for (_, lw) in layer.linears() {
+                match lw {
+                    LinearWeight::Dense(w) => write_mat(&mut f, w)?,
+                    other => panic!("checkpoint requires dense model, got {other:?}"),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str, cfg: &ModelCfg) -> std::io::Result<Model> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+        }
+        let mut b4 = [0u8; 4];
+        let mut dims = [0usize; 7];
+        for d in dims.iter_mut() {
+            f.read_exact(&mut b4)?;
+            *d = u32::from_le_bytes(b4) as usize;
+        }
+        if dims
+            != [cfg.vocab, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.max_seq, cfg.block]
+        {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("checkpoint dims {dims:?} mismatch config"),
+            ));
+        }
+        let mut model = Model::init(cfg, 0);
+        model.tok_emb = read_mat(&mut f)?;
+        model.lm_head = read_mat(&mut f)?;
+        model.final_norm = read_vec(&mut f)?;
+        for layer in model.layers.iter_mut() {
+            layer.attn_norm = read_vec(&mut f)?;
+            layer.mlp_norm = read_vec(&mut f)?;
+            for (_, lw) in layer.linears_mut() {
+                *lw = LinearWeight::Dense(read_mat(&mut f)?);
+            }
+        }
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let cfg = ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let model = Model::init(&cfg, 42);
+        let path = std::env::temp_dir().join("lords_ck_test.bin");
+        let path = path.to_str().unwrap();
+        model.save(path).unwrap();
+        let loaded = Model::load(path, &cfg).unwrap();
+        assert_eq!(model.tok_emb.data, loaded.tok_emb.data);
+        if let (LinearWeight::Dense(a), LinearWeight::Dense(b)) =
+            (&model.layers[1].w_down, &loaded.layers[1].w_down)
+        {
+            assert_eq!(a.data, b.data);
+        } else {
+            panic!();
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn config_mismatch_rejected() {
+        let cfg = ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let model = Model::init(&cfg, 0);
+        let path = std::env::temp_dir().join("lords_ck_test2.bin");
+        let path = path.to_str().unwrap();
+        model.save(path).unwrap();
+        let mut cfg2 = cfg.clone();
+        cfg2.d_model = 32;
+        cfg2.n_heads = 4;
+        assert!(Model::load(path, &cfg2).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,360 @@
+//! Linear layers: dense, LoRDS-quantized, block-wise NF4, and QLoRA, with
+//! forward + backward. This is where the paper's three fine-tuning regimes
+//! meet the transformer:
+//!
+//! * **Dense**  — full-precision W; grads to W (pre-training).
+//! * **Lords**  — frozen codes Q, trainable (B, A): Ŵ = lut[Q] ⊙ (BA);
+//!   PEFT grads via dŴ ⊙ Q chained through the rank-r factors (exact —
+//!   no STE needed because Ŵ is linear in S). QAT mode additionally
+//!   carries a dense shadow W and uses the STE rules (eqs. 4–5).
+//! * **Blockwise** — frozen NF4 weight, no trainable params (serving
+//!   baseline).
+//! * **Qlora** — frozen NF4 base + trainable additive adapter (the
+//!   unmergeable two-GEMM path).
+
+use crate::quant::baselines::QloraLinear;
+use crate::quant::ste;
+use crate::quant::QuantizedLinear;
+use crate::quant::{BlockwiseQuant, Codebook, LordsQuant};
+use crate::tensor::{matmul, matmul_at_b, matmul_transb, Matrix};
+
+/// Weight representation of one linear layer (y = x·Wᵀ).
+#[derive(Clone, Debug)]
+pub enum LinearWeight {
+    Dense(Matrix),
+    /// LoRDS quantized; `shadow_w` present ⇒ QAT mode (STE grads to W too).
+    Lords { q: LordsQuant, shadow_w: Option<Matrix> },
+    Blockwise(BlockwiseQuant),
+    Qlora(QloraLinear),
+}
+
+/// Gradients produced by a linear backward pass.
+#[derive(Clone, Debug, Default)]
+pub struct LinearGrads {
+    pub d_w: Option<Matrix>,
+    pub d_b: Option<Matrix>,
+    pub d_a: Option<Matrix>,
+    pub d_lora_b: Option<Matrix>,
+    pub d_lora_a: Option<Matrix>,
+}
+
+/// Cached state from forward needed by backward.
+pub struct LinearCache {
+    /// Input x (t×m) — borrowed by value for simplicity.
+    pub x: Matrix,
+    /// Effective dequantized weight used in the forward (n×m).
+    pub w_eff: Matrix,
+    /// STE fake-quant byproducts (QAT mode only).
+    pub fq: Option<ste::FakeQuant>,
+}
+
+impl LinearWeight {
+    pub fn out_features(&self) -> usize {
+        match self {
+            LinearWeight::Dense(w) => w.rows,
+            LinearWeight::Lords { q, .. } => q.rows,
+            LinearWeight::Blockwise(q) => q.rows,
+            LinearWeight::Qlora(q) => q.base.rows,
+        }
+    }
+
+    pub fn in_features(&self) -> usize {
+        match self {
+            LinearWeight::Dense(w) => w.cols,
+            LinearWeight::Lords { q, .. } => q.cols,
+            LinearWeight::Blockwise(q) => q.cols,
+            LinearWeight::Qlora(q) => q.base.cols,
+        }
+    }
+
+    /// The effective full-precision weight this layer currently represents.
+    pub fn effective(&self) -> Matrix {
+        match self {
+            LinearWeight::Dense(w) => w.clone(),
+            LinearWeight::Lords { q, shadow_w } => match shadow_w {
+                // QAT: fake-quantize the shadow weight through current (B, A)
+                Some(w) => ste::fake_quant(w, &q.b, &q.a, &q.codebook).w_hat,
+                None => q.dequantize(),
+            },
+            LinearWeight::Blockwise(q) => {
+                use crate::quant::QuantizedLinear;
+                q.dequantize()
+            }
+            LinearWeight::Qlora(q) => {
+                use crate::quant::QuantizedLinear;
+                q.dequantize()
+            }
+        }
+    }
+
+    /// Inference-only forward (no cache) using the fused kernels where the
+    /// representation has one.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        match self {
+            LinearWeight::Dense(w) => matmul_transb(x, w),
+            LinearWeight::Lords { q, shadow_w: None } => q.matmul_transb(x),
+            LinearWeight::Lords { q, shadow_w: Some(w) } => {
+                let fq = ste::fake_quant(w, &q.b, &q.a, &q.codebook);
+                matmul_transb(x, &fq.w_hat)
+            }
+            LinearWeight::Blockwise(q) => q.matmul_transb(x),
+            LinearWeight::Qlora(q) => q.forward(x),
+        }
+    }
+
+    /// Training forward: returns output + cache for backward.
+    pub fn forward_cached(&self, x: &Matrix) -> (Matrix, LinearCache) {
+        match self {
+            LinearWeight::Lords { q, shadow_w: Some(w) } => {
+                let fq = ste::fake_quant(w, &q.b, &q.a, &q.codebook);
+                let y = matmul_transb(x, &fq.w_hat);
+                (
+                    y,
+                    LinearCache { x: x.clone(), w_eff: fq.w_hat.clone(), fq: Some(fq) },
+                )
+            }
+            _ => {
+                let w_eff = self.effective();
+                let y = matmul_transb(x, &w_eff);
+                (y, LinearCache { x: x.clone(), w_eff, fq: None })
+            }
+        }
+    }
+
+    /// Backward: upstream g = ∂L/∂y (t×n) → (∂L/∂x, parameter grads).
+    pub fn backward(&self, cache: &LinearCache, g: &Matrix) -> (Matrix, LinearGrads) {
+        // dx = g · W_eff (t×n)(n×m) and dŴ = gᵀ·x (n×m)
+        let dx = matmul(g, &cache.w_eff);
+        let mut grads = LinearGrads::default();
+        match self {
+            LinearWeight::Dense(_) => {
+                grads.d_w = Some(matmul_at_b(g, &cache.x));
+            }
+            LinearWeight::Lords { q, shadow_w } => {
+                let d_w_hat = matmul_at_b(g, &cache.x); // n×m
+                match shadow_w {
+                    None => {
+                        // PEFT: Ŵ = Q ⊙ (BA) is linear in (B, A):
+                        // dS = dŴ ⊙ Q; dB = dS Aᵀ; dA = Bᵀ dS (exact)
+                        let ds = d_w_hat.hadamard(&q.q_values());
+                        grads.d_b = Some(matmul_transb(&ds, &q.a));
+                        grads.d_a = Some(matmul_at_b(&q.b, &ds));
+                    }
+                    Some(w) => {
+                        // QAT: STE rules (eqs. 4–5)
+                        let fq = cache.fq.as_ref().expect("QAT cache");
+                        let (dw, db, da) = ste::ste_grads(fq, w, &q.b, &q.a, &d_w_hat);
+                        grads.d_w = Some(dw);
+                        grads.d_b = Some(db);
+                        grads.d_a = Some(da);
+                    }
+                }
+            }
+            LinearWeight::Blockwise(_) => {}
+            LinearWeight::Qlora(q) => {
+                let (d_lb, d_la) = q.adapter_grads(&cache.x, g);
+                grads.d_lora_b = Some(d_lb);
+                grads.d_lora_a = Some(d_la);
+            }
+        }
+        (dx, grads)
+    }
+
+    /// Apply an update produced by an optimizer (same field layout as grads).
+    pub fn trainable_mut(&mut self) -> Vec<(&'static str, &mut [f32])> {
+        match self {
+            LinearWeight::Dense(w) => vec![("w", &mut w.data)],
+            LinearWeight::Lords { q, shadow_w } => {
+                let mut v: Vec<(&'static str, &mut [f32])> =
+                    vec![("b", &mut q.b.data), ("a", &mut q.a.data)];
+                if let Some(w) = shadow_w {
+                    v.push(("w", &mut w.data));
+                }
+                v
+            }
+            LinearWeight::Blockwise(_) => vec![],
+            LinearWeight::Qlora(q) => vec![
+                ("lora_b", &mut q.lora_b.data),
+                ("lora_a", &mut q.lora_a.data),
+            ],
+        }
+    }
+
+    /// After a QAT run, bake the shadow weight into final codes.
+    pub fn finalize_qat(&mut self) {
+        if let LinearWeight::Lords { q, shadow_w } = self {
+            if let Some(w) = shadow_w.take() {
+                q.requantize(&w);
+            }
+        }
+    }
+
+    pub fn float_params(&self) -> usize {
+        use crate::quant::QuantizedLinear;
+        match self {
+            LinearWeight::Dense(w) => w.len(),
+            LinearWeight::Lords { q, .. } => q.float_params(),
+            LinearWeight::Blockwise(q) => q.float_params(),
+            LinearWeight::Qlora(q) => q.float_params(),
+        }
+    }
+
+    /// Trainable parameter count (the #Train column of Table 5).
+    pub fn train_params(&self) -> usize {
+        match self {
+            LinearWeight::Dense(w) => w.len(),
+            LinearWeight::Lords { q, shadow_w } => {
+                q.b.len() + q.a.len() + shadow_w.as_ref().map(|w| w.len()).unwrap_or(0)
+            }
+            LinearWeight::Blockwise(_) => 0,
+            LinearWeight::Qlora(q) => q.lora_a.len() + q.lora_b.len(),
+        }
+    }
+}
+
+/// Helpers to build quantized layers from a dense weight.
+pub fn quantize_lords(
+    w: &Matrix,
+    block: usize,
+    cb: &Codebook,
+    refine: crate::quant::lords::RefineCfg,
+) -> LinearWeight {
+    let (q, _) = LordsQuant::quantize(w, block, cb, refine);
+    LinearWeight::Lords { q, shadow_w: None }
+}
+
+pub fn quantize_lords_qat(
+    w: &Matrix,
+    block: usize,
+    cb: &Codebook,
+    refine: crate::quant::lords::RefineCfg,
+) -> LinearWeight {
+    let (q, _) = LordsQuant::quantize(w, block, cb, refine);
+    LinearWeight::Lords { q, shadow_w: Some(w.clone()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::lords::RefineCfg;
+    use crate::util::Rng;
+
+    fn fd_grad(loss: impl Fn(&LinearWeight) -> f32, lw: &LinearWeight, tweak: impl Fn(&mut LinearWeight, f32)) -> f32 {
+        let eps = 1e-3;
+        let mut p = lw.clone();
+        tweak(&mut p, eps);
+        let mut m = lw.clone();
+        tweak(&mut m, -eps);
+        (loss(&p) - loss(&m)) / (2.0 * eps)
+    }
+
+    #[test]
+    fn dense_grads_match_fd() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(6, 10, 0.2, &mut rng);
+        let lw = LinearWeight::Dense(w);
+        let x = Matrix::randn(4, 10, 1.0, &mut rng);
+        let (y, cache) = lw.forward_cached(&x);
+        let g = Matrix::ones(4, 6);
+        let (dx, grads) = lw.backward(&cache, &g);
+        assert_eq!(y.shape(), (4, 6));
+        let dw = grads.d_w.unwrap();
+        let loss = |l: &LinearWeight| l.forward(&x).data.iter().sum::<f32>();
+        let fd = fd_grad(loss, &lw, |l, e| {
+            if let LinearWeight::Dense(w) = l {
+                *w.at_mut(2, 3) += e;
+            }
+        });
+        assert!((fd - dw.at(2, 3)).abs() < 1e-2 * fd.abs().max(1.0), "{fd} vs {}", dw.at(2, 3));
+        // dx check
+        let fd_x = {
+            let eps = 1e-3;
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            *xp.at_mut(1, 5) += eps;
+            *xm.at_mut(1, 5) -= eps;
+            (lw.forward(&xp).data.iter().sum::<f32>() - lw.forward(&xm).data.iter().sum::<f32>())
+                / (2.0 * eps)
+        };
+        assert!((fd_x - dx.at(1, 5)).abs() < 1e-2 * fd_x.abs().max(1.0));
+    }
+
+    #[test]
+    fn lords_peft_grads_match_fd() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(8, 16, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let lw = quantize_lords(&w, 8, &cb, RefineCfg { steps: 5, ..Default::default() });
+        let x = Matrix::randn(3, 16, 1.0, &mut rng);
+        let (_, cache) = lw.forward_cached(&x);
+        let g = Matrix::ones(3, 8);
+        let (_, grads) = lw.backward(&cache, &g);
+        let db = grads.d_b.unwrap();
+        let da = grads.d_a.unwrap();
+        // PEFT forward is exactly linear in (B, A) — FD matches tightly
+        let loss = |l: &LinearWeight| l.forward(&x).data.iter().sum::<f32>();
+        let fd_b = fd_grad(loss, &lw, |l, e| {
+            if let LinearWeight::Lords { q, .. } = l {
+                *q.b.at_mut(3, 0) += e;
+            }
+        });
+        assert!((fd_b - db.at(3, 0)).abs() < 2e-2 * fd_b.abs().max(1.0), "{fd_b} vs {}", db.at(3, 0));
+        let fd_a = fd_grad(loss, &lw, |l, e| {
+            if let LinearWeight::Lords { q, .. } = l {
+                *q.a.at_mut(0, 7) += e;
+            }
+        });
+        assert!((fd_a - da.at(0, 7)).abs() < 2e-2 * fd_a.abs().max(1.0), "{fd_a} vs {}", da.at(0, 7));
+    }
+
+    #[test]
+    fn qat_mode_produces_w_grads() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(8, 16, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let lw = quantize_lords_qat(&w, 8, &cb, RefineCfg { steps: 2, ..Default::default() });
+        let x = Matrix::randn(3, 16, 1.0, &mut rng);
+        let (_, cache) = lw.forward_cached(&x);
+        let g = Matrix::ones(3, 8);
+        let (_, grads) = lw.backward(&cache, &g);
+        // STE: dW = dŴ = gᵀx
+        let want = matmul_at_b(&g, &x);
+        let dw = grads.d_w.unwrap();
+        crate::util::prop::assert_allclose(&dw.data, &want.data, 1e-5, 1e-5, "STE dW");
+        assert!(grads.d_b.is_some() && grads.d_a.is_some());
+    }
+
+    #[test]
+    fn qlora_only_trains_adapters() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(8, 16, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let lw = LinearWeight::Qlora(QloraLinear::new(&w, 8, 4, &cb, &mut rng));
+        assert_eq!(lw.train_params(), 4 * (8 + 16));
+        let x = Matrix::randn(2, 16, 1.0, &mut rng);
+        let (_, cache) = lw.forward_cached(&x);
+        let (_, grads) = lw.backward(&cache, &Matrix::ones(2, 8));
+        assert!(grads.d_w.is_none());
+        assert!(grads.d_lora_a.is_some() && grads.d_lora_b.is_some());
+    }
+
+    #[test]
+    fn finalize_qat_absorbs_shadow() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(8, 16, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let mut lw = quantize_lords_qat(&w, 8, &cb, RefineCfg { steps: 2, ..Default::default() });
+        // nudge the shadow weight, finalize, and check codes moved
+        if let LinearWeight::Lords { shadow_w: Some(sw), .. } = &mut lw {
+            for v in sw.data.iter_mut() {
+                *v += 0.03;
+            }
+        }
+        let before = if let LinearWeight::Lords { q, .. } = &lw { q.codes.clone() } else { unreachable!() };
+        lw.finalize_qat();
+        if let LinearWeight::Lords { q, shadow_w } = &lw {
+            assert!(shadow_w.is_none());
+            assert_ne!(&before, &q.codes, "codes should change after absorbing shadow");
+        }
+    }
+}

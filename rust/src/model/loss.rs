@@ -1,0 +1,98 @@
+//! Token-level cross-entropy loss, forward + backward.
+
+use crate::tensor::Matrix;
+
+/// Forward: logits (t×V), targets (len t). Returns (mean NLL, probs cache).
+pub fn cross_entropy_fwd(logits: &Matrix, targets: &[usize]) -> (f32, Matrix) {
+    assert_eq!(logits.rows, targets.len());
+    let v = logits.cols;
+    let mut probs = Matrix::zeros(logits.rows, v);
+    let mut nll = 0.0f64;
+    for i in 0..logits.rows {
+        let row = logits.row(i);
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut denom = 0.0f32;
+        let out = probs.row_mut(i);
+        for j in 0..v {
+            let e = (row[j] - maxv).exp();
+            out[j] = e;
+            denom += e;
+        }
+        let inv = 1.0 / denom;
+        for p in out.iter_mut() {
+            *p *= inv;
+        }
+        nll -= (out[targets[i]].max(1e-20) as f64).ln();
+    }
+    ((nll / logits.rows as f64) as f32, probs)
+}
+
+/// Backward: dlogits = (probs − onehot(target)) / t.
+pub fn cross_entropy_bwd(probs: &Matrix, targets: &[usize]) -> Matrix {
+    let t = probs.rows as f32;
+    let mut g = probs.clone();
+    for (i, &y) in targets.iter().enumerate() {
+        *g.at_mut(i, y) -= 1.0;
+    }
+    g.scale(1.0 / t)
+}
+
+/// Perplexity from a mean-NLL loss.
+pub fn perplexity(mean_nll: f32) -> f32 {
+    mean_nll.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn uniform_logits_give_log_v() {
+        let logits = Matrix::zeros(3, 8);
+        let (loss, _) = cross_entropy_fwd(&logits, &[0, 3, 7]);
+        assert!((loss - (8.0f32).ln()).abs() < 1e-5);
+        assert!((perplexity(loss) - 8.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn confident_correct_is_low_loss() {
+        let mut logits = Matrix::zeros(1, 4);
+        logits.set(0, 2, 10.0);
+        let (loss, _) = cross_entropy_fwd(&logits, &[2]);
+        assert!(loss < 1e-3);
+    }
+
+    #[test]
+    fn grads_match_finite_difference() {
+        let mut rng = Rng::new(0);
+        let logits = Matrix::randn(4, 6, 1.0, &mut rng);
+        let targets = [1usize, 0, 5, 3];
+        let (_, probs) = cross_entropy_fwd(&logits, &targets);
+        let g = cross_entropy_bwd(&probs, &targets);
+        let eps = 1e-3;
+        for &(i, j) in &[(0usize, 1usize), (2, 5), (3, 0)] {
+            let mut lp = logits.clone();
+            let mut lm = logits.clone();
+            *lp.at_mut(i, j) += eps;
+            *lm.at_mut(i, j) -= eps;
+            let (fp, _) = cross_entropy_fwd(&lp, &targets);
+            let (fm, _) = cross_entropy_fwd(&lm, &targets);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - g.at(i, j)).abs() < 1e-3, "({i},{j}): {fd} vs {}", g.at(i, j));
+        }
+    }
+
+    #[test]
+    fn grad_rows_sum_to_zero() {
+        let mut rng = Rng::new(1);
+        let logits = Matrix::randn(3, 5, 1.0, &mut rng);
+        let targets = [0usize, 2, 4];
+        let (_, probs) = cross_entropy_fwd(&logits, &targets);
+        let g = cross_entropy_bwd(&probs, &targets);
+        for i in 0..3 {
+            let s: f32 = g.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! The Llama-style transformer testbed, implemented natively in Rust with
+//! **manual backpropagation** — no autodiff framework exists in the vendored
+//! crate set, so every layer implements its own backward pass (verified
+//! against finite differences in the module tests).
+//!
+//! Roles:
+//! * the *pre-training testbed* producing realistic weight statistics for
+//!   the quantization experiments (Tables 1–4),
+//! * the *QAT / PEFT substrate*: quantized linears carry (B, A) scale
+//!   factors whose gradients flow via the STE rules (eqs. 4–5),
+//! * the *Rust-native serving path* with KV-cache decode (one of the Table-6
+//!   operating points; the PJRT artifact path is the other).
+//!
+//! Layout mirrors `python/compile/model.py` exactly (same parameter names,
+//! same shapes) so checkpoints can flow across the PJRT boundary.
+
+pub mod attention;
+pub mod checkpoint;
+pub mod linear;
+pub mod loss;
+pub mod norm;
+pub mod transformer;
+
+pub use linear::{LinearGrads, LinearWeight};
+pub use transformer::{KvCache, LayerWeights, Model};

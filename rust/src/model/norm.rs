@@ -1,0 +1,129 @@
+//! RMSNorm forward + backward.
+//!
+//! y_i = x_i · γ_i / rms(x),  rms(x) = sqrt(mean(x²) + ε)
+//!
+//! Backward (per row, d = dim):
+//!   dγ_i = Σ_rows g_i · x_i / rms
+//!   dx_i = (g_i γ_i) / rms − x_i · Σ_j (g_j γ_j x_j) / (d · rms³)
+
+use crate::tensor::Matrix;
+
+pub const EPS: f32 = 1e-5;
+
+pub struct NormCache {
+    /// 1 / rms per row.
+    pub inv_rms: Vec<f32>,
+}
+
+/// Forward: x (t×d), gamma (d) → (y, cache).
+pub fn rmsnorm_fwd(x: &Matrix, gamma: &[f32]) -> (Matrix, NormCache) {
+    assert_eq!(x.cols, gamma.len());
+    let d = x.cols;
+    let mut y = Matrix::zeros(x.rows, d);
+    let mut inv_rms = vec![0.0f32; x.rows];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        inv_rms[i] = inv;
+        let out = y.row_mut(i);
+        for j in 0..d {
+            out[j] = row[j] * inv * gamma[j];
+        }
+    }
+    (y, NormCache { inv_rms })
+}
+
+/// Backward: returns (dx, dgamma).
+pub fn rmsnorm_bwd(
+    x: &Matrix,
+    gamma: &[f32],
+    cache: &NormCache,
+    g: &Matrix,
+) -> (Matrix, Vec<f32>) {
+    let d = x.cols;
+    let mut dx = Matrix::zeros(x.rows, d);
+    let mut dgamma = vec![0.0f32; d];
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        let gr = g.row(i);
+        let inv = cache.inv_rms[i];
+        // dot = Σ_j g_j γ_j x_j
+        let mut dot = 0.0f32;
+        for j in 0..d {
+            dot += gr[j] * gamma[j] * xr[j];
+            dgamma[j] += gr[j] * xr[j] * inv;
+        }
+        let coef = dot * inv * inv * inv / d as f32;
+        let out = dx.row_mut(i);
+        for j in 0..d {
+            out[j] = gr[j] * gamma[j] * inv - xr[j] * coef;
+        }
+    }
+    (dx, dgamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn fd_check(rows: usize, d: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(rows, d, 1.0, &mut rng);
+        let gamma: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+        let upstream = Matrix::randn(rows, d, 1.0, &mut rng);
+
+        let loss = |x: &Matrix, gamma: &[f32]| -> f32 {
+            let (y, _) = rmsnorm_fwd(x, gamma);
+            y.data.iter().zip(&upstream.data).map(|(a, b)| a * b).sum()
+        };
+
+        let (_, cache) = rmsnorm_fwd(&x, &gamma);
+        let (dx, dgamma) = rmsnorm_bwd(&x, &gamma, &cache, &upstream);
+
+        let eps = 1e-3;
+        for &(i, j) in &[(0usize, 0usize), (rows - 1, d - 1), (0, d / 2)] {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            *xp.at_mut(i, j) += eps;
+            *xm.at_mut(i, j) -= eps;
+            let fd = (loss(&xp, &gamma) - loss(&xm, &gamma)) / (2.0 * eps);
+            assert!(
+                (fd - dx.at(i, j)).abs() < 2e-2 * fd.abs().max(1.0),
+                "dx[{i},{j}]: fd {fd} vs {}",
+                dx.at(i, j)
+            );
+        }
+        for j in [0, d - 1] {
+            let mut gp = gamma.clone();
+            let mut gm = gamma.clone();
+            gp[j] += eps;
+            gm[j] -= eps;
+            let fd = (loss(&x, &gp) - loss(&x, &gm)) / (2.0 * eps);
+            assert!(
+                (fd - dgamma[j]).abs() < 2e-2 * fd.abs().max(1.0),
+                "dγ[{j}]: fd {fd} vs {}",
+                dgamma[j]
+            );
+        }
+    }
+
+    #[test]
+    fn unit_gamma_normalizes() {
+        let mut rng = Rng::new(0);
+        let x = Matrix::randn(4, 32, 3.0, &mut rng);
+        let gamma = vec![1.0f32; 32];
+        let (y, _) = rmsnorm_fwd(&x, &gamma);
+        for i in 0..4 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 32.0;
+            assert!((ms - 1.0).abs() < 0.01, "row {i} ms {ms}");
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        fd_check(3, 16, 1);
+        fd_check(1, 8, 2);
+    }
+}

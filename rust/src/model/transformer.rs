@@ -1,0 +1,742 @@
+//! The transformer assembly: embedding → N blocks (RMSNorm, RoPE, causal
+//! MHA, SwiGLU MLP, residuals) → final norm → LM head, with full manual
+//! backprop and a KV-cache inference path.
+//!
+//! Parameter names/shapes mirror `python/compile/model.py` one-to-one.
+
+use super::attention::{attention_bwd, attention_decode, attention_fwd, rope_bwd, rope_fwd, AttnCache};
+use super::linear::{LinearCache, LinearGrads, LinearWeight};
+use super::loss::{cross_entropy_bwd, cross_entropy_fwd};
+use super::norm::{rmsnorm_bwd, rmsnorm_fwd, NormCache};
+use crate::config::ModelCfg;
+use crate::quant::lords::RefineCfg;
+use crate::quant::{BlockwiseQuant, Codebook};
+use crate::tensor::{matmul, matmul_at_b, Matrix};
+use crate::util::Rng;
+
+/// One transformer block's weights.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: LinearWeight,
+    pub wk: LinearWeight,
+    pub wv: LinearWeight,
+    pub wo: LinearWeight,
+    pub mlp_norm: Vec<f32>,
+    pub w_gate: LinearWeight,
+    pub w_up: LinearWeight,
+    pub w_down: LinearWeight,
+}
+
+impl LayerWeights {
+    pub fn linears(&self) -> [(&'static str, &LinearWeight); 7] {
+        [
+            ("wq", &self.wq),
+            ("wk", &self.wk),
+            ("wv", &self.wv),
+            ("wo", &self.wo),
+            ("w_gate", &self.w_gate),
+            ("w_up", &self.w_up),
+            ("w_down", &self.w_down),
+        ]
+    }
+
+    pub fn linears_mut(&mut self) -> [(&'static str, &mut LinearWeight); 7] {
+        [
+            ("wq", &mut self.wq),
+            ("wk", &mut self.wk),
+            ("wv", &mut self.wv),
+            ("wo", &mut self.wo),
+            ("w_gate", &mut self.w_gate),
+            ("w_up", &mut self.w_up),
+            ("w_down", &mut self.w_down),
+        ]
+    }
+}
+
+/// Gradients for one block.
+#[derive(Clone, Debug, Default)]
+pub struct LayerGrads {
+    pub attn_norm: Vec<f32>,
+    pub wq: LinearGrads,
+    pub wk: LinearGrads,
+    pub wv: LinearGrads,
+    pub wo: LinearGrads,
+    pub mlp_norm: Vec<f32>,
+    pub w_gate: LinearGrads,
+    pub w_up: LinearGrads,
+    pub w_down: LinearGrads,
+}
+
+/// Full-model gradients.
+#[derive(Clone, Debug, Default)]
+pub struct ModelGrads {
+    pub tok_emb: Option<Matrix>,
+    pub layers: Vec<LayerGrads>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Option<Matrix>,
+}
+
+/// The model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub cfg: ModelCfg,
+    pub tok_emb: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Matrix,
+}
+
+/// Per-sequence KV cache for incremental decoding.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    /// per layer: cap×D matrices.
+    pub k: Vec<Matrix>,
+    pub v: Vec<Matrix>,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelCfg) -> KvCache {
+        KvCache {
+            k: (0..cfg.n_layers).map(|_| Matrix::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Matrix::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            len: 0,
+        }
+    }
+}
+
+struct BlockCache {
+    nc1: NormCache,
+    h1: Matrix,
+    cq: LinearCache,
+    ck: LinearCache,
+    cv: LinearCache,
+    /// post-RoPE q/k and raw v, per batch element
+    q: Vec<Matrix>,
+    k: Vec<Matrix>,
+    v: Vec<Matrix>,
+    attn: Vec<AttnCache>,
+    co: LinearCache,
+    x_mid: Matrix,
+    nc2: NormCache,
+    h2: Matrix,
+    cg: LinearCache,
+    cu: LinearCache,
+    gate_pre: Matrix,
+    up: Matrix,
+    cd: LinearCache,
+    x_in: Matrix,
+}
+
+pub struct ForwardCache {
+    blocks: Vec<BlockCache>,
+    ncf: NormCache,
+    x_pre_final: Matrix,
+    x_final: Matrix,
+    tokens: Vec<usize>,
+}
+
+impl Model {
+    /// Init matching `python/compile/model.py::init_params` (independent RNG).
+    pub fn init(cfg: &ModelCfg, seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        let resid = 0.02 / (2.0 * cfg.n_layers as f32).sqrt();
+        let lin = |rng: &mut Rng, n: usize, m: usize, std: f32| {
+            LinearWeight::Dense(Matrix::randn(n, m, std, rng))
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; cfg.d_model],
+                wq: lin(&mut rng, cfg.d_model, cfg.d_model, 0.02),
+                wk: lin(&mut rng, cfg.d_model, cfg.d_model, 0.02),
+                wv: lin(&mut rng, cfg.d_model, cfg.d_model, 0.02),
+                wo: lin(&mut rng, cfg.d_model, cfg.d_model, resid),
+                mlp_norm: vec![1.0; cfg.d_model],
+                w_gate: lin(&mut rng, cfg.d_ff, cfg.d_model, 0.02),
+                w_up: lin(&mut rng, cfg.d_ff, cfg.d_model, 0.02),
+                w_down: lin(&mut rng, cfg.d_model, cfg.d_ff, resid),
+            })
+            .collect();
+        Model {
+            cfg: cfg.clone(),
+            tok_emb: Matrix::randn(cfg.vocab, cfg.d_model, 0.02, &mut rng),
+            layers,
+            final_norm: vec![1.0; cfg.d_model],
+            lm_head: Matrix::randn(cfg.vocab, cfg.d_model, 0.02, &mut rng),
+        }
+    }
+
+    /// Replace every block linear via `f(dense_weight) -> LinearWeight`.
+    pub fn map_linears(&mut self, mut f: impl FnMut(&Matrix) -> LinearWeight) {
+        self.map_linears_by_layer(|_, w| f(w));
+    }
+
+    /// Layer-indexed variant (mixed-precision schedules quantize different
+    /// layers with different codebooks — §4.1 ultra-low-bit).
+    pub fn map_linears_by_layer(&mut self, mut f: impl FnMut(usize, &Matrix) -> LinearWeight) {
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            for (_, lw) in layer.linears_mut() {
+                if let LinearWeight::Dense(w) = lw {
+                    *lw = f(li, w);
+                } else {
+                    let w = lw.effective();
+                    *lw = f(li, &w);
+                }
+            }
+        }
+    }
+
+    /// Convenience quantizers for the whole model.
+    pub fn quantize_lords(&mut self, block: usize, cb: &Codebook, refine: RefineCfg, qat: bool) {
+        self.map_linears(|w| {
+            if qat {
+                super::linear::quantize_lords_qat(w, block, cb, refine)
+            } else {
+                super::linear::quantize_lords(w, block, cb, refine)
+            }
+        });
+    }
+
+    /// LoRDS with an explicit rank (PEFT at adapter-parity budgets: the
+    /// paper's Table 5 gives LoRDS the same #Train as the LoRA baselines).
+    pub fn quantize_lords_rank(&mut self, block: usize, rank: usize, cb: &Codebook, refine: RefineCfg) {
+        self.map_linears(|w| {
+            let (q, _) = crate::quant::LordsQuant::quantize_with_rank(w, block, rank, cb, refine);
+            LinearWeight::Lords { q, shadow_w: None }
+        });
+    }
+
+    pub fn quantize_blockwise(&mut self, block: usize, cb: &Codebook) {
+        self.map_linears(|w| LinearWeight::Blockwise(BlockwiseQuant::quantize(w, block, cb)));
+    }
+
+    pub fn quantize_qlora(&mut self, block: usize, rank: usize, cb: &Codebook, seed: u64) {
+        let mut rng = Rng::new(seed);
+        self.map_linears(|w| {
+            LinearWeight::Qlora(crate::quant::baselines::QloraLinear::new(
+                w, block, rank, cb, &mut rng,
+            ))
+        });
+    }
+
+    /// Total trainable / floating-point parameter counts (Table 5 columns).
+    pub fn train_params(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.linears().into_iter().map(|(_, w)| w.train_params()))
+            .sum()
+    }
+
+    pub fn float_params(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.linears().into_iter().map(|(_, w)| w.float_params()))
+            .sum()
+    }
+
+    // ---------------------------------------------------------------- fwd
+
+    fn embed(&self, tokens: &[usize]) -> Matrix {
+        let mut x = Matrix::zeros(tokens.len(), self.cfg.d_model);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.tok_emb.row(t));
+        }
+        x
+    }
+
+    /// Training forward over a (batch × seq) token grid (row-major flat).
+    /// Returns (logits (B·S × V), cache).
+    pub fn forward_train(&self, tokens: &[usize], batch: usize, seq: usize) -> (Matrix, ForwardCache) {
+        assert_eq!(tokens.len(), batch * seq);
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let mut x = self.embed(tokens);
+        let mut blocks = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let x_in = x.clone();
+            let (h1, nc1) = rmsnorm_fwd(&x, &layer.attn_norm);
+            let (mut q, cq) = layer.wq.forward_cached(&h1);
+            let (mut k, ck) = layer.wk.forward_cached(&h1);
+            let (v, cv) = layer.wv.forward_cached(&h1);
+            // rope + attention per batch element
+            let mut att = Matrix::zeros(batch * seq, self.cfg.d_model);
+            let mut qs = Vec::with_capacity(batch);
+            let mut ks = Vec::with_capacity(batch);
+            let mut vs = Vec::with_capacity(batch);
+            let mut attns = Vec::with_capacity(batch);
+            for b in 0..batch {
+                let mut qb = q.slice(b * seq, (b + 1) * seq, 0, self.cfg.d_model);
+                let mut kb = k.slice(b * seq, (b + 1) * seq, 0, self.cfg.d_model);
+                let vb = v.slice(b * seq, (b + 1) * seq, 0, self.cfg.d_model);
+                rope_fwd(&mut qb, h, 0, theta);
+                rope_fwd(&mut kb, h, 0, theta);
+                let (ob, cache_b) = attention_fwd(&qb, &kb, &vb, h);
+                att.paste(b * seq, 0, &ob);
+                qs.push(qb);
+                ks.push(kb);
+                vs.push(vb);
+                attns.push(cache_b);
+            }
+            // release the pre-rope copies (not needed by backward)
+            q = Matrix::zeros(0, 0);
+            k = Matrix::zeros(0, 0);
+            let _ = (&q, &k);
+            let (o, co) = layer.wo.forward_cached(&att);
+            let mut x_mid = x_in.clone();
+            x_mid.add_assign(&o);
+            let (h2, nc2) = rmsnorm_fwd(&x_mid, &layer.mlp_norm);
+            let (gate_pre, cg) = layer.w_gate.forward_cached(&h2);
+            let (up, cu) = layer.w_up.forward_cached(&h2);
+            let ff_in = swiglu(&gate_pre, &up);
+            let (down, cd) = layer.w_down.forward_cached(&ff_in);
+            let mut x_out = x_mid.clone();
+            x_out.add_assign(&down);
+            blocks.push(BlockCache {
+                nc1,
+                h1,
+                cq,
+                ck,
+                cv,
+                q: qs,
+                k: ks,
+                v: vs,
+                attn: attns,
+                co,
+                x_mid,
+                nc2,
+                h2,
+                cg,
+                cu,
+                gate_pre,
+                up,
+                cd,
+                x_in,
+            });
+            x = x_out;
+        }
+        let (x_final, ncf) = rmsnorm_fwd(&x, &self.final_norm);
+        let logits = crate::tensor::matmul_transb(&x_final, &self.lm_head);
+        let cache = ForwardCache {
+            blocks,
+            ncf,
+            x_pre_final: x,
+            x_final,
+            tokens: tokens.to_vec(),
+        };
+        (logits, cache)
+    }
+
+    /// Loss + gradients for next-token prediction.
+    pub fn loss_and_grads(
+        &self,
+        tokens: &[usize],
+        targets: &[usize],
+        batch: usize,
+        seq: usize,
+    ) -> (f32, ModelGrads) {
+        let (logits, cache) = self.forward_train(tokens, batch, seq);
+        let (loss, probs) = cross_entropy_fwd(&logits, targets);
+        let dlogits = cross_entropy_bwd(&probs, targets);
+        let grads = self.backward(&cache, &dlogits, batch, seq);
+        (loss, grads)
+    }
+
+    fn backward(&self, cache: &ForwardCache, dlogits: &Matrix, batch: usize, seq: usize) -> ModelGrads {
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let d = self.cfg.d_model;
+        let mut grads = ModelGrads {
+            layers: (0..self.layers.len()).map(|_| LayerGrads::default()).collect(),
+            ..Default::default()
+        };
+
+        // head: logits = x_final · lm_headᵀ
+        grads.lm_head = Some(matmul_at_b(dlogits, &cache.x_final));
+        let dx_final = matmul(dlogits, &self.lm_head);
+        let (mut dx, dgf) = rmsnorm_bwd(&cache.x_pre_final, &self.final_norm, &cache.ncf, &dx_final);
+        grads.final_norm = dgf;
+
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let bc = &cache.blocks[li];
+            let lg = &mut grads.layers[li];
+            // x_out = x_mid + down
+            let d_down = dx.clone();
+            let (d_ff_in, g_down) = layer.w_down.backward(&bc.cd, &d_down);
+            lg.w_down = g_down;
+            // swiglu backward
+            let (d_gate_pre, d_up) = swiglu_bwd(&bc.gate_pre, &bc.up, &d_ff_in);
+            let (dh2_u, g_up) = layer.w_up.backward(&bc.cu, &d_up);
+            lg.w_up = g_up;
+            let (dh2_g, g_gate) = layer.w_gate.backward(&bc.cg, &d_gate_pre);
+            lg.w_gate = g_gate;
+            let mut dh2 = dh2_u;
+            dh2.add_assign(&dh2_g);
+            let (dx_mlp, dg2) = rmsnorm_bwd(&bc.x_mid, &layer.mlp_norm, &bc.nc2, &dh2);
+            lg.mlp_norm = dg2;
+            // residual: d(x_mid) = dx (skip) + dx_mlp
+            let mut dx_mid = dx;
+            dx_mid.add_assign(&dx_mlp);
+
+            // x_mid = x_in + o
+            let d_o = dx_mid.clone();
+            let (d_att, g_o) = layer.wo.backward(&bc.co, &d_o);
+            lg.wo = g_o;
+            // attention backward per batch element
+            let mut dq_all = Matrix::zeros(batch * seq, d);
+            let mut dk_all = Matrix::zeros(batch * seq, d);
+            let mut dv_all = Matrix::zeros(batch * seq, d);
+            for b in 0..batch {
+                let gb = d_att.slice(b * seq, (b + 1) * seq, 0, d);
+                let (mut dqb, mut dkb, dvb) =
+                    attention_bwd(&bc.q[b], &bc.k[b], &bc.v[b], &bc.attn[b], &gb, h);
+                rope_bwd(&mut dqb, h, 0, theta);
+                rope_bwd(&mut dkb, h, 0, theta);
+                dq_all.paste(b * seq, 0, &dqb);
+                dk_all.paste(b * seq, 0, &dkb);
+                dv_all.paste(b * seq, 0, &dvb);
+            }
+            let (dh1_q, g_q) = layer.wq.backward(&bc.cq, &dq_all);
+            lg.wq = g_q;
+            let (dh1_k, g_k) = layer.wk.backward(&bc.ck, &dk_all);
+            lg.wk = g_k;
+            let (dh1_v, g_v) = layer.wv.backward(&bc.cv, &dv_all);
+            lg.wv = g_v;
+            let mut dh1 = dh1_q;
+            dh1.add_assign(&dh1_k);
+            dh1.add_assign(&dh1_v);
+            let (dx_attn, dg1) = rmsnorm_bwd(&bc.x_in, &layer.attn_norm, &bc.nc1, &dh1);
+            lg.attn_norm = dg1;
+            let mut dx_in = dx_mid;
+            dx_in.add_assign(&dx_attn);
+            dx = dx_in;
+        }
+
+        // embedding scatter
+        let mut d_emb = Matrix::zeros(self.cfg.vocab, d);
+        for (i, &t) in cache.tokens.iter().enumerate() {
+            let src = dx.row(i);
+            let dst = d_emb.row_mut(t);
+            for (a, &b) in dst.iter_mut().zip(src) {
+                *a += b;
+            }
+        }
+        grads.tok_emb = Some(d_emb);
+        grads
+    }
+
+    // ----------------------------------------------------------- inference
+
+    /// Eval forward (no caches kept): logits for every position.
+    pub fn forward(&self, tokens: &[usize], batch: usize, seq: usize) -> Matrix {
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let mut x = self.embed(tokens);
+        for layer in &self.layers {
+            let (h1, _) = rmsnorm_fwd(&x, &layer.attn_norm);
+            let q = layer.wq.forward(&h1);
+            let k = layer.wk.forward(&h1);
+            let v = layer.wv.forward(&h1);
+            let mut att = Matrix::zeros(batch * seq, self.cfg.d_model);
+            for b in 0..batch {
+                let mut qb = q.slice(b * seq, (b + 1) * seq, 0, self.cfg.d_model);
+                let mut kb = k.slice(b * seq, (b + 1) * seq, 0, self.cfg.d_model);
+                let vb = v.slice(b * seq, (b + 1) * seq, 0, self.cfg.d_model);
+                rope_fwd(&mut qb, h, 0, theta);
+                rope_fwd(&mut kb, h, 0, theta);
+                let (ob, _) = attention_fwd(&qb, &kb, &vb, h);
+                att.paste(b * seq, 0, &ob);
+            }
+            let o = layer.wo.forward(&att);
+            x.add_assign(&o);
+            let (h2, _) = rmsnorm_fwd(&x, &layer.mlp_norm);
+            let gate_pre = layer.w_gate.forward(&h2);
+            let up = layer.w_up.forward(&h2);
+            let down = layer.w_down.forward(&swiglu(&gate_pre, &up));
+            x.add_assign(&down);
+        }
+        let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
+        crate::tensor::matmul_transb(&xf, &self.lm_head)
+    }
+
+    /// Prefill one sequence into a KV cache; returns last-position logits.
+    pub fn prefill(&self, tokens: &[usize], cache: &mut KvCache) -> Vec<f32> {
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let s = tokens.len();
+        assert!(s <= self.cfg.max_seq);
+        let mut x = self.embed(tokens);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (h1, _) = rmsnorm_fwd(&x, &layer.attn_norm);
+            let mut q = layer.wq.forward(&h1);
+            let mut k = layer.wk.forward(&h1);
+            let v = layer.wv.forward(&h1);
+            rope_fwd(&mut q, h, 0, theta);
+            rope_fwd(&mut k, h, 0, theta);
+            cache.k[li].paste(0, 0, &k);
+            cache.v[li].paste(0, 0, &v);
+            let (att, _) = attention_fwd(&q, &k, &v, h);
+            let o = layer.wo.forward(&att);
+            x.add_assign(&o);
+            let (h2, _) = rmsnorm_fwd(&x, &layer.mlp_norm);
+            let gate_pre = layer.w_gate.forward(&h2);
+            let up = layer.w_up.forward(&h2);
+            let down = layer.w_down.forward(&swiglu(&gate_pre, &up));
+            x.add_assign(&down);
+        }
+        cache.len = s;
+        let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
+        let logits = crate::tensor::matmul_transb(&xf, &self.lm_head);
+        logits.row(s - 1).to_vec()
+    }
+
+    /// One decode step for one sequence.
+    pub fn decode(&self, token: usize, cache: &mut KvCache) -> Vec<f32> {
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let pos = cache.len;
+        assert!(pos < self.cfg.max_seq, "KV cache full");
+        let mut x = self.embed(&[token]);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (h1, _) = rmsnorm_fwd(&x, &layer.attn_norm);
+            let mut q = layer.wq.forward(&h1);
+            let mut k = layer.wk.forward(&h1);
+            let v = layer.wv.forward(&h1);
+            rope_fwd(&mut q, h, pos, theta);
+            rope_fwd(&mut k, h, pos, theta);
+            cache.k[li].paste(pos, 0, &k);
+            cache.v[li].paste(pos, 0, &v);
+            let att = attention_decode(&q, &cache.k[li], &cache.v[li], pos + 1, h);
+            let o = layer.wo.forward(&att);
+            x.add_assign(&o);
+            let (h2, _) = rmsnorm_fwd(&x, &layer.mlp_norm);
+            let gate_pre = layer.w_gate.forward(&h2);
+            let up = layer.w_up.forward(&h2);
+            let down = layer.w_down.forward(&swiglu(&gate_pre, &up));
+            x.add_assign(&down);
+        }
+        cache.len = pos + 1;
+        let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
+        let logits = crate::tensor::matmul_transb(&xf, &self.lm_head);
+        logits.row(0).to_vec()
+    }
+}
+
+fn swiglu(gate_pre: &Matrix, up: &Matrix) -> Matrix {
+    gate_pre.zip_map(up, |g, u| silu(g) * u)
+}
+
+fn swiglu_bwd(gate_pre: &Matrix, up: &Matrix, d_out: &Matrix) -> (Matrix, Matrix) {
+    let d_gate = Matrix {
+        rows: gate_pre.rows,
+        cols: gate_pre.cols,
+        data: gate_pre
+            .data
+            .iter()
+            .zip(&up.data)
+            .zip(&d_out.data)
+            .map(|((&g, &u), &go)| go * u * dsilu(g))
+            .collect(),
+    };
+    let d_up = Matrix {
+        rows: up.rows,
+        cols: up.cols,
+        data: gate_pre
+            .data
+            .iter()
+            .zip(&d_out.data)
+            .map(|(&g, &go)| go * silu(g))
+            .collect(),
+    };
+    (d_gate, d_up)
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn dsilu(x: f32) -> f32 {
+    let sig = 1.0 / (1.0 + (-x).exp());
+    sig * (1.0 + x * (1.0 - sig))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        }
+    }
+
+    fn toy_batch(cfg: &ModelCfg, batch: usize, seq: usize, seed: u64) -> (Vec<usize>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let tokens: Vec<usize> = (0..batch * seq).map(|_| rng.below(cfg.vocab)).collect();
+        let targets: Vec<usize> = (0..batch * seq).map(|_| rng.below(cfg.vocab)).collect();
+        (tokens, targets)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let cfg = tiny_cfg();
+        let model = Model::init(&cfg, 0);
+        let (tokens, _) = toy_batch(&cfg, 2, 8, 1);
+        let logits = model.forward(&tokens, 2, 8);
+        assert_eq!(logits.shape(), (16, 32));
+        assert!(logits.all_finite());
+    }
+
+    #[test]
+    fn train_forward_matches_eval_forward() {
+        let cfg = tiny_cfg();
+        let model = Model::init(&cfg, 0);
+        let (tokens, _) = toy_batch(&cfg, 2, 6, 2);
+        let (lt, _) = model.forward_train(&tokens, 2, 6);
+        let le = model.forward(&tokens, 2, 6);
+        crate::util::prop::assert_allclose(&lt.data, &le.data, 1e-4, 1e-4, "train vs eval fwd");
+    }
+
+    #[test]
+    fn dense_grads_match_finite_difference() {
+        let cfg = tiny_cfg();
+        let model = Model::init(&cfg, 3);
+        let (tokens, targets) = toy_batch(&cfg, 1, 5, 4);
+        let (_, grads) = model.loss_and_grads(&tokens, &targets, 1, 5);
+        let eps = 1e-2;
+        let loss_of = |m: &Model| {
+            let (logits, _) = m.forward_train(&tokens, 1, 5);
+            cross_entropy_fwd(&logits, &targets).0
+        };
+        // spot-check several parameters across the net
+        let checks: Vec<(&str, usize, usize, usize)> = vec![
+            ("wq", 0, 1, 3),
+            ("w_down", 1, 2, 5),
+            ("lm_head", 0, 4, 2),
+            ("tok_emb", 0, tokens[2], 1),
+        ];
+        for (what, li, i, j) in checks {
+            let (an, fd) = match what {
+                "lm_head" => {
+                    let an = grads.lm_head.as_ref().unwrap().at(i, j);
+                    let mut mp = model.clone();
+                    *mp.lm_head.at_mut(i, j) += eps;
+                    let mut mm = model.clone();
+                    *mm.lm_head.at_mut(i, j) -= eps;
+                    (an, (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps))
+                }
+                "tok_emb" => {
+                    let an = grads.tok_emb.as_ref().unwrap().at(i, j);
+                    let mut mp = model.clone();
+                    *mp.tok_emb.at_mut(i, j) += eps;
+                    let mut mm = model.clone();
+                    *mm.tok_emb.at_mut(i, j) -= eps;
+                    (an, (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps))
+                }
+                "wq" => {
+                    let an = grads.layers[li].wq.d_w.as_ref().unwrap().at(i, j);
+                    let tweak = |m: &mut Model, e: f32| {
+                        if let LinearWeight::Dense(w) = &mut m.layers[li].wq {
+                            *w.at_mut(i, j) += e;
+                        }
+                    };
+                    let mut mp = model.clone();
+                    tweak(&mut mp, eps);
+                    let mut mm = model.clone();
+                    tweak(&mut mm, -eps);
+                    (an, (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps))
+                }
+                _ => {
+                    let an = grads.layers[li].w_down.d_w.as_ref().unwrap().at(i, j);
+                    let tweak = |m: &mut Model, e: f32| {
+                        if let LinearWeight::Dense(w) = &mut m.layers[li].w_down {
+                            *w.at_mut(i, j) += e;
+                        }
+                    };
+                    let mut mp = model.clone();
+                    tweak(&mut mp, eps);
+                    let mut mm = model.clone();
+                    tweak(&mut mm, -eps);
+                    (an, (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps))
+                }
+            };
+            assert!(
+                (fd - an).abs() < 5e-2 * fd.abs().max(0.02),
+                "{what}[{li}][{i},{j}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn prefill_decode_matches_full_forward() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 5);
+        // also exercise the quantized path
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 4, ..Default::default() }, false);
+        let mut rng = Rng::new(6);
+        let tokens: Vec<usize> = (0..8).map(|_| rng.below(cfg.vocab)).collect();
+        let full = model.forward(&tokens, 1, 8);
+        let mut cache = KvCache::new(&cfg);
+        let pre = model.prefill(&tokens[..7], &mut cache);
+        crate::util::prop::assert_allclose(&pre, full.row(6), 1e-3, 1e-3, "prefill logits");
+        let dec = model.decode(tokens[7], &mut cache);
+        crate::util::prop::assert_allclose(&dec, full.row(7), 1e-3, 1e-3, "decode logits");
+        assert_eq!(cache.len, 8);
+    }
+
+    #[test]
+    fn peft_grads_flow_only_to_ba() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 7);
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 2, ..Default::default() }, false);
+        let (tokens, targets) = toy_batch(&cfg, 1, 6, 8);
+        let (loss, grads) = model.loss_and_grads(&tokens, &targets, 1, 6);
+        assert!(loss.is_finite());
+        for lg in &grads.layers {
+            assert!(lg.wq.d_w.is_none(), "PEFT must not produce dense W grads");
+            assert!(lg.wq.d_b.is_some() && lg.wq.d_a.is_some());
+            let db = lg.wq.d_b.as_ref().unwrap();
+            assert!(db.data.iter().any(|&v| v != 0.0), "B grads must be nonzero");
+        }
+    }
+
+    #[test]
+    fn qat_grads_flow_to_w_and_ba() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 9);
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 2, ..Default::default() }, true);
+        let (tokens, targets) = toy_batch(&cfg, 1, 6, 10);
+        let (_, grads) = model.loss_and_grads(&tokens, &targets, 1, 6);
+        let lg = &grads.layers[0];
+        assert!(lg.wq.d_w.is_some() && lg.wq.d_b.is_some() && lg.wq.d_a.is_some());
+    }
+
+    #[test]
+    fn param_accounting() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 11);
+        let dense_train = model.train_params();
+        model.quantize_qlora(cfg.block, 4, &Codebook::normal_float(4), 0);
+        let qlora_train = model.train_params();
+        assert!(qlora_train < dense_train);
+        // QLoRA float params include base scales + adapters; LoRDS only B/A
+        let qlora_float = model.float_params();
+        let mut m2 = Model::init(&cfg, 11);
+        m2.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                          RefineCfg { steps: 0, ..Default::default() }, false);
+        assert!(m2.float_params() < qlora_float, "LoRDS must use fewer float params");
+    }
+}

@@ -1,0 +1,24 @@
+//! Optimizers + learning-rate schedules. AdamW drives both the LoRDS PTQ
+//! adaptation step (Algorithm 1, step 2.2) and the QAT/PEFT training loops;
+//! schedules mirror the paper's protocols (cosine with linear warmup for
+//! QAT, linear decay for PEFT).
+
+pub mod adamw;
+pub mod schedule;
+pub mod sgd;
+
+pub use adamw::AdamW;
+pub use schedule::{ConstantLr, CosineWarmup, LinearDecay, LrSchedule};
+pub use sgd::Sgd;
+
+/// A parameter-group optimizer over flat f32 buffers.
+pub trait Optimizer {
+    /// In-place update of `param` given `grad` at global step `step` (0-based)
+    /// using learning rate `lr`. `slot` identifies the parameter so the
+    /// optimizer can keep per-parameter state.
+    fn step(&mut self, slot: usize, param: &mut [f32], grad: &[f32], lr: f32);
+
+    /// Advance the shared step counter (call once per optimization step,
+    /// after updating every parameter group).
+    fn next_step(&mut self);
+}

@@ -1,0 +1,110 @@
+//! Learning-rate schedules matching the paper's training protocols:
+//! cosine with linear warmup (QAT §4.2: warmup ratio 0.3, peak 2e-5) and
+//! linear decay (PEFT §4.3: linear scheduler, peak 1e-4).
+
+pub trait LrSchedule {
+    /// Learning rate at 0-based step `t` of `total` steps.
+    fn lr(&self, t: u64, total: u64) -> f32;
+}
+
+/// Flat learning rate.
+#[derive(Clone, Copy, Debug)]
+pub struct ConstantLr(pub f32);
+
+impl LrSchedule for ConstantLr {
+    fn lr(&self, _t: u64, _total: u64) -> f32 {
+        self.0
+    }
+}
+
+/// Linear warmup to `peak` over `warmup_ratio * total` steps, then cosine
+/// decay to `min_lr`.
+#[derive(Clone, Copy, Debug)]
+pub struct CosineWarmup {
+    pub peak: f32,
+    pub warmup_ratio: f32,
+    pub min_lr: f32,
+}
+
+impl CosineWarmup {
+    pub fn new(peak: f32, warmup_ratio: f32) -> Self {
+        CosineWarmup { peak, warmup_ratio, min_lr: 0.0 }
+    }
+}
+
+impl LrSchedule for CosineWarmup {
+    fn lr(&self, t: u64, total: u64) -> f32 {
+        let total = total.max(1);
+        let warm = ((total as f32) * self.warmup_ratio).max(1.0);
+        let t = t as f32;
+        if t < warm {
+            return self.peak * (t + 1.0) / warm;
+        }
+        let progress = ((t - warm) / ((total as f32 - warm).max(1.0))).clamp(0.0, 1.0);
+        self.min_lr
+            + (self.peak - self.min_lr) * 0.5 * (1.0 + (std::f32::consts::PI * progress).cos())
+    }
+}
+
+/// Linear warmup then linear decay to zero.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearDecay {
+    pub peak: f32,
+    pub warmup_ratio: f32,
+}
+
+impl LinearDecay {
+    pub fn new(peak: f32, warmup_ratio: f32) -> Self {
+        LinearDecay { peak, warmup_ratio }
+    }
+}
+
+impl LrSchedule for LinearDecay {
+    fn lr(&self, t: u64, total: u64) -> f32 {
+        let total = total.max(1);
+        let warm = ((total as f32) * self.warmup_ratio).max(1.0);
+        let t = t as f32;
+        if t < warm {
+            return self.peak * (t + 1.0) / warm;
+        }
+        let progress = ((t - warm) / ((total as f32 - warm).max(1.0))).clamp(0.0, 1.0);
+        self.peak * (1.0 - progress)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_warmup_profile() {
+        let s = CosineWarmup::new(1.0, 0.1);
+        let total = 100;
+        assert!(s.lr(0, total) < 0.2); // warming
+        assert!((s.lr(9, total) - 1.0).abs() < 1e-5); // at peak after warmup
+        assert!(s.lr(50, total) < 1.0);
+        assert!(s.lr(99, total) < 0.01); // decayed
+        // monotone decay after warmup
+        let mut prev = s.lr(10, total);
+        for t in 11..100 {
+            let cur = s.lr(t, total);
+            assert!(cur <= prev + 1e-6);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn linear_decay_profile() {
+        let s = LinearDecay::new(2.0, 0.0);
+        assert!((s.lr(0, 100) - 2.0).abs() < 0.05);
+        assert!((s.lr(50, 100) - 1.0).abs() < 0.05);
+        assert!(s.lr(99, 100) < 0.05);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = ConstantLr(0.5);
+        assert_eq!(s.lr(0, 10), 0.5);
+        assert_eq!(s.lr(9, 10), 0.5);
+    }
+}

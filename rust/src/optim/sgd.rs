@@ -1,0 +1,71 @@
+//! SGD with optional momentum — baseline optimizer and the cheap choice for
+//! the PTQ refinement ablation (DESIGN.md §8).
+
+use super::Optimizer;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub momentum: f32,
+    step: u64,
+    velocity: HashMap<usize, Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32) -> Self {
+        Sgd { momentum, step: 0, velocity: HashMap::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, slot: usize, param: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(param.len(), grad.len());
+        if self.momentum == 0.0 {
+            for (p, g) in param.iter_mut().zip(grad) {
+                *p -= lr * g;
+            }
+            return;
+        }
+        let v = self.velocity.entry(slot).or_insert_with(|| vec![0.0; param.len()]);
+        for i in 0..param.len() {
+            v[i] = self.momentum * v[i] + grad[i];
+            param[i] -= lr * v[i];
+        }
+    }
+
+    fn next_step(&mut self) {
+        self.step += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_descends() {
+        let mut x = [4.0f32];
+        let mut opt = Sgd::new(0.0);
+        for _ in 0..200 {
+            let g = [2.0 * x[0]];
+            opt.step(0, &mut x, &g, 0.1);
+            opt.next_step();
+        }
+        assert!(x[0].abs() < 1e-3);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |mom: f32| {
+            let mut x = [4.0f32];
+            let mut opt = Sgd::new(mom);
+            for _ in 0..30 {
+                let g = [2.0 * x[0]];
+                opt.step(0, &mut x, &g, 0.02);
+                opt.next_step();
+            }
+            x[0].abs()
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+}

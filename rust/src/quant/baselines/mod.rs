@@ -1,0 +1,14 @@
+//! Baseline quantizers the paper compares against (Tables 1, 3, 5, 8, 9):
+//! GPTQ (second-order PTQ), AWQ (activation-aware scaling), LoftQ / QPiSSA
+//! (quantization + SVD residual adapters), and QLoRA (NF4 + zero-init
+//! additive adapter for fine-tuning).
+
+pub mod awq;
+pub mod gptq;
+pub mod loftq;
+pub mod qlora;
+
+pub use awq::AwqQuant;
+pub use gptq::GptqQuant;
+pub use loftq::{AdapterQuant, loftq_quantize, qpissa_quantize};
+pub use qlora::QloraLinear;

@@ -1,0 +1,161 @@
+//! QLoRA (Dettmers et al., 2023): NF4 block-wise base + trainable additive
+//! LoRA adapter. The base is frozen; fine-tuning updates (L_a, L_b) only.
+//! Standard init: L_a ~ N(0, 1/r), L_b = 0 (so the initial adapter is a
+//! no-op). The adapter is *unmergeable* into the quantized base — its two
+//! extra GEMMs run on every forward (Figure 2's latency gap).
+
+use crate::quant::blockwise::BlockwiseQuant;
+use crate::quant::codebook::Codebook;
+use crate::quant::QuantizedLinear;
+use crate::tensor::{matmul, matmul_at_b, matmul_transb, Matrix};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct QloraLinear {
+    pub base: BlockwiseQuant,
+    /// r × m (down-projection)
+    pub lora_a: Matrix,
+    /// n × r (up-projection)
+    pub lora_b: Matrix,
+    /// LoRA scaling factor (alpha / r); paper-standard alpha = 2r ⇒ 2.0.
+    pub scaling: f32,
+}
+
+impl QloraLinear {
+    pub fn new(w: &Matrix, block: usize, rank: usize, codebook: &Codebook, rng: &mut Rng) -> Self {
+        let base = BlockwiseQuant::quantize(w, block, codebook);
+        let mut lora_a = Matrix::zeros(rank, w.cols);
+        rng.fill_normal(&mut lora_a.data, 0.0, 1.0 / (rank as f32).sqrt());
+        let lora_b = Matrix::zeros(w.rows, rank);
+        QloraLinear { base, lora_a, lora_b, scaling: 2.0 }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.lora_a.rows
+    }
+
+    /// Forward: y = x·Ŵᵀ + s · (x·L_aᵀ)·L_bᵀ — the base path fused, the
+    /// adapter path necessarily separate (unmergeable).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut y = self.base.matmul_transb(x);
+        let t = matmul_transb(x, &self.lora_a); // x·L_aᵀ : t×r
+        let adapter = matmul_transb(&t, &self.lora_b); // ·L_bᵀ : t×n
+        y.axpy(self.scaling, &adapter);
+        y
+    }
+
+    /// Adapter gradients given x (t×m) and upstream g = ∂L/∂y (t×n):
+    /// ∇L_b = s·gᵀ·(x L_aᵀ), ∇L_a = s·(L_bᵀ gᵀ)·x.
+    pub fn adapter_grads(&self, x: &Matrix, g: &Matrix) -> (Matrix, Matrix) {
+        let t = matmul_transb(x, &self.lora_a); // t×r
+        let gb = matmul_at_b(g, &t).scale(self.scaling); // (t×n)ᵀ(t×r) = n×r
+        let gt = matmul(g, &self.lora_b); // t×r  (dL/dt)
+        let ga = matmul_at_b(&gt, x).scale(self.scaling); // (t×r)ᵀ(t×m) = r×m
+        (gb, ga)
+    }
+
+    /// The additive update ΔW = s·L_b L_a (strictly rank ≤ r — Figure 3).
+    pub fn delta_w(&self) -> Matrix {
+        matmul(&self.lora_b, &self.lora_a).scale(self.scaling)
+    }
+}
+
+impl QuantizedLinear for QloraLinear {
+    fn dequantize(&self) -> Matrix {
+        self.base.dequantize().add(&self.delta_w())
+    }
+
+    fn float_params(&self) -> usize {
+        self.base.float_params() + self.lora_a.len() + self.lora_b.len()
+    }
+
+    fn code_bits(&self) -> f32 {
+        self.base.code_bits()
+    }
+
+    fn method_name(&self) -> &'static str {
+        "QLoRA"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_allclose;
+
+    #[test]
+    fn zero_init_is_noop() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(24, 32, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let q = QloraLinear::new(&w, 16, 8, &cb, &mut rng);
+        let x = Matrix::randn(5, 32, 1.0, &mut rng);
+        let y_adapter = q.forward(&x);
+        let y_base = q.base.matmul_transb(&x);
+        assert_allclose(&y_adapter.data, &y_base.data, 1e-6, 1e-6, "zero-init adapter");
+    }
+
+    #[test]
+    fn forward_matches_dense_dequant() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(16, 32, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let mut q = QloraLinear::new(&w, 16, 4, &cb, &mut rng);
+        rng.fill_normal(&mut q.lora_b.data, 0.0, 0.05); // make adapter nontrivial
+        let x = Matrix::randn(7, 32, 1.0, &mut rng);
+        let fused = q.forward(&x);
+        let dense = matmul_transb(&x, &q.dequantize());
+        assert_allclose(&fused.data, &dense.data, 1e-4, 1e-4, "qlora forward");
+    }
+
+    #[test]
+    fn adapter_grads_match_finite_difference() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(8, 16, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let mut q = QloraLinear::new(&w, 8, 3, &cb, &mut rng);
+        rng.fill_normal(&mut q.lora_b.data, 0.0, 0.05);
+        let x = Matrix::randn(4, 16, 1.0, &mut rng);
+        // L = Σ y  ⇒ g = 1
+        let g = Matrix::ones(4, 8);
+        let (gb, ga) = q.adapter_grads(&x, &g);
+        let eps = 1e-3;
+        let loss = |q: &QloraLinear| -> f32 { q.forward(&x).data.iter().sum() };
+        // check two entries of each
+        for (mat, grad, i, j) in [(0, &gb, 2usize, 1usize), (1, &ga, 1, 5)] {
+            let mut qp = q.clone();
+            let mut qm = q.clone();
+            let (tp, tm) = if mat == 0 {
+                (qp.lora_b.at_mut(i, j), qm.lora_b.at_mut(i, j))
+            } else {
+                (qp.lora_a.at_mut(i, j), qm.lora_a.at_mut(i, j))
+            };
+            *tp += eps;
+            *tm -= eps;
+            let fd = (loss(&qp) - loss(&qm)) / (2.0 * eps);
+            let an = grad.at(i, j);
+            assert!((fd - an).abs() < 2e-2 * fd.abs().max(1.0), "mat{mat}[{i},{j}]: fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn delta_w_rank_bounded() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(20, 20, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let mut q = QloraLinear::new(&w, 10, 4, &cb, &mut rng);
+        rng.fill_normal(&mut q.lora_b.data, 0.0, 0.1);
+        let sv = crate::linalg::svd(&q.delta_w()).s;
+        let eff = sv.iter().filter(|&&s| s > 1e-4 * sv[0].max(1e-12)).count();
+        assert!(eff <= 4, "additive ΔW must be rank ≤ r, got {eff}");
+    }
+
+    #[test]
+    fn float_params_include_adapter() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(32, 64, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let q = QloraLinear::new(&w, 16, 8, &cb, &mut rng);
+        assert_eq!(q.float_params(), 32 * 64 / 16 + 8 * (32 + 64));
+    }
+}

@@ -1,0 +1,237 @@
+//! Block-wise (group-wise) quantization — the baseline structure LoRDS
+//! breaks (Section 3.1).
+//!
+//! A weight matrix W ∈ R^{n×m} is split into contiguous blocks of size B
+//! along the row (in-features) direction; each block gets an absmax scale
+//! s_b and codes Q_b = argmin‖s_b·v − w‖ over the codebook. With the NF4
+//! codebook this is exactly the QLoRA/bitsandbytes storage format.
+
+use super::codebook::Codebook;
+use super::QuantizedLinear;
+use crate::tensor::Matrix;
+use crate::util::ThreadPool;
+
+/// Block-wise quantized weight: codes + per-block scales.
+#[derive(Clone, Debug)]
+pub struct BlockwiseQuant {
+    pub codes: Vec<u8>,
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    /// n × (m / block) absmax scales.
+    pub scales: Matrix,
+    pub codebook: Codebook,
+}
+
+impl BlockwiseQuant {
+    /// Quantize `w` with block size `block` (must divide w.cols).
+    pub fn quantize(w: &Matrix, block: usize, codebook: &Codebook) -> BlockwiseQuant {
+        assert!(block > 0 && w.cols % block == 0, "block {block} !| cols {}", w.cols);
+        let nb = w.cols / block;
+        let mut scales = Matrix::zeros(w.rows, nb);
+        let mut codes = vec![0u8; w.rows * w.cols];
+        assert!(codebook.len() <= 256, "u8 code storage");
+
+        let codes_ptr = SharedCodes(codes.as_mut_ptr());
+        let scales_ptr = SharedF32(scales.data.as_mut_ptr());
+        let cp = &codes_ptr;
+        let sp = &scales_ptr;
+        ThreadPool::global().parallel_for(w.rows, move |lo, hi| {
+            for i in lo..hi {
+                let row = w.row(i);
+                for b in 0..nb {
+                    let blk = &row[b * block..(b + 1) * block];
+                    let mut s = blk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                    if s == 0.0 {
+                        s = 1.0;
+                    }
+                    unsafe { *sp.0.add(i * nb + b) = s };
+                    for (k, &v) in blk.iter().enumerate() {
+                        let code = codebook.quantize_one(v, s) as u8;
+                        unsafe { *cp.0.add(i * w.cols + b * block + k) = code };
+                    }
+                }
+            }
+        });
+
+        BlockwiseQuant {
+            codes,
+            rows: w.rows,
+            cols: w.cols,
+            block,
+            scales,
+            codebook: codebook.clone(),
+        }
+    }
+
+    #[inline]
+    pub fn code(&self, i: usize, j: usize) -> u8 {
+        self.codes[i * self.cols + j]
+    }
+
+    /// Scale applied to element (i, j).
+    #[inline]
+    pub fn scale_at(&self, i: usize, j: usize) -> f32 {
+        self.scales.at(i, j / self.block)
+    }
+
+    /// The full scale matrix S = s ⊗ 1_{1×B}.
+    pub fn scale_matrix(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |i, j| self.scale_at(i, j))
+    }
+
+    /// y = x · Ŵᵀ fused with dequantization (no Ŵ materialization) — the
+    /// Rust-native analogue of the Pallas blockwise kernel.
+    pub fn matmul_transb(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols);
+        let mut y = Matrix::zeros(x.rows, self.rows);
+        let n = self.rows;
+        let yp = SharedF32(y.data.as_mut_ptr());
+        let ypr = &yp;
+        ThreadPool::global().parallel_for(x.rows, move |lo, hi| {
+            for xi in lo..hi {
+                let xrow = x.row(xi);
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    let crow = &self.codes[j * self.cols..(j + 1) * self.cols];
+                    for b in 0..self.cols / self.block {
+                        let s = self.scales.at(j, b);
+                        let mut blk_acc = 0.0f32;
+                        for k in 0..self.block {
+                            let idx = b * self.block + k;
+                            blk_acc += xrow[idx] * self.codebook.level(crow[idx] as usize);
+                        }
+                        acc += s * blk_acc;
+                    }
+                    unsafe { *ypr.0.add(xi * n + j) = acc };
+                }
+            }
+        });
+        y
+    }
+}
+
+struct SharedCodes(*mut u8);
+unsafe impl Sync for SharedCodes {}
+unsafe impl Send for SharedCodes {}
+struct SharedF32(*mut f32);
+unsafe impl Sync for SharedF32 {}
+unsafe impl Send for SharedF32 {}
+
+impl QuantizedLinear for BlockwiseQuant {
+    fn dequantize(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |i, j| {
+            self.codebook.level(self.code(i, j) as usize) * self.scale_at(i, j)
+        })
+    }
+
+    fn float_params(&self) -> usize {
+        self.scales.len()
+    }
+
+    fn code_bits(&self) -> f32 {
+        self.codebook.bits()
+    }
+
+    fn method_name(&self) -> &'static str {
+        "NF4"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, prop_check};
+    use crate::util::Rng;
+
+    fn nf4() -> Codebook {
+        Codebook::normal_float(4)
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(32, 64, 0.1, &mut rng);
+        let q = BlockwiseQuant::quantize(&w, 16, &nf4());
+        let w_hat = q.dequantize();
+        // NF4 with absmax scaling: max elementwise error < half the coarsest gap × scale
+        for i in 0..w.rows {
+            for j in 0..w.cols {
+                let err = (w.at(i, j) - w_hat.at(i, j)).abs();
+                let bound = 0.2 * q.scale_at(i, j);
+                assert!(err <= bound, "({i},{j}): err {err} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_extremes_exact() {
+        // the absmax element of every block quantizes to ±1 · s exactly
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(8, 32, 1.0, &mut rng);
+        let q = BlockwiseQuant::quantize(&w, 8, &nf4());
+        let w_hat = q.dequantize();
+        for i in 0..8 {
+            for b in 0..4 {
+                let blk: Vec<f32> = (0..8).map(|k| w.at(i, b * 8 + k)).collect();
+                let (k_max, v_max) = blk
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                    .unwrap();
+                assert!(
+                    (w_hat.at(i, b * 8 + k_max) - v_max).abs() < 1e-6,
+                    "absmax must be exactly representable"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matmul_matches_dequant_matmul() {
+        prop_check(12, |g| {
+            let n = g.usize(4..=24) * 2;
+            let m = g.usize(2..=8) * 8;
+            let t = g.usize(1..=12);
+            let mut rng = g.rng().fork(3);
+            let w = Matrix::randn(n, m, 0.2, &mut rng);
+            let x = Matrix::randn(t, m, 1.0, &mut rng);
+            let q = BlockwiseQuant::quantize(&w, 8, &nf4());
+            let fused = q.matmul_transb(&x);
+            let dense = crate::tensor::matmul_transb(&x, &q.dequantize());
+            assert_allclose(&fused.data, &dense.data, 1e-4, 1e-4, "fused blockwise matmul");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_matrix_is_piecewise_constant() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(4, 32, 1.0, &mut rng);
+        let q = BlockwiseQuant::quantize(&w, 16, &nf4());
+        let s = q.scale_matrix();
+        for i in 0..4 {
+            for j in 0..16 {
+                assert_eq!(s.at(i, j), s.at(i, 0));
+                assert_eq!(s.at(i, 16 + j), s.at(i, 16));
+            }
+        }
+    }
+
+    #[test]
+    fn float_params_budget() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(64, 128, 1.0, &mut rng);
+        let q = BlockwiseQuant::quantize(&w, 32, &nf4());
+        assert_eq!(q.float_params(), 64 * 128 / 32); // nm/B scales
+        assert_eq!(q.code_bits(), 4.0);
+    }
+
+    #[test]
+    fn zero_block_is_safe() {
+        let w = Matrix::zeros(2, 16);
+        let q = BlockwiseQuant::quantize(&w, 8, &nf4());
+        let w_hat = q.dequantize();
+        assert!(w_hat.data.iter().all(|&v| v == 0.0));
+    }
+}

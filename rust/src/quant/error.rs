@@ -1,0 +1,85 @@
+//! Quantization-error metrics.
+//!
+//! * QuantError = ‖W − Ŵ‖_* (nuclear norm of the residual) — Table 2.
+//! * Reduction ratio = 1 − ‖W−Ŵ‖_* / ‖W−nf4(W)‖_* — Appendix B
+//!   (Tables 8–9); higher is better, NF4 is the zero baseline.
+
+use super::blockwise::BlockwiseQuant;
+use super::codebook::Codebook;
+use super::QuantizedLinear;
+use crate::linalg::nuclear_norm;
+use crate::tensor::Matrix;
+
+/// ‖W − Ŵ‖_* — the paper's QuantError.
+pub fn quant_error_nuclear(w: &Matrix, w_hat: &Matrix) -> f32 {
+    nuclear_norm(&w.sub(w_hat))
+}
+
+/// ‖W − Ŵ‖_F — cheaper tracking metric used inside refinement loops.
+pub fn quant_error_frob(w: &Matrix, w_hat: &Matrix) -> f32 {
+    w.sub(w_hat).frob_norm()
+}
+
+/// Appendix B reduction ratio vs. the NF4 block-wise baseline, in percent.
+pub fn reduction_ratio_pct(w: &Matrix, w_hat: &Matrix, block: usize) -> f32 {
+    let nf4 = BlockwiseQuant::quantize(w, block, &Codebook::normal_float(4));
+    let base = quant_error_nuclear(w, &nf4.dequantize());
+    if base == 0.0 {
+        return 0.0;
+    }
+    100.0 * (1.0 - quant_error_nuclear(w, w_hat) / base)
+}
+
+/// Reduction ratio against an explicit baseline reconstruction.
+pub fn reduction_ratio_vs(w: &Matrix, w_hat: &Matrix, w_base: &Matrix) -> f32 {
+    let base = quant_error_nuclear(w, w_base);
+    if base == 0.0 {
+        return 0.0;
+    }
+    100.0 * (1.0 - quant_error_nuclear(w, w_hat) / base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_error_for_identical() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(12, 12, 1.0, &mut rng);
+        assert!(quant_error_nuclear(&w, &w) < 1e-4);
+        assert!(quant_error_frob(&w, &w) < 1e-6);
+    }
+
+    #[test]
+    fn nf4_baseline_ratio_is_zero() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(32, 32, 0.1, &mut rng);
+        let nf4 = BlockwiseQuant::quantize(&w, 16, &Codebook::normal_float(4));
+        let r = reduction_ratio_pct(&w, &nf4.dequantize(), 16);
+        assert!(r.abs() < 1e-3, "NF4 vs itself must be 0, got {r}");
+    }
+
+    #[test]
+    fn better_reconstruction_higher_ratio() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(24, 24, 0.1, &mut rng);
+        let nf4 = BlockwiseQuant::quantize(&w, 8, &Codebook::normal_float(4));
+        let w_nf4 = nf4.dequantize();
+        // mix toward the exact weights = strictly better reconstruction
+        let better = w_nf4.scale(0.5).add(&w.scale(0.5));
+        let r = reduction_ratio_vs(&w, &better, &w_nf4);
+        assert!(r > 0.0);
+        let perfect = reduction_ratio_vs(&w, &w, &w_nf4);
+        assert!((perfect - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn nuclear_dominates_frobenius() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(16, 20, 1.0, &mut rng);
+        let w_hat = Matrix::zeros(16, 20);
+        assert!(quant_error_nuclear(&w, &w_hat) >= quant_error_frob(&w, &w_hat) - 1e-3);
+    }
+}

@@ -1,0 +1,381 @@
+//! LoRDS — Low-Rank Decomposed Scaling (Sections 3.2–3.3, Algorithm 1).
+//!
+//! The quantized representation is `Ŵ = lut[Q] ⊙ (BA)` with
+//! B ∈ R^{n×r}, A ∈ R^{r×m}. Construction:
+//!
+//! 1. **Init** — truncated SVD of the block-wise scale matrix (eq. 3), so
+//!    the starting point exactly reproduces block-wise statistics.
+//! 2. **Iterative refinement** — alternate (2.1) the quantization step
+//!    `Q_ij = argmin_v (S_ij·v − W_ij)²` with S = BA fixed, and (2.2) the
+//!    adaptation step: AdamW on `‖W − (BA) ⊙ Q‖_F²` with Q fixed.
+//!
+//! The same struct doubles as the PEFT adapter (Section 3.4): fine-tuning
+//! updates only `b`/`a`, yielding the multiplicative high-rank update
+//! `ΔW = Q ⊙ (B'A' − BA)` at zero inference overhead.
+
+use super::codebook::Codebook;
+use super::scale::{lords_init, parity_rank};
+use super::QuantizedLinear;
+use crate::optim::{AdamW, Optimizer};
+use crate::tensor::{matmul, matmul_at_b, matmul_transb, Matrix};
+use crate::util::ThreadPool;
+
+/// Refinement hyper-parameters (paper §4.1: 500 steps, lr 0.05).
+#[derive(Clone, Copy, Debug)]
+pub struct RefineCfg {
+    pub steps: usize,
+    pub lr: f32,
+    /// Re-run the quantization step every `requant_every` adaptation steps.
+    /// 1 = strict Algorithm 1; larger values trade fidelity for speed.
+    pub requant_every: usize,
+}
+
+impl Default for RefineCfg {
+    fn default() -> Self {
+        RefineCfg { steps: 100, lr: 0.05, requant_every: 5 }
+    }
+}
+
+/// Trace of the refinement run (Table 2's before/after evidence).
+#[derive(Clone, Debug, Default)]
+pub struct RefineReport {
+    /// ‖W − Ŵ‖_F at SVD init (step 0).
+    pub initial_frob: f32,
+    /// ‖W − Ŵ‖_F after refinement.
+    pub final_frob: f32,
+    /// (step, frob error) samples along the way.
+    pub trace: Vec<(usize, f32)>,
+}
+
+/// The LoRDS quantized weight.
+#[derive(Clone, Debug)]
+pub struct LordsQuant {
+    pub codes: Vec<u8>,
+    pub rows: usize,
+    pub cols: usize,
+    pub rank: usize,
+    pub b: Matrix,
+    pub a: Matrix,
+    pub codebook: Codebook,
+}
+
+impl LordsQuant {
+    /// Quantize with the parameter-parity rank of Appendix A.
+    pub fn quantize(w: &Matrix, block: usize, codebook: &Codebook, cfg: RefineCfg) -> (Self, RefineReport) {
+        let r = parity_rank(w.rows, w.cols, block);
+        Self::quantize_with_rank(w, block, r, codebook, cfg)
+    }
+
+    /// Quantize with an explicit rank (LoRDS† parameter alignment, ablations).
+    pub fn quantize_with_rank(
+        w: &Matrix,
+        block: usize,
+        rank: usize,
+        codebook: &Codebook,
+        cfg: RefineCfg,
+    ) -> (Self, RefineReport) {
+        // Step 1: SVD init from block-wise statistics (eq. 3)
+        let (b, a) = lords_init(w, block, rank);
+        let mut q = LordsQuant {
+            codes: vec![0u8; w.rows * w.cols],
+            rows: w.rows,
+            cols: w.cols,
+            rank,
+            b,
+            a,
+            codebook: codebook.clone(),
+        };
+        q.requantize(w);
+        let mut report = RefineReport {
+            initial_frob: q.dequantize().sub(w).frob_norm(),
+            ..Default::default()
+        };
+        report.trace.push((0, report.initial_frob));
+
+        // Step 2: alternating refinement
+        if cfg.steps > 0 {
+            q.refine(w, cfg, &mut report);
+        }
+        report.final_frob = q.dequantize().sub(w).frob_norm();
+        (q, report)
+    }
+
+    /// Algorithm 1 step 2.1: recompute Q = argmin_v (S·v − W)² with S = BA.
+    pub fn requantize(&mut self, w: &Matrix) {
+        let s = matmul(&self.b, &self.a);
+        let cols = self.cols;
+        let cb = &self.codebook;
+        let codes_ptr = SharedU8(self.codes.as_mut_ptr());
+        let cp = &codes_ptr;
+        ThreadPool::global().parallel_for(self.rows, move |lo, hi| {
+            for i in lo..hi {
+                let wrow = w.row(i);
+                let srow = s.row(i);
+                for j in 0..cols {
+                    let code = cb.quantize_one(wrow[j], srow[j]) as u8;
+                    unsafe { *cp.0.add(i * cols + j) = code };
+                }
+            }
+        });
+    }
+
+    /// Algorithm 1 step 2.2 loop: AdamW on B, A minimizing ‖W − (BA)⊙Q‖_F².
+    fn refine(&mut self, w: &Matrix, cfg: RefineCfg, report: &mut RefineReport) {
+        let mut opt = AdamW::new(0.0);
+        let sample_every = (cfg.steps / 10).max(1);
+        for t in 0..cfg.steps {
+            if t > 0 && t % cfg.requant_every == 0 {
+                self.requantize(w);
+            }
+            // residual R = (BA)⊙Q − W ; dL/dS = 2 R ⊙ Q
+            let s = matmul(&self.b, &self.a);
+            let qv = self.q_values();
+            let mut gs = Matrix::zeros(self.rows, self.cols);
+            let mut frob2 = 0.0f64;
+            for idx in 0..s.data.len() {
+                let r = s.data[idx] * qv.data[idx] - w.data[idx];
+                frob2 += (r as f64) * (r as f64);
+                gs.data[idx] = 2.0 * r * qv.data[idx];
+            }
+            let gb = matmul_transb(&gs, &self.a); // (n×m)·(r×m)ᵀ = n×r
+            let ga = matmul_at_b(&self.b, &gs); // (n×r)ᵀ·(n×m) = r×m
+            // normalize by element count to keep lr scale-free across sizes
+            let inv = 1.0 / (self.rows * self.cols) as f32;
+            let gb = gb.scale(inv);
+            let ga = ga.scale(inv);
+            opt.step(0, &mut self.b.data, &gb.data, cfg.lr);
+            opt.step(1, &mut self.a.data, &ga.data, cfg.lr);
+            opt.next_step();
+            if t % sample_every == 0 {
+                report.trace.push((t + 1, (frob2.sqrt()) as f32));
+            }
+        }
+        self.requantize(w);
+    }
+
+    /// lut[Q] as a dense matrix.
+    pub fn q_values(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |i, j| {
+            self.codebook.level(self.codes[i * self.cols + j] as usize)
+        })
+    }
+
+    /// The continuous scale manifold S = BA.
+    pub fn scale_matrix(&self) -> Matrix {
+        matmul(&self.b, &self.a)
+    }
+
+    /// Fused y = x · Ŵᵀ without materializing Ŵ: per output row j the scale
+    /// row is reconstructed as b[j]·A (rank-r), mirroring the Pallas kernel.
+    pub fn matmul_transb(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols);
+        let n = self.rows;
+        let mut y = Matrix::zeros(x.rows, n);
+        let yp = SharedF32(y.data.as_mut_ptr());
+        let ypr = &yp;
+        ThreadPool::global().parallel_for(n, move |lo, hi| {
+            let mut srow = vec![0.0f32; self.cols];
+            for j in lo..hi {
+                // s_row = b[j, :] · A  (r × m), rank-r reconstruction
+                srow.iter_mut().for_each(|v| *v = 0.0);
+                for p in 0..self.rank {
+                    let bjp = self.b.at(j, p);
+                    if bjp == 0.0 {
+                        continue;
+                    }
+                    let arow = self.a.row(p);
+                    for (sv, &av) in srow.iter_mut().zip(arow) {
+                        *sv += bjp * av;
+                    }
+                }
+                let crow = &self.codes[j * self.cols..(j + 1) * self.cols];
+                for xi in 0..x.rows {
+                    let xrow = x.row(xi);
+                    let mut acc = 0.0f32;
+                    for k in 0..self.cols {
+                        acc += xrow[k] * srow[k] * self.codebook.level(crow[k] as usize);
+                    }
+                    unsafe { *ypr.0.add(xi * n + j) = acc };
+                }
+            }
+        });
+        y
+    }
+
+    /// PEFT view: the multiplicative weight update induced by moving the
+    /// scale factors from (B, A) to (B', A'): ΔW = Q ⊙ (B'A' − BA).
+    pub fn delta_w(&self, b_new: &Matrix, a_new: &Matrix) -> Matrix {
+        let ds = matmul(b_new, a_new).sub(&self.scale_matrix());
+        self.q_values().hadamard(&ds)
+    }
+}
+
+struct SharedU8(*mut u8);
+unsafe impl Sync for SharedU8 {}
+unsafe impl Send for SharedU8 {}
+struct SharedF32(*mut f32);
+unsafe impl Sync for SharedF32 {}
+unsafe impl Send for SharedF32 {}
+
+impl QuantizedLinear for LordsQuant {
+    fn dequantize(&self) -> Matrix {
+        self.q_values().hadamard(&self.scale_matrix())
+    }
+
+    fn float_params(&self) -> usize {
+        self.b.len() + self.a.len()
+    }
+
+    fn code_bits(&self) -> f32 {
+        self.codebook.bits()
+    }
+
+    fn method_name(&self) -> &'static str {
+        "LoRDS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::blockwise::BlockwiseQuant;
+    use crate::util::prop::{assert_allclose, prop_check};
+    use crate::util::Rng;
+
+    fn nf4() -> Codebook {
+        Codebook::normal_float(4)
+    }
+
+    /// LLM-like weights: Gaussian bulk + a few heavy outlier channels.
+    fn llm_like(rng: &mut Rng, n: usize, m: usize) -> Matrix {
+        let mut w = Matrix::randn(n, m, 0.05, rng);
+        let outliers = rng.choose(m, (m / 16).max(1));
+        for &c in &outliers {
+            for i in 0..n {
+                *w.at_mut(i, c) *= 8.0;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn init_matches_blockwise_error_at_step_zero() {
+        // With refinement disabled and full rank, LoRDS must equal blockwise.
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(32, 64, 0.1, &mut rng);
+        let block = 16;
+        let cfg = RefineCfg { steps: 0, ..Default::default() };
+        let (q, rep) = LordsQuant::quantize_with_rank(&w, block, 64 / block, &nf4(), cfg);
+        let bw = BlockwiseQuant::quantize(&w, block, &nf4());
+        let err_lords = q.dequantize().sub(&w).frob_norm();
+        let err_block = bw.dequantize().sub(&w).frob_norm();
+        assert!((err_lords - err_block).abs() / err_block < 5e-3, "{err_lords} vs {err_block}");
+        assert!((rep.initial_frob - err_lords).abs() < 1e-5);
+    }
+
+    #[test]
+    fn refinement_strictly_reduces_error() {
+        let mut rng = Rng::new(1);
+        let w = llm_like(&mut rng, 64, 96);
+        let cfg = RefineCfg { steps: 80, lr: 0.05, requant_every: 5 };
+        let (_, rep) = LordsQuant::quantize_with_rank(&w, 16, 4, &nf4(), cfg);
+        assert!(
+            rep.final_frob < rep.initial_frob * 0.98,
+            "refinement did not help: {} -> {}",
+            rep.initial_frob,
+            rep.final_frob
+        );
+    }
+
+    #[test]
+    fn beats_blockwise_at_parity_budget_on_outlier_weights() {
+        // The paper's Table 1/8 claim at the single-matrix level.
+        let mut rng = Rng::new(2);
+        let w = llm_like(&mut rng, 96, 128);
+        let block = 32;
+        let bw = BlockwiseQuant::quantize(&w, block, &nf4());
+        let cfg = RefineCfg { steps: 120, lr: 0.05, requant_every: 5 };
+        let (lq, _) = LordsQuant::quantize(&w, block, &nf4(), cfg);
+        assert!(lq.float_params() <= bw.float_params() + (w.rows + w.cols)); // parity (floor slack)
+        let err_lords = lq.dequantize().sub(&w).frob_norm();
+        let err_block = bw.dequantize().sub(&w).frob_norm();
+        assert!(err_lords < err_block, "LoRDS {err_lords} !< blockwise {err_block}");
+    }
+
+    #[test]
+    fn fused_matmul_matches_dense() {
+        prop_check(8, |g| {
+            let n = g.usize(8..=32);
+            let m = g.usize(2..=6) * 16;
+            let t = g.usize(1..=8);
+            let mut rng = g.rng().fork(9);
+            let w = llm_like(&mut rng, n, m);
+            let x = Matrix::randn(t, m, 1.0, &mut rng);
+            let cfg = RefineCfg { steps: 10, ..Default::default() };
+            let (q, _) = LordsQuant::quantize_with_rank(&w, 16, 3, &nf4(), cfg);
+            if !q.b.all_finite() || !q.a.all_finite() {
+                return Err(format!("non-finite scale factors at n={n} m={m}"));
+            }
+            let fused = q.matmul_transb(&x);
+            let dense = matmul_transb(&x, &q.dequantize());
+            assert_allclose(&fused.data, &dense.data, 1e-4, 1e-4, "fused lords matmul");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_w_is_high_rank() {
+        // Section 3.4 / Figure 3: the multiplicative update escapes rank r.
+        let mut rng = Rng::new(4);
+        let w = llm_like(&mut rng, 48, 48);
+        let cfg = RefineCfg { steps: 20, ..Default::default() };
+        let (q, _) = LordsQuant::quantize_with_rank(&w, 16, 2, &nf4(), cfg);
+        let mut b_new = q.b.clone();
+        let mut a_new = q.a.clone();
+        let mut prng = Rng::new(5);
+        for v in b_new.data.iter_mut() {
+            *v += 0.02 * prng.normal();
+        }
+        for v in a_new.data.iter_mut() {
+            *v += 0.02 * prng.normal();
+        }
+        let dw = q.delta_w(&b_new, &a_new);
+        let sv = crate::linalg::svd(&dw).s;
+        let effective = sv.iter().filter(|&&s| s > 1e-3 * sv[0]).count();
+        assert!(effective > 3 * q.rank, "ΔW rank {effective} should exceed 3r = {}", 3 * q.rank);
+    }
+
+    #[test]
+    fn codes_are_optimal_given_scales() {
+        let mut rng = Rng::new(6);
+        let w = llm_like(&mut rng, 16, 32);
+        let cfg = RefineCfg { steps: 15, ..Default::default() };
+        let (q, _) = LordsQuant::quantize_with_rank(&w, 16, 2, &nf4(), cfg);
+        let s = q.scale_matrix();
+        let cb = nf4();
+        for i in 0..w.rows {
+            for j in 0..w.cols {
+                let got = q.codes[i * w.cols + j] as usize;
+                let best = (0..cb.len())
+                    .min_by(|&x, &y| {
+                        let ex = (s.at(i, j) * cb.level(x) - w.at(i, j)).powi(2);
+                        let ey = (s.at(i, j) * cb.level(y) - w.at(i, j)).powi(2);
+                        ex.partial_cmp(&ey).unwrap()
+                    })
+                    .unwrap();
+                let e_got = (s.at(i, j) * cb.level(got) - w.at(i, j)).powi(2);
+                let e_best = (s.at(i, j) * cb.level(best) - w.at(i, j)).powi(2);
+                assert!(e_got <= e_best + 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn float_param_budget_is_r_n_plus_m() {
+        let mut rng = Rng::new(7);
+        let w = Matrix::randn(64, 128, 1.0, &mut rng);
+        let cfg = RefineCfg { steps: 0, ..Default::default() };
+        let (q, _) = LordsQuant::quantize_with_rank(&w, 32, 5, &nf4(), cfg);
+        assert_eq!(q.float_params(), 5 * (64 + 128));
+    }
+}

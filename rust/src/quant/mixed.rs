@@ -1,0 +1,92 @@
+//! Mixed-precision bit schedules (Section 4.1 "Pushing the Limits" and
+//! Appendix B Table 9).
+//!
+//! The paper's 3 / 2.5 / 2.25-bit configurations quantize the first
+//! 50% / 25% / 12.5% of the model's layers with NF4 and the remainder with
+//! NF2; 2-bit is NF2 everywhere. [`MixedSchedule`] reproduces that layer
+//! assignment and the resulting average bit width / #Float accounting.
+
+use super::codebook::Codebook;
+
+/// Per-layer codebook assignment for a target average bit width.
+#[derive(Clone, Debug)]
+pub struct MixedSchedule {
+    /// bits label as the paper writes it (3, 2.5, 2.25, 2 or 4).
+    pub bits_label: String,
+    /// Fraction of leading layers quantized at NF4.
+    pub nf4_fraction: f32,
+    pub n_layers: usize,
+}
+
+impl MixedSchedule {
+    /// Paper mapping: 3-bit → 50% NF4, 2.5 → 25%, 2.25 → 12.5%, 2 → 0%,
+    /// 4 → 100%.
+    pub fn for_bits(bits: f32, n_layers: usize) -> MixedSchedule {
+        let nf4_fraction = ((bits - 2.0) / 2.0).clamp(0.0, 1.0);
+        let label = if (bits.fract()).abs() < 1e-6 {
+            format!("{}", bits as u32)
+        } else {
+            format!("{bits}")
+        };
+        MixedSchedule { bits_label: label, nf4_fraction, n_layers }
+    }
+
+    /// Number of leading layers in NF4.
+    pub fn nf4_layers(&self) -> usize {
+        (self.nf4_fraction * self.n_layers as f32).round() as usize
+    }
+
+    /// Codebook for layer `l` (0-based).
+    pub fn codebook_for_layer(&self, l: usize) -> Codebook {
+        assert!(l < self.n_layers);
+        if l < self.nf4_layers() {
+            Codebook::normal_float(4)
+        } else {
+            Codebook::normal_float(2)
+        }
+    }
+
+    /// Average bits per weight across layers (assuming equal layer sizes).
+    pub fn average_bits(&self) -> f32 {
+        let k = self.nf4_layers() as f32;
+        let rest = self.n_layers as f32 - k;
+        (4.0 * k + 2.0 * rest) / self.n_layers as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fractions() {
+        assert_eq!(MixedSchedule::for_bits(3.0, 32).nf4_layers(), 16);
+        assert_eq!(MixedSchedule::for_bits(2.5, 32).nf4_layers(), 8);
+        assert_eq!(MixedSchedule::for_bits(2.25, 32).nf4_layers(), 4);
+        assert_eq!(MixedSchedule::for_bits(2.0, 32).nf4_layers(), 0);
+        assert_eq!(MixedSchedule::for_bits(4.0, 32).nf4_layers(), 32);
+    }
+
+    #[test]
+    fn average_bits_match_label() {
+        for (bits, layers) in [(3.0f32, 32usize), (2.5, 32), (2.25, 32), (2.0, 32), (4.0, 32)] {
+            let s = MixedSchedule::for_bits(bits, layers);
+            assert!((s.average_bits() - bits).abs() < 1e-6, "{bits}");
+        }
+    }
+
+    #[test]
+    fn layer_assignment_is_prefix() {
+        let s = MixedSchedule::for_bits(2.5, 8);
+        let widths: Vec<usize> = (0..8).map(|l| s.codebook_for_layer(l).len()).collect();
+        assert_eq!(widths, vec![16, 16, 4, 4, 4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn rounding_with_odd_layer_counts() {
+        let s = MixedSchedule::for_bits(2.25, 4); // 12.5% of 4 = 0.5 → rounds to 1? (0.125*4=0.5→1)
+        assert!(s.nf4_layers() <= 1);
+        let s3 = MixedSchedule::for_bits(3.0, 5);
+        assert_eq!(s3.nf4_layers(), 3); // 2.5 rounds to 3
+    }
+}

@@ -1,0 +1,47 @@
+//! The paper's core: quantization with continuous low-rank decomposed
+//! scaling (LoRDS), plus every baseline it is evaluated against.
+//!
+//! * [`codebook`]  — NormalFloat (NF4/NF3/NF2) + integer grids.
+//! * [`blockwise`] — block-wise absmax quantization (the structure LoRDS
+//!   "breaks"); NF4 here = QLoRA's storage format.
+//! * [`scale`]     — scale-matrix algebra: S = s ⊗ 1, parity rank
+//!   r = ⌊nm/(B(n+m))⌋ (Appendix A), SVD init (eq. 3).
+//! * [`lords`]     — Algorithm 1: SVD init + alternating quantization /
+//!   AdamW adaptation refinement; the LoRDS quantized representation.
+//! * [`ste`]       — fake-quant forward + STE gradients (eqs. 4–5) used by
+//!   the Rust QAT trainer.
+//! * [`mixed`]     — layer-wise mixed-precision schedules (3 / 2.5 / 2.25 /
+//!   2-bit: NF4 on a prefix of layers, NF2 on the rest — §4.1).
+//! * [`error`]     — QuantError (nuclear norm) + reduction-ratio metrics
+//!   (Table 2, Appendix B).
+//! * [`baselines`] — GPTQ, AWQ, LoftQ, QPiSSA, QLoRA.
+
+pub mod baselines;
+pub mod blockwise;
+pub mod codebook;
+pub mod error;
+pub mod lords;
+pub mod mixed;
+pub mod scale;
+pub mod ste;
+
+pub use blockwise::BlockwiseQuant;
+pub use codebook::Codebook;
+pub use lords::{LordsQuant, RefineReport};
+pub use scale::parity_rank;
+
+use crate::tensor::Matrix;
+
+/// A quantized weight that can reproduce its dequantized (effective) matrix
+/// and report its floating-point parameter overhead (the #Float column of
+/// Tables 3/5/8).
+pub trait QuantizedLinear {
+    /// Dequantized Ŵ.
+    fn dequantize(&self) -> Matrix;
+    /// Number of fp32 side-car parameters (scales, adapters, B/A...).
+    fn float_params(&self) -> usize;
+    /// Bits per weight element for the integer part.
+    fn code_bits(&self) -> f32;
+    /// Human-readable method name.
+    fn method_name(&self) -> &'static str;
+}

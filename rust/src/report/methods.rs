@@ -1,0 +1,259 @@
+//! Method application: quantize a single weight matrix (or a whole model)
+//! with any of the paper's methods under a shared interface — the engine
+//! behind Tables 1, 2, 3, 8, 9.
+
+use crate::config::{QuantCfg, QuantMethod};
+use crate::model::{LinearWeight, Model};
+use crate::quant::baselines::{loftq_quantize, qpissa_quantize, AwqQuant, GptqQuant, QloraLinear};
+use crate::quant::lords::RefineCfg;
+use crate::quant::scale::parity_rank_with_adapter;
+use crate::quant::{BlockwiseQuant, Codebook, LordsQuant, QuantizedLinear};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Outcome of quantizing one matrix.
+pub struct MethodResult {
+    pub w_hat: Matrix,
+    pub float_params: usize,
+    pub method: &'static str,
+}
+
+/// Quantize a single matrix with `cfg.method`. `x_cal` is required for
+/// GPTQ/AWQ (calibration activations, t×m).
+pub fn apply_method(w: &Matrix, cfg: &QuantCfg, x_cal: Option<&Matrix>, seed: u64) -> MethodResult {
+    let cb = Codebook::by_name(&cfg.codebook).expect("codebook");
+    let refine = RefineCfg { steps: cfg.refine_steps, lr: cfg.refine_lr, requant_every: 5 };
+    match cfg.method {
+        QuantMethod::Nf4Blockwise => {
+            let q = BlockwiseQuant::quantize(w, cfg.block, &cb);
+            MethodResult { w_hat: q.dequantize(), float_params: q.float_params(), method: "NF4" }
+        }
+        QuantMethod::Int4Blockwise => {
+            let int4 = Codebook::int(4);
+            let q = BlockwiseQuant::quantize(w, cfg.block, &int4);
+            MethodResult { w_hat: q.dequantize(), float_params: q.float_params(), method: "INT4" }
+        }
+        QuantMethod::Gptq => {
+            let x = x_cal.expect("GPTQ needs calibration");
+            let q = GptqQuant::quantize(w, x, cfg.block, &cb, 0.01);
+            MethodResult { w_hat: q.dequantize(), float_params: q.float_params(), method: "GPTQ" }
+        }
+        QuantMethod::Awq => {
+            let x = x_cal.expect("AWQ needs calibration");
+            let q = AwqQuant::quantize(w, x, cfg.block, &cb);
+            MethodResult { w_hat: q.dequantize(), float_params: q.float_params(), method: "AWQ" }
+        }
+        QuantMethod::LoftQ => {
+            let q = loftq_quantize(w, cfg.block, cfg.adapter_rank, 5, &cb);
+            MethodResult { w_hat: q.dequantize(), float_params: q.float_params(), method: "LoftQ" }
+        }
+        QuantMethod::QPissa => {
+            let q = qpissa_quantize(w, cfg.block, cfg.adapter_rank, 5, &cb);
+            MethodResult { w_hat: q.dequantize(), float_params: q.float_params(), method: "QPiSSA" }
+        }
+        QuantMethod::QLora => {
+            let mut rng = Rng::new(seed);
+            let q = QloraLinear::new(w, cfg.block, cfg.adapter_rank, &cb, &mut rng);
+            MethodResult { w_hat: q.dequantize(), float_params: q.float_params(), method: "QLoRA" }
+        }
+        QuantMethod::Lords => {
+            let (q, _) = if cfg.parity_with_adapter {
+                let r = parity_rank_with_adapter(w.rows, w.cols, cfg.block, cfg.adapter_rank);
+                LordsQuant::quantize_with_rank(w, cfg.block, r, &cb, refine)
+            } else {
+                LordsQuant::quantize(w, cfg.block, &cb, refine)
+            };
+            MethodResult {
+                w_hat: q.dequantize(),
+                float_params: q.float_params(),
+                method: if cfg.parity_with_adapter { "LoRDS†" } else { "LoRDS" },
+            }
+        }
+    }
+}
+
+/// Quantize every block linear of a model with `cfg.method`, producing the
+/// model Tables 1/3 evaluate. Calibration activations for GPTQ/AWQ are
+/// layer-agnostic here (same calib batch reused per linear input dim).
+pub fn quantize_model(model: &mut Model, cfg: &QuantCfg, calib: Option<&CalibSet>, seed: u64) {
+    let cb = Codebook::by_name(&cfg.codebook).expect("codebook");
+    let refine = RefineCfg { steps: cfg.refine_steps, lr: cfg.refine_lr, requant_every: 5 };
+    match cfg.method {
+        QuantMethod::Nf4Blockwise => model.quantize_blockwise(cfg.block, &cb),
+        QuantMethod::Int4Blockwise => model.quantize_blockwise(cfg.block, &Codebook::int(4)),
+        QuantMethod::Lords => model.quantize_lords(cfg.block, &cb, refine, false),
+        QuantMethod::QLora => model.quantize_qlora(cfg.block, cfg.adapter_rank, &cb, seed),
+        QuantMethod::LoftQ => {
+            model.map_linears(|w| {
+                LinearWeight::Qlora(adapter_to_qlora(loftq_quantize(
+                    w,
+                    cfg.block,
+                    cfg.adapter_rank,
+                    5,
+                    &cb,
+                )))
+            });
+        }
+        QuantMethod::QPissa => {
+            model.map_linears(|w| {
+                LinearWeight::Qlora(adapter_to_qlora(qpissa_quantize(
+                    w,
+                    cfg.block,
+                    cfg.adapter_rank,
+                    5,
+                    &cb,
+                )))
+            });
+        }
+        QuantMethod::Gptq => {
+            let calib = calib.expect("GPTQ needs calibration");
+            model.map_linears(|w| {
+                let x = calib.for_dim(w.cols);
+                LinearWeight::Blockwise(as_blockwise(GptqQuant::quantize(w, &x, cfg.block, &cb, 0.01)))
+            });
+        }
+        QuantMethod::Awq => {
+            let calib = calib.expect("AWQ needs calibration");
+            model.map_linears(|w| {
+                let x = calib.for_dim(w.cols);
+                let q = AwqQuant::quantize(w, &x, cfg.block, &cb);
+                // fold to a dense effective weight wrapped as Dense? Keep as
+                // blockwise-equivalent dequant for serving: use a Blockwise of
+                // the folded reconstruction (scales refit post-fold).
+                LinearWeight::Dense(q.dequantize())
+            });
+        }
+    }
+}
+
+/// GPTQ/AWQ calibration activations by input dimension.
+pub struct CalibSet {
+    pub by_dim: std::collections::HashMap<usize, Matrix>,
+}
+
+impl CalibSet {
+    /// Synthetic correlated calibration activations for each distinct input
+    /// width in the model (hidden-state statistics with hot channels).
+    pub fn synthetic(dims: &[usize], samples: usize, seed: u64) -> CalibSet {
+        let mut rng = Rng::new(seed ^ 0xCA11);
+        let mut by_dim = std::collections::HashMap::new();
+        for &d in dims {
+            by_dim.entry(d).or_insert_with(|| {
+                let mut x = Matrix::randn(samples, d, 1.0, &mut rng);
+                for &c in rng.choose(d, (d / 24).max(1)).iter() {
+                    for i in 0..samples {
+                        *x.at_mut(i, c) *= 6.0;
+                    }
+                }
+                x
+            });
+        }
+        CalibSet { by_dim }
+    }
+
+    pub fn for_dim(&self, d: usize) -> Matrix {
+        self.by_dim.get(&d).cloned().unwrap_or_else(|| {
+            // fall back to white noise at the right width
+            let mut rng = Rng::new(d as u64);
+            Matrix::randn(64, d, 1.0, &mut rng)
+        })
+    }
+}
+
+fn adapter_to_qlora(a: crate::quant::baselines::AdapterQuant) -> QloraLinear {
+    QloraLinear { base: a.base, lora_a: a.lora_a, lora_b: a.lora_b, scaling: 1.0 }
+}
+
+fn as_blockwise(g: GptqQuant) -> BlockwiseQuant {
+    BlockwiseQuant {
+        codes: g.codes,
+        rows: g.rows,
+        cols: g.cols,
+        block: g.block,
+        scales: g.scales,
+        codebook: g.codebook,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error::quant_error_frob;
+
+    fn w_and_calib() -> (Matrix, Matrix) {
+        let mut rng = Rng::new(0);
+        let w = crate::report::testbed::llm_like_weight(
+            crate::report::testbed::ModuleShape { name: "Q", n: 64, m: 128 },
+            &mut rng,
+        );
+        let x = Matrix::randn(128, 128, 1.0, &mut rng);
+        (w, x)
+    }
+
+    #[test]
+    fn all_methods_run_and_reconstruct() {
+        let (w, x) = w_and_calib();
+        let base_cfg = QuantCfg { block: 32, refine_steps: 20, ..Default::default() };
+        for method in [
+            QuantMethod::Nf4Blockwise,
+            QuantMethod::Int4Blockwise,
+            QuantMethod::Gptq,
+            QuantMethod::Awq,
+            QuantMethod::LoftQ,
+            QuantMethod::QPissa,
+            QuantMethod::QLora,
+            QuantMethod::Lords,
+        ] {
+            let cfg = QuantCfg { method, ..base_cfg.clone() };
+            let r = apply_method(&w, &cfg, Some(&x), 0);
+            let rel = quant_error_frob(&w, &r.w_hat) / w.frob_norm();
+            assert!(rel < 0.5, "{}: rel err {rel}", r.method);
+            assert!(r.float_params > 0);
+        }
+    }
+
+    #[test]
+    fn lords_dagger_uses_bigger_rank() {
+        let (w, _) = w_and_calib();
+        let cfg = QuantCfg { block: 32, refine_steps: 0, ..Default::default() };
+        let plain = apply_method(&w, &cfg, None, 0);
+        let dag = apply_method(
+            &w,
+            &QuantCfg { parity_with_adapter: true, ..cfg },
+            None,
+            0,
+        );
+        assert!(dag.float_params > plain.float_params);
+        assert_eq!(dag.method, "LoRDS†");
+    }
+
+    #[test]
+    fn quantize_model_all_methods() {
+        use crate::config::ModelCfg;
+        let mcfg = ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let calib = CalibSet::synthetic(&[16, 32], 32, 0);
+        for method in [
+            QuantMethod::Nf4Blockwise,
+            QuantMethod::Gptq,
+            QuantMethod::Awq,
+            QuantMethod::LoftQ,
+            QuantMethod::Lords,
+        ] {
+            let mut model = Model::init(&mcfg, 0);
+            let qcfg = QuantCfg { method, block: 8, refine_steps: 3, adapter_rank: 2, ..Default::default() };
+            quantize_model(&mut model, &qcfg, Some(&calib), 0);
+            let logits = model.forward(&[1, 2, 3, 4], 1, 4);
+            assert!(logits.all_finite(), "{method:?}");
+        }
+    }
+}

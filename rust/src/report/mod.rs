@@ -1,0 +1,10 @@
+//! Shared experiment plumbing for the paper-table benches: the cached
+//! pre-trained testbed models, per-module weight suites with the paper's
+//! real aspect ratios, and the method-application helpers every table
+//! reuses.
+
+pub mod methods;
+pub mod testbed;
+
+pub use methods::{apply_method, MethodResult};
+pub use testbed::{module_suite, ModuleShape, Testbed};

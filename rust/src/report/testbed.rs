@@ -1,0 +1,218 @@
+//! Testbed construction.
+//!
+//! * [`Testbed`] — a pre-trained tiny-Llama + its corpora + task suite,
+//!   memoized to `artifacts/testbeds/` so every bench starts from the same
+//!   checkpoint (and re-runs are fast).
+//! * [`module_suite`] — per-module weight matrices with the paper's exact
+//!   aspect ratios (Q/K/V/O/Gate/Up/Down), scaled down, with LLM-like
+//!   statistics (Gaussian bulk + heavy-tail outlier channels) for the
+//!   Appendix-B error-ratio tables.
+
+use crate::config::{ModelCfg, TrainCfg};
+use crate::data::corpus::{Corpus, CorpusKind};
+use crate::data::tasks::TaskSuite;
+use crate::model::Model;
+use crate::tensor::Matrix;
+use crate::train::{NativeTrainer, TrainKind};
+use crate::util::Rng;
+
+/// The standard testbed: one pre-trained model + eval assets.
+pub struct Testbed {
+    pub name: String,
+    pub cfg: ModelCfg,
+    pub model: Model,
+    pub wiki: Corpus,
+    pub ptb: Corpus,
+    pub suite: TaskSuite,
+}
+
+/// Scaled-down stand-ins for the paper's three model families. Same
+/// architecture family, different capacity — enough to show per-model
+/// trends without hours of CPU pre-training.
+pub fn model_zoo() -> Vec<(&'static str, ModelCfg)> {
+    let base = ModelCfg::default();
+    vec![
+        ("llama3-mini", ModelCfg { d_model: 256, n_layers: 4, d_ff: 512, ..base.clone() }),
+        ("qwen3-mini", ModelCfg { d_model: 192, n_layers: 4, d_ff: 448, ..base.clone() }),
+        ("qwen3-micro", ModelCfg { d_model: 128, n_layers: 3, d_ff: 320, ..base.clone() }),
+    ]
+}
+
+impl Testbed {
+    /// Build (or load from `artifacts/testbeds/{name}.bin`) the pre-trained
+    /// testbed. `steps = 0` skips pre-training (unit-test speed).
+    pub fn build(name: &str, cfg: &ModelCfg, steps: usize, seed: u64) -> Testbed {
+        let wiki = Corpus::generate(CorpusKind::Wiki, cfg.vocab, 200_000, 20_000, seed);
+        let ptb = Corpus::generate(CorpusKind::Ptb, cfg.vocab, 50_000, 20_000, seed + 1);
+        let suite = TaskSuite::generate(&wiki, 40, seed + 2);
+
+        let path = format!("artifacts/testbeds/{name}_s{steps}_seed{seed}.bin");
+        let model = match Model::load(&path, cfg) {
+            Ok(m) => {
+                crate::info!("testbed {name}: loaded {path}");
+                m
+            }
+            Err(_) => {
+                crate::info!("testbed {name}: pre-training {steps} steps (one-time)");
+                let mut model = Model::init(cfg, seed);
+                if steps > 0 {
+                    let tcfg = TrainCfg {
+                        steps,
+                        batch: 8,
+                        seq: 64,
+                        peak_lr: 3e-3,
+                        warmup_ratio: 0.05,
+                        weight_decay: 0.01,
+                        seed,
+                        log_every: (steps / 5).max(1),
+                    };
+                    let mut tr = NativeTrainer::new(tcfg, TrainKind::Pretrain);
+                    tr.run(&mut model, &wiki);
+                }
+                if model.save(&path).is_ok() {
+                    crate::info!("testbed {name}: saved {path}");
+                }
+                model
+            }
+        };
+        Testbed { name: name.to_string(), cfg: cfg.clone(), model, wiki, ptb, suite }
+    }
+}
+
+/// Standard evaluation bundle for one (possibly quantized) model: the
+/// Wiki/PTB PPL pair + the 7-task average — one row of Tables 1/3/4.
+#[derive(Clone, Debug)]
+pub struct EvalBundle {
+    pub wiki: crate::eval::PplResult,
+    pub ptb: crate::eval::PplResult,
+    pub per_task: Vec<(&'static str, f32)>,
+    pub avg: f32,
+}
+
+pub fn eval_model(model: &Model, tb: &Testbed, ppl_windows: usize, per_task: usize) -> EvalBundle {
+    let wiki = crate::eval::perplexity(model, &tb.wiki, 64, ppl_windows);
+    let ptb = crate::eval::perplexity(model, &tb.ptb, 64, ppl_windows);
+    // trim the suite for bench-speed; FULL=1 benches pass usize::MAX
+    let mut suite = tb.suite.clone();
+    for t in suite.tasks.iter_mut() {
+        t.examples.truncate(per_task);
+    }
+    let acc = crate::eval::evaluate_suite(model, &suite);
+    EvalBundle { wiki, ptb, per_task: acc.per_task, avg: acc.average }
+}
+
+/// Bench scale switch: `FULL=1 cargo bench ...` runs the paper-size sweep;
+/// the default is a reduced sweep that finishes in minutes on CPU.
+pub fn full_mode() -> bool {
+    std::env::var("FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// One module shape from Appendix A (Table 7), scaled by `scale` (the
+/// paper's 4096 → 512 at scale 8).
+#[derive(Clone, Copy, Debug)]
+pub struct ModuleShape {
+    pub name: &'static str,
+    pub n: usize,
+    pub m: usize,
+}
+
+/// The Llama3-8B module inventory at 1/`scale` linear size.
+pub fn llama_modules(scale: usize) -> Vec<ModuleShape> {
+    let d = 4096 / scale;
+    let kv = 1024 / scale;
+    let ff = 14336 / scale;
+    // round ff to a multiple of 64 for blockability
+    let ff = ff / 64 * 64;
+    vec![
+        ModuleShape { name: "Q", n: d, m: d },
+        ModuleShape { name: "K", n: kv, m: d },
+        ModuleShape { name: "V", n: kv, m: d },
+        ModuleShape { name: "O", n: d, m: d },
+        ModuleShape { name: "Gate", n: ff, m: d },
+        ModuleShape { name: "Up", n: ff, m: d },
+        ModuleShape { name: "Down", n: d, m: ff },
+    ]
+}
+
+/// LLM-like weight generator: Gaussian bulk + heavy-tail outlier channels
+/// (student-t scaled columns), the statistics block scaling struggles with.
+pub fn llm_like_weight(shape: ModuleShape, rng: &mut Rng) -> Matrix {
+    let mut w = Matrix::randn(shape.n, shape.m, 0.02, rng);
+    let n_out = (shape.m / 24).max(1);
+    let outliers = rng.choose(shape.m, n_out);
+    for &c in &outliers {
+        let boost = 4.0 + rng.student_t(3.0).abs().min(12.0);
+        for i in 0..shape.n {
+            *w.at_mut(i, c) *= boost;
+        }
+    }
+    // a few hot rows too (attention-sink-like)
+    for &r in rng.choose(shape.n, (shape.n / 48).max(1)).iter() {
+        for v in w.row_mut(r) {
+            *v *= 3.0;
+        }
+    }
+    w
+}
+
+/// The per-module suite used by Tables 8–9.
+pub fn module_suite(scale: usize, seed: u64) -> Vec<(ModuleShape, Matrix)> {
+    let mut rng = Rng::new(seed ^ 0x5017E);
+    llama_modules(scale)
+        .into_iter()
+        .map(|s| {
+            let w = llm_like_weight(s, &mut rng);
+            (s, w)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_shapes_scale() {
+        let mods = llama_modules(8);
+        assert_eq!(mods[0].n, 512);
+        assert_eq!(mods[1].n, 128); // K
+        let names: Vec<_> = mods.iter().map(|m| m.name).collect();
+        assert_eq!(names, vec!["Q", "K", "V", "O", "Gate", "Up", "Down"]);
+    }
+
+    #[test]
+    fn weights_have_outliers() {
+        let mut rng = Rng::new(0);
+        let w = llm_like_weight(ModuleShape { name: "Q", n: 64, m: 128 }, &mut rng);
+        let col_norm = |j: usize| -> f32 { (0..64).map(|i| w.at(i, j).powi(2)).sum::<f32>().sqrt() };
+        let norms: Vec<f32> = (0..128).map(col_norm).collect();
+        let max = norms.iter().cloned().fold(0.0f32, f32::max);
+        let med = {
+            let mut s = norms.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[64]
+        };
+        assert!(max > 3.0 * med, "outlier channels missing: max {max} med {med}");
+    }
+
+    #[test]
+    fn testbed_without_pretraining_is_fast_and_cached() {
+        let cfg = ModelCfg {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 32,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let tb = Testbed::build("unit-test", &cfg, 0, 9);
+        assert_eq!(tb.suite.tasks.len(), 7);
+        // second build loads from disk — must be identical
+        let tb2 = Testbed::build("unit-test", &cfg, 0, 9);
+        assert_eq!(tb.model.tok_emb.data, tb2.model.tok_emb.data);
+        std::fs::remove_file("artifacts/testbeds/unit-test_s0_seed9.bin").ok();
+    }
+}

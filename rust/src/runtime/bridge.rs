@@ -1,0 +1,218 @@
+//! Model ⇄ artifact parameter bridge: resolves the manifest's named input
+//! specs against a native [`Model`], producing the flat `HostTensor` lists
+//! the PJRT artifacts expect, and writes updated tensors back.
+//!
+//! Name scheme (mirrors `python/compile/model.py`):
+//!   tok_emb, final_norm, lm_head,
+//!   l{i}.attn_norm, l{i}.mlp_norm,
+//!   l{i}.{wq|wk|wv|wo|w_gate|w_up|w_down}           (dense weight)
+//!   ...{linear}.codes / .B / .A                      (LoRDS layout)
+//!   ...{linear}.scales                               (NF4 layout)
+//!   ...{linear}.lora_a / .lora_b                     (QLoRA layout)
+
+use super::manifest::TensorSpec;
+use super::runtime::HostTensor;
+use crate::model::{LinearWeight, Model};
+use crate::tensor::Matrix;
+
+fn linear<'m>(model: &'m Model, layer: usize, field: &str) -> &'m LinearWeight {
+    let l = &model.layers[layer];
+    match field {
+        "wq" => &l.wq,
+        "wk" => &l.wk,
+        "wv" => &l.wv,
+        "wo" => &l.wo,
+        "w_gate" => &l.w_gate,
+        "w_up" => &l.w_up,
+        "w_down" => &l.w_down,
+        _ => panic!("unknown linear {field}"),
+    }
+}
+
+fn linear_mut<'m>(model: &'m mut Model, layer: usize, field: &str) -> &'m mut LinearWeight {
+    let l = &mut model.layers[layer];
+    match field {
+        "wq" => &mut l.wq,
+        "wk" => &mut l.wk,
+        "wv" => &mut l.wv,
+        "wo" => &mut l.wo,
+        "w_gate" => &mut l.w_gate,
+        "w_up" => &mut l.w_up,
+        "w_down" => &mut l.w_down,
+        _ => panic!("unknown linear {field}"),
+    }
+}
+
+fn mat(m: &Matrix) -> HostTensor {
+    HostTensor::F32(m.data.clone(), vec![m.rows, m.cols])
+}
+
+fn vecf(v: &[f32]) -> HostTensor {
+    HostTensor::F32(v.to_vec(), vec![v.len()])
+}
+
+/// Resolve one named parameter from the model.
+pub fn resolve(model: &Model, name: &str) -> HostTensor {
+    match name {
+        "tok_emb" => mat(&model.tok_emb),
+        "lm_head" => mat(&model.lm_head),
+        "final_norm" => vecf(&model.final_norm),
+        _ => {
+            let (layer_part, rest) = name.split_once('.').expect("layered name");
+            let layer: usize = layer_part[1..].parse().expect("layer index");
+            match rest {
+                "attn_norm" => vecf(&model.layers[layer].attn_norm),
+                "mlp_norm" => vecf(&model.layers[layer].mlp_norm),
+                _ => {
+                    // l{i}.{field}[.kind]
+                    let (field, kind) = match rest.rsplit_once('.') {
+                        Some((f, k)) if ["codes", "B", "A", "scales", "lora_a", "lora_b"].contains(&k) => {
+                            (f, Some(k))
+                        }
+                        _ => (rest, None),
+                    };
+                    let lw = linear(model, layer, field);
+                    match (lw, kind) {
+                        (lw, None) => mat(&lw.effective()),
+                        (LinearWeight::Lords { q, .. }, Some("codes")) => HostTensor::I32(
+                            q.codes.iter().map(|&c| c as i32).collect(),
+                            vec![q.rows, q.cols],
+                        ),
+                        (LinearWeight::Lords { q, .. }, Some("B")) => mat(&q.b),
+                        (LinearWeight::Lords { q, .. }, Some("A")) => mat(&q.a),
+                        (LinearWeight::Blockwise(q), Some("codes")) => HostTensor::I32(
+                            q.codes.iter().map(|&c| c as i32).collect(),
+                            vec![q.rows, q.cols],
+                        ),
+                        (LinearWeight::Blockwise(q), Some("scales")) => mat(&q.scales),
+                        (LinearWeight::Qlora(q), Some("codes")) => HostTensor::I32(
+                            q.base.codes.iter().map(|&c| c as i32).collect(),
+                            vec![q.base.rows, q.base.cols],
+                        ),
+                        (LinearWeight::Qlora(q), Some("scales")) => mat(&q.base.scales),
+                        (LinearWeight::Qlora(q), Some("lora_a")) => mat(&q.lora_a),
+                        (LinearWeight::Qlora(q), Some("lora_b")) => mat(&q.lora_b),
+                        (lw, Some(k)) => panic!("cannot resolve {name}: repr {lw:?} has no {k}"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Collect all params named by `specs` (stopping before non-param inputs
+/// like `tokens`, `targets`, caches).
+pub fn collect_params(model: &Model, specs: &[TensorSpec]) -> Vec<HostTensor> {
+    specs
+        .iter()
+        .take_while(|s| !matches!(s.name.as_str(), "tokens" | "targets" | "token" | "k_cache" | "v_cache" | "cur"))
+        .map(|s| {
+            let t = resolve(model, &s.name);
+            assert_eq!(t.dims(), s.dims.as_slice(), "{}: model/manifest shape mismatch", s.name);
+            t
+        })
+        .collect()
+}
+
+/// Write an updated f32 tensor back into the model (trainable params only).
+pub fn write_back(model: &mut Model, name: &str, data: &[f32]) {
+    match name {
+        "tok_emb" => model.tok_emb.data.copy_from_slice(data),
+        "lm_head" => model.lm_head.data.copy_from_slice(data),
+        "final_norm" => model.final_norm.copy_from_slice(data),
+        _ => {
+            let (layer_part, rest) = name.split_once('.').expect("layered name");
+            let layer: usize = layer_part[1..].parse().unwrap();
+            match rest {
+                "attn_norm" => model.layers[layer].attn_norm.copy_from_slice(data),
+                "mlp_norm" => model.layers[layer].mlp_norm.copy_from_slice(data),
+                _ => {
+                    let (field, kind) = match rest.rsplit_once('.') {
+                        Some((f, k)) if ["B", "A", "lora_a", "lora_b"].contains(&k) => (f, Some(k)),
+                        _ => (rest, None),
+                    };
+                    let lw = linear_mut(model, layer, field);
+                    match (lw, kind) {
+                        (LinearWeight::Lords { q, .. }, Some("B")) => q.b.data.copy_from_slice(data),
+                        (LinearWeight::Lords { q, .. }, Some("A")) => q.a.data.copy_from_slice(data),
+                        (LinearWeight::Qlora(q), Some("lora_a")) => q.lora_a.data.copy_from_slice(data),
+                        (LinearWeight::Qlora(q), Some("lora_b")) => q.lora_b.data.copy_from_slice(data),
+                        (LinearWeight::Dense(w), None) => w.data.copy_from_slice(data),
+                        (LinearWeight::Lords { shadow_w: Some(w), .. }, None) => {
+                            w.data.copy_from_slice(data)
+                        }
+                        (lw, k) => panic!("cannot write back {name} ({k:?}) into {lw:?}"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::quant::lords::RefineCfg;
+    use crate::quant::Codebook;
+    use crate::runtime::manifest::DType;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        }
+    }
+
+    #[test]
+    fn resolve_lords_layout() {
+        let c = cfg();
+        let mut m = Model::init(&c, 0);
+        m.quantize_lords(c.block, &Codebook::normal_float(4),
+                         RefineCfg { steps: 0, ..Default::default() }, false);
+        let t = resolve(&m, "l0.wq.codes");
+        assert_eq!(t.dims(), &[16, 16]);
+        assert!(matches!(t, HostTensor::I32(..)));
+        let b = resolve(&m, "l0.wq.B");
+        assert_eq!(b.dims()[0], 16);
+        let emb = resolve(&m, "tok_emb");
+        assert_eq!(emb.dims(), &[32, 16]);
+        let norm = resolve(&m, "l0.attn_norm");
+        assert_eq!(norm.dims(), &[16]);
+    }
+
+    #[test]
+    fn collect_stops_at_tokens() {
+        let c = cfg();
+        let mut m = Model::init(&c, 1);
+        m.quantize_lords(c.block, &Codebook::normal_float(4),
+                         RefineCfg { steps: 0, ..Default::default() }, false);
+        let specs = vec![
+            TensorSpec { name: "tok_emb".into(), dtype: DType::F32, dims: vec![32, 16] },
+            TensorSpec { name: "l0.attn_norm".into(), dtype: DType::F32, dims: vec![16] },
+            TensorSpec { name: "tokens".into(), dtype: DType::I32, dims: vec![2, 8] },
+        ];
+        let params = collect_params(&m, &specs);
+        assert_eq!(params.len(), 2);
+    }
+
+    #[test]
+    fn write_back_roundtrip() {
+        let c = cfg();
+        let mut m = Model::init(&c, 2);
+        m.quantize_lords(c.block, &Codebook::normal_float(4),
+                         RefineCfg { steps: 0, ..Default::default() }, false);
+        let b0 = resolve(&m, "l0.wq.B");
+        let new: Vec<f32> = b0.f32s().iter().map(|v| v + 1.0).collect();
+        write_back(&mut m, "l0.wq.B", &new);
+        let b1 = resolve(&m, "l0.wq.B");
+        assert_eq!(b1.f32s(), new.as_slice());
+    }
+}

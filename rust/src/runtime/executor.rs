@@ -1,0 +1,115 @@
+//! The executor thread: owns the (non-`Send`) [`Runtime`] and serves
+//! execution requests from any thread through a channel — the pattern a
+//! real serving stack uses for a single accelerator context.
+
+use super::runtime::{HostTensor, Runtime};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+enum Msg {
+    Execute {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+        reply: Sender<anyhow::Result<Vec<HostTensor>>>,
+    },
+    /// Pre-compile an artifact (warmup).
+    Warm {
+        artifact: String,
+        reply: Sender<anyhow::Result<()>>,
+    },
+    Stats {
+        reply: Sender<super::runtime::RuntimeStats>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the executor thread.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: Sender<Msg>,
+}
+
+pub struct Executor {
+    handle: ExecutorHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn the executor thread; fails fast if the artifacts dir is absent.
+    pub fn spawn(artifacts_dir: &str) -> anyhow::Result<Executor> {
+        // validate the manifest on the caller thread for a clean error
+        super::manifest::Manifest::load(artifacts_dir).map_err(anyhow::Error::msg)?;
+        let dir = artifacts_dir.to_string();
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Execute { artifact, inputs, reply } => {
+                            let _ = reply.send(rt.execute(&artifact, &inputs));
+                        }
+                        Msg::Warm { artifact, reply } => {
+                            let _ = reply.send(rt.executable(&artifact).map(|_| ()));
+                        }
+                        Msg::Stats { reply } => {
+                            let _ = reply.send(rt.stats.borrow().clone());
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("executor thread died"))??;
+        Ok(Executor { handle: ExecutorHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ExecutorHandle {
+    /// Synchronous execute (blocks the calling thread until the reply).
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> anyhow::Result<Vec<HostTensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+
+    /// Pre-compile an artifact so first-request latency is flat.
+    pub fn warm(&self, artifact: &str) -> anyhow::Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warm { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+
+    pub fn stats(&self) -> anyhow::Result<super::runtime::RuntimeStats> {
+        let (reply, rx) = channel();
+        self.tx.send(Msg::Stats { reply }).map_err(|_| anyhow::anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped reply"))
+    }
+}

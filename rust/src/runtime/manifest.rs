@@ -1,0 +1,225 @@
+//! Parser for `artifacts/manifest.txt` — the single source of truth for
+//! artifact signatures (input/output names, dtypes, shapes in execution
+//! order), the model config they were lowered against, and the exact
+//! codebook LUT baked into the HLO.
+
+use crate::config::ModelCfg;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(format!("unknown dtype {other}")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    /// empty = scalar
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl Artifact {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: ModelCfg,
+    pub lut_name: String,
+    pub lut: Vec<f32>,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{path}: {e} (run `make artifacts` first)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let mut model = ModelCfg::default();
+        let mut lut_name = String::new();
+        let mut lut = Vec::new();
+        let mut artifacts = BTreeMap::new();
+        let mut cur: Option<Artifact> = None;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let rest: Vec<&str> = parts.collect();
+            match tag {
+                "model" => {
+                    for kv in &rest {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| format!("line {}: bad model kv {kv}", ln + 1))?;
+                        match k {
+                            "vocab" => model.vocab = v.parse().unwrap(),
+                            "d_model" => model.d_model = v.parse().unwrap(),
+                            "n_layers" => model.n_layers = v.parse().unwrap(),
+                            "n_heads" => model.n_heads = v.parse().unwrap(),
+                            "d_ff" => model.d_ff = v.parse().unwrap(),
+                            "max_seq" => model.max_seq = v.parse().unwrap(),
+                            "block" => model.block = v.parse().unwrap(),
+                            "codebook" => model.codebook = v.to_string(),
+                            "qlora_rank" => model.qlora_rank = v.parse().unwrap(),
+                            _ => {}
+                        }
+                    }
+                }
+                "lut" => {
+                    lut_name = rest[0].to_string();
+                    lut = rest[1]
+                        .split(',')
+                        .map(|v| v.parse::<f32>().map_err(|e| format!("lut: {e}")))
+                        .collect::<Result<_, _>>()?;
+                }
+                "artifact" => {
+                    if let Some(a) = cur.take() {
+                        artifacts.insert(a.name.clone(), a);
+                    }
+                    cur = Some(Artifact {
+                        name: rest[0].to_string(),
+                        file: rest[1].to_string(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "in" | "out" => {
+                    let a = cur
+                        .as_mut()
+                        .ok_or_else(|| format!("line {}: {tag} outside artifact", ln + 1))?;
+                    let dims = if rest[2] == "scalar" {
+                        vec![]
+                    } else {
+                        rest[2]
+                            .split(',')
+                            .map(|d| d.parse::<usize>().map_err(|e| format!("dims: {e}")))
+                            .collect::<Result<_, _>>()?
+                    };
+                    let spec = TensorSpec {
+                        name: rest[0].to_string(),
+                        dtype: DType::parse(rest[1])?,
+                        dims,
+                    };
+                    if tag == "in" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "end" => {
+                    if let Some(a) = cur.take() {
+                        artifacts.insert(a.name.clone(), a);
+                    }
+                }
+                other => return Err(format!("line {}: unknown tag {other}", ln + 1)),
+            }
+        }
+        if let Some(a) = cur.take() {
+            artifacts.insert(a.name.clone(), a);
+        }
+        if lut.is_empty() {
+            return Err("manifest missing lut".into());
+        }
+        Ok(Manifest { model, lut_name, lut, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact {name} not in manifest ({} known)", self.artifacts.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# lords-artifacts v1
+model vocab=64 d_model=32 n_layers=1 n_heads=2 d_ff=64 max_seq=32 block=16 codebook=nf4 qlora_rank=16
+lut nf4 -1.0,-0.5,0.0,0.5,1.0
+artifact fp_mm fp_mm.hlo.txt
+in x f32 8,32
+in w f32 16,32
+out out0 f32 8,16
+end
+artifact dec dec.hlo.txt
+in token i32 2,1
+in cur i32 scalar
+out out0 f32 2,64
+end
+";
+
+    #[test]
+    fn parses_model_and_lut() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.vocab, 64);
+        assert_eq!(m.model.block, 16);
+        assert_eq!(m.model.codebook, "nf4");
+        assert_eq!(m.lut, vec![-1.0, -0.5, 0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn parses_artifacts() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.artifact("fp_mm").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![8, 32]);
+        assert_eq!(a.inputs[1].dtype, DType::F32);
+        assert_eq!(a.outputs[0].dims, vec![8, 16]);
+        let d = m.artifact("dec").unwrap();
+        assert_eq!(d.inputs[1].dims, Vec::<usize>::new());
+        assert_eq!(d.inputs[1].dtype, DType::I32);
+        assert_eq!(d.inputs[1].elements(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.contains_key("lords_forward"));
+            assert_eq!(m.lut.len(), 16);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the CPU PJRT client, and
+//! executes them from the serving / training hot paths.
+//!
+//! The `xla` crate's client is `Rc`-based (neither `Send` nor `Sync`), so
+//! the runtime is owned by a single **executor thread**
+//! ([`executor::ExecutorHandle`] is the `Send` front door the coordinator
+//! uses). Executables are compiled on demand and cached by artifact name.
+
+pub mod bridge;
+pub mod executor;
+pub mod manifest;
+#[allow(clippy::module_inception)]
+pub mod runtime;
+
+pub use executor::ExecutorHandle;
+pub use manifest::{Artifact, DType, Manifest, TensorSpec};
+pub use runtime::{HostTensor, Runtime};

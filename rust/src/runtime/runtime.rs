@@ -1,0 +1,201 @@
+//! The PJRT runtime proper: client + per-artifact compile cache + typed
+//! host↔device marshalling.
+//!
+//! NOT `Send` (the xla crate's client is `Rc`-based); wrap in
+//! [`super::executor::ExecutorHandle`] to use from the coordinator's threads.
+
+use super::manifest::{Artifact, DType, Manifest};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn from_matrix(m: &crate::tensor::Matrix) -> HostTensor {
+        HostTensor::F32(m.data.clone(), vec![m.rows, m.cols])
+    }
+
+    pub fn to_matrix(&self) -> crate::tensor::Matrix {
+        match self {
+            HostTensor::F32(data, dims) => {
+                assert!(dims.len() <= 2, "to_matrix on rank-{} tensor", dims.len());
+                let rows = if dims.len() == 2 { dims[0] } else { 1 };
+                let cols = *dims.last().unwrap_or(&1);
+                crate::tensor::Matrix::from_vec(rows, cols, data.clone())
+            }
+            HostTensor::I32(..) => panic!("to_matrix on i32 tensor"),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, d) | HostTensor::I32(_, d) => d,
+        }
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v, _) => v,
+            HostTensor::I32(..) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match self {
+            HostTensor::I32(v, _) => v,
+            HostTensor::F32(..) => panic!("expected i32 tensor"),
+        }
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(data, dims) => {
+                let v = xla::Literal::vec1(data.as_slice());
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    v.reshape(&d)?
+                }
+            }
+            HostTensor::I32(data, dims) => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let v = xla::Literal::vec1(data.as_slice());
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    v.reshape(&d)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, dims: Vec<usize>, dtype: DType) -> anyhow::Result<HostTensor> {
+        Ok(match dtype {
+            DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?, dims),
+            DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?, dims),
+        })
+    }
+}
+
+/// PJRT runtime (single-threaded owner).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: String,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative (compiles, executions) for the perf report
+    pub stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub executions: usize,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: artifacts_dir.to_string(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Compile (or fetch cached) executable for `name`.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let art = self.manifest.artifact(name).map_err(anyhow::Error::msg)?;
+        let path = format!("{}/{}", self.dir, art.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        crate::debug_log!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` with typed host tensors; returns the tuple
+    /// elements as host tensors (shapes from the manifest).
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let art = self.manifest.artifact(name).map_err(anyhow::Error::msg)?.clone();
+        self.check_inputs(&art, inputs)?;
+        let exe = self.executable(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == art.outputs.len(),
+            "{name}: {} outputs, manifest says {}",
+            parts.len(),
+            art.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&art.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec.dims.clone(), spec.dtype))
+            .collect()
+    }
+
+    fn check_inputs(&self, art: &Artifact, inputs: &[HostTensor]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            inputs.len() == art.inputs.len(),
+            "{}: got {} inputs, manifest says {}",
+            art.name,
+            inputs.len(),
+            art.inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&art.inputs) {
+            anyhow::ensure!(
+                t.dims() == spec.dims.as_slice(),
+                "{}/{}: got dims {:?}, want {:?}",
+                art.name,
+                spec.name,
+                t.dims(),
+                spec.dims
+            );
+            let dtype_ok = matches!(
+                (t, spec.dtype),
+                (HostTensor::F32(..), DType::F32) | (HostTensor::I32(..), DType::I32)
+            );
+            anyhow::ensure!(dtype_ok, "{}/{}: dtype mismatch", art.name, spec.name);
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,8 @@
+//! Dense f32 tensor substrate: a row-major [`Matrix`] plus the blocked,
+//! multi-threaded GEMM kernels the quantizers / model / serving path run on.
+
+pub mod gemm;
+pub mod matrix;
+
+pub use gemm::{matmul, matmul_at_b, matmul_transb};
+pub use matrix::Matrix;

@@ -1,0 +1,13 @@
+//! Training loops: full-precision pre-training (builds the testbed
+//! checkpoints), QAT (STE joint training of W, B, A — §4.2), and PEFT
+//! (B/A-only multiplicative adaptation — §4.3).
+//!
+//! Two engines share these loops:
+//! * [`native`]  — the pure-Rust model (manual backprop), always available.
+//! * [`pjrt`]    — the AOT train-step artifacts executed through the
+//!   runtime; the optimizer still lives here in Rust.
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::{NativeTrainer, TrainKind, TrainLog};

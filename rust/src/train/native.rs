@@ -1,0 +1,263 @@
+//! Native trainer: drives `model::Model` (manual backprop) with AdamW and
+//! the paper's schedules. Handles all three regimes — the regime is implied
+//! by the model's linear representations:
+//!
+//! * Dense linears            → pre-training (all params trained)
+//! * Lords without shadow W   → PEFT (B/A only)
+//! * Lords with shadow W      → QAT (W + B/A via STE)
+//! * QLoRA                    → adapter-only fine-tuning
+
+use crate::config::TrainCfg;
+use crate::data::corpus::Corpus;
+use crate::model::transformer::{LayerGrads, ModelGrads};
+use crate::model::{LinearWeight, Model};
+use crate::optim::{AdamW, CosineWarmup, LrSchedule, Optimizer};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainKind {
+    Pretrain,
+    Qat,
+    Peft,
+}
+
+/// Loss trace of a run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub steps: usize,
+}
+
+pub struct NativeTrainer {
+    pub cfg: TrainCfg,
+    pub kind: TrainKind,
+    opt: AdamW,
+    sched: CosineWarmup,
+}
+
+impl NativeTrainer {
+    pub fn new(cfg: TrainCfg, kind: TrainKind) -> Self {
+        let sched = CosineWarmup::new(cfg.peak_lr, cfg.warmup_ratio);
+        NativeTrainer { opt: AdamW::new(cfg.weight_decay), sched, cfg, kind }
+    }
+
+    /// Run the loop on `model` sampling batches from `corpus`.
+    pub fn run(&mut self, model: &mut Model, corpus: &Corpus) -> TrainLog {
+        let mut rng = Rng::new(self.cfg.seed ^ 0x7124);
+        let mut log = TrainLog::default();
+        for step in 0..self.cfg.steps {
+            let (tokens, targets) = corpus.sample_batch(self.cfg.batch, self.cfg.seq, &mut rng);
+            let loss = self.step(model, &tokens, &targets);
+            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+                log.losses.push((step, loss));
+                crate::info!("{:?} step {step}/{} loss {loss:.4}", self.kind, self.cfg.steps);
+            }
+            log.final_loss = loss;
+        }
+        log.steps = self.cfg.steps;
+        if self.kind == TrainKind::Qat {
+            // bake shadow weights into final codes
+            for layer in model.layers.iter_mut() {
+                for (_, lw) in layer.linears_mut() {
+                    lw.finalize_qat();
+                }
+            }
+        }
+        log
+    }
+
+    /// One optimization step on an explicit batch; returns the loss.
+    pub fn step(&mut self, model: &mut Model, tokens: &[usize], targets: &[usize]) -> f32 {
+        let (loss, grads) = model.loss_and_grads(tokens, targets, self.cfg.batch, tokens.len() / self.cfg.batch);
+        let lr = self.sched.lr(self.opt.current_step(), self.cfg.steps as u64);
+        self.apply(model, &grads, lr);
+        loss
+    }
+
+    /// Apply gradients with stable slot ids (layer-major, field-major).
+    fn apply(&mut self, model: &mut Model, grads: &ModelGrads, lr: f32) {
+        let train_embeddings = self.kind == TrainKind::Pretrain;
+        let mut slot = 0usize;
+        // embeddings + head + final norm only in pre-training
+        if train_embeddings {
+            if let Some(g) = &grads.tok_emb {
+                self.opt.step(slot, &mut model.tok_emb.data, &g.data, lr);
+            }
+            slot += 1;
+            if let Some(g) = &grads.lm_head {
+                self.opt.step(slot, &mut model.lm_head.data, &g.data, lr);
+            }
+            slot += 1;
+            self.opt.step(slot, &mut model.final_norm, &grads.final_norm, lr);
+            slot += 1;
+        } else {
+            slot += 3;
+        }
+        for (li, layer) in model.layers.iter_mut().enumerate() {
+            let lg: &LayerGrads = &grads.layers[li];
+            if train_embeddings {
+                self.opt.step(slot, &mut layer.attn_norm, &lg.attn_norm, lr);
+            }
+            slot += 1;
+            if train_embeddings {
+                self.opt.step(slot, &mut layer.mlp_norm, &lg.mlp_norm, lr);
+            }
+            slot += 1;
+            let fields = [
+                (&mut layer.wq, &lg.wq),
+                (&mut layer.wk, &lg.wk),
+                (&mut layer.wv, &lg.wv),
+                (&mut layer.wo, &lg.wo),
+                (&mut layer.w_gate, &lg.w_gate),
+                (&mut layer.w_up, &lg.w_up),
+                (&mut layer.w_down, &lg.w_down),
+            ];
+            for (lw, g) in fields {
+                match lw {
+                    LinearWeight::Dense(w) => {
+                        if let Some(dw) = &g.d_w {
+                            self.opt.step(slot, &mut w.data, &dw.data, lr);
+                        }
+                        slot += 3;
+                    }
+                    LinearWeight::Lords { q, shadow_w } => {
+                        if let Some(db) = &g.d_b {
+                            self.opt.step(slot, &mut q.b.data, &db.data, lr);
+                        }
+                        slot += 1;
+                        if let Some(da) = &g.d_a {
+                            self.opt.step(slot, &mut q.a.data, &da.data, lr);
+                        }
+                        slot += 1;
+                        if let (Some(w), Some(dw)) = (shadow_w.as_mut(), g.d_w.as_ref()) {
+                            self.opt.step(slot, &mut w.data, &dw.data, lr);
+                        }
+                        slot += 1;
+                    }
+                    LinearWeight::Blockwise(_) => {
+                        slot += 3;
+                    }
+                    LinearWeight::Qlora(q) => {
+                        if let Some(dlb) = &g.d_lora_b {
+                            self.opt.step(slot, &mut q.lora_b.data, &dlb.data, lr);
+                        }
+                        slot += 1;
+                        if let Some(dla) = &g.d_lora_a {
+                            self.opt.step(slot, &mut q.lora_a.data, &dla.data, lr);
+                        }
+                        slot += 2;
+                    }
+                }
+            }
+        }
+        self.opt.next_step();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::data::corpus::CorpusKind;
+    use crate::quant::lords::RefineCfg;
+    use crate::quant::Codebook;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 48,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 32,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        }
+    }
+
+    fn train_cfg(steps: usize, lr: f32) -> TrainCfg {
+        TrainCfg { steps, batch: 4, seq: 16, peak_lr: lr, warmup_ratio: 0.1, weight_decay: 0.0, seed: 0, log_every: 1000 }
+    }
+
+    #[test]
+    fn pretraining_reduces_loss() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 0);
+        let corpus = Corpus::generate(CorpusKind::Wiki, cfg.vocab, 8000, 1000, 0);
+        let mut tr = NativeTrainer::new(train_cfg(40, 3e-3), TrainKind::Pretrain);
+        let log = tr.run(&mut model, &corpus);
+        let first = log.losses.first().unwrap().1;
+        assert!(
+            log.final_loss < first - 0.2,
+            "loss did not decrease: {first} -> {}",
+            log.final_loss
+        );
+    }
+
+    #[test]
+    fn peft_improves_quantized_model_loss() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 1);
+        let corpus = Corpus::generate(CorpusKind::Wiki, cfg.vocab, 8000, 1000, 1);
+        // brief pretrain so there is something to preserve
+        let mut tr = NativeTrainer::new(train_cfg(30, 3e-3), TrainKind::Pretrain);
+        tr.run(&mut model, &corpus);
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 5, ..Default::default() }, false);
+        let before = crate::eval::perplexity(&model, &corpus, 16, 4).ppl;
+        let mut peft = NativeTrainer::new(train_cfg(25, 2e-3), TrainKind::Peft);
+        let log = peft.run(&mut model, &corpus);
+        let after = crate::eval::perplexity(&model, &corpus, 16, 4).ppl;
+        assert!(log.final_loss.is_finite());
+        assert!(after < before * 1.05, "PEFT hurt badly: {before} -> {after}");
+    }
+
+    #[test]
+    fn peft_does_not_touch_codes_or_frozen_parts() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 2);
+        let corpus = Corpus::generate(CorpusKind::Wiki, cfg.vocab, 6000, 500, 2);
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 2, ..Default::default() }, false);
+        let codes_before = if let LinearWeight::Lords { q, .. } = &model.layers[0].wq {
+            q.codes.clone()
+        } else {
+            unreachable!()
+        };
+        let emb_before = model.tok_emb.clone();
+        let b_before = if let LinearWeight::Lords { q, .. } = &model.layers[0].wq {
+            q.b.clone()
+        } else {
+            unreachable!()
+        };
+        let mut peft = NativeTrainer::new(train_cfg(5, 2e-3), TrainKind::Peft);
+        peft.run(&mut model, &corpus);
+        if let LinearWeight::Lords { q, .. } = &model.layers[0].wq {
+            assert_eq!(q.codes, codes_before, "codes must stay frozen");
+            assert_ne!(q.b.data, b_before.data, "B must move");
+        }
+        assert_eq!(model.tok_emb.data, emb_before.data, "embeddings frozen in PEFT");
+    }
+
+    #[test]
+    fn qat_trains_and_finalizes() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 3);
+        let corpus = Corpus::generate(CorpusKind::Wiki, cfg.vocab, 6000, 500, 3);
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 2, ..Default::default() }, true);
+        let mut qat = NativeTrainer::new(train_cfg(10, 1e-3), TrainKind::Qat);
+        let log = qat.run(&mut model, &corpus);
+        assert!(log.final_loss.is_finite());
+        // after run(), shadow weights are absorbed
+        for layer in &model.layers {
+            for (_, lw) in layer.linears() {
+                if let LinearWeight::Lords { shadow_w, .. } = lw {
+                    assert!(shadow_w.is_none(), "QAT must finalize");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! PJRT-backed trainer: executes the AOT train-step artifacts (`fp_step`,
+//! `qat_step`, `peft_step`) through the executor; the forward/backward runs
+//! as XLA-compiled code, the AdamW update stays in Rust.
+//!
+//! This is the fast path for the QAT/PEFT experiments: JAX autodiff and the
+//! custom STE vjp are frozen into the artifact, so the Rust side only
+//! marshals parameters and applies updates.
+
+use crate::config::TrainCfg;
+use crate::data::corpus::Corpus;
+use crate::optim::{AdamW, CosineWarmup, LrSchedule, Optimizer};
+use crate::runtime::{ExecutorHandle, HostTensor};
+use crate::util::Rng;
+
+use super::native::TrainLog;
+
+pub struct PjrtTrainer {
+    pub cfg: TrainCfg,
+    pub artifact: String,
+    handle: ExecutorHandle,
+    /// (name, tensor) in artifact input order (params only).
+    pub params: Vec<(String, HostTensor)>,
+    /// indices of trainable params (grads come back in this order).
+    pub trainable: Vec<usize>,
+    opt: AdamW,
+    sched: CosineWarmup,
+}
+
+impl PjrtTrainer {
+    /// Build from the manifest signature: trainable params are inferred from
+    /// the artifact's *output* list (out k+1 corresponds to trainable k, as
+    /// emitted by aot.py: loss first, then grads in trainable order).
+    ///
+    /// We identify trainables by suffix, matching `model.py`:
+    /// `peft_step` → `.B` / `.A`;  `qat_step` → linear W, `.B`, `.A`;
+    /// `fp_step` → every param.
+    pub fn new(
+        handle: ExecutorHandle,
+        artifact: &str,
+        cfg: TrainCfg,
+        params: Vec<(String, HostTensor)>,
+    ) -> Self {
+        let trainable: Vec<usize> = match artifact {
+            "peft_step" => params
+                .iter()
+                .enumerate()
+                .filter(|(_, (n, _))| n.ends_with(".B") || n.ends_with(".A"))
+                .map(|(i, _)| i)
+                .collect(),
+            "qat_step" => params
+                .iter()
+                .enumerate()
+                .filter(|(_, (n, _))| {
+                    n.ends_with(".B")
+                        || n.ends_with(".A")
+                        || (n.contains(".w") && !n.contains("norm") && !n.ends_with(".codes"))
+                })
+                .map(|(i, _)| i)
+                .collect(),
+            _ => (0..params.len()).collect(),
+        };
+        // qat trainables must be ordered (w, B, A) per linear — model.py's
+        // qat_trainable order. Reorder accordingly.
+        let trainable = if artifact == "qat_step" {
+            let mut ordered = Vec::new();
+            let names: Vec<&String> = params.iter().map(|(n, _)| n).collect();
+            for (i, n) in names.iter().enumerate() {
+                if n.contains(".w") && !n.contains('.') {
+                    let _ = i; // unreachable: linears always contain '.'
+                }
+            }
+            // group by linear base name in appearance order
+            let mut bases = Vec::new();
+            for n in &names {
+                if let Some(base) = n.strip_suffix(".B") {
+                    if !bases.contains(&base.to_string()) {
+                        bases.push(base.to_string());
+                    }
+                }
+            }
+            for base in &bases {
+                for suffix in ["", ".B", ".A"] {
+                    let want = format!("{base}{suffix}");
+                    if let Some(i) = names.iter().position(|n| **n == want) {
+                        ordered.push(i);
+                    }
+                }
+            }
+            if ordered.is_empty() {
+                trainable
+            } else {
+                ordered
+            }
+        } else {
+            trainable
+        };
+        let sched = CosineWarmup::new(cfg.peak_lr, cfg.warmup_ratio);
+        PjrtTrainer {
+            artifact: artifact.to_string(),
+            handle,
+            params,
+            trainable,
+            opt: AdamW::new(cfg.weight_decay),
+            sched,
+            cfg,
+        }
+    }
+
+    /// One step on an explicit batch; returns the loss.
+    pub fn step(&mut self, tokens: &[usize], targets: &[usize]) -> anyhow::Result<f32> {
+        let b = self.cfg.batch;
+        let s = self.cfg.seq;
+        anyhow::ensure!(tokens.len() == b * s, "batch shape");
+        let mut inputs: Vec<HostTensor> = self.params.iter().map(|(_, t)| t.clone()).collect();
+        inputs.push(HostTensor::I32(tokens.iter().map(|&t| t as i32).collect(), vec![b, s]));
+        inputs.push(HostTensor::I32(targets.iter().map(|&t| t as i32).collect(), vec![b, s]));
+        let outputs = self.handle.execute(&self.artifact, inputs)?;
+        let loss = outputs[0].f32s()[0];
+        anyhow::ensure!(
+            outputs.len() == 1 + self.trainable.len(),
+            "grad count {} vs trainable {}",
+            outputs.len() - 1,
+            self.trainable.len()
+        );
+        let lr = self.sched.lr(self.opt.current_step(), self.cfg.steps as u64);
+        for (k, &pi) in self.trainable.iter().enumerate() {
+            let grad = outputs[1 + k].f32s();
+            if let HostTensor::F32(data, _) = &mut self.params[pi].1 {
+                self.opt.step(pi, data, grad, lr);
+            }
+        }
+        self.opt.next_step();
+        Ok(loss)
+    }
+
+    /// Full loop sampling from a corpus.
+    pub fn run(&mut self, corpus: &Corpus) -> anyhow::Result<TrainLog> {
+        let mut rng = Rng::new(self.cfg.seed ^ 0x9A17);
+        let mut log = TrainLog::default();
+        for step in 0..self.cfg.steps {
+            let (tokens, targets) = corpus.sample_batch(self.cfg.batch, self.cfg.seq, &mut rng);
+            let loss = self.step(&tokens, &targets)?;
+            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+                log.losses.push((step, loss));
+                crate::info!("pjrt:{} step {step}/{} loss {loss:.4}", self.artifact, self.cfg.steps);
+            }
+            log.final_loss = loss;
+        }
+        log.steps = self.cfg.steps;
+        Ok(log)
+    }
+
+    /// Updated named parameters (to write back into a native model).
+    pub fn trained_params(&self) -> Vec<(String, &HostTensor)> {
+        self.trainable
+            .iter()
+            .map(|&i| (self.params[i].0.clone(), &self.params[i].1))
+            .collect()
+    }
+}

@@ -1,0 +1,16 @@
+//! Foundation utilities: deterministic RNG, a work-stealing-ish thread pool,
+//! timing/statistics helpers, a tiny logger, and a property-testing harness.
+//!
+//! These exist because the build is fully offline: only the `xla` crate's
+//! dependency closure is vendored, so `rand`, `rayon`, `proptest`, `log` etc.
+//! are re-implemented here at the scale this project needs.
+
+pub mod logging;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use pool::ThreadPool;
+pub use rng::Rng;
+pub use stats::Summary;

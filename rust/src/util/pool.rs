@@ -1,0 +1,207 @@
+//! A small fixed-size thread pool with scoped parallel-for, used by the
+//! blocked GEMM, the quantizers, and the benchmark harness.
+//!
+//! Design: one global pool (`ThreadPool::global()`) sized to the machine,
+//! channel-fed workers, and a `scope`-free `parallel_for` that splits an
+//! index range into chunks and blocks until all chunks complete. Closures
+//! are `Send + Sync` and borrow only `&self`-style shared state; mutable
+//! output is handled by giving each chunk a disjoint slice (see
+//! `tensor::gemm` for the canonical pattern).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: Sender<Job>,
+    size: usize,
+    _handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx, size, _handles: handles }
+    }
+
+    /// The process-wide pool, sized to the available parallelism.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            ThreadPool::new(n)
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into ≤ `size`
+    /// contiguous chunks, blocking until all complete.
+    ///
+    /// Safety contract: `f` must be safe to call concurrently on disjoint
+    /// ranges. The closure is smuggled across threads with a raw pointer and
+    /// joined before return, so borrowed data outlives all uses.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunks = self.size.min(n);
+        if chunks == 1 {
+            f(0, n);
+            return;
+        }
+        let counter = Arc::new((Mutex::new(chunks), Condvar::new()));
+        // Erase the borrow: workers finish before this frame returns.
+        let f_ptr = &f as *const F as usize;
+        let chunk = n.div_ceil(chunks);
+        for c in 0..chunks {
+            let start = c * chunk;
+            let end = ((c + 1) * chunk).min(n);
+            let counter = Arc::clone(&counter);
+            let job: Job = Box::new(move || {
+                let f = unsafe { &*(f_ptr as *const F) };
+                if start < end {
+                    f(start, end);
+                }
+                let (lock, cv) = &*counter;
+                let mut left = lock.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    cv.notify_all();
+                }
+            });
+            self.tx.send(job).unwrap();
+        }
+        let (lock, cv) = &*counter;
+        let mut left = lock.lock().unwrap();
+        while *left > 0 {
+            left = cv.wait(left).unwrap();
+        }
+    }
+
+    /// Map `f` over `0..n` collecting results (order preserved).
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out = vec![T::default(); n];
+        {
+            let out_ptr = SharedMut(out.as_mut_ptr());
+            let out_ref = &out_ptr;
+            self.parallel_for(n, move |lo, hi| {
+                for i in lo..hi {
+                    unsafe { *out_ref.0.add(i) = f(i) };
+                }
+            });
+        }
+        out
+    }
+}
+
+struct SharedMut<T>(*mut T);
+unsafe impl<T> Sync for SharedMut<T> {}
+unsafe impl<T> Send for SharedMut<T> {}
+
+/// A simple atomic work counter for dynamic load-balancing loops.
+pub struct WorkQueue {
+    next: AtomicUsize,
+    end: usize,
+}
+
+impl WorkQueue {
+    pub fn new(n: usize) -> Self {
+        WorkQueue { next: AtomicUsize::new(0), end: n }
+    }
+
+    pub fn take(&self, grain: usize) -> Option<(usize, usize)> {
+        let start = self.next.fetch_add(grain, Ordering::Relaxed);
+        if start >= self.end {
+            None
+        } else {
+            Some((start, (start + grain).min(self.end)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_range_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(n, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map(100, |i| i * i);
+        assert_eq!(out[7], 49);
+        assert_eq!(out[99], 9801);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_, _| panic!("must not run"));
+        let ran = AtomicU64::new(0);
+        pool.parallel_for(1, |lo, hi| {
+            assert_eq!((lo, hi), (0, 1));
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn work_queue_partitions() {
+        let q = WorkQueue::new(103);
+        let mut seen = vec![false; 103];
+        while let Some((lo, hi)) = q.take(10) {
+            for i in lo..hi {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn global_pool_is_singleton() {
+        let a = ThreadPool::global() as *const _;
+        let b = ThreadPool::global() as *const _;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,167 @@
+//! Tiny property-based testing harness (a `proptest` substitute — the
+//! vendored crate set has none).
+//!
+//! Usage mirrors the subset of proptest this crate needs:
+//!
+//! ```ignore
+//! prop_check(128, |g| {
+//!     let n = g.usize(1..=64);
+//!     let xs = g.vec_f32(n, -1.0..1.0);
+//!     // ... assert invariant, or return Err(msg) ...
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the harness re-runs with the failing seed and reports it so
+//! the case can be pinned in a regression test. Shrinking is deliberately
+//! minimal (we shrink sizes, not values): generators draw sizes from a
+//! budget that the harness retries at smaller budgets on failure.
+
+use super::rng::Rng;
+
+/// Value generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    /// Size budget in [0, 1]; generators scale their ranges by it so the
+    /// harness can retry failures at smaller sizes ("shrinking-lite").
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    pub fn usize(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        let hi_eff = lo + (((hi - lo) as f64 * self.size).round() as usize);
+        lo + self.rng.below(hi_eff - lo + 1)
+    }
+
+    pub fn i32(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + self.rng.below((hi - lo + 1) as usize) as i32
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `cases` random cases; panics with the failing seed.
+///
+/// The base seed is fixed (deterministic CI) but can be overridden with
+/// `LORDS_PROP_SEED` to explore more of the space locally.
+pub fn prop_check<F>(cases: u32, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("LORDS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // shrinking-lite: retry at smaller size budgets to find a
+            // smaller counterexample before reporting.
+            for &size in &[0.1, 0.25, 0.5] {
+                let mut g2 = Gen::new(seed, size);
+                if let Err(msg2) = prop(&mut g2) {
+                    panic!(
+                        "property failed (seed={seed:#x}, size={size}): {msg2}\n\
+                         reproduce with Gen::new({seed:#x}, {size})"
+                    );
+                }
+            }
+            panic!("property failed (seed={seed:#x}): {msg}\nreproduce with Gen::new({seed:#x}, 1.0)");
+        }
+    }
+}
+
+/// Convenience: assert closeness with a relative+absolute tolerance.
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Max |a - b| across slices (∞ if lengths differ).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    if a.len() != b.len() {
+        return f32::INFINITY;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// assert_allclose for slices with a helpful message.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            close(*x, *y, rtol, atol),
+            "{what}: element {i}: {x} vs {y} (diff {})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check(64, |g| {
+            let n = g.usize(1..=32);
+            let xs = g.vec_f32(n, -1.0, 1.0);
+            if xs.iter().all(|v| v.abs() <= 1.0) {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        prop_check(64, |g| {
+            let v = g.f32(0.0, 1.0);
+            if v < 0.5 {
+                Ok(())
+            } else {
+                Err(format!("v={v}"))
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5, 0.0));
+        assert!(!close(1.0, 1.1, 1e-5, 1e-5));
+        assert!(close(0.0, 1e-9, 0.0, 1e-8));
+    }
+}

@@ -1,0 +1,248 @@
+//! Deterministic pseudo-random numbers: PCG-XSH-RR 64/32 with SplitMix64
+//! seeding, plus the distribution helpers the rest of the crate needs
+//! (uniform, standard normal, Zipf, categorical, choice-without-replacement).
+//!
+//! Determinism matters here: every experiment in EXPERIMENTS.md is seeded,
+//! and the paper-table benches must be re-runnable bit-for-bit.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014). Small state, excellent statistical
+/// quality, trivially seedable — the reference generator for this crate.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    /// Seed via SplitMix64 so low-entropy seeds (0, 1, 2...) still produce
+    /// well-separated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let mut rng = Rng { state: 0, inc: next() | 1 };
+        rng.state = next();
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent stream (for per-thread / per-module RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) (Lemire's method, bias-free for our sizes).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Standard normal via Box–Muller (no caching — simplicity over speed;
+    /// bulk init paths use `fill_normal`).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()) as f32
+    }
+
+    /// Student-t with `dof` degrees of freedom — heavy-tail generator used to
+    /// synthesize LLM-like outlier weights.
+    pub fn student_t(&mut self, dof: f32) -> f32 {
+        // t = N / sqrt(ChiSq/k); ChiSq(k) ~ 2*Gamma(k/2)
+        let n = self.normal();
+        let mut chi = 0.0f32;
+        let k = dof.round().max(1.0) as usize;
+        for _ in 0..k {
+            let z = self.normal();
+            chi += z * z;
+        }
+        n / (chi / dof).sqrt().max(1e-6)
+    }
+
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = mean + std * self.normal();
+        }
+    }
+
+    pub fn fill_uniform(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        for v in out.iter_mut() {
+            *v = self.range_f32(lo, hi);
+        }
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` (s≈1 ⇒ natural
+    /// language token frequencies). O(log n) via inverse-CDF on a cached
+    /// harmonic table is overkill here; rejection-free approximation via
+    /// the standard inverse transform for the Zipf-Mandelbrot tail.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // inverse transform on the continuous approximation; ranks are
+        // 1-based in the CDF, shifted to 0-based indices on return.
+        let u = self.f64();
+        let rank = if (s - 1.0).abs() < 1e-9 {
+            let hn = ((n + 1) as f64).ln();
+            (u * hn).exp()
+        } else {
+            let t = (((n + 1) as f64).powf(1.0 - s) - 1.0) * u + 1.0;
+            t.powf(1.0 / (1.0 - s))
+        };
+        (rank as usize).saturating_sub(1).min(n - 1)
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        let mut u = self.f32() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// k distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        let k = k.min(n);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a: Vec<u32> = {
+            let mut r = Rng::new(42);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        let b: Vec<u32> = {
+            let mut r = Rng::new(42);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..16).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let v = r.normal() as f64;
+            s1 += v;
+            s2 += v * v;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let mut r = Rng::new(3);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[r.zipf(100, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[50]);
+    }
+
+    #[test]
+    fn choose_is_distinct() {
+        let mut r = Rng::new(5);
+        let picked = r.choose(50, 20);
+        let mut s = picked.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+        assert!(picked.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn student_t_heavier_than_normal() {
+        let mut r = Rng::new(11);
+        let n = 30_000;
+        let big_t = (0..n).filter(|_| r.student_t(3.0).abs() > 4.0).count();
+        let big_n = (0..n).filter(|_| r.normal().abs() > 4.0).count();
+        assert!(big_t > big_n * 3, "t tails {big_t} vs normal {big_n}");
+    }
+}

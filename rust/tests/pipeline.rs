@@ -1,0 +1,125 @@
+//! Integration: the PTQ → QAT → PEFT → serve pipeline on the native stack
+//! (no artifacts required), plus cross-method sanity on a shared testbed.
+
+use lords::config::{ModelCfg, QuantCfg, QuantMethod, ServeCfg, TrainCfg};
+use lords::coordinator::{NativeEngine, Request, Server};
+use lords::data::corpus::{Corpus, CorpusKind};
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::methods::{quantize_model, CalibSet};
+use lords::train::{NativeTrainer, TrainKind};
+use lords::util::Rng;
+
+fn cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 48,
+        max_seq: 64,
+        block: 16,
+        codebook: "nf4".into(),
+        qlora_rank: 4,
+    }
+}
+
+fn pretrained() -> (lords::model::Model, Corpus) {
+    let c = cfg();
+    let corpus = Corpus::generate(CorpusKind::Wiki, c.vocab, 20_000, 4_000, 0);
+    let mut model = lords::model::Model::init(&c, 0);
+    let tcfg = TrainCfg { steps: 50, batch: 4, seq: 32, peak_lr: 3e-3, ..Default::default() };
+    let mut tr = NativeTrainer::new(tcfg, TrainKind::Pretrain);
+    tr.run(&mut model, &corpus);
+    (model, corpus)
+}
+
+#[test]
+fn quantization_degrades_less_with_lords_than_nf4() {
+    let (model, corpus) = pretrained();
+    let fp = lords::eval::perplexity(&model, &corpus, 32, 6).ppl;
+
+    let mut m_nf4 = model.clone();
+    m_nf4.quantize_blockwise(16, &Codebook::normal_float(2)); // 2-bit stresses the gap
+    let p_nf4 = lords::eval::perplexity(&m_nf4, &corpus, 32, 6).ppl;
+
+    let mut m_lords = model.clone();
+    m_lords.quantize_lords(16, &Codebook::normal_float(2),
+                           RefineCfg { steps: 80, ..Default::default() }, false);
+    let p_lords = lords::eval::perplexity(&m_lords, &corpus, 32, 6).ppl;
+
+    assert!(fp <= p_lords * 1.01, "fp {fp} should be best");
+    assert!(
+        p_lords < p_nf4,
+        "LoRDS PPL {p_lords} must beat 2-bit blockwise {p_nf4} (fp {fp})"
+    );
+}
+
+#[test]
+fn qat_then_peft_then_serve() {
+    let (model, corpus) = pretrained();
+    let c = cfg();
+    // QAT
+    let mut m = model.clone();
+    m.quantize_lords(c.block, &Codebook::normal_float(4),
+                     RefineCfg { steps: 20, ..Default::default() }, true);
+    let mut qat = NativeTrainer::new(
+        TrainCfg { steps: 15, batch: 4, seq: 32, peak_lr: 3e-4, warmup_ratio: 0.3, ..Default::default() },
+        TrainKind::Qat,
+    );
+    let qlog = qat.run(&mut m, &corpus);
+    assert!(qlog.final_loss.is_finite());
+
+    // PEFT on a shift
+    let target = Corpus::generate(CorpusKind::Ptb, c.vocab, 20_000, 4_000, 5);
+    let before = lords::eval::perplexity(&m, &target, 32, 4).ppl;
+    let mut peft = NativeTrainer::new(
+        TrainCfg { steps: 30, batch: 4, seq: 32, peak_lr: 2e-3, ..Default::default() },
+        TrainKind::Peft,
+    );
+    peft.run(&mut m, &target);
+    let after = lords::eval::perplexity(&m, &target, 32, 4).ppl;
+    assert!(after < before, "PEFT must improve target PPL: {before} -> {after}");
+
+    // Serve
+    let mut rng = Rng::new(1);
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| Request::new(i, (0..16).map(|_| rng.below(c.vocab)).collect(), 8))
+        .collect();
+    let mut server = Server::new(
+        NativeEngine::new(m, "lords"),
+        ServeCfg { decode_buckets: vec![1, 2, 4], prefill_buckets: vec![1, 2, 4], ..Default::default() },
+    );
+    let report = server.run(reqs).unwrap();
+    assert_eq!(report.metrics.completed, 5);
+    assert!(report.responses.iter().all(|r| r.tokens.len() == 8));
+}
+
+#[test]
+fn every_method_preserves_model_usability() {
+    let (model, corpus) = pretrained();
+    let c = cfg();
+    let fp = lords::eval::perplexity(&model, &corpus, 32, 4).ppl;
+    let calib = CalibSet::synthetic(&[c.d_model, c.d_ff], 48, 3);
+    for method in [
+        QuantMethod::Nf4Blockwise,
+        QuantMethod::Int4Blockwise,
+        QuantMethod::Gptq,
+        QuantMethod::Awq,
+        QuantMethod::LoftQ,
+        QuantMethod::QPissa,
+        QuantMethod::QLora,
+        QuantMethod::Lords,
+    ] {
+        let mut m = model.clone();
+        let qcfg = QuantCfg { method, block: 16, refine_steps: 15, adapter_rank: 4, ..Default::default() };
+        quantize_model(&mut m, &qcfg, Some(&calib), 0);
+        let ppl = lords::eval::perplexity(&m, &corpus, 32, 4);
+        assert!(!ppl.diverged, "{method:?} diverged");
+        assert!(
+            ppl.ppl < fp * 3.0,
+            "{method:?}: 4-bit PPL {} vs fp {fp} — too much damage",
+            ppl.ppl
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! Integration: the full Python-AOT → Rust-PJRT boundary.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise). Verifies that
+//! * kernel artifacts reproduce the Rust-native fused kernels' numerics,
+//! * the serving artifacts' prefill/decode agree with the native model,
+//! * the PJRT PEFT train step reduces the loss and its gradients flow only
+//!   into (B, A).
+
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::runtime::bridge::collect_params;
+use lords::runtime::{HostTensor, Manifest, Runtime};
+use lords::tensor::Matrix;
+use lords::util::prop::assert_allclose;
+use lords::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+#[test]
+fn lords_kernel_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let name = "lords_mm_m64";
+    if rt.manifest.artifact(name).is_err() {
+        return;
+    }
+    let (n, m, block) = (512, 512, 64);
+    let cb = Codebook::from_levels(&rt.manifest.lut_name, rt.manifest.lut.clone());
+    let mut rng = Rng::new(0);
+    let w = Matrix::randn(n, m, 0.05, &mut rng);
+    let (q, _) = lords::quant::LordsQuant::quantize(&w, block, &cb, RefineCfg { steps: 5, ..Default::default() });
+    let x = Matrix::randn(64, m, 1.0, &mut rng);
+    let y_native = q.matmul_transb(&x);
+
+    let out = rt
+        .execute(
+            name,
+            &[
+                HostTensor::from_matrix(&x),
+                HostTensor::I32(q.codes.iter().map(|&c| c as i32).collect(), vec![n, m]),
+                HostTensor::from_matrix(&q.b),
+                HostTensor::from_matrix(&q.a),
+                HostTensor::F32(rt.manifest.lut.clone(), vec![rt.manifest.lut.len()]),
+            ],
+        )
+        .expect("execute");
+    let y_pjrt = out[0].to_matrix();
+    assert_allclose(&y_pjrt.data, &y_native.data, 2e-3, 2e-3, "pjrt lords kernel vs native");
+}
+
+#[test]
+fn serving_forward_matches_native_model() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest.model.clone();
+    let mut model = lords::model::Model::init(&cfg, 3);
+    let cb = Codebook::from_levels(&rt.manifest.lut_name, rt.manifest.lut.clone());
+    model.quantize_lords(cfg.block, &cb, RefineCfg { steps: 3, ..Default::default() }, false);
+
+    let art = rt.manifest.artifact("lords_forward").unwrap().clone();
+    let tokens_spec = art.inputs.last().unwrap();
+    let (b, s) = (tokens_spec.dims[0], tokens_spec.dims[1]);
+    let mut rng = Rng::new(4);
+    let tokens: Vec<usize> = (0..b * s).map(|_| rng.below(cfg.vocab)).collect();
+
+    let mut inputs = collect_params(&model, &art.inputs);
+    inputs.push(HostTensor::I32(tokens.iter().map(|&t| t as i32).collect(), vec![b, s]));
+    let out = rt.execute("lords_forward", &inputs).expect("execute");
+    let logits_pjrt = out[0].f32s();
+
+    let logits_native = model.forward(&tokens, b, s);
+    // compare the final position of each row (what serving consumes)
+    for bi in 0..b {
+        let row = bi * s + (s - 1);
+        let native = logits_native.row(row);
+        let pjrt = &logits_pjrt[(row) * cfg.vocab..(row + 1) * cfg.vocab];
+        assert_allclose(pjrt, native, 5e-2, 5e-2, &format!("logits row {row}"));
+    }
+}
+
+#[test]
+fn pjrt_peft_step_trains_and_touches_only_ba() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest.model.clone();
+    let mut model = lords::model::Model::init(&cfg, 5);
+    let cb = Codebook::from_levels(&rt.manifest.lut_name, rt.manifest.lut.clone());
+    model.quantize_lords(cfg.block, &cb, RefineCfg { steps: 3, ..Default::default() }, false);
+
+    let art = rt.manifest.artifact("peft_step").unwrap().clone();
+    let pspecs: Vec<_> = art.inputs.iter().take_while(|s| s.name != "tokens").cloned().collect();
+    let mut params = collect_params(&model, &pspecs);
+    let tokens_spec = &art.inputs[art.inputs.len() - 2];
+    let (b, s) = (tokens_spec.dims[0], tokens_spec.dims[1]);
+    let mut rng = Rng::new(6);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let targets: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+    let mut last_loss = f32::INFINITY;
+    for step in 0..4 {
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::I32(tokens.clone(), vec![b, s]));
+        inputs.push(HostTensor::I32(targets.clone(), vec![b, s]));
+        let out = rt.execute("peft_step", &inputs).expect("peft step");
+        let loss = out[0].f32s()[0];
+        assert!(loss.is_finite());
+        // grads come back for every *.B / *.A in order
+        let tnames: Vec<&str> = pspecs
+            .iter()
+            .filter(|p| p.name.ends_with(".B") || p.name.ends_with(".A"))
+            .map(|p| p.name.as_str())
+            .collect();
+        assert_eq!(out.len(), 1 + tnames.len());
+        // SGD update on B/A only (fixed batch ⇒ loss must drop)
+        let mut gi = 1;
+        for (i, spec) in pspecs.iter().enumerate() {
+            if spec.name.ends_with(".B") || spec.name.ends_with(".A") {
+                let g = out[gi].f32s();
+                if let HostTensor::F32(data, _) = &mut params[i] {
+                    for (p, gv) in data.iter_mut().zip(g) {
+                        *p -= 0.5 * gv;
+                    }
+                }
+                gi += 1;
+            }
+        }
+        if step == 3 {
+            assert!(loss < last_loss, "loss should drop on a fixed batch");
+        }
+        if step == 0 {
+            last_loss = loss;
+        }
+    }
+}
