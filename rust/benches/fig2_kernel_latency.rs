@@ -1,74 +1,197 @@
-//! Figure 2 — operator latency vs token count M for the scaled q_proj
-//! shape: bitsandbytes-NF4 (blockwise), QLoRA (blockwise + adapter), and
-//! LoRDS fused dequant-matmul.
+//! Figure 2 — operator latency vs token count M, and the systems claim
+//! behind it: element-wise scaling served by the **fused bit-packed**
+//! kernels costs the same as block-wise, and both beat the materializing
+//! dequantize-then-GEMM path the fused kernels replace.
 //!
-//! Two backends per point:
-//! * native — the fused Rust kernels (`BlockwiseQuant::matmul_transb`,
-//!   `QloraLinear::forward`, `LordsQuant::matmul_transb`);
-//! * pjrt   — the AOT-lowered Pallas kernels (`{kind}_mm_m{M}` artifacts).
+//! Per (n, m) shape and bit width, each sweep point times:
+//! * `dense`        — fp32 GEMM over the original weight (upper bound on
+//!   memory traffic, no quantization);
+//! * `dequant+GEMM` — `matmul_transb(x, lords.dequantize())`: materialize
+//!   Ŵ then GEMM (the seed's serving path);
+//! * `bnb NF4`      — fused packed block-wise kernel;
+//! * `LoRDS`        — fused packed LoRDS kernel (rank-r scale
+//!   reconstruction per row-tile);
+//! * `QLoRA`        — fused packed base + the unmergeable adapter GEMMs.
 //!
-//! Expected shape: LoRDS tracks NF4 within a few % (rank-r scale product
-//! only) while QLoRA sits strictly above both (extra adapter GEMMs).
+//! Expected shape: LoRDS tracks NF4 within a few %, both are no slower
+//! than dequant+GEMM (strictly faster at m = k = 2048), and QLoRA sits
+//! strictly above (Figure 2's latency gap).
+//!
+//! Results are also written as a machine-readable baseline to
+//! `BENCH_fig2.json` (override with `LORDS_BENCH_JSON=path`) so later PRs
+//! have a perf trajectory to compare against.
 
 use lords::bench::harness::{banner, bench_fn};
 use lords::bench::TableBuilder;
 use lords::quant::baselines::QloraLinear;
 use lords::quant::lords::{LordsQuant, RefineCfg};
-use lords::quant::{BlockwiseQuant, Codebook};
+use lords::quant::{BlockwiseQuant, Codebook, QuantizedLinear};
 use lords::report::testbed::{full_mode, llm_like_weight, ModuleShape};
 use lords::runtime::executor::Executor;
 use lords::runtime::HostTensor;
-use lords::tensor::Matrix;
+use lords::tensor::{matmul_transb, Matrix};
 use lords::util::Rng;
 
-fn main() {
-    lords::util::logging::init();
-    banner("Figure 2", "kernel latency vs processed tokens M (q_proj shape)");
+struct Point {
+    n: usize,
+    m: usize,
+    bits: u32,
+    tokens: usize,
+    dense_ms: f64,
+    dequant_gemm_ms: f64,
+    nf4_ms: f64,
+    lords_ms: f64,
+    qlora_ms: f64,
+}
 
-    let full = full_mode();
-    let (n, m, block) = (512usize, 512usize, 64usize);
-    let m_sweep: Vec<usize> = if full { vec![64, 256, 1024, 4096] } else { vec![64, 256, 1024] };
-    let cb = Codebook::normal_float(4);
-    let mut rng = Rng::new(0);
+#[allow(clippy::too_many_arguments)] // bench crates don't see lib.rs's crate-level allow
+fn sweep_shape(
+    n: usize,
+    m: usize,
+    block: usize,
+    bits: u32,
+    m_sweep: &[usize],
+    refine_steps: usize,
+    full: bool,
+    out: &mut Vec<Point>,
+) {
+    let cb = Codebook::normal_float(bits);
+    let mut rng = Rng::new(n as u64 ^ (bits as u64) << 32);
     let w = llm_like_weight(ModuleShape { name: "Q", n, m }, &mut rng);
 
     let bw = BlockwiseQuant::quantize(&w, block, &cb);
-    let (lords, _) = LordsQuant::quantize(&w, block, &cb, RefineCfg { steps: 30, ..Default::default() });
+    let (lords, _) =
+        LordsQuant::quantize(&w, block, &cb, RefineCfg { steps: refine_steps, ..Default::default() });
     let mut qlora = QloraLinear::new(&w, block, 16, &cb, &mut rng);
     rng.fill_normal(&mut qlora.lora_b.data, 0.0, 0.01);
 
-    let mut t = TableBuilder::new("Figure 2 — native fused kernels (ms per call)")
-        .headers(&["M", "bnb NF4", "QLoRA", "LoRDS", "LoRDS/NF4", "QLoRA/NF4"]);
-    for &mm in &m_sweep {
+    let mut t = TableBuilder::new(&format!(
+        "Figure 2 — native kernels, {n}x{m} nf{bits} block {block} (ms per call; packed {:.1} KiB vs dense {:.1} KiB)",
+        lords.weight_bytes() as f64 / 1024.0,
+        (4 * n * m) as f64 / 1024.0
+    ))
+    .headers(&[
+        "M",
+        "dense fp32",
+        "dequant+GEMM",
+        "bnb NF4",
+        "LoRDS",
+        "QLoRA",
+        "LoRDS/NF4",
+        "fused/dequant",
+    ]);
+    for &mm in m_sweep {
         let x = Matrix::randn(mm, m, 1.0, &mut rng);
-        let (wu, me) = (0.1, if full { 1.0 } else { 0.4 });
+        let (wu, me) = (0.1, if full { 1.0 } else { 0.3 });
+        let r_dense = bench_fn("dense", wu, me, || {
+            std::hint::black_box(matmul_transb(&x, &w));
+        });
+        let r_dequant = bench_fn("dequant+gemm", wu, me, || {
+            // the seed's path: materialize Ŵ, then GEMM
+            let w_hat = lords.dequantize();
+            std::hint::black_box(matmul_transb(&x, &w_hat));
+        });
         let r_nf4 = bench_fn("nf4", wu, me, || {
             std::hint::black_box(bw.matmul_transb(&x));
-        });
-        let r_qlora = bench_fn("qlora", wu, me, || {
-            std::hint::black_box(qlora.forward(&x));
         });
         let r_lords = bench_fn("lords", wu, me, || {
             std::hint::black_box(lords.matmul_transb(&x));
         });
+        let r_qlora = bench_fn("qlora", wu, me, || {
+            std::hint::black_box(qlora.forward(&x));
+        });
         eprintln!(
-            "[fig2] native M={mm}: nf4 {:.2}ms qlora {:.2}ms lords {:.2}ms",
+            "[fig2] {n}x{m} nf{bits} M={mm}: dense {:.2} dequant {:.2} nf4 {:.2} lords {:.2} qlora {:.2} (ms)",
+            r_dense.mean_ms(),
+            r_dequant.mean_ms(),
             r_nf4.mean_ms(),
-            r_qlora.mean_ms(),
-            r_lords.mean_ms()
+            r_lords.mean_ms(),
+            r_qlora.mean_ms()
         );
         t.row(vec![
             mm.to_string(),
+            format!("{:.3}", r_dense.mean_ms()),
+            format!("{:.3}", r_dequant.mean_ms()),
             format!("{:.3}", r_nf4.mean_ms()),
-            format!("{:.3}", r_qlora.mean_ms()),
             format!("{:.3}", r_lords.mean_ms()),
+            format!("{:.3}", r_qlora.mean_ms()),
             format!("{:.2}x", r_lords.mean_s / r_nf4.mean_s),
-            format!("{:.2}x", r_qlora.mean_s / r_nf4.mean_s),
+            format!("{:.2}x", r_lords.mean_s / r_dequant.mean_s),
         ]);
+        out.push(Point {
+            n,
+            m,
+            bits,
+            tokens: mm,
+            dense_ms: r_dense.mean_ms(),
+            dequant_gemm_ms: r_dequant.mean_ms(),
+            nf4_ms: r_nf4.mean_ms(),
+            lords_ms: r_lords.mean_ms(),
+            qlora_ms: r_qlora.mean_ms(),
+        });
     }
     t.print();
+}
 
-    // PJRT path (Pallas kernels lowered to HLO)
+fn write_json(points: &[Point], full: bool) {
+    // default to the repo-root baseline file (cargo runs bench binaries
+    // with cwd = the package dir, i.e. rust/)
+    let path = std::env::var("LORDS_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fig2.json").to_string()
+    });
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"fig2_kernel_latency\",\n");
+    s.push_str("  \"unit\": \"ms_per_call_mean\",\n");
+    s.push_str(&format!("  \"full_mode\": {full},\n"));
+    s.push_str(&format!("  \"threads\": {},\n", lords::util::ThreadPool::global().size()));
+    s.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"n\": {}, \"m\": {}, \"bits\": {}, \"tokens\": {}, \
+             \"dense_gemm_ms\": {:.4}, \"dequant_gemm_ms\": {:.4}, \"fused_nf4_ms\": {:.4}, \
+             \"fused_lords_ms\": {:.4}, \"qlora_ms\": {:.4}}}{}\n",
+            p.n,
+            p.m,
+            p.bits,
+            p.tokens,
+            p.dense_ms,
+            p.dequant_gemm_ms,
+            p.nf4_ms,
+            p.lords_ms,
+            p.qlora_ms,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, &s) {
+        Ok(()) => eprintln!("[fig2] wrote baseline {path}"),
+        Err(e) => eprintln!("[fig2] could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    lords::util::logging::init();
+    banner("Figure 2", "fused packed kernels vs dequant+GEMM vs dense (latency per call)");
+
+    let full = full_mode();
+    let block = 64usize;
+    let mut points = Vec::new();
+
+    // q_proj-like shape across bit widths (2/3-bit only in FULL mode)
+    let m_sweep: Vec<usize> = if full { vec![16, 64, 256, 1024] } else { vec![16, 64, 256] };
+    let bit_sweep: Vec<u32> = if full { vec![2, 3, 4] } else { vec![4] };
+    for &bits in &bit_sweep {
+        sweep_shape(512, 512, block, bits, &m_sweep, if full { 50 } else { 30 }, full, &mut points);
+    }
+
+    // the acceptance shape: m = k = 2048 at 4 bits — fused must strictly
+    // beat dequant+GEMM here (Ŵ materialization is 16 MiB per call)
+    let m_sweep_big: Vec<usize> = if full { vec![16, 64, 256] } else { vec![16, 64] };
+    sweep_shape(2048, 2048, block, 4, &m_sweep_big, if full { 20 } else { 8 }, full, &mut points);
+
+    write_json(&points, full);
+
+    // PJRT path (Pallas kernels lowered to HLO), unchanged protocol
     match Executor::spawn("artifacts") {
         Ok(exec) => {
             let manifest = lords::runtime::Manifest::load("artifacts").unwrap();
@@ -157,5 +280,5 @@ fn main() {
         }
         Err(e) => eprintln!("[fig2] PJRT sweep skipped ({e}) — run `make artifacts`"),
     }
-    println!("\n(shape check: LoRDS/NF4 ≈ 1.0x, QLoRA/NF4 > 1.0x across the sweep)");
+    println!("\n(shape check: LoRDS/NF4 ≈ 1.0x, fused/dequant ≤ 1.0x — strictly < at 2048 — QLoRA above both)");
 }

@@ -1,11 +1,13 @@
 //! Table 6 — end-to-end inference throughput through the coordinator:
-//! bnb-NF4 / QLoRA / LoRDS weight formats, prefill + decode + total
-//! tokens/s. Three "machines" = three operating points (thread counts on
-//! the native engine; plus the PJRT engine when artifacts are present).
+//! fp32 / bnb-NF4 / QLoRA / LoRDS weight formats, prefill + decode + total
+//! tokens/s, plus the serving weight footprint (packed codes + fp32
+//! side-cars). The quantized formats all decode through the fused
+//! bit-packed kernels (`lords::kernels`) — no dense Ŵ is ever built in
+//! the engine's prefill/decode loop.
 //!
 //! Expected shape: LoRDS ≈ NF4 (rank-r scale reconstruction is the only
-//! extra work) and both beat QLoRA (which pays two extra adapter GEMMs per
-//! linear per token).
+//! extra work) at ~1/7th the fp32 footprint, and both beat QLoRA (which
+//! pays two extra adapter GEMMs per linear per token).
 
 use lords::bench::TableBuilder;
 use lords::config::ServeCfg;
@@ -35,12 +37,13 @@ fn main() {
     let prompt_len = cfg.max_seq / 2;
     let cb = Codebook::normal_float(4);
 
-    let mut t = TableBuilder::new("Table 6 — serving throughput (native engine)")
-        .headers(&["Engine", "Method", "Prefill tok/s", "Decode tok/s", "Total tok/s"]);
+    let mut t = TableBuilder::new("Table 6 — serving throughput (native engine, fused packed kernels)")
+        .headers(&["Engine", "Method", "Weights MiB", "Prefill tok/s", "Decode tok/s", "Total tok/s"]);
 
-    for format in ["nf4", "qlora", "lords"] {
+    for format in ["fp", "nf4", "qlora", "lords"] {
         let mut model = tb.model.clone();
         match format {
+            "fp" => {} // dense fp32 reference point
             "nf4" => model.quantize_blockwise(cfg.block, &cb),
             "qlora" => {
                 model.quantize_qlora(cfg.block, cfg.qlora_rank, &cb, 0);
@@ -56,13 +59,16 @@ fn main() {
             }
             _ => model.quantize_lords(cfg.block, &cb, RefineCfg { steps: 30, ..Default::default() }, false),
         }
-        let mut server = Server::new(NativeEngine::new(model, format), ServeCfg::default());
+        let engine = NativeEngine::new(model, format);
+        let mib = engine.weight_bytes() as f64 / (1024.0 * 1024.0);
+        let mut server = Server::new(engine, ServeCfg::default());
         let report = server.run(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
         let m = &report.metrics;
-        eprintln!("[table6] native/{format}: total {:.1} tok/s", m.total_tps());
+        eprintln!("[table6] native/{format}: total {:.1} tok/s ({mib:.2} MiB weights)", m.total_tps());
         t.row(vec![
             "native".into(),
             label(format),
+            format!("{mib:.2}"),
             format!("{:.1}", m.prefill_tps()),
             format!("{:.1}", m.decode_tps()),
             format!("{:.1}", m.total_tps()),
@@ -121,6 +127,7 @@ fn main() {
 
 fn label(f: &str) -> String {
     match f {
+        "fp" => "fp32".into(),
         "nf4" => "bnb NF4".into(),
         "qlora" => "QLoRA".into(),
         _ => "LoRDS".into(),

@@ -48,6 +48,11 @@ pub trait Engine {
 // ---------------------------------------------------------------- native
 
 /// Rust-native engine: per-sequence dense KV caches on the `model::Model`.
+///
+/// Every linear in the prefill/decode loop dispatches through
+/// `LinearWeight::forward`, i.e. the fused bit-packed kernels
+/// (`kernels::fused`) for quantized formats — the engine never touches a
+/// dense dequantized weight.
 pub struct NativeEngine {
     pub model: Model,
     caches: HashMap<u64, KvCache>,
@@ -56,7 +61,17 @@ pub struct NativeEngine {
 
 impl NativeEngine {
     pub fn new(model: Model, label: &str) -> NativeEngine {
+        crate::info!(
+            "native engine[{label}]: {:.2} MiB packed weights ({} fp32 side-car params)",
+            model.weight_bytes() as f64 / (1024.0 * 1024.0),
+            model.float_params()
+        );
         NativeEngine { model, caches: HashMap::new(), label: label.to_string() }
+    }
+
+    /// Serving weight footprint (packed codes + fp32 side-cars), bytes.
+    pub fn weight_bytes(&self) -> usize {
+        self.model.weight_bytes()
     }
 }
 

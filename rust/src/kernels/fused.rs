@@ -1,0 +1,378 @@
+//! Tiled fused dequant-matmul kernels over [`PackedCodes`] (layout and
+//! tiling strategy in the [module doc](super)).
+//!
+//! Forward kernels compute `y = x · Ŵᵀ`, backward kernels `y = g · Ŵ`,
+//! with `Ŵ = lut[Q] ⊙ S` reconstructed one row-tile at a time:
+//! `S = B·A` (LoRDS, rank-r) or `S = s ⊗ 1` (block-wise broadcast).
+//! The full `Ŵ` is never materialized.
+
+use super::packed::PackedCodes;
+use crate::tensor::Matrix;
+use crate::util::{SharedMut, ThreadPool};
+
+/// Weight rows dequantized per tile; sized so the tile's scratch
+/// (`ROW_TILE × m` floats) stays L1/L2-resident for the shapes the model
+/// serves (m ≤ a few thousand).
+pub const ROW_TILE: usize = 8;
+
+/// Contiguous 4-accumulator dot product — the same microkernel shape as
+/// `tensor::gemm::matmul_transb`, so LLVM vectorizes both identically.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    debug_assert_eq!(k, b.len());
+    let (mut acc0, mut acc1, mut acc2, mut acc3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let chunks = k / 4;
+    for c in 0..chunks {
+        let p = c * 4;
+        acc0 += a[p] * b[p];
+        acc1 += a[p + 1] * b[p + 1];
+        acc2 += a[p + 2] * b[p + 2];
+        acc3 += a[p + 3] * b[p + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for p in chunks * 4..k {
+        acc += a[p] * b[p];
+    }
+    acc
+}
+
+/// Scale reconstruction `srow[k] = Σ_p b[j, p] · a[p, c0 + k]` for the
+/// column range `[c0, c0 + srow.len())` — cost r·width, the entirety of
+/// LoRDS's extra serving work. Forward kernels pass the full row
+/// (`c0 = 0`), the column-partitioned backward kernels pass their slice.
+#[inline]
+fn reconstruct_scale_row(srow: &mut [f32], b: &Matrix, j: usize, a: &Matrix, c0: usize) {
+    srow.iter_mut().for_each(|v| *v = 0.0);
+    for p in 0..b.cols {
+        let bjp = b.at(j, p);
+        if bjp == 0.0 {
+            continue;
+        }
+        for (sv, &av) in srow.iter_mut().zip(&a.row(p)[c0..c0 + srow.len()]) {
+            *sv += bjp * av;
+        }
+    }
+}
+
+/// Dequantize one packed row into `wrow`: `wrow[k] = lut[crow[k]] · srow[k]`.
+#[inline]
+fn dequant_row(wrow: &mut [f32], crow: &[u8], lut: &[f32], srow: &[f32]) {
+    for ((w, &c), &s) in wrow.iter_mut().zip(crow).zip(srow) {
+        *w = lut[c as usize] * s;
+    }
+}
+
+/// Block-wise dequant of columns `[c0, c0 + wrow.len())` of one row:
+/// `wrow[k] = lut[crow[c0 + k]] · scales_row[(c0 + k) / block]`, with one
+/// scale lookup (and one division) per touched block, not per element.
+#[inline]
+fn blockwise_dequant_row(
+    wrow: &mut [f32],
+    crow: &[u8],
+    lut: &[f32],
+    scales_row: &[f32],
+    block: usize,
+    c0: usize,
+) {
+    let c1 = c0 + wrow.len();
+    let mut col = c0;
+    while col < c1 {
+        let bi = col / block;
+        let end = ((bi + 1) * block).min(c1);
+        let s = scales_row[bi];
+        for k in col..end {
+            wrow[k - c0] = lut[crow[k] as usize] * s;
+        }
+        col = end;
+    }
+}
+
+/// Fused LoRDS forward: `y = x · (lut[Q] ⊙ (B·A))ᵀ`.
+///
+/// x: t×m, Q: n×m packed, B: n×r, A: r×m, lut: codebook levels → y: t×n.
+pub fn lords_matmul_transb(
+    x: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    b: &Matrix,
+    a: &Matrix,
+) -> Matrix {
+    let (n, m) = (codes.rows(), codes.cols());
+    assert_eq!(x.cols, m, "x width {} vs codes {}", x.cols, m);
+    assert_eq!(b.rows, n, "B rows");
+    assert_eq!(a.cols, m, "A cols");
+    assert_eq!(b.cols, a.rows, "rank mismatch");
+    let t = x.rows;
+    let mut y = Matrix::zeros(t, n);
+    let yp = SharedMut(y.data.as_mut_ptr());
+    let ypr = &yp;
+    ThreadPool::global().parallel_for(n, move |lo, hi| {
+        let mut srow = vec![0.0f32; m];
+        let mut crow = vec![0u8; m];
+        let mut wtile = vec![0.0f32; ROW_TILE * m];
+        let mut j0 = lo;
+        while j0 < hi {
+            let j1 = (j0 + ROW_TILE).min(hi);
+            let tr = j1 - j0;
+            // dequantize the tile's rows once...
+            for (ti, j) in (j0..j1).enumerate() {
+                reconstruct_scale_row(&mut srow, b, j, a, 0);
+                codes.unpack_row_into(j, &mut crow);
+                dequant_row(&mut wtile[ti * m..(ti + 1) * m], &crow, lut, &srow);
+            }
+            // ...then stream every x row against the whole tile (each x row
+            // is loaded once per tile, not once per weight row)
+            for xi in 0..t {
+                let xrow = x.row(xi);
+                let ybase = xi * n + j0; // rows [lo, hi) of Ŵ ⇒ disjoint y columns
+                for ti in 0..tr {
+                    let acc = dot(xrow, &wtile[ti * m..(ti + 1) * m]);
+                    unsafe { *ypr.0.add(ybase + ti) = acc };
+                }
+            }
+            j0 = j1;
+        }
+    });
+    y
+}
+
+/// Fused LoRDS backward-dx: `y = g · (lut[Q] ⊙ (B·A))`.
+///
+/// g: t×n, Q: n×m packed → y: t×m. Parallel over **output columns** so the
+/// expensive per-row scale reconstruction + dequant is partitioned across
+/// workers (each worker rebuilds only its column slice of every Ŵ row);
+/// only the cheap shift/mask unpack is duplicated.
+pub fn lords_matmul(
+    g: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    b: &Matrix,
+    a: &Matrix,
+) -> Matrix {
+    let (n, m) = (codes.rows(), codes.cols());
+    assert_eq!(g.cols, n, "g width {} vs codes rows {}", g.cols, n);
+    assert_eq!(b.rows, n, "B rows");
+    assert_eq!(a.cols, m, "A cols");
+    assert_eq!(b.cols, a.rows, "rank mismatch");
+    let t = g.rows;
+    let mut y = Matrix::zeros(t, m);
+    let yp = SharedMut(y.data.as_mut_ptr());
+    let ypr = &yp;
+    ThreadPool::global().parallel_for(m, move |c0, c1| {
+        let width = c1 - c0;
+        let mut crow = vec![0u8; m];
+        let mut srow = vec![0.0f32; width];
+        let mut wrow = vec![0.0f32; width];
+        for j in 0..n {
+            codes.unpack_row_into(j, &mut crow);
+            // reconstruct only this worker's column slice of S[j, :]
+            reconstruct_scale_row(&mut srow, b, j, a, c0);
+            dequant_row(&mut wrow, &crow[c0..c1], lut, &srow);
+            for gi in 0..t {
+                let gv = g.at(gi, j);
+                if gv == 0.0 {
+                    continue;
+                }
+                // columns [c0, c1) of every y row are owned by this worker
+                let out =
+                    unsafe { std::slice::from_raw_parts_mut(ypr.0.add(gi * m + c0), width) };
+                for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
+                    *o += gv * wv;
+                }
+            }
+        }
+    });
+    y
+}
+
+/// Fused block-wise forward: `y = x · (lut[Q] ⊙ (s ⊗ 1))ᵀ`.
+///
+/// scales: n × (m / block) absmax scales.
+pub fn blockwise_matmul_transb(
+    x: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    scales: &Matrix,
+    block: usize,
+) -> Matrix {
+    let (n, m) = (codes.rows(), codes.cols());
+    assert_eq!(x.cols, m, "x width {} vs codes {}", x.cols, m);
+    assert!(block > 0 && m % block == 0, "block {block} !| cols {m}");
+    assert_eq!(scales.rows, n, "scale rows");
+    assert_eq!(scales.cols, m / block, "scale cols");
+    let t = x.rows;
+    let mut y = Matrix::zeros(t, n);
+    let yp = SharedMut(y.data.as_mut_ptr());
+    let ypr = &yp;
+    ThreadPool::global().parallel_for(n, move |lo, hi| {
+        let mut crow = vec![0u8; m];
+        let mut wtile = vec![0.0f32; ROW_TILE * m];
+        let mut j0 = lo;
+        while j0 < hi {
+            let j1 = (j0 + ROW_TILE).min(hi);
+            let tr = j1 - j0;
+            for (ti, j) in (j0..j1).enumerate() {
+                codes.unpack_row_into(j, &mut crow);
+                blockwise_dequant_row(&mut wtile[ti * m..(ti + 1) * m], &crow, lut, scales.row(j), block, 0);
+            }
+            for xi in 0..t {
+                let xrow = x.row(xi);
+                let ybase = xi * n + j0;
+                for ti in 0..tr {
+                    let acc = dot(xrow, &wtile[ti * m..(ti + 1) * m]);
+                    unsafe { *ypr.0.add(ybase + ti) = acc };
+                }
+            }
+            j0 = j1;
+        }
+    });
+    y
+}
+
+/// Fused block-wise backward-dx: `y = g · (lut[Q] ⊙ (s ⊗ 1))`.
+///
+/// Parallel over output columns, like [`lords_matmul`].
+pub fn blockwise_matmul(
+    g: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    scales: &Matrix,
+    block: usize,
+) -> Matrix {
+    let (n, m) = (codes.rows(), codes.cols());
+    assert_eq!(g.cols, n, "g width {} vs codes rows {}", g.cols, n);
+    assert!(block > 0 && m % block == 0, "block {block} !| cols {m}");
+    assert_eq!(scales.rows, n, "scale rows");
+    assert_eq!(scales.cols, m / block, "scale cols");
+    let t = g.rows;
+    let mut y = Matrix::zeros(t, m);
+    let yp = SharedMut(y.data.as_mut_ptr());
+    let ypr = &yp;
+    ThreadPool::global().parallel_for(m, move |c0, c1| {
+        let width = c1 - c0;
+        let mut crow = vec![0u8; m];
+        let mut wrow = vec![0.0f32; width];
+        for j in 0..n {
+            codes.unpack_row_into(j, &mut crow);
+            blockwise_dequant_row(&mut wrow, &crow, lut, scales.row(j), block, c0);
+            for gi in 0..t {
+                let gv = g.at(gi, j);
+                if gv == 0.0 {
+                    continue;
+                }
+                let out =
+                    unsafe { std::slice::from_raw_parts_mut(ypr.0.add(gi * m + c0), width) };
+                for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
+                    *o += gv * wv;
+                }
+            }
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_transb};
+    use crate::util::prop::{assert_allclose, prop_check};
+
+    /// Dense reference: Ŵ = lut[Q] ⊙ (B·A).
+    fn dense_lords(codes: &PackedCodes, lut: &[f32], b: &Matrix, a: &Matrix) -> Matrix {
+        let s = matmul(b, a);
+        Matrix::from_fn(codes.rows(), codes.cols(), |i, j| lut[codes.get(i, j) as usize] * s.at(i, j))
+    }
+
+    fn dense_blockwise(codes: &PackedCodes, lut: &[f32], scales: &Matrix, block: usize) -> Matrix {
+        Matrix::from_fn(codes.rows(), codes.cols(), |i, j| {
+            lut[codes.get(i, j) as usize] * scales.at(i, j / block)
+        })
+    }
+
+    #[test]
+    fn lords_fused_matches_dense_both_directions() {
+        prop_check(12, |g| {
+            let n = g.usize(2..=40);
+            let m = g.usize(2..=48);
+            let r = g.usize(1..=4);
+            let t = g.usize(1..=9);
+            let bits = *g.pick(&[2u32, 3, 4]);
+            let levels = 1usize << bits;
+            let mut rng = g.rng().fork(11);
+            let lut: Vec<f32> = (0..levels).map(|i| -1.0 + 2.0 * i as f32 / (levels - 1) as f32).collect();
+            let flat: Vec<u8> = (0..n * m).map(|_| rng.below(levels) as u8).collect();
+            let codes = PackedCodes::from_flat(bits, n, m, &flat);
+            let b = Matrix::randn(n, r, 0.3, &mut rng);
+            let a = Matrix::randn(r, m, 0.3, &mut rng);
+            let w_hat = dense_lords(&codes, &lut, &b, &a);
+
+            let x = Matrix::randn(t, m, 1.0, &mut rng);
+            let fused = lords_matmul_transb(&x, &codes, &lut, &b, &a);
+            assert_allclose(&fused.data, &matmul_transb(&x, &w_hat).data, 1e-4, 1e-4, "fwd");
+
+            let gup = Matrix::randn(t, n, 1.0, &mut rng);
+            let fused_bwd = lords_matmul(&gup, &codes, &lut, &b, &a);
+            assert_allclose(&fused_bwd.data, &matmul(&gup, &w_hat).data, 1e-4, 1e-4, "bwd");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blockwise_fused_matches_dense_both_directions() {
+        prop_check(12, |g| {
+            let n = g.usize(2..=40);
+            let nb = g.usize(1..=6);
+            let block = *g.pick(&[4usize, 8]);
+            let m = nb * block;
+            let t = g.usize(1..=9);
+            let bits = *g.pick(&[2u32, 3, 4]);
+            let levels = 1usize << bits;
+            let mut rng = g.rng().fork(13);
+            let lut: Vec<f32> = (0..levels).map(|i| -1.0 + 2.0 * i as f32 / (levels - 1) as f32).collect();
+            let flat: Vec<u8> = (0..n * m).map(|_| rng.below(levels) as u8).collect();
+            let codes = PackedCodes::from_flat(bits, n, m, &flat);
+            let mut scales = Matrix::randn(n, nb, 0.5, &mut rng);
+            for v in scales.data.iter_mut() {
+                *v = v.abs() + 0.1;
+            }
+            let w_hat = dense_blockwise(&codes, &lut, &scales, block);
+
+            let x = Matrix::randn(t, m, 1.0, &mut rng);
+            let fused = blockwise_matmul_transb(&x, &codes, &lut, &scales, block);
+            assert_allclose(&fused.data, &matmul_transb(&x, &w_hat).data, 1e-4, 1e-4, "fwd");
+
+            let gup = Matrix::randn(t, n, 1.0, &mut rng);
+            let fused_bwd = blockwise_matmul(&gup, &codes, &lut, &scales, block);
+            assert_allclose(&fused_bwd.data, &matmul(&gup, &w_hat).data, 1e-4, 1e-4, "bwd");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tile_boundaries_are_seamless() {
+        // n spanning multiple ROW_TILE tiles and a ragged final tile
+        let n = ROW_TILE * 3 + 5;
+        let m = 24;
+        let mut rng = crate::util::Rng::new(7);
+        let lut: Vec<f32> = (0..16).map(|i| i as f32 / 15.0 - 0.5).collect();
+        let flat: Vec<u8> = (0..n * m).map(|_| rng.below(16) as u8).collect();
+        let codes = PackedCodes::from_flat(4, n, m, &flat);
+        let b = Matrix::randn(n, 2, 0.3, &mut rng);
+        let a = Matrix::randn(2, m, 0.3, &mut rng);
+        let x = Matrix::randn(4, m, 1.0, &mut rng);
+        let w_hat = dense_lords(&codes, &lut, &b, &a);
+        let fused = lords_matmul_transb(&x, &codes, &lut, &b, &a);
+        assert_allclose(&fused.data, &matmul_transb(&x, &w_hat).data, 1e-4, 1e-4, "tiling");
+    }
+
+    #[test]
+    fn empty_x_is_fine() {
+        let codes = PackedCodes::zeros(4, 6, 8);
+        let lut = vec![0.0f32; 16];
+        let b = Matrix::zeros(6, 1);
+        let a = Matrix::zeros(1, 8);
+        let y = lords_matmul_transb(&Matrix::zeros(0, 8), &codes, &lut, &b, &a);
+        assert_eq!(y.shape(), (0, 6));
+    }
+}

@@ -1,0 +1,250 @@
+//! Bit-packed quantization code storage (see the [module doc](super) for
+//! the word format).
+
+/// Codes packed `32 / bits` to a `u32` word, LSB-first, rows word-aligned.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedCodes {
+    bits: u32,
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u32>,
+}
+
+impl PackedCodes {
+    /// Narrowest width that can store codes `0..levels` (1..=8 bits).
+    pub fn bits_needed(levels: usize) -> u32 {
+        assert!((2..=256).contains(&levels), "codebook size {levels} out of range");
+        let mut b = 1u32;
+        while (1usize << b) < levels {
+            b += 1;
+        }
+        b
+    }
+
+    /// Codes per 32-bit word at the given width.
+    pub fn codes_per_word(bits: u32) -> usize {
+        assert!((1..=8).contains(&bits), "unsupported code width {bits}");
+        (32 / bits) as usize
+    }
+
+    #[inline]
+    fn mask(bits: u32) -> u32 {
+        (1u32 << bits) - 1
+    }
+
+    /// All-zero codes.
+    pub fn zeros(bits: u32, rows: usize, cols: usize) -> PackedCodes {
+        let cpw = Self::codes_per_word(bits);
+        let words_per_row = cols.div_ceil(cpw);
+        PackedCodes { bits, rows, cols, words_per_row, words: vec![0; rows * words_per_row] }
+    }
+
+    /// Pack a flat row-major `u8` code matrix.
+    pub fn from_flat(bits: u32, rows: usize, cols: usize, codes: &[u8]) -> PackedCodes {
+        assert_eq!(codes.len(), rows * cols, "code count mismatch");
+        let mut p = Self::zeros(bits, rows, cols);
+        let wpr = p.words_per_row;
+        for i in 0..rows {
+            Self::pack_row(bits, &codes[i * cols..(i + 1) * cols], &mut p.words[i * wpr..(i + 1) * wpr]);
+        }
+        p
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored codes (rows × cols).
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Raw word storage — rows are disjoint word ranges, so callers may
+    /// hand out per-row sub-slices to parallel workers.
+    pub fn words_mut(&mut self) -> &mut [u32] {
+        &mut self.words
+    }
+
+    /// Bytes of backing storage (the memory-traffic number Figure 2 cares
+    /// about; `len()` bytes in the old `Vec<u8>` layout).
+    pub fn mem_bytes(&self) -> usize {
+        self.words.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Code at (i, j).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> u8 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let cpw = (32 / self.bits) as usize;
+        let w = self.words[i * self.words_per_row + j / cpw];
+        ((w >> ((j % cpw) as u32 * self.bits)) & Self::mask(self.bits)) as u8
+    }
+
+    /// Set code at (i, j) (slow path — bulk writers use [`Self::pack_row`]).
+    pub fn set(&mut self, i: usize, j: usize, code: u8) {
+        debug_assert!(i < self.rows && j < self.cols);
+        debug_assert!((code as u32) <= Self::mask(self.bits), "code {code} exceeds {} bits", self.bits);
+        let cpw = (32 / self.bits) as usize;
+        let shift = (j % cpw) as u32 * self.bits;
+        let w = &mut self.words[i * self.words_per_row + j / cpw];
+        *w = (*w & !(Self::mask(self.bits) << shift)) | (((code as u32) & Self::mask(self.bits)) << shift);
+    }
+
+    /// Pack one row of codes into its word slice. Static so quantizers
+    /// holding a raw pointer into [`Self::words_mut`] can repack disjoint
+    /// rows from parallel workers.
+    pub fn pack_row(bits: u32, codes: &[u8], out: &mut [u32]) {
+        let cpw = Self::codes_per_word(bits);
+        let mask = Self::mask(bits);
+        debug_assert!(out.len() >= codes.len().div_ceil(cpw));
+        for (wi, chunk) in codes.chunks(cpw).enumerate() {
+            let mut w = 0u32;
+            for (k, &c) in chunk.iter().enumerate() {
+                debug_assert!((c as u32) <= mask, "code {c} exceeds {bits} bits");
+                w |= ((c as u32) & mask) << (k as u32 * bits);
+            }
+            out[wi] = w;
+        }
+    }
+
+    /// Replace row `i` with `codes` (len = cols).
+    pub fn set_row(&mut self, i: usize, codes: &[u8]) {
+        assert_eq!(codes.len(), self.cols);
+        let wpr = self.words_per_row;
+        Self::pack_row(self.bits, codes, &mut self.words[i * wpr..(i + 1) * wpr]);
+    }
+
+    /// Unpack row `i` into `out[..cols]` — the kernels' hot path.
+    #[inline]
+    pub fn unpack_row_into(&self, i: usize, out: &mut [u8]) {
+        debug_assert!(out.len() >= self.cols);
+        let cpw = (32 / self.bits) as usize;
+        let mask = Self::mask(self.bits);
+        let row = &self.words[i * self.words_per_row..(i + 1) * self.words_per_row];
+        let mut j = 0usize;
+        for &word in row {
+            let mut w = word;
+            let lim = cpw.min(self.cols - j);
+            for _ in 0..lim {
+                out[j] = (w & mask) as u8;
+                w >>= self.bits;
+                j += 1;
+            }
+            if j == self.cols {
+                break;
+            }
+        }
+    }
+
+    /// Unpack everything to the old flat `Vec<u8>` layout.
+    pub fn to_flat(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.rows * self.cols];
+        for i in 0..self.rows {
+            let (lo, hi) = (i * self.cols, (i + 1) * self.cols);
+            self.unpack_row_into(i, &mut out[lo..hi]);
+        }
+        out
+    }
+
+    /// Row-major iterator over all codes (bridge/serialization paths).
+    /// One bulk unpack ([`Self::to_flat`]), not a per-row allocation.
+    pub fn iter(&self) -> impl Iterator<Item = u8> {
+        self.to_flat().into_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bits_needed_matches_codebooks() {
+        assert_eq!(PackedCodes::bits_needed(4), 2); // nf2
+        assert_eq!(PackedCodes::bits_needed(8), 3); // nf3
+        assert_eq!(PackedCodes::bits_needed(15), 4); // int4 (15 levels)
+        assert_eq!(PackedCodes::bits_needed(16), 4); // nf4
+        assert_eq!(PackedCodes::bits_needed(255), 8); // int8
+    }
+
+    #[test]
+    fn word_capacity() {
+        assert_eq!(PackedCodes::codes_per_word(2), 16);
+        assert_eq!(PackedCodes::codes_per_word(3), 10); // 2 dead bits
+        assert_eq!(PackedCodes::codes_per_word(4), 8);
+        assert_eq!(PackedCodes::codes_per_word(8), 4);
+    }
+
+    #[test]
+    fn roundtrip_all_widths_random_shapes() {
+        let mut rng = Rng::new(0);
+        for bits in [2u32, 3, 4, 8] {
+            for (rows, cols) in [(1usize, 1usize), (3, 7), (5, 10), (4, 33), (2, 64)] {
+                let maxc = (1u32 << bits) as usize;
+                let flat: Vec<u8> = (0..rows * cols).map(|_| rng.below(maxc) as u8).collect();
+                let p = PackedCodes::from_flat(bits, rows, cols, &flat);
+                assert_eq!(p.to_flat(), flat, "bits={bits} {rows}x{cols}");
+                assert_eq!(p.get(rows - 1, cols - 1), flat[rows * cols - 1]);
+                assert_eq!(p.iter().collect::<Vec<_>>(), flat);
+            }
+        }
+    }
+
+    #[test]
+    fn rows_are_word_aligned() {
+        // 3-bit, 11 cols → 2 words per row; row 1 must not share word 1
+        let flat: Vec<u8> = (0..22).map(|v| (v % 8) as u8).collect();
+        let p = PackedCodes::from_flat(3, 2, 11, &flat);
+        assert_eq!(p.words_per_row(), 2);
+        assert_eq!(p.words().len(), 4);
+        // mutating row 0 leaves row 1 intact
+        let mut p2 = p.clone();
+        p2.set_row(0, &[7u8; 11]);
+        for j in 0..11 {
+            assert_eq!(p2.get(1, j), p.get(1, j));
+            assert_eq!(p2.get(0, j), 7);
+        }
+    }
+
+    #[test]
+    fn set_get_pointwise() {
+        let mut p = PackedCodes::zeros(4, 3, 9);
+        p.set(1, 8, 15);
+        p.set(2, 0, 9);
+        assert_eq!(p.get(1, 8), 15);
+        assert_eq!(p.get(2, 0), 9);
+        assert_eq!(p.get(0, 0), 0);
+        p.set(1, 8, 1); // overwrite clears old bits
+        assert_eq!(p.get(1, 8), 1);
+    }
+
+    #[test]
+    fn memory_is_packed() {
+        let p = PackedCodes::zeros(4, 128, 512);
+        // 4-bit: 8 codes/word ⇒ 0.5 bytes per element vs 1 byte in Vec<u8>
+        assert_eq!(p.mem_bytes(), 128 * 512 / 2);
+        let p2 = PackedCodes::zeros(2, 128, 512);
+        assert_eq!(p2.mem_bytes(), 128 * 512 / 4);
+    }
+}

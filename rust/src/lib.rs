@@ -26,14 +26,20 @@
 //! | [`linalg`] | Jacobi SVD, truncated SVD, norms |
 //! | [`optim`] | AdamW / SGD / LR schedules |
 //! | [`quant`] | **the paper**: codebooks, block-wise quant, LoRDS (Alg. 1), STE, mixed precision, GPTQ/AWQ/LoftQ/QPiSSA/QLoRA baselines, error metrics |
+//! | [`kernels`] | bit-packed code storage + tiled fused dequant-matmul kernels (the zero-overhead inference claim, Figure 2) |
 //! | [`model`] | Llama-style transformer with manual backward + quantized linears |
 //! | [`data`] | synthetic corpus, calibration sampler, task suite |
 //! | [`train`] | LM pre-training, QAT, PEFT trainers |
 //! | [`eval`] | perplexity + zero-shot-style accuracy harness |
-//! | [`runtime`] | PJRT client, artifact manifest, executable cache |
+//! | [`runtime`] | PJRT client (feature `pjrt`) or stub, artifact manifest, executable cache |
 //! | [`coordinator`] | request router, dynamic batcher, prefill/decode scheduler, KV-block allocator, metrics |
 //! | [`bench`] | timing harness + markdown table rendering |
 //! | [`report`] | paper-style table renderers shared by benches |
+
+// Style lints this codebase deliberately trades away: index-heavy numeric
+// kernels read better with explicit loops, and the quantizer entry points
+// take the paper's full hyper-parameter lists.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod bench;
 pub mod cli;
@@ -41,6 +47,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod kernels;
 pub mod linalg;
 pub mod model;
 pub mod optim;

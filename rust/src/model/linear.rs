@@ -39,12 +39,16 @@ pub struct LinearGrads {
 }
 
 /// Cached state from forward needed by backward.
+///
+/// Note what is *not* here: the dense effective weight. Frozen-code
+/// representations run backward's `dx = g·Ŵ` through the fused packed
+/// kernels (`kernels::fused`), and the QAT path reads `Ŵ` straight out of
+/// the STE byproducts — so no representation pays an n×m copy per step.
 pub struct LinearCache {
     /// Input x (t×m) — borrowed by value for simplicity.
     pub x: Matrix,
-    /// Effective dequantized weight used in the forward (n×m).
-    pub w_eff: Matrix,
-    /// STE fake-quant byproducts (QAT mode only).
+    /// STE fake-quant byproducts (QAT mode only); `fq.w_hat` doubles as the
+    /// effective weight for backward.
     pub fq: Option<ste::FakeQuant>,
 }
 
@@ -102,33 +106,30 @@ impl LinearWeight {
         }
     }
 
-    /// Training forward: returns output + cache for backward.
+    /// Training forward: returns output + cache for backward. Frozen-code
+    /// representations take the same fused packed path as [`Self::forward`];
+    /// only QAT materializes Ŵ (the STE fake-quant needs it anyway, and the
+    /// cache takes ownership of it — no extra n×m copy).
     pub fn forward_cached(&self, x: &Matrix) -> (Matrix, LinearCache) {
         match self {
             LinearWeight::Lords { q, shadow_w: Some(w) } => {
                 let fq = ste::fake_quant(w, &q.b, &q.a, &q.codebook);
                 let y = matmul_transb(x, &fq.w_hat);
-                (
-                    y,
-                    LinearCache { x: x.clone(), w_eff: fq.w_hat.clone(), fq: Some(fq) },
-                )
+                // fq (and with it w_hat) is MOVED into the cache
+                (y, LinearCache { x: x.clone(), fq: Some(fq) })
             }
-            _ => {
-                let w_eff = self.effective();
-                let y = matmul_transb(x, &w_eff);
-                (y, LinearCache { x: x.clone(), w_eff, fq: None })
-            }
+            _ => (self.forward(x), LinearCache { x: x.clone(), fq: None }),
         }
     }
 
     /// Backward: upstream g = ∂L/∂y (t×n) → (∂L/∂x, parameter grads).
+    /// dx = g·Ŵ runs fused over the packed codes for frozen-code layers.
     pub fn backward(&self, cache: &LinearCache, g: &Matrix) -> (Matrix, LinearGrads) {
-        // dx = g · W_eff (t×n)(n×m) and dŴ = gᵀ·x (n×m)
-        let dx = matmul(g, &cache.w_eff);
         let mut grads = LinearGrads::default();
-        match self {
-            LinearWeight::Dense(_) => {
+        let dx = match self {
+            LinearWeight::Dense(w) => {
                 grads.d_w = Some(matmul_at_b(g, &cache.x));
+                matmul(g, w)
             }
             LinearWeight::Lords { q, shadow_w } => {
                 let d_w_hat = matmul_at_b(g, &cache.x); // n×m
@@ -139,24 +140,31 @@ impl LinearWeight {
                         let ds = d_w_hat.hadamard(&q.q_values());
                         grads.d_b = Some(matmul_transb(&ds, &q.a));
                         grads.d_a = Some(matmul_at_b(&q.b, &ds));
+                        q.matmul(g)
                     }
                     Some(w) => {
-                        // QAT: STE rules (eqs. 4–5)
+                        // QAT: STE rules (eqs. 4–5); Ŵ lives in the cache
                         let fq = cache.fq.as_ref().expect("QAT cache");
                         let (dw, db, da) = ste::ste_grads(fq, w, &q.b, &q.a, &d_w_hat);
                         grads.d_w = Some(dw);
                         grads.d_b = Some(db);
                         grads.d_a = Some(da);
+                        matmul(g, &fq.w_hat)
                     }
                 }
             }
-            LinearWeight::Blockwise(_) => {}
+            LinearWeight::Blockwise(q) => q.matmul(g),
             LinearWeight::Qlora(q) => {
                 let (d_lb, d_la) = q.adapter_grads(&cache.x, g);
                 grads.d_lora_b = Some(d_lb);
                 grads.d_lora_a = Some(d_la);
+                // dx = g·Ŵ_base (fused) + s·(g·L_b)·L_a (adapter chain)
+                let mut dx = q.base.matmul(g);
+                let gt = matmul(g, &q.lora_b); // t×r
+                dx.axpy(q.scaling, &matmul(&gt, &q.lora_a));
+                dx
             }
-        }
+        };
         (dx, grads)
     }
 
@@ -196,6 +204,18 @@ impl LinearWeight {
             LinearWeight::Lords { q, .. } => q.float_params(),
             LinearWeight::Blockwise(q) => q.float_params(),
             LinearWeight::Qlora(q) => q.float_params(),
+        }
+    }
+
+    /// Serving-side weight footprint in bytes: packed codes + fp32
+    /// side-cars (dense = 4·n·m). QAT shadow weights are training state
+    /// and excluded.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            LinearWeight::Dense(w) => 4 * w.len(),
+            LinearWeight::Lords { q, .. } => q.weight_bytes(),
+            LinearWeight::Blockwise(q) => q.weight_bytes(),
+            LinearWeight::Qlora(q) => q.weight_bytes(),
         }
     }
 
@@ -336,6 +356,33 @@ mod tests {
         let (_, grads) = lw.backward(&cache, &Matrix::ones(2, 8));
         assert!(grads.d_w.is_none());
         assert!(grads.d_lora_a.is_some() && grads.d_lora_b.is_some());
+    }
+
+    #[test]
+    fn backward_dx_matches_dense_reference_for_all_reprs() {
+        // dx = g·Ŵ now runs through the fused packed kernels for
+        // frozen-code layers — must agree with g·effective().
+        let mut rng = Rng::new(5);
+        let w = Matrix::randn(10, 16, 0.1, &mut rng);
+        let cb = Codebook::normal_float(4);
+        let x = Matrix::randn(3, 16, 1.0, &mut rng);
+        let g = Matrix::randn(3, 10, 1.0, &mut rng);
+        let reprs: Vec<LinearWeight> = vec![
+            LinearWeight::Dense(w.clone()),
+            quantize_lords(&w, 8, &cb, RefineCfg { steps: 3, ..Default::default() }),
+            LinearWeight::Blockwise(BlockwiseQuant::quantize(&w, 8, &cb)),
+            {
+                let mut q = QloraLinear::new(&w, 8, 4, &cb, &mut rng);
+                rng.fill_normal(&mut q.lora_b.data, 0.0, 0.05);
+                LinearWeight::Qlora(q)
+            },
+        ];
+        for lw in &reprs {
+            let (_, cache) = lw.forward_cached(&x);
+            let (dx, _) = lw.backward(&cache, &g);
+            let dense = matmul(&g, &lw.effective());
+            crate::util::prop::assert_allclose(&dx.data, &dense.data, 1e-4, 1e-4, "dx vs g·Ŵ");
+        }
     }
 
     #[test]

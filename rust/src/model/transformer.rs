@@ -235,6 +235,15 @@ impl Model {
             .sum()
     }
 
+    /// Serving weight footprint of all block linears in bytes (packed codes
+    /// + fp32 side-cars) — the memory-traffic number behind Table 6.
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.linears().into_iter().map(|(_, w)| w.weight_bytes()))
+            .sum()
+    }
+
     // ---------------------------------------------------------------- fwd
 
     fn embed(&self, tokens: &[usize]) -> Matrix {

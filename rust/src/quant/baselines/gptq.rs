@@ -177,10 +177,11 @@ mod tests {
         let cb = Codebook::normal_float(4);
         let g = GptqQuant::quantize(&w, &x, 8, &cb, 1e-4);
         let rtn = BlockwiseQuant::quantize(&w, 8, &cb);
+        let rtn_flat = rtn.codes.to_flat();
         let same = g
             .codes
             .iter()
-            .zip(&rtn.codes)
+            .zip(&rtn_flat)
             .filter(|(a, b)| a == b)
             .count();
         assert!(same as f32 / g.codes.len() as f32 > 0.95, "{same}/{}", g.codes.len());

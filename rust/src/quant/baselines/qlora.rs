@@ -58,6 +58,11 @@ impl QloraLinear {
     pub fn delta_w(&self) -> Matrix {
         matmul(&self.lora_b, &self.lora_a).scale(self.scaling)
     }
+
+    /// Bytes of packed base storage + fp32 adapter side-cars.
+    pub fn weight_bytes(&self) -> usize {
+        self.base.weight_bytes() + 4 * (self.lora_a.len() + self.lora_b.len())
+    }
 }
 
 impl QuantizedLinear for QloraLinear {

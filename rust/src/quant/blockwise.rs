@@ -8,13 +8,14 @@
 
 use super::codebook::Codebook;
 use super::QuantizedLinear;
+use crate::kernels::{self, PackedCodes};
 use crate::tensor::Matrix;
-use crate::util::ThreadPool;
+use crate::util::{SharedMut, ThreadPool};
 
-/// Block-wise quantized weight: codes + per-block scales.
+/// Block-wise quantized weight: bit-packed codes + per-block scales.
 #[derive(Clone, Debug)]
 pub struct BlockwiseQuant {
-    pub codes: Vec<u8>,
+    pub codes: PackedCodes,
     pub rows: usize,
     pub cols: usize,
     pub block: usize,
@@ -29,14 +30,18 @@ impl BlockwiseQuant {
         assert!(block > 0 && w.cols % block == 0, "block {block} !| cols {}", w.cols);
         let nb = w.cols / block;
         let mut scales = Matrix::zeros(w.rows, nb);
-        let mut codes = vec![0u8; w.rows * w.cols];
-        assert!(codebook.len() <= 256, "u8 code storage");
+        let bits = PackedCodes::bits_needed(codebook.len());
+        let mut codes = PackedCodes::zeros(bits, w.rows, w.cols);
 
-        let codes_ptr = SharedCodes(codes.as_mut_ptr());
-        let scales_ptr = SharedF32(scales.data.as_mut_ptr());
+        let wpr = codes.words_per_row();
+        // rows are word-aligned in PackedCodes, so workers touch disjoint
+        // words; scale rows are disjoint too.
+        let codes_ptr = SharedMut(codes.words_mut().as_mut_ptr());
+        let scales_ptr = SharedMut(scales.data.as_mut_ptr());
         let cp = &codes_ptr;
         let sp = &scales_ptr;
         ThreadPool::global().parallel_for(w.rows, move |lo, hi| {
+            let mut rowbuf = vec![0u8; w.cols];
             for i in lo..hi {
                 let row = w.row(i);
                 for b in 0..nb {
@@ -47,10 +52,11 @@ impl BlockwiseQuant {
                     }
                     unsafe { *sp.0.add(i * nb + b) = s };
                     for (k, &v) in blk.iter().enumerate() {
-                        let code = codebook.quantize_one(v, s) as u8;
-                        unsafe { *cp.0.add(i * w.cols + b * block + k) = code };
+                        rowbuf[b * block + k] = codebook.quantize_one(v, s) as u8;
                     }
                 }
+                let out = unsafe { std::slice::from_raw_parts_mut(cp.0.add(i * wpr), wpr) };
+                PackedCodes::pack_row(bits, &rowbuf, out);
             }
         });
 
@@ -64,9 +70,29 @@ impl BlockwiseQuant {
         }
     }
 
+    /// Build from already-computed flat codes + scales (GPTQ hand-off).
+    pub fn from_parts(
+        codes: &[u8],
+        rows: usize,
+        cols: usize,
+        block: usize,
+        scales: Matrix,
+        codebook: &Codebook,
+    ) -> BlockwiseQuant {
+        let bits = PackedCodes::bits_needed(codebook.len());
+        BlockwiseQuant {
+            codes: PackedCodes::from_flat(bits, rows, cols, codes),
+            rows,
+            cols,
+            block,
+            scales,
+            codebook: codebook.clone(),
+        }
+    }
+
     #[inline]
     pub fn code(&self, i: usize, j: usize) -> u8 {
-        self.codes[i * self.cols + j]
+        self.codes.get(i, j)
     }
 
     /// Scale applied to element (i, j).
@@ -80,43 +106,23 @@ impl BlockwiseQuant {
         Matrix::from_fn(self.rows, self.cols, |i, j| self.scale_at(i, j))
     }
 
-    /// y = x · Ŵᵀ fused with dequantization (no Ŵ materialization) — the
-    /// Rust-native analogue of the Pallas blockwise kernel.
+    /// y = x · Ŵᵀ fused with on-the-fly unpack + dequantization (no Ŵ
+    /// materialization) — the Rust-native analogue of the Pallas blockwise
+    /// kernel (`kernels::fused`).
     pub fn matmul_transb(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.cols);
-        let mut y = Matrix::zeros(x.rows, self.rows);
-        let n = self.rows;
-        let yp = SharedF32(y.data.as_mut_ptr());
-        let ypr = &yp;
-        ThreadPool::global().parallel_for(x.rows, move |lo, hi| {
-            for xi in lo..hi {
-                let xrow = x.row(xi);
-                for j in 0..n {
-                    let mut acc = 0.0f32;
-                    let crow = &self.codes[j * self.cols..(j + 1) * self.cols];
-                    for b in 0..self.cols / self.block {
-                        let s = self.scales.at(j, b);
-                        let mut blk_acc = 0.0f32;
-                        for k in 0..self.block {
-                            let idx = b * self.block + k;
-                            blk_acc += xrow[idx] * self.codebook.level(crow[idx] as usize);
-                        }
-                        acc += s * blk_acc;
-                    }
-                    unsafe { *ypr.0.add(xi * n + j) = acc };
-                }
-            }
-        });
-        y
+        kernels::blockwise_matmul_transb(x, &self.codes, &self.codebook.levels, &self.scales, self.block)
+    }
+
+    /// Fused y = g · Ŵ (the backward-dx pattern), also Ŵ-free.
+    pub fn matmul(&self, g: &Matrix) -> Matrix {
+        kernels::blockwise_matmul(g, &self.codes, &self.codebook.levels, &self.scales, self.block)
+    }
+
+    /// Bytes of packed code storage + fp32 scale side-cars.
+    pub fn weight_bytes(&self) -> usize {
+        self.codes.mem_bytes() + 4 * self.scales.len()
     }
 }
-
-struct SharedCodes(*mut u8);
-unsafe impl Sync for SharedCodes {}
-unsafe impl Send for SharedCodes {}
-struct SharedF32(*mut f32);
-unsafe impl Sync for SharedF32 {}
-unsafe impl Send for SharedF32 {}
 
 impl QuantizedLinear for BlockwiseQuant {
     fn dequantize(&self) -> Matrix {
@@ -225,6 +231,19 @@ mod tests {
         let q = BlockwiseQuant::quantize(&w, 32, &nf4());
         assert_eq!(q.float_params(), 64 * 128 / 32); // nm/B scales
         assert_eq!(q.code_bits(), 4.0);
+    }
+
+    #[test]
+    fn packed_storage_and_backward_kernel() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(16, 32, 0.2, &mut rng);
+        let q = BlockwiseQuant::quantize(&w, 8, &nf4());
+        // 4-bit codes: half a byte per element, plus fp32 scales
+        assert_eq!(q.weight_bytes(), 16 * 32 / 2 + 4 * q.scales.len());
+        let g = Matrix::randn(5, 16, 1.0, &mut rng);
+        let fused = q.matmul(&g);
+        let dense = crate::tensor::matmul(&g, &q.dequantize());
+        assert_allclose(&fused.data, &dense.data, 1e-4, 1e-4, "fused blockwise backward");
     }
 
     #[test]

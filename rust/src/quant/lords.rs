@@ -16,9 +16,10 @@
 use super::codebook::Codebook;
 use super::scale::{lords_init, parity_rank};
 use super::QuantizedLinear;
+use crate::kernels::{self, PackedCodes};
 use crate::optim::{AdamW, Optimizer};
 use crate::tensor::{matmul, matmul_at_b, matmul_transb, Matrix};
-use crate::util::ThreadPool;
+use crate::util::{SharedMut, ThreadPool};
 
 /// Refinement hyper-parameters (paper §4.1: 500 steps, lr 0.05).
 #[derive(Clone, Copy, Debug)]
@@ -47,10 +48,11 @@ pub struct RefineReport {
     pub trace: Vec<(usize, f32)>,
 }
 
-/// The LoRDS quantized weight.
+/// The LoRDS quantized weight. Codes live bit-packed (2/3/4 bits per
+/// element — [`PackedCodes`]), not one `u8` per element.
 #[derive(Clone, Debug)]
 pub struct LordsQuant {
-    pub codes: Vec<u8>,
+    pub codes: PackedCodes,
     pub rows: usize,
     pub cols: usize,
     pub rank: usize,
@@ -76,8 +78,9 @@ impl LordsQuant {
     ) -> (Self, RefineReport) {
         // Step 1: SVD init from block-wise statistics (eq. 3)
         let (b, a) = lords_init(w, block, rank);
+        let bits = PackedCodes::bits_needed(codebook.len());
         let mut q = LordsQuant {
-            codes: vec![0u8; w.rows * w.cols],
+            codes: PackedCodes::zeros(bits, w.rows, w.cols),
             rows: w.rows,
             cols: w.cols,
             rank,
@@ -105,16 +108,21 @@ impl LordsQuant {
         let s = matmul(&self.b, &self.a);
         let cols = self.cols;
         let cb = &self.codebook;
-        let codes_ptr = SharedU8(self.codes.as_mut_ptr());
-        let cp = &codes_ptr;
+        let bits = self.codes.bits();
+        let wpr = self.codes.words_per_row();
+        // rows are word-aligned, so parallel workers repack disjoint words
+        let words_ptr = SharedMut(self.codes.words_mut().as_mut_ptr());
+        let wp = &words_ptr;
         ThreadPool::global().parallel_for(self.rows, move |lo, hi| {
+            let mut rowbuf = vec![0u8; cols];
             for i in lo..hi {
                 let wrow = w.row(i);
                 let srow = s.row(i);
                 for j in 0..cols {
-                    let code = cb.quantize_one(wrow[j], srow[j]) as u8;
-                    unsafe { *cp.0.add(i * cols + j) = code };
+                    rowbuf[j] = cb.quantize_one(wrow[j], srow[j]) as u8;
                 }
+                let out = unsafe { std::slice::from_raw_parts_mut(wp.0.add(i * wpr), wpr) };
+                PackedCodes::pack_row(bits, &rowbuf, out);
             }
         });
     }
@@ -155,9 +163,15 @@ impl LordsQuant {
 
     /// lut[Q] as a dense matrix.
     pub fn q_values(&self) -> Matrix {
-        Matrix::from_fn(self.rows, self.cols, |i, j| {
-            self.codebook.level(self.codes[i * self.cols + j] as usize)
-        })
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let mut crow = vec![0u8; self.cols];
+        for i in 0..self.rows {
+            self.codes.unpack_row_into(i, &mut crow);
+            for (dst, &c) in out.row_mut(i).iter_mut().zip(&crow) {
+                *dst = self.codebook.level(c as usize);
+            }
+        }
+        out
     }
 
     /// The continuous scale manifold S = BA.
@@ -165,41 +179,21 @@ impl LordsQuant {
         matmul(&self.b, &self.a)
     }
 
-    /// Fused y = x · Ŵᵀ without materializing Ŵ: per output row j the scale
-    /// row is reconstructed as b[j]·A (rank-r), mirroring the Pallas kernel.
+    /// Fused y = x · Ŵᵀ without materializing Ŵ: tiled packed kernel
+    /// reconstructing the scale tile S[j0..j1, :] = B[j0..j1, :]·A per
+    /// row-tile, mirroring the Pallas kernel (`kernels::fused`).
     pub fn matmul_transb(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.cols);
-        let n = self.rows;
-        let mut y = Matrix::zeros(x.rows, n);
-        let yp = SharedF32(y.data.as_mut_ptr());
-        let ypr = &yp;
-        ThreadPool::global().parallel_for(n, move |lo, hi| {
-            let mut srow = vec![0.0f32; self.cols];
-            for j in lo..hi {
-                // s_row = b[j, :] · A  (r × m), rank-r reconstruction
-                srow.iter_mut().for_each(|v| *v = 0.0);
-                for p in 0..self.rank {
-                    let bjp = self.b.at(j, p);
-                    if bjp == 0.0 {
-                        continue;
-                    }
-                    let arow = self.a.row(p);
-                    for (sv, &av) in srow.iter_mut().zip(arow) {
-                        *sv += bjp * av;
-                    }
-                }
-                let crow = &self.codes[j * self.cols..(j + 1) * self.cols];
-                for xi in 0..x.rows {
-                    let xrow = x.row(xi);
-                    let mut acc = 0.0f32;
-                    for k in 0..self.cols {
-                        acc += xrow[k] * srow[k] * self.codebook.level(crow[k] as usize);
-                    }
-                    unsafe { *ypr.0.add(xi * n + j) = acc };
-                }
-            }
-        });
-        y
+        kernels::lords_matmul_transb(x, &self.codes, &self.codebook.levels, &self.b, &self.a)
+    }
+
+    /// Fused y = g · Ŵ (the backward-dx pattern), also Ŵ-free.
+    pub fn matmul(&self, g: &Matrix) -> Matrix {
+        kernels::lords_matmul(g, &self.codes, &self.codebook.levels, &self.b, &self.a)
+    }
+
+    /// Bytes of packed code storage + fp32 side-cars (B, A).
+    pub fn weight_bytes(&self) -> usize {
+        self.codes.mem_bytes() + 4 * (self.b.len() + self.a.len())
     }
 
     /// PEFT view: the multiplicative weight update induced by moving the
@@ -209,13 +203,6 @@ impl LordsQuant {
         self.q_values().hadamard(&ds)
     }
 }
-
-struct SharedU8(*mut u8);
-unsafe impl Sync for SharedU8 {}
-unsafe impl Send for SharedU8 {}
-struct SharedF32(*mut f32);
-unsafe impl Sync for SharedF32 {}
-unsafe impl Send for SharedF32 {}
 
 impl QuantizedLinear for LordsQuant {
     fn dequantize(&self) -> Matrix {
@@ -355,7 +342,7 @@ mod tests {
         let cb = nf4();
         for i in 0..w.rows {
             for j in 0..w.cols {
-                let got = q.codes[i * w.cols + j] as usize;
+                let got = q.codes.get(i, j) as usize;
                 let best = (0..cb.len())
                     .min_by(|&x, &y| {
                         let ex = (s.at(i, j) * cb.level(x) - w.at(i, j)).powi(2);

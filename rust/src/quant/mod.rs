@@ -15,6 +15,10 @@
 //! * [`error`]     — QuantError (nuclear norm) + reduction-ratio metrics
 //!   (Table 2, Appendix B).
 //! * [`baselines`] — GPTQ, AWQ, LoftQ, QPiSSA, QLoRA.
+//!
+//! Serving-path storage: [`LordsQuant`], [`BlockwiseQuant`], and the QLoRA
+//! NF4 base keep their codes bit-packed ([`crate::kernels::PackedCodes`])
+//! and forward through the fused kernels in [`crate::kernels::fused`].
 
 pub mod baselines;
 pub mod blockwise;

@@ -165,14 +165,9 @@ fn adapter_to_qlora(a: crate::quant::baselines::AdapterQuant) -> QloraLinear {
 }
 
 fn as_blockwise(g: GptqQuant) -> BlockwiseQuant {
-    BlockwiseQuant {
-        codes: g.codes,
-        rows: g.rows,
-        cols: g.cols,
-        block: g.block,
-        scales: g.scales,
-        codebook: g.codebook,
-    }
+    // GPTQ keeps flat u8 codes during its channel-sequential sweep; pack
+    // them into the serving layout on hand-off.
+    BlockwiseQuant::from_parts(&g.codes, g.rows, g.cols, g.block, g.scales, &g.codebook)
 }
 
 #[cfg(test)]

@@ -75,18 +75,18 @@ pub fn resolve(model: &Model, name: &str) -> HostTensor {
                     match (lw, kind) {
                         (lw, None) => mat(&lw.effective()),
                         (LinearWeight::Lords { q, .. }, Some("codes")) => HostTensor::I32(
-                            q.codes.iter().map(|&c| c as i32).collect(),
+                            q.codes.iter().map(|c| c as i32).collect(),
                             vec![q.rows, q.cols],
                         ),
                         (LinearWeight::Lords { q, .. }, Some("B")) => mat(&q.b),
                         (LinearWeight::Lords { q, .. }, Some("A")) => mat(&q.a),
                         (LinearWeight::Blockwise(q), Some("codes")) => HostTensor::I32(
-                            q.codes.iter().map(|&c| c as i32).collect(),
+                            q.codes.iter().map(|c| c as i32).collect(),
                             vec![q.rows, q.cols],
                         ),
                         (LinearWeight::Blockwise(q), Some("scales")) => mat(&q.scales),
                         (LinearWeight::Qlora(q), Some("codes")) => HostTensor::I32(
-                            q.base.codes.iter().map(|&c| c as i32).collect(),
+                            q.base.codes.iter().map(|c| c as i32).collect(),
                             vec![q.base.rows, q.base.cols],
                         ),
                         (LinearWeight::Qlora(q), Some("scales")) => mat(&q.base.scales),

@@ -3,8 +3,17 @@
 //!
 //! NOT `Send` (the xla crate's client is `Rc`-based); wrap in
 //! [`super::executor::ExecutorHandle`] to use from the coordinator's threads.
+//!
+//! The `xla` PJRT binding is not a crates.io dependency — it must be
+//! vendored and enabled with the `pjrt` cargo feature. Without the feature
+//! this module compiles a **stub** [`Runtime`] with the same surface that
+//! fails cleanly at [`Runtime::new`], so the executor, `PjrtEngine`, and
+//! `PjrtTrainer` all type-check and every PJRT call site degrades to its
+//! documented "artifacts unavailable" fallback.
 
-use super::manifest::{Artifact, DType, Manifest};
+use super::manifest::Manifest;
+#[cfg(feature = "pjrt")]
+use super::manifest::{Artifact, DType};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -57,6 +66,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let lit = match self {
             HostTensor::F32(data, dims) => {
@@ -81,22 +91,13 @@ impl HostTensor {
         Ok(lit)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal, dims: Vec<usize>, dtype: DType) -> anyhow::Result<HostTensor> {
         Ok(match dtype {
             DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?, dims),
             DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?, dims),
         })
     }
-}
-
-/// PJRT runtime (single-threaded owner).
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: String,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// cumulative (compiles, executions) for the perf report
-    pub stats: RefCell<RuntimeStats>,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -107,6 +108,18 @@ pub struct RuntimeStats {
     pub execute_secs: f64,
 }
 
+/// PJRT runtime (single-threaded owner).
+#[cfg(feature = "pjrt")]
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: String,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative (compiles, executions) for the perf report
+    pub stats: RefCell<RuntimeStats>,
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn new(artifacts_dir: &str) -> anyhow::Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir).map_err(anyhow::Error::msg)?;
@@ -197,5 +210,68 @@ impl Runtime {
             anyhow::ensure!(dtype_ok, "{}/{}: dtype mismatch", art.name, spec.name);
         }
         Ok(())
+    }
+}
+
+/// Stand-in executable handle for the stub runtime (never instantiated —
+/// [`Runtime::new`] fails first).
+#[cfg(not(feature = "pjrt"))]
+pub struct StubExecutable;
+
+/// Stub runtime compiled when the `pjrt` feature (and with it the vendored
+/// `xla` binding) is absent. Same surface as the real [`Runtime`];
+/// construction always fails with an actionable error.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub manifest: Manifest,
+    #[allow(dead_code)]
+    cache: RefCell<HashMap<String, Rc<StubExecutable>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> anyhow::Result<Runtime> {
+        // Parse the manifest anyway so callers get the more specific
+        // "artifacts missing" error when that is the actual problem.
+        let _ = Manifest::load(artifacts_dir).map_err(anyhow::Error::msg)?;
+        anyhow::bail!(
+            "PJRT support not compiled in: rebuild with `--features pjrt` \
+             and a vendored `xla` crate (see rust/src/runtime/runtime.rs)"
+        )
+    }
+
+    pub fn executable(&self, _name: &str) -> anyhow::Result<Rc<StubExecutable>> {
+        anyhow::bail!("PJRT support not compiled in (enable the `pjrt` feature)")
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::bail!("PJRT support not compiled in (enable the `pjrt` feature)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.f32s(), &[1.0, 2.0, 3.0, 4.0]);
+        let m = t.to_matrix();
+        assert_eq!(m.shape(), (2, 2));
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.i32s(), &[7]);
+        assert!(s.dims().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_fails_cleanly() {
+        // No artifacts dir → manifest error; with one → feature-gate error.
+        let err = Runtime::new("definitely-not-a-dir").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest.txt"), "unexpected error: {msg}");
     }
 }

@@ -11,6 +11,6 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 
-pub use pool::ThreadPool;
+pub use pool::{SharedMut, ThreadPool};
 pub use rng::Rng;
 pub use stats::Summary;

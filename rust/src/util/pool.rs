@@ -122,7 +122,17 @@ impl ThreadPool {
     }
 }
 
-struct SharedMut<T>(*mut T);
+/// Raw-pointer smuggler for `parallel_for` writers.
+///
+/// # Safety contract (the single audited justification — reuse this type
+/// instead of re-declaring private copies)
+///
+/// The wrapped pointer may be shared across worker threads only when every
+/// worker writes a range disjoint from all others (disjoint output rows,
+/// word-aligned packed rows, disjoint column slices, ...), and
+/// `parallel_for` joins all workers before the owning buffer is touched
+/// again — both upheld by construction at each call site.
+pub struct SharedMut<T>(pub *mut T);
 unsafe impl<T> Sync for SharedMut<T> {}
 unsafe impl<T> Send for SharedMut<T> {}
 

@@ -1,0 +1,133 @@
+//! Kernel parity gate: for each representation {LoRDS, blockwise, QLoRA}
+//! × bit width {2, 3, 4}, the fused bit-packed matmul must match the
+//! dequantize-then-`matmul_transb` reference within 1e-4 max-abs-diff on
+//! randomized shapes — the acceptance bar for the `kernels` subsystem.
+
+use lords::quant::baselines::QloraLinear;
+use lords::quant::lords::{LordsQuant, RefineCfg};
+use lords::quant::{BlockwiseQuant, Codebook, QuantizedLinear};
+use lords::report::testbed::{llm_like_weight, ModuleShape};
+use lords::tensor::{matmul, matmul_transb, Matrix};
+use lords::util::prop::{max_abs_diff, prop_check};
+use lords::util::Rng;
+
+const TOL: f32 = 1e-4;
+
+/// Same LLM-like weight statistics (Gaussian bulk + outlier channels) as
+/// the fig2 bench, so the parity gate and the perf numbers cover the same
+/// distribution.
+fn weights(rng: &mut Rng, n: usize, m: usize) -> Matrix {
+    llm_like_weight(ModuleShape { name: "W", n, m }, rng)
+}
+
+fn check(label: String, fused: &Matrix, reference: &Matrix) -> Result<(), String> {
+    let diff = max_abs_diff(&fused.data, &reference.data);
+    if diff <= TOL {
+        Ok(())
+    } else {
+        Err(format!("{label}: max |fused − dense| = {diff} > {TOL}"))
+    }
+}
+
+#[test]
+fn lords_fused_matches_dequant_gemm_all_bit_widths() {
+    for bits in [2u32, 3, 4] {
+        let cb = Codebook::normal_float(bits);
+        prop_check(6, |g| {
+            let n = g.usize(4..=40);
+            let m = g.usize(2..=6) * 8;
+            let t = g.usize(1..=10);
+            let rank = g.usize(1..=3);
+            let mut rng = g.rng().fork(bits as u64);
+            let w = weights(&mut rng, n, m);
+            let cfg = RefineCfg { steps: 8, ..Default::default() };
+            let (q, _) = LordsQuant::quantize_with_rank(&w, 8, rank, &cb, cfg);
+            if !q.b.all_finite() || !q.a.all_finite() {
+                return Err(format!("non-finite scale factors at {n}x{m}"));
+            }
+            let w_hat = q.dequantize();
+            let x = Matrix::randn(t, m, 1.0, &mut rng);
+            check(
+                format!("lords nf{bits} fwd {n}x{m} t={t}"),
+                &q.matmul_transb(&x),
+                &matmul_transb(&x, &w_hat),
+            )?;
+            let gup = Matrix::randn(t, n, 1.0, &mut rng);
+            check(
+                format!("lords nf{bits} bwd {n}x{m} t={t}"),
+                &q.matmul(&gup),
+                &matmul(&gup, &w_hat),
+            )
+        });
+    }
+}
+
+#[test]
+fn blockwise_fused_matches_dequant_gemm_all_bit_widths() {
+    for bits in [2u32, 3, 4] {
+        let cb = Codebook::normal_float(bits);
+        prop_check(6, |g| {
+            let n = g.usize(2..=48);
+            let m = g.usize(1..=6) * 8;
+            let t = g.usize(1..=10);
+            let mut rng = g.rng().fork(100 + bits as u64);
+            let w = weights(&mut rng, n, m);
+            let q = BlockwiseQuant::quantize(&w, 8, &cb);
+            let w_hat = q.dequantize();
+            let x = Matrix::randn(t, m, 1.0, &mut rng);
+            check(
+                format!("blockwise nf{bits} fwd {n}x{m} t={t}"),
+                &q.matmul_transb(&x),
+                &matmul_transb(&x, &w_hat),
+            )?;
+            let gup = Matrix::randn(t, n, 1.0, &mut rng);
+            check(
+                format!("blockwise nf{bits} bwd {n}x{m} t={t}"),
+                &q.matmul(&gup),
+                &matmul(&gup, &w_hat),
+            )
+        });
+    }
+}
+
+#[test]
+fn qlora_fused_matches_dequant_gemm_all_bit_widths() {
+    for bits in [2u32, 3, 4] {
+        let cb = Codebook::normal_float(bits);
+        prop_check(6, |g| {
+            let n = g.usize(4..=40);
+            let m = g.usize(2..=6) * 8;
+            let t = g.usize(1..=10);
+            let rank = g.usize(1..=4);
+            let mut rng = g.rng().fork(200 + bits as u64);
+            let w = weights(&mut rng, n, m);
+            let mut q = QloraLinear::new(&w, 8, rank, &cb, &mut rng);
+            // non-zero adapter = post-finetuning state
+            rng.fill_normal(&mut q.lora_b.data, 0.0, 0.05);
+            let w_hat = q.dequantize();
+            let x = Matrix::randn(t, m, 1.0, &mut rng);
+            check(
+                format!("qlora nf{bits} fwd {n}x{m} t={t}"),
+                &q.forward(&x),
+                &matmul_transb(&x, &w_hat),
+            )
+        });
+    }
+}
+
+#[test]
+fn packed_codes_survive_the_full_quantize_path() {
+    // End-to-end: packing must be lossless — dequantize() (via per-element
+    // get) and the fused kernels (via row unpack) must agree exactly.
+    let mut rng = Rng::new(42);
+    for bits in [2u32, 3, 4] {
+        let cb = Codebook::normal_float(bits);
+        let w = weights(&mut rng, 24, 40);
+        let (q, _) = LordsQuant::quantize_with_rank(&w, 8, 2, &cb, RefineCfg { steps: 4, ..Default::default() });
+        let x = Matrix::eye(40); // x = I ⇒ y = Ŵᵀ exactly
+        let y = q.matmul_transb(&x);
+        let w_hat = q.dequantize();
+        let diff = max_abs_diff(&y.data, &w_hat.transpose().data);
+        assert!(diff <= 1e-6, "nf{bits}: packed roundtrip drift {diff}");
+    }
+}

@@ -42,7 +42,7 @@ fn lords_kernel_artifact_matches_native() {
             name,
             &[
                 HostTensor::from_matrix(&x),
-                HostTensor::I32(q.codes.iter().map(|&c| c as i32).collect(), vec![n, m]),
+                HostTensor::I32(q.codes.iter().map(|c| c as i32).collect(), vec![n, m]),
                 HostTensor::from_matrix(&q.b),
                 HostTensor::from_matrix(&q.a),
                 HostTensor::F32(rt.manifest.lut.clone(), vec![rt.manifest.lut.len()]),
