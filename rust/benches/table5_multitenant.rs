@@ -1,0 +1,154 @@
+//! Table 5b — multi-tenant adapter serving: one shared LoRDS packed base
+//! hosting N hot-swappable scale adapters, versus the additive-adapter
+//! deployment (QLoRA: one engine per tenant, two extra adapter GEMMs on
+//! every forward).
+//!
+//! Reported per deployment: total weight bytes (the LoRDS base is counted
+//! **once**, plus ~r·(n+m) floats per tenant; the QLoRA deployment
+//! replicates its NF4 base per engine) and prefill/decode/total tokens/s
+//! over the same mixed-tenant request trace.
+//!
+//! Expected shape: LoRDS serves N tenants at ≈ single-tenant throughput
+//! (the adapter override swaps two small factor matrices per linear call —
+//! no extra matmuls) and ≈ 1/N the weight bytes of per-tenant QLoRA
+//! engines.
+//!
+//! Tenant adapters are synthetic PEFT deltas (deterministically perturbed
+//! base factors): identical shapes and serving cost to trained adapters,
+//! which is what a *serving* bench measures.
+
+use lords::adapters::{AdapterFactors, AdapterRegistry};
+use lords::bench::TableBuilder;
+use lords::config::ServeCfg;
+use lords::coordinator::metrics::ServeMetrics;
+use lords::coordinator::{NativeEngine, Request, Server};
+use lords::model::LinearWeight;
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::testbed::{full_mode, model_zoo, Testbed};
+use lords::util::Rng;
+
+fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            Request::new(i as u64, (0..prompt_len).map(|_| rng.below(vocab)).collect(), max_new)
+        })
+        .collect()
+}
+
+fn row(t: &mut TableBuilder, label: &str, tenants: usize, bytes: usize, m: &ServeMetrics) {
+    t.row(vec![
+        label.into(),
+        tenants.to_string(),
+        format!("{:.2}", bytes as f64 / (1024.0 * 1024.0)),
+        format!("{:.1}", m.prefill_tps()),
+        format!("{:.1}", m.decode_tps()),
+        format!("{:.1}", m.total_tps()),
+    ]);
+}
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner(
+        "Table 5b",
+        "multi-tenant adapter serving: shared LoRDS base + N adapters vs N QLoRA engines",
+    );
+
+    let full = full_mode();
+    let (name, cfg) = model_zoo().remove(0);
+    let tb = Testbed::build(name, &cfg, if full { 300 } else { 120 }, 0);
+    let n_tenants = if full { 6 } else { 3 };
+    let n_requests = if full { 24 } else { 12 };
+    let max_new = if full { 32 } else { 16 };
+    let prompt_len = cfg.max_seq / 2;
+    let cb = Codebook::normal_float(4);
+    let refine = RefineCfg { steps: 30, ..Default::default() };
+
+    let mut t = TableBuilder::new(
+        "Table 5b — multi-tenant serving (native engine, shared packed base)",
+    )
+    .headers(&["Deployment", "Tenants", "Weights MiB", "Prefill tok/s", "Decode tok/s", "Total tok/s"]);
+
+    // ---------------- LoRDS: one base, N scale adapters, mixed batches
+    let mut lords_model = tb.model.clone();
+    lords_model.quantize_lords(cfg.block, &cb, refine, false);
+    let base_factors = AdapterFactors::from_model(&lords_model);
+    let mut engine = NativeEngine::with_registry(lords_model, "mt", AdapterRegistry::unbounded());
+    let mut arng = Rng::new(41);
+    let tenant_ids: Vec<String> = (0..n_tenants).map(|i| format!("tenant-{i}")).collect();
+    for id in &tenant_ids {
+        engine.register_adapter(id, base_factors.perturbed(0.05, &mut arng)).unwrap();
+    }
+    let bytes_lords = engine.weight_bytes(); // base once + all resident adapters
+    let mut reqs = requests(n_requests, prompt_len, max_new, cfg.vocab, 1);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.adapter = tenant_ids[i % n_tenants].clone();
+    }
+    let mut server = Server::new(engine, ServeCfg::default());
+    let report = server.run(reqs).unwrap();
+    eprintln!(
+        "[table5b] lords 1-base-{n_tenants}-adapters: total {:.1} tok/s ({:.2} MiB)",
+        report.metrics.total_tps(),
+        bytes_lords as f64 / (1024.0 * 1024.0)
+    );
+    report.metrics.print_adapters();
+    row(&mut t, "LoRDS shared base + adapters", n_tenants, bytes_lords, &report.metrics);
+
+    // single-tenant LoRDS baseline (same engine shape, base tenant only) —
+    // the "zero inference overhead" comparison point
+    let mut base_model = tb.model.clone();
+    base_model.quantize_lords(cfg.block, &cb, refine, false);
+    let engine_base = NativeEngine::new(base_model, "single");
+    let bytes_base = engine_base.weight_bytes();
+    let mut server_base = Server::new(engine_base, ServeCfg::default());
+    let report_base =
+        server_base.run(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
+    row(&mut t, "LoRDS single tenant (base)", 1, bytes_base, &report_base.metrics);
+
+    // ---------------- QLoRA: additive adapters need one engine per tenant
+    let mut agg = ServeMetrics::default();
+    let mut bytes_qlora = 0usize;
+    for ti in 0..n_tenants {
+        let mut qmodel = tb.model.clone();
+        qmodel.quantize_qlora(cfg.block, cfg.qlora_rank, &cb, 0);
+        // non-zero adapters = post-finetuning state, distinct per tenant
+        let mut rng = Rng::new(100 + ti as u64);
+        for layer in qmodel.layers.iter_mut() {
+            for (_, lw) in layer.linears_mut() {
+                if let LinearWeight::Qlora(q) = lw {
+                    rng.fill_normal(&mut q.lora_b.data, 0.0, 0.01);
+                }
+            }
+        }
+        let engine = NativeEngine::new(qmodel, &format!("qlora-{ti}"));
+        bytes_qlora += engine.weight_bytes(); // per-tenant base replica
+        let mut server = Server::new(engine, ServeCfg::default());
+        // this tenant's share of the same trace
+        let share: Vec<Request> = requests(n_requests, prompt_len, max_new, cfg.vocab, 1)
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % n_tenants == ti)
+            .map(|(_, r)| r)
+            .collect();
+        let rep = server.run(share).unwrap();
+        agg.prefill_tokens += rep.metrics.prefill_tokens;
+        agg.decode_tokens += rep.metrics.decode_tokens;
+        agg.prefill_secs += rep.metrics.prefill_secs;
+        agg.decode_secs += rep.metrics.decode_secs;
+        agg.wall_secs += rep.metrics.wall_secs;
+        agg.completed += rep.metrics.completed;
+    }
+    eprintln!(
+        "[table5b] qlora {n_tenants} engines: total {:.1} tok/s ({:.2} MiB)",
+        agg.total_tps(),
+        bytes_qlora as f64 / (1024.0 * 1024.0)
+    );
+    row(&mut t, "QLoRA one engine per tenant", n_tenants, bytes_qlora, &agg);
+
+    t.print();
+    println!(
+        "\n(shape check: LoRDS multi-tenant ≈ LoRDS single-tenant throughput, \
+         ≈ 1/{n_tenants} the QLoRA deployment's weight bytes — base counted once)"
+    );
+}

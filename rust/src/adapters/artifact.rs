@@ -1,0 +1,367 @@
+//! Adapter payloads: per-tenant (B′, A′) scale factors for every LoRDS
+//! linear, plus the on-disk artifact format the PEFT trainer exports and
+//! the serving side loads.
+//!
+//! Layout convention: [`AdapterFactors::layers`] is indexed by transformer
+//! block, and each [`LayerFactors::linears`] slot positionally matches
+//! [`LayerWeights::linears()`](crate::model::transformer::LayerWeights::linears)
+//! order (wq, wk, wv, wo, w_gate, w_up, w_down). A `None` slot means "use
+//! the base factors for this linear" — adapters may cover any subset.
+
+use crate::model::{LinearWeight, Model};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use std::io::{Read, Write};
+
+/// Number of linears per transformer block
+/// ([`LayerWeights::linears`](crate::model::transformer::LayerWeights::linears)).
+pub const LINEARS_PER_LAYER: usize = 7;
+
+/// One linear's override factors: B′ ∈ R^{n×r′}, A′ ∈ R^{r′×m}. The
+/// adapter rank r′ may differ from the quantizer's parity rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaPair {
+    pub b: Matrix,
+    pub a: Matrix,
+}
+
+impl BaPair {
+    pub fn rank(&self) -> usize {
+        self.b.cols
+    }
+
+    /// fp32 bytes this pair occupies when resident.
+    pub fn bytes(&self) -> usize {
+        4 * (self.b.len() + self.a.len())
+    }
+}
+
+/// Factors for one transformer block, positionally matching
+/// [`LayerWeights::linears`](crate::model::transformer::LayerWeights::linears)
+/// order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerFactors {
+    pub linears: [Option<BaPair>; LINEARS_PER_LAYER],
+}
+
+impl LayerFactors {
+    pub fn empty() -> LayerFactors {
+        LayerFactors { linears: std::array::from_fn(|_| None) }
+    }
+}
+
+/// A full tenant adapter: one [`LayerFactors`] per transformer block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdapterFactors {
+    pub layers: Vec<LayerFactors>,
+}
+
+impl AdapterFactors {
+    pub fn empty(n_layers: usize) -> AdapterFactors {
+        AdapterFactors { layers: (0..n_layers).map(|_| LayerFactors::empty()).collect() }
+    }
+
+    /// Extract the current scale factors of every frozen-code LoRDS linear
+    /// (the state a PEFT run fine-tunes). Non-LoRDS and QAT linears yield
+    /// `None` slots.
+    pub fn from_model(model: &Model) -> AdapterFactors {
+        let layers = model
+            .layers
+            .iter()
+            .map(|layer| {
+                let mut lf = LayerFactors::empty();
+                for (slot, (_, lw)) in layer.linears().into_iter().enumerate() {
+                    if let LinearWeight::Lords { q, shadow_w: None } = lw {
+                        lf.linears[slot] = Some(BaPair { b: q.b.clone(), a: q.a.clone() });
+                    }
+                }
+                lf
+            })
+            .collect();
+        AdapterFactors { layers }
+    }
+
+    /// Dense-merge path: overwrite the model's baked-in factors with this
+    /// adapter's (the codes are untouched). Used for offline merging and as
+    /// the reference in parity tests; online serving passes the factors to
+    /// the fused kernels per call instead.
+    pub fn apply_to(&self, model: &mut Model) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.layers.len() == model.layers.len(),
+            "adapter has {} layers, model has {}",
+            self.layers.len(),
+            model.layers.len()
+        );
+        for (lf, layer) in self.layers.iter().zip(model.layers.iter_mut()) {
+            for (slot, (name, lw)) in layer.linears_mut().into_iter().enumerate() {
+                let Some(pair) = &lf.linears[slot] else { continue };
+                match lw {
+                    LinearWeight::Lords { q, shadow_w: None } => {
+                        check_pair(name, pair, q.rows, q.cols)?;
+                        q.b = pair.b.clone();
+                        q.a = pair.a.clone();
+                        q.rank = pair.rank();
+                    }
+                    other => anyhow::bail!(
+                        "adapter targets {name} but the model holds {other:?} there \
+                         (expected a frozen-code LoRDS linear)"
+                    ),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Shape-check every override slot against a model without mutating it
+    /// (registration-time validation).
+    pub fn validate_against(&self, model: &Model) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.layers.len() == model.layers.len(),
+            "adapter has {} layers, model has {}",
+            self.layers.len(),
+            model.layers.len()
+        );
+        for (lf, layer) in self.layers.iter().zip(model.layers.iter()) {
+            for (slot, (name, lw)) in layer.linears().into_iter().enumerate() {
+                let Some(pair) = &lf.linears[slot] else { continue };
+                match lw {
+                    LinearWeight::Lords { q, shadow_w: None } => {
+                        check_pair(name, pair, q.rows, q.cols)?;
+                    }
+                    other => anyhow::bail!(
+                        "adapter targets {name} but the model holds {other:?} there \
+                         (expected a frozen-code LoRDS linear)"
+                    ),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total fp32 bytes this adapter occupies when resident — the entire
+    /// per-tenant serving cost (the packed codes are shared with the base).
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|lf| lf.linears.iter())
+            .filter_map(|p| p.as_ref().map(BaPair::bytes))
+            .sum()
+    }
+
+    /// Number of override pairs (populated slots).
+    pub fn n_pairs(&self) -> usize {
+        self.layers.iter().flat_map(|lf| lf.linears.iter()).filter(|p| p.is_some()).count()
+    }
+
+    /// Deterministically perturb every factor pair — a synthetic stand-in
+    /// for a PEFT-trained tenant (same shapes, same serving cost, distinct
+    /// outputs) used by the multi-tenant bench and tests.
+    pub fn perturbed(&self, std: f32, rng: &mut Rng) -> AdapterFactors {
+        let mut out = self.clone();
+        for lf in out.layers.iter_mut() {
+            for pair in lf.linears.iter_mut().flatten() {
+                for v in pair.b.data.iter_mut() {
+                    *v += std * rng.normal();
+                }
+                for v in pair.a.data.iter_mut() {
+                    *v += std * rng.normal();
+                }
+            }
+        }
+        out
+    }
+}
+
+fn check_pair(name: &str, pair: &BaPair, rows: usize, cols: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        pair.b.rows == rows && pair.a.cols == cols && pair.b.cols == pair.a.rows,
+        "{name}: adapter factors B′ {}x{} / A′ {}x{} incompatible with {rows}x{cols} codes",
+        pair.b.rows,
+        pair.b.cols,
+        pair.a.rows,
+        pair.a.cols
+    );
+    anyhow::ensure!(pair.b.all_finite() && pair.a.all_finite(), "{name}: non-finite adapter factors");
+    Ok(())
+}
+
+/// A named, serializable adapter — what the PEFT trainer exports and
+/// `Model::load_adapter` / [`AdapterRegistry`](super::AdapterRegistry)
+/// consume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdapterArtifact {
+    pub id: String,
+    pub factors: AdapterFactors,
+}
+
+const MAGIC: &[u8; 8] = b"LORDSAD1";
+
+impl AdapterArtifact {
+    /// Package a PEFT-trained model's factors. Errors when the model has no
+    /// LoRDS linears (nothing to adapt).
+    pub fn from_model(model: &Model, id: &str) -> anyhow::Result<AdapterArtifact> {
+        let factors = AdapterFactors::from_model(model);
+        anyhow::ensure!(
+            factors.n_pairs() > 0,
+            "model has no frozen-code LoRDS linears — nothing to export as adapter '{id}'"
+        );
+        Ok(AdapterArtifact { id: id.to_string(), factors })
+    }
+
+    /// Serialize (tiny binary format, f32 little-endian, same conventions
+    /// as the model checkpoint).
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        let id_bytes = self.id.as_bytes();
+        f.write_all(&(id_bytes.len() as u32).to_le_bytes())?;
+        f.write_all(id_bytes)?;
+        f.write_all(&(self.factors.layers.len() as u32).to_le_bytes())?;
+        for lf in &self.factors.layers {
+            for slot in &lf.linears {
+                match slot {
+                    None => f.write_all(&[0u8])?,
+                    Some(pair) => {
+                        f.write_all(&[1u8])?;
+                        crate::model::checkpoint::write_mat(&mut f, &pair.b)?;
+                        crate::model::checkpoint::write_mat(&mut f, &pair.a)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> std::io::Result<AdapterArtifact> {
+        let bad = |what: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, what.to_string());
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(bad("bad adapter magic"));
+        }
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let id_len = u32::from_le_bytes(b4) as usize;
+        if id_len > 4096 {
+            return Err(bad("unreasonable adapter id length"));
+        }
+        let mut id_bytes = vec![0u8; id_len];
+        f.read_exact(&mut id_bytes)?;
+        let id = String::from_utf8(id_bytes).map_err(|_| bad("adapter id not utf8"))?;
+        f.read_exact(&mut b4)?;
+        let n_layers = u32::from_le_bytes(b4) as usize;
+        if n_layers > 65_536 {
+            return Err(bad("unreasonable adapter layer count"));
+        }
+        let mut factors = AdapterFactors::empty(n_layers);
+        for lf in factors.layers.iter_mut() {
+            for slot in lf.linears.iter_mut() {
+                let mut flag = [0u8; 1];
+                f.read_exact(&mut flag)?;
+                if flag[0] == 1 {
+                    let b = crate::model::checkpoint::read_mat(&mut f)?;
+                    let a = crate::model::checkpoint::read_mat(&mut f)?;
+                    *slot = Some(BaPair { b, a });
+                } else if flag[0] != 0 {
+                    return Err(bad("bad adapter slot flag"));
+                }
+            }
+        }
+        Ok(AdapterArtifact { id, factors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::quant::lords::RefineCfg;
+    use crate::quant::Codebook;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        }
+    }
+
+    fn lords_model(seed: u64) -> Model {
+        let cfg = tiny_cfg();
+        let mut m = Model::init(&cfg, seed);
+        m.quantize_lords(
+            cfg.block,
+            &Codebook::normal_float(4),
+            RefineCfg { steps: 2, ..Default::default() },
+            false,
+        );
+        m
+    }
+
+    #[test]
+    fn extract_apply_roundtrip() {
+        let model = lords_model(0);
+        let f = AdapterFactors::from_model(&model);
+        assert_eq!(f.layers.len(), 2);
+        assert_eq!(f.n_pairs(), 2 * LINEARS_PER_LAYER);
+        assert!(f.bytes() > 0);
+        f.validate_against(&model).unwrap();
+
+        // perturb, apply, re-extract: must get the perturbed factors back
+        let mut rng = crate::util::Rng::new(1);
+        let f2 = f.perturbed(0.05, &mut rng);
+        assert_ne!(f, f2);
+        let mut model2 = model.clone();
+        f2.apply_to(&mut model2).unwrap();
+        assert_eq!(AdapterFactors::from_model(&model2), f2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes_and_dense_targets() {
+        let model = lords_model(2);
+        let mut f = AdapterFactors::from_model(&model);
+        // break one shape
+        if let Some(pair) = f.layers[0].linears[0].as_mut() {
+            pair.b = Matrix::zeros(pair.b.rows + 1, pair.b.cols);
+        }
+        assert!(f.validate_against(&model).is_err());
+
+        // dense model: adapters have nowhere to land
+        let dense = Model::init(&tiny_cfg(), 3);
+        let f2 = AdapterFactors::from_model(&lords_model(3));
+        assert!(f2.validate_against(&dense).is_err());
+        assert!(AdapterArtifact::from_model(&dense, "t").is_err());
+    }
+
+    #[test]
+    fn artifact_save_load_roundtrip() {
+        let model = lords_model(4);
+        let art = AdapterArtifact::from_model(&model, "tenant-a").unwrap();
+        let path = std::env::temp_dir().join("lords_adapter_test.bin");
+        let path = path.to_str().unwrap();
+        art.save(path).unwrap();
+        let loaded = AdapterArtifact::load(path).unwrap();
+        assert_eq!(loaded, art);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bytes_counts_only_populated_slots() {
+        let mut f = AdapterFactors::empty(1);
+        assert_eq!(f.bytes(), 0);
+        f.layers[0].linears[0] =
+            Some(BaPair { b: Matrix::zeros(4, 2), a: Matrix::zeros(2, 6) });
+        assert_eq!(f.bytes(), 4 * (8 + 12));
+        assert_eq!(f.n_pairs(), 1);
+    }
+}

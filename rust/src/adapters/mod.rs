@@ -1,0 +1,33 @@
+//! Multi-tenant LoRDS scale adapters — the serving-side payoff of the
+//! paper's unification claim (§3.4): because fine-tuning moves only the
+//! rank-r scale factors (B, A) while the quantization codes Q stay frozen,
+//! a deployment can host **one shared packed base** and any number of
+//! per-tenant adapters, each costing just ~r·(n+m) floats per linear.
+//! Unlike additive adapters (QLoRA), a tenant's forward is *exactly* the
+//! base fused kernel with different scale factors — zero extra matmuls,
+//! zero code duplication, zero dequantization.
+//!
+//! * [`artifact`] — the adapter payload: per-layer (B′, A′) pairs
+//!   ([`AdapterFactors`]), extraction from a PEFT-trained model,
+//!   dense-merge application, and the on-disk [`AdapterArtifact`] format.
+//! * [`registry`] — [`AdapterRegistry`]: hot-swappable storage keyed by
+//!   adapter id with ref-counted pinning (in-flight batches defer
+//!   eviction) and LRU eviction over a byte budget.
+//!
+//! The coordinator threads a tenant id through
+//! [`Request`](crate::coordinator::Request) →
+//! [`SeqState`](crate::coordinator::engine::SeqState) → the engine, which
+//! resolves it against its registry per prefill/decode call. The reserved
+//! id [`BASE_ADAPTER`] is the zero-rank "base" tenant: it names the
+//! quantizer's own baked-in factors, occupies no registry bytes, and can
+//! never be evicted.
+
+pub mod artifact;
+pub mod registry;
+
+pub use artifact::{AdapterArtifact, AdapterFactors, BaPair, LayerFactors};
+pub use registry::AdapterRegistry;
+
+/// Reserved tenant id for the unadapted base model (baked-in quantizer
+/// scale factors; not a registry resident).
+pub const BASE_ADAPTER: &str = "base";

@@ -1,0 +1,368 @@
+//! Hot-swappable adapter storage for multi-tenant serving.
+//!
+//! The registry owns every resident tenant's [`AdapterFactors`] keyed by
+//! adapter id, under a byte budget. Registration evicts least-recently-used
+//! *unpinned* adapters to make room; an adapter pinned by in-flight
+//! sequences (ref-count > 0) is never dropped out from under a batch —
+//! explicit eviction of a pinned adapter is **deferred** until its last
+//! pin is released, during which it keeps serving decode steps but rejects
+//! new acquisitions.
+//!
+//! The reserved [`BASE_ADAPTER`](super::BASE_ADAPTER) id is the zero-rank
+//! base tenant: always acquirable, zero resident bytes, never evictable,
+//! and [`get`](AdapterRegistry::get) resolves it to `None` (the fused
+//! kernels then use the quantizer's baked-in factors).
+
+use super::artifact::AdapterFactors;
+use super::BASE_ADAPTER;
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct Entry {
+    factors: AdapterFactors,
+    bytes: usize,
+    /// In-flight sequences currently pinned to this adapter.
+    refs: usize,
+    /// Eviction requested while pinned; fires on the last release.
+    pending_evict: bool,
+    /// Logical LRU clock stamp of the last acquisition.
+    last_used: u64,
+}
+
+/// Snapshot of registry occupancy (for metrics / examples).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    pub residents: usize,
+    pub used_bytes: usize,
+    pub budget_bytes: usize,
+    pub evictions: usize,
+    pub deferred_evictions: usize,
+}
+
+#[derive(Debug)]
+pub struct AdapterRegistry {
+    budget_bytes: usize,
+    used_bytes: usize,
+    clock: u64,
+    evictions: usize,
+    deferred_evictions: usize,
+    entries: HashMap<String, Entry>,
+}
+
+impl AdapterRegistry {
+    /// Registry with an LRU byte budget over resident adapter factors.
+    pub fn new(budget_bytes: usize) -> AdapterRegistry {
+        AdapterRegistry {
+            budget_bytes,
+            used_bytes: 0,
+            clock: 0,
+            evictions: 0,
+            deferred_evictions: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// No byte budget (nothing is ever evicted for space).
+    pub fn unbounded() -> AdapterRegistry {
+        AdapterRegistry::new(usize::MAX)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Resident and acquirable (not awaiting a deferred eviction).
+    pub fn contains(&self, id: &str) -> bool {
+        id == BASE_ADAPTER || self.entries.get(id).is_some_and(|e| !e.pending_evict)
+    }
+
+    /// Current pin count (0 for unknown ids and the base tenant).
+    pub fn pins(&self, id: &str) -> usize {
+        self.entries.get(id).map(|e| e.refs).unwrap_or(0)
+    }
+
+    /// Resident ids, sorted (stable output for logs/tests).
+    pub fn resident_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self.entries.keys().cloned().collect();
+        ids.sort();
+        ids
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats {
+            residents: self.entries.len(),
+            used_bytes: self.used_bytes,
+            budget_bytes: self.budget_bytes,
+            evictions: self.evictions,
+            deferred_evictions: self.deferred_evictions,
+        }
+    }
+
+    /// Register (or hot-swap) a tenant's factors, evicting LRU unpinned
+    /// adapters as needed to fit the budget. Fails when the id is reserved,
+    /// the factors alone exceed the budget, the id is currently pinned, or
+    /// every resident adapter is pinned and there is no room.
+    pub fn register(&mut self, id: &str, factors: AdapterFactors) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            id != BASE_ADAPTER,
+            "adapter id '{BASE_ADAPTER}' is reserved for the unadapted base tenant"
+        );
+        let bytes = factors.bytes();
+        anyhow::ensure!(
+            bytes <= self.budget_bytes,
+            "adapter '{id}' ({bytes} B) exceeds the registry budget ({} B)",
+            self.budget_bytes
+        );
+        if let Some(existing) = self.entries.get(id) {
+            anyhow::ensure!(
+                existing.refs == 0,
+                "cannot hot-swap adapter '{id}': pinned by {} in-flight sequence(s)",
+                existing.refs
+            );
+        }
+        // Plan the LRU victims before mutating anything: a failed
+        // registration (not enough evictable bytes) must leave the registry
+        // untouched — in particular a failed hot-swap must not destroy the
+        // resident adapter it meant to replace.
+        let reclaim = self.entries.get(id).map(|e| e.bytes).unwrap_or(0);
+        let mut victims: Vec<String> = Vec::new();
+        let mut freed = 0usize;
+        while self.used_bytes - reclaim - freed > self.budget_bytes - bytes {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(k, e)| e.refs == 0 && k.as_str() != id && !victims.contains(*k))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, e)| (k.clone(), e.bytes));
+            match victim {
+                Some((k, b)) => {
+                    freed += b;
+                    victims.push(k);
+                }
+                None => anyhow::bail!(
+                    "cannot register adapter '{id}': budget exhausted and every \
+                     resident adapter is pinned by in-flight sequences"
+                ),
+            }
+        }
+        for k in &victims {
+            let e = self.entries.remove(k).unwrap();
+            self.used_bytes -= e.bytes;
+            self.evictions += 1;
+            crate::info!("adapter registry: evicted '{k}' ({} B) for '{id}'", e.bytes);
+        }
+        if let Some(old) = self.entries.remove(id) {
+            self.used_bytes -= old.bytes;
+        }
+        self.clock += 1;
+        self.used_bytes += bytes;
+        self.entries.insert(
+            id.to_string(),
+            Entry { factors, bytes, refs: 0, pending_evict: false, last_used: self.clock },
+        );
+        Ok(())
+    }
+
+    /// Resolve an id to its factors. The base tenant resolves to `None`
+    /// (meaning: use the baked-in quantizer factors). Adapters awaiting a
+    /// deferred eviction still resolve — their in-flight sequences keep
+    /// decoding against them.
+    pub fn get(&self, id: &str) -> Option<&AdapterFactors> {
+        self.entries.get(id).map(|e| &e.factors)
+    }
+
+    /// Pin an adapter for one in-flight sequence (touches the LRU clock).
+    /// Returns false for ids that are unknown or awaiting eviction; the
+    /// base tenant always succeeds.
+    pub fn acquire(&mut self, id: &str) -> bool {
+        if id == BASE_ADAPTER {
+            return true;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(id) {
+            Some(e) if !e.pending_evict => {
+                e.refs += 1;
+                e.last_used = clock;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop one pin; fires a deferred eviction when the last pin goes.
+    pub fn release(&mut self, id: &str) {
+        if id == BASE_ADAPTER {
+            return;
+        }
+        if let Some(e) = self.entries.get_mut(id) {
+            debug_assert!(e.refs > 0, "release without matching acquire for '{id}'");
+            e.refs = e.refs.saturating_sub(1);
+            if e.refs == 0 && e.pending_evict {
+                let e = self.entries.remove(id).unwrap();
+                self.used_bytes -= e.bytes;
+                self.evictions += 1;
+                self.deferred_evictions += 1;
+                crate::info!("adapter registry: deferred eviction of '{id}' completed");
+            }
+        }
+    }
+
+    /// Evict an adapter. Returns true when it was removed immediately;
+    /// false when it is pinned (eviction deferred to the last release) or
+    /// not resident. The base tenant is never evictable.
+    pub fn evict(&mut self, id: &str) -> bool {
+        if id == BASE_ADAPTER {
+            return false;
+        }
+        match self.entries.get_mut(id) {
+            None => false,
+            Some(e) if e.refs > 0 => {
+                e.pending_evict = true;
+                false
+            }
+            Some(_) => {
+                let e = self.entries.remove(id).unwrap();
+                self.used_bytes -= e.bytes;
+                self.evictions += 1;
+                true
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifact::{AdapterFactors, BaPair};
+    use super::*;
+    use crate::tensor::Matrix;
+
+    /// One-layer, one-slot adapter of exactly `4 * (4*r + r*4)` bytes.
+    fn factors(r: usize) -> AdapterFactors {
+        let mut f = AdapterFactors::empty(1);
+        f.layers[0].linears[0] =
+            Some(BaPair { b: Matrix::ones(4, r), a: Matrix::ones(r, 4) });
+        f
+    }
+
+    const UNIT: usize = 4 * 8; // factors(1).bytes()
+
+    #[test]
+    fn register_get_evict() {
+        let mut reg = AdapterRegistry::unbounded();
+        assert!(reg.is_empty());
+        reg.register("t0", factors(1)).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.used_bytes(), UNIT);
+        assert!(reg.contains("t0"));
+        assert!(reg.get("t0").is_some());
+        assert!(reg.evict("t0"));
+        assert!(reg.get("t0").is_none());
+        assert_eq!(reg.used_bytes(), 0);
+        assert_eq!(reg.stats().evictions, 1);
+    }
+
+    #[test]
+    fn base_tenant_is_reserved_free_and_unevictable() {
+        let mut reg = AdapterRegistry::new(UNIT);
+        assert!(reg.register(crate::adapters::BASE_ADAPTER, factors(1)).is_err());
+        assert!(reg.contains(crate::adapters::BASE_ADAPTER));
+        assert!(reg.acquire(crate::adapters::BASE_ADAPTER));
+        reg.release(crate::adapters::BASE_ADAPTER);
+        assert!(!reg.evict(crate::adapters::BASE_ADAPTER));
+        assert_eq!(reg.used_bytes(), 0);
+        assert!(reg.get(crate::adapters::BASE_ADAPTER).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_over_byte_budget() {
+        let mut reg = AdapterRegistry::new(2 * UNIT);
+        reg.register("t0", factors(1)).unwrap();
+        reg.register("t1", factors(1)).unwrap();
+        // touch t0 so t1 becomes LRU
+        assert!(reg.acquire("t0"));
+        reg.release("t0");
+        reg.register("t2", factors(1)).unwrap();
+        assert!(reg.contains("t0"), "recently-used survives");
+        assert!(!reg.contains("t1"), "LRU evicted");
+        assert!(reg.contains("t2"));
+        assert_eq!(reg.used_bytes(), 2 * UNIT);
+    }
+
+    #[test]
+    fn oversized_and_all_pinned_registrations_fail() {
+        let mut reg = AdapterRegistry::new(UNIT);
+        assert!(reg.register("big", factors(4)).is_err(), "bigger than the whole budget");
+        reg.register("t0", factors(1)).unwrap();
+        assert!(reg.acquire("t0"));
+        // no unpinned victim available
+        assert!(reg.register("t1", factors(1)).is_err());
+        reg.release("t0");
+        reg.register("t1", factors(1)).unwrap();
+        assert!(!reg.contains("t0"));
+    }
+
+    #[test]
+    fn failed_register_leaves_registry_unchanged() {
+        let mut reg = AdapterRegistry::new(2 * UNIT);
+        reg.register("t0", factors(1)).unwrap();
+        reg.register("t1", factors(1)).unwrap();
+        assert!(reg.acquire("t1"));
+        // hot-swap t0 to a 2-unit version: would need to evict t1 (pinned)
+        assert!(reg.register("t0", factors(2)).is_err());
+        assert!(reg.contains("t0"), "failed swap must not destroy the old adapter");
+        assert!(reg.get("t0").is_some());
+        assert!(reg.contains("t1"));
+        assert_eq!(reg.used_bytes(), 2 * UNIT);
+        assert_eq!(reg.stats().evictions, 0, "failed registration must not evict");
+        reg.release("t1");
+    }
+
+    #[test]
+    fn pinned_eviction_is_deferred_not_unsafe() {
+        let mut reg = AdapterRegistry::unbounded();
+        reg.register("t0", factors(2)).unwrap();
+        assert!(reg.acquire("t0"));
+        assert!(reg.acquire("t0"));
+        assert_eq!(reg.pins("t0"), 2);
+
+        // eviction while pinned: deferred, factors stay readable
+        assert!(!reg.evict("t0"));
+        assert!(reg.get("t0").is_some(), "in-flight batch keeps its factors");
+        assert!(!reg.contains("t0"), "but no new sequence may pin it");
+        assert!(!reg.acquire("t0"));
+
+        reg.release("t0");
+        assert!(reg.get("t0").is_some(), "still one pin outstanding");
+        reg.release("t0");
+        assert!(reg.get("t0").is_none(), "last release fires the eviction");
+        assert_eq!(reg.used_bytes(), 0);
+        assert_eq!(reg.stats().deferred_evictions, 1);
+    }
+
+    #[test]
+    fn hot_swap_replaces_unpinned_rejects_pinned() {
+        let mut reg = AdapterRegistry::unbounded();
+        reg.register("t0", factors(1)).unwrap();
+        reg.register("t0", factors(2)).unwrap(); // swap in a rank-2 version
+        assert_eq!(reg.used_bytes(), factors(2).bytes());
+        assert_eq!(reg.len(), 1);
+        assert!(reg.acquire("t0"));
+        assert!(reg.register("t0", factors(1)).is_err(), "pinned: no swap");
+        reg.release("t0");
+        reg.register("t0", factors(1)).unwrap();
+        assert_eq!(reg.used_bytes(), UNIT);
+    }
+}

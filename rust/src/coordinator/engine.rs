@@ -3,6 +3,7 @@
 //! host-side KV slabs packed into batch tensors per step).
 
 use super::request::greedy;
+use crate::adapters::{AdapterFactors, AdapterRegistry, BASE_ADAPTER};
 use crate::model::{KvCache, Model};
 use crate::runtime::{ExecutorHandle, HostTensor, Manifest};
 use std::collections::HashMap;
@@ -16,6 +17,8 @@ pub struct SeqState {
     pub prompt_len: usize,
     pub max_new: usize,
     pub last_logits: Vec<f32>,
+    /// tenant adapter id this sequence is served under
+    pub adapter: String,
 }
 
 impl SeqState {
@@ -47,31 +50,70 @@ pub trait Engine {
 
 // ---------------------------------------------------------------- native
 
-/// Rust-native engine: per-sequence dense KV caches on the `model::Model`.
+/// Rust-native engine: per-sequence dense KV caches on the `model::Model`,
+/// plus an [`AdapterRegistry`] of hot-swappable per-tenant LoRDS scale
+/// adapters over the model's shared packed base.
 ///
 /// Every linear in the prefill/decode loop dispatches through
-/// `LinearWeight::forward`, i.e. the fused bit-packed kernels
-/// (`kernels::fused`) for quantized formats — the engine never touches a
-/// dense dequantized weight.
+/// `LinearWeight::forward` (or its adapter-override variant), i.e. the
+/// fused bit-packed kernels (`kernels::fused`) for quantized formats — the
+/// engine never touches a dense dequantized weight, for any tenant.
+///
+/// Tenant routing: each sequence's adapter id is pinned in the registry at
+/// prefill admission and released with the sequence, so a hot eviction of
+/// an in-flight adapter is deferred, never unsafe.
 pub struct NativeEngine {
     pub model: Model,
     caches: HashMap<u64, KvCache>,
     label: String,
+    registry: AdapterRegistry,
+    /// adapter id pinned per in-flight sequence (base tenant omitted).
+    seq_adapter: HashMap<u64, String>,
 }
 
 impl NativeEngine {
     pub fn new(model: Model, label: &str) -> NativeEngine {
+        Self::with_registry(model, label, AdapterRegistry::unbounded())
+    }
+
+    /// Engine with an explicit adapter registry (byte-budgeted multi-tenant
+    /// serving).
+    pub fn with_registry(model: Model, label: &str, registry: AdapterRegistry) -> NativeEngine {
         crate::info!(
             "native engine[{label}]: {:.2} MiB packed weights ({} fp32 side-car params)",
             model.weight_bytes() as f64 / (1024.0 * 1024.0),
             model.float_params()
         );
-        NativeEngine { model, caches: HashMap::new(), label: label.to_string() }
+        NativeEngine {
+            model,
+            caches: HashMap::new(),
+            label: label.to_string(),
+            registry,
+            seq_adapter: HashMap::new(),
+        }
     }
 
-    /// Serving weight footprint (packed codes + fp32 side-cars), bytes.
+    /// Validate a tenant's factors against this engine's model, then
+    /// hot-register them (evicting LRU adapters to fit the byte budget).
+    pub fn register_adapter(&mut self, id: &str, factors: AdapterFactors) -> anyhow::Result<()> {
+        factors.validate_against(&self.model)?;
+        self.registry.register(id, factors)
+    }
+
+    /// Evict a tenant; deferred (returns false) while in-flight sequences
+    /// pin it.
+    pub fn evict_adapter(&mut self, id: &str) -> bool {
+        self.registry.evict(id)
+    }
+
+    pub fn registry(&self) -> &AdapterRegistry {
+        &self.registry
+    }
+
+    /// Serving weight footprint in bytes: the shared packed base (counted
+    /// once) + fp32 side-cars + every resident tenant adapter.
     pub fn weight_bytes(&self) -> usize {
-        self.model.weight_bytes()
+        self.model.weight_bytes() + self.registry.used_bytes()
     }
 }
 
@@ -81,9 +123,27 @@ impl Engine for NativeEngine {
     }
 
     fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        // Validate the whole batch before taking any pin or KV cache: a bad
+        // tenant id must fail the batch cleanly, not leak pins and caches
+        // for the sequences processed before it.
+        for s in seqs.iter() {
+            anyhow::ensure!(
+                self.registry.contains(&s.adapter),
+                "unknown or evicting adapter '{}' (seq {})",
+                s.adapter,
+                s.id
+            );
+        }
         for s in seqs.iter_mut() {
+            let pinned = self.registry.acquire(&s.adapter);
+            debug_assert!(pinned, "adapter '{}' validated above", s.adapter);
+            if s.adapter != BASE_ADAPTER {
+                self.seq_adapter.insert(s.id, s.adapter.clone());
+            }
             let mut cache = KvCache::new(&self.model.cfg);
-            s.last_logits = self.model.prefill(&s.tokens[..s.prompt_len], &mut cache);
+            let factors = self.registry.get(&s.adapter);
+            s.last_logits =
+                self.model.prefill_with(&s.tokens[..s.prompt_len], &mut cache, factors);
             self.caches.insert(s.id, cache);
         }
         Ok(())
@@ -93,13 +153,18 @@ impl Engine for NativeEngine {
         for s in seqs.iter_mut() {
             let cache = self.caches.get_mut(&s.id).expect("prefilled");
             let tok = *s.tokens.last().unwrap();
-            s.last_logits = self.model.decode(tok, cache);
+            // pinned at prefill ⇒ still resident even if eviction is pending
+            let factors = self.registry.get(&s.adapter);
+            s.last_logits = self.model.decode_with(tok, cache, factors);
         }
         Ok(())
     }
 
     fn release(&mut self, id: u64) {
         self.caches.remove(&id);
+        if let Some(adapter) = self.seq_adapter.remove(&id) {
+            self.registry.release(&adapter);
+        }
     }
 
     fn name(&self) -> String {
@@ -243,6 +308,12 @@ impl Engine for PjrtEngine {
             // tokens [b, prefill_seq] (pad rows by repeating the last seq)
             let mut toks = Vec::with_capacity(b * self.prefill_seq);
             for s in chunk.iter() {
+                anyhow::ensure!(
+                    s.adapter == BASE_ADAPTER,
+                    "pjrt engine serves only the base tenant (seq {} asked for adapter '{}')",
+                    s.id,
+                    s.adapter
+                );
                 anyhow::ensure!(
                     s.prompt_len == self.prefill_seq,
                     "pjrt prefill requires prompt_len == {} (got {})",

@@ -1,8 +1,21 @@
 //! Serving metrics: per-phase token throughput + request latency summaries
 //! — exactly the Prefill / Decode / Total tokens-per-second columns of
-//! Table 6, plus p50/p99 request latency for the serving example.
+//! Table 6, plus p50/p99 request latency for the serving example — and
+//! per-tenant counters for multi-tenant adapter serving (the
+//! `table5_multitenant` bench's breakdown).
 
 use crate::util::Summary;
+use std::collections::HashMap;
+
+/// Per-tenant serving counters keyed by adapter id.
+#[derive(Clone, Debug, Default)]
+pub struct AdapterCounters {
+    /// requests admitted for this tenant
+    pub requests: usize,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub completed: usize,
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
@@ -15,6 +28,8 @@ pub struct ServeMetrics {
     pub rejected: usize,
     pub latency: Summary,
     pub queue_wait: Summary,
+    /// per-tenant breakdown (adapter id → counters)
+    pub per_adapter: HashMap<String, AdapterCounters>,
 }
 
 impl ServeMetrics {
@@ -29,6 +44,24 @@ impl ServeMetrics {
     /// Total throughput over wall-clock (the paper's Total column).
     pub fn total_tps(&self) -> f64 {
         (self.prefill_tokens + self.decode_tokens) as f64 / self.wall_secs.max(1e-12)
+    }
+
+    /// Counter cell for tenant `id`, created on first touch.
+    pub fn adapter(&mut self, id: &str) -> &mut AdapterCounters {
+        self.per_adapter.entry(id.to_string()).or_default()
+    }
+
+    /// Per-tenant breakdown, sorted by adapter id.
+    pub fn print_adapters(&self) {
+        let mut ids: Vec<&String> = self.per_adapter.keys().collect();
+        ids.sort();
+        for id in ids {
+            let c = &self.per_adapter[id];
+            println!(
+                "    tenant {id:<16} req {:>4} | prefill {:>8} tok | decode {:>8} tok | done {:>4}",
+                c.requests, c.prefill_tokens, c.decode_tokens, c.completed,
+            );
+        }
     }
 
     pub fn print(&self, label: &str) {
@@ -66,5 +99,17 @@ mod tests {
     fn zero_division_safe() {
         let m = ServeMetrics::default();
         assert!(m.prefill_tps().is_finite());
+    }
+
+    #[test]
+    fn per_adapter_counters_accumulate() {
+        let mut m = ServeMetrics::default();
+        m.adapter("t0").requests += 1;
+        m.adapter("t0").decode_tokens += 5;
+        m.adapter("t1").requests += 2;
+        assert_eq!(m.per_adapter["t0"].requests, 1);
+        assert_eq!(m.per_adapter["t0"].decode_tokens, 5);
+        assert_eq!(m.per_adapter["t1"].requests, 2);
+        assert_eq!(m.per_adapter.len(), 2);
     }
 }

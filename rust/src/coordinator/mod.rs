@@ -10,7 +10,21 @@
 //!   artifacts (bucketed prefill/decode executables).
 //! * [`server`]   — the serving loop: admit → prefill → interleaved decode
 //!   → complete, with per-phase throughput metrics (Table 6's columns).
-//! * [`metrics`]  — latency/throughput accounting.
+//! * [`metrics`]  — latency/throughput accounting, incl. per-tenant
+//!   counters.
+//!
+//! # Tenant routing (multi-tenant adapter serving)
+//!
+//! Every [`Request`] names a tenant via an adapter id (default:
+//! [`BASE_ADAPTER`](crate::adapters::BASE_ADAPTER), the unadapted base).
+//! The id rides along into [`engine::SeqState`]; the batcher freely mixes
+//! tenants in one batch (stable-grouping them contiguously), because all
+//! tenants share one bit-packed code base — only the rank-r scale factors
+//! differ. [`NativeEngine`] resolves the id against its
+//! [`AdapterRegistry`](crate::adapters::AdapterRegistry) per
+//! prefill/decode call, pinning the adapter for the sequence's lifetime so
+//! hot eviction is deferred, never unsafe. The PJRT engine serves only the
+//! base tenant (per-tenant artifacts are a future lowering).
 
 pub mod batcher;
 pub mod engine;

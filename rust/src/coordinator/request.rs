@@ -1,5 +1,8 @@
-//! Request/response types + sampling.
+//! Request/response types + sampling. Every request carries a tenant
+//! adapter id ([`BASE_ADAPTER`] by default) that the engine resolves
+//! against its [`AdapterRegistry`](crate::adapters::AdapterRegistry).
 
+use crate::adapters::BASE_ADAPTER;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -8,11 +11,26 @@ pub struct Request {
     pub prompt: Vec<usize>,
     pub max_new_tokens: usize,
     pub arrival: Instant,
+    /// Serving tenant: a registered adapter id, or [`BASE_ADAPTER`] for the
+    /// unadapted base model.
+    pub adapter: String,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> Request {
-        Request { id, prompt, max_new_tokens, arrival: Instant::now() }
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            arrival: Instant::now(),
+            adapter: BASE_ADAPTER.to_string(),
+        }
+    }
+
+    /// Tag this request with a tenant adapter id (builder style).
+    pub fn with_adapter(mut self, adapter: &str) -> Request {
+        self.adapter = adapter.to_string();
+        self
     }
 }
 
@@ -21,6 +39,8 @@ pub struct Response {
     pub id: u64,
     pub prompt_len: usize,
     pub tokens: Vec<usize>,
+    /// tenant adapter this request was served under
+    pub adapter: String,
     /// seconds spent in queue before prefill started
     pub queue_s: f64,
     pub prefill_s: f64,
@@ -55,7 +75,23 @@ mod tests {
 
     #[test]
     fn response_total() {
-        let r = Response { id: 0, prompt_len: 4, tokens: vec![], queue_s: 0.1, prefill_s: 0.2, decode_s: 0.3 };
+        let r = Response {
+            id: 0,
+            prompt_len: 4,
+            tokens: vec![],
+            adapter: BASE_ADAPTER.to_string(),
+            queue_s: 0.1,
+            prefill_s: 0.2,
+            decode_s: 0.3,
+        };
         assert!((r.total_s() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn requests_default_to_the_base_tenant() {
+        let r = Request::new(0, vec![1], 4);
+        assert_eq!(r.adapter, BASE_ADAPTER);
+        let r2 = Request::new(1, vec![1], 4).with_adapter("tenant-a");
+        assert_eq!(r2.adapter, "tenant-a");
     }
 }

@@ -80,6 +80,7 @@ impl<E: Engine> Server<E> {
                             let ok = self.allocator.reserve(req.id, self.engine.max_seq());
                             debug_assert!(ok, "admission raced capacity");
                             let queue_s = req.arrival.elapsed().as_secs_f64();
+                            metrics.adapter(&req.adapter).requests += 1;
                             timings.push(ReqTiming {
                                 id: req.id,
                                 queue_s,
@@ -94,15 +95,18 @@ impl<E: Engine> Server<E> {
                                     self.engine.max_seq().saturating_sub(1).saturating_sub(0),
                                 ),
                                 last_logits: vec![],
+                                adapter: req.adapter,
                             });
                         }
                         let t0 = Instant::now();
                         self.engine.prefill(&mut seqs)?;
                         let dt = t0.elapsed().as_secs_f64();
                         metrics.prefill_secs += dt;
+                        let per_prefill = dt / seqs.len() as f64;
                         for (s, t) in seqs.iter().zip(timings.iter_mut()) {
                             metrics.prefill_tokens += s.prompt_len;
-                            t.prefill_s = dt / seqs.len() as f64;
+                            metrics.adapter(&s.adapter).prefill_tokens += s.prompt_len;
+                            t.prefill_s = per_prefill;
                         }
                         running.extend(seqs.into_iter().zip(timings));
                     } else {
@@ -129,12 +133,14 @@ impl<E: Engine> Server<E> {
                         self.engine.release(s.id);
                         self.allocator.release(s.id);
                         metrics.completed += 1;
+                        metrics.adapter(&s.adapter).completed += 1;
                         metrics.latency.add(t.queue_s + t.prefill_s + t.decode_s);
                         metrics.queue_wait.add(t.queue_s);
                         responses.push(Response {
                             id: s.id,
                             prompt_len: s.prompt_len,
                             tokens: s.tokens[s.prompt_len..].to_vec(),
+                            adapter: s.adapter,
                             queue_s: t.queue_s,
                             prefill_s: t.prefill_s,
                             decode_s: t.decode_s,
@@ -151,6 +157,9 @@ impl<E: Engine> Server<E> {
                     let dt = t0.elapsed().as_secs_f64();
                     metrics.decode_secs += dt;
                     metrics.decode_tokens += seqs.len();
+                    for s in &seqs {
+                        metrics.adapter(&s.adapter).decode_tokens += 1;
+                    }
                     let per = dt / seqs.len() as f64;
                     for ((old, timing), new) in decode_batch.iter_mut().zip(seqs) {
                         *old = new;
@@ -253,6 +262,71 @@ mod tests {
             let rep_s = single.run(vec![one]).unwrap();
             assert_eq!(rep_s.responses[0].tokens, want.tokens, "req {}", want.id);
         }
+    }
+
+    #[test]
+    fn multitenant_serving_tracks_per_adapter_metrics() {
+        let cfg = ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 48,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let mut model = Model::init(&cfg, 0);
+        model.quantize_lords(
+            cfg.block,
+            &crate::quant::Codebook::normal_float(4),
+            crate::quant::lords::RefineCfg { steps: 2, ..Default::default() },
+            false,
+        );
+        let mut engine = NativeEngine::new(model, "mt");
+        let base = crate::adapters::AdapterFactors::from_model(&engine.model);
+        let mut arng = Rng::new(3);
+        engine.register_adapter("t0", base.perturbed(0.05, &mut arng)).unwrap();
+        engine.register_adapter("t1", base.perturbed(0.05, &mut arng)).unwrap();
+        let serve = ServeCfg {
+            decode_buckets: vec![1, 2, 4],
+            prefill_buckets: vec![1, 2, 4],
+            batch_window_us: 0,
+            max_queue: 64,
+            max_new_tokens: 8,
+            workers: 1,
+        };
+        let mut srv = Server::new(engine, serve);
+        let tenants = ["base", "t0", "t1"];
+        let mut requests = reqs(6, 8, 4);
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.adapter = tenants[i % 3].to_string();
+        }
+        let report = srv.run(requests).unwrap();
+        assert_eq!(report.metrics.completed, 6);
+        for t in tenants {
+            let c = &report.metrics.per_adapter[t];
+            assert_eq!(c.requests, 2, "{t}");
+            assert_eq!(c.completed, 2, "{t}");
+            assert_eq!(c.prefill_tokens, 2 * 8, "{t}");
+            assert!(c.decode_tokens >= 2 * 3, "{t}");
+        }
+        for r in &report.responses {
+            assert_eq!(r.adapter, tenants[r.id as usize % 3]);
+            assert_eq!(r.tokens.len(), 4);
+        }
+        // every in-flight pin was released with its sequence
+        assert_eq!(srv.engine.registry().pins("t0"), 0);
+        assert_eq!(srv.engine.registry().pins("t1"), 0);
+    }
+
+    #[test]
+    fn unknown_adapter_fails_the_run() {
+        let mut srv = tiny_server();
+        let requests =
+            vec![Request::new(0, vec![1, 2, 3, 4], 2).with_adapter("ghost-tenant")];
+        assert!(srv.run(requests).is_err());
     }
 
     #[test]

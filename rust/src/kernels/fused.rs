@@ -186,6 +186,37 @@ pub fn lords_matmul(
     y
 }
 
+/// Multi-tenant forward: [`lords_matmul_transb`] with per-call scale
+/// factors — the adapter's (B′, A′) when present, else the quantizer's
+/// baked-in (B, A). The packed codes are shared either way; serving a
+/// tenant never duplicates or re-dequantizes `Q`, and the adapter rank r′
+/// may differ from the base rank.
+pub fn lords_matmul_transb_adapter(
+    x: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    base_b: &Matrix,
+    base_a: &Matrix,
+    adapter: Option<(&Matrix, &Matrix)>,
+) -> Matrix {
+    let (b, a) = adapter.unwrap_or((base_b, base_a));
+    lords_matmul_transb(x, codes, lut, b, a)
+}
+
+/// Multi-tenant backward-dx: [`lords_matmul`] with per-call scale factors
+/// (see [`lords_matmul_transb_adapter`]).
+pub fn lords_matmul_adapter(
+    g: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    base_b: &Matrix,
+    base_a: &Matrix,
+    adapter: Option<(&Matrix, &Matrix)>,
+) -> Matrix {
+    let (b, a) = adapter.unwrap_or((base_b, base_a));
+    lords_matmul(g, codes, lut, b, a)
+}
+
 /// Fused block-wise forward: `y = x · (lut[Q] ⊙ (s ⊗ 1))ᵀ`.
 ///
 /// scales: n × (m / block) absmax scales.
@@ -364,6 +395,33 @@ mod tests {
         let w_hat = dense_lords(&codes, &lut, &b, &a);
         let fused = lords_matmul_transb(&x, &codes, &lut, &b, &a);
         assert_allclose(&fused.data, &matmul_transb(&x, &w_hat).data, 1e-4, 1e-4, "tiling");
+    }
+
+    #[test]
+    fn adapter_override_swaps_scale_factors_only() {
+        let mut rng = crate::util::Rng::new(21);
+        let (n, m, t) = (17, 24, 5);
+        let lut: Vec<f32> = (0..16).map(|i| i as f32 / 15.0 - 0.5).collect();
+        let flat: Vec<u8> = (0..n * m).map(|_| rng.below(16) as u8).collect();
+        let codes = PackedCodes::from_flat(4, n, m, &flat);
+        let b = Matrix::randn(n, 2, 0.3, &mut rng);
+        let a = Matrix::randn(2, m, 0.3, &mut rng);
+        // adapter with a different rank than the base factors
+        let b2 = Matrix::randn(n, 3, 0.3, &mut rng);
+        let a2 = Matrix::randn(3, m, 0.3, &mut rng);
+        let x = Matrix::randn(t, m, 1.0, &mut rng);
+        let gup = Matrix::randn(t, n, 1.0, &mut rng);
+
+        // None ⇒ identical to the baked-in-factor kernel
+        let none = lords_matmul_transb_adapter(&x, &codes, &lut, &b, &a, None);
+        assert_eq!(none.data, lords_matmul_transb(&x, &codes, &lut, &b, &a).data);
+
+        // Some ⇒ matches the dense-merged tenant weight Ŵ′ = lut[Q] ⊙ (B′A′)
+        let w_merged = dense_lords(&codes, &lut, &b2, &a2);
+        let fwd = lords_matmul_transb_adapter(&x, &codes, &lut, &b, &a, Some((&b2, &a2)));
+        assert_allclose(&fwd.data, &matmul_transb(&x, &w_merged).data, 1e-4, 1e-4, "adapter fwd");
+        let bwd = lords_matmul_adapter(&gup, &codes, &lut, &b, &a, Some((&b2, &a2)));
+        assert_allclose(&bwd.data, &matmul(&gup, &w_merged).data, 1e-4, 1e-4, "adapter bwd");
     }
 
     #[test]

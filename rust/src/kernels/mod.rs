@@ -53,11 +53,21 @@
 //! path remains only where a dense matrix is semantically required: QAT
 //! shadow weights (STE fake-quant produces Ŵ as a training byproduct) and
 //! `effective()` consumers like checkpointing and the PJRT bridge.
+//!
+//! # Multi-tenant adapter override
+//!
+//! The LoRDS kernels take their scale factors per call, so a served tenant
+//! can substitute its fine-tuned (B′, A′) for the quantizer's baked-in
+//! pair ([`fused::lords_matmul_transb_adapter`] /
+//! [`fused::lords_matmul_adapter`]) while every tenant shares the same
+//! [`PackedCodes`] base — the zero-overhead multi-tenant serving story of
+//! the [`adapters`](crate::adapters) subsystem.
 
 pub mod fused;
 pub mod packed;
 
 pub use fused::{
-    blockwise_matmul, blockwise_matmul_transb, lords_matmul, lords_matmul_transb,
+    blockwise_matmul, blockwise_matmul_transb, lords_matmul, lords_matmul_adapter,
+    lords_matmul_transb, lords_matmul_transb_adapter,
 };
 pub use packed::PackedCodes;

@@ -27,6 +27,7 @@
 //! | [`optim`] | AdamW / SGD / LR schedules |
 //! | [`quant`] | **the paper**: codebooks, block-wise quant, LoRDS (Alg. 1), STE, mixed precision, GPTQ/AWQ/LoftQ/QPiSSA/QLoRA baselines, error metrics |
 //! | [`kernels`] | bit-packed code storage + tiled fused dequant-matmul kernels (the zero-overhead inference claim, Figure 2) |
+//! | [`adapters`] | multi-tenant LoRDS scale adapters: per-tenant (B′, A′) artifacts + hot-swappable ref-counted registry over one shared packed base (§3.4 at serving time) |
 //! | [`model`] | Llama-style transformer with manual backward + quantized linears |
 //! | [`data`] | synthetic corpus, calibration sampler, task suite |
 //! | [`train`] | LM pre-training, QAT, PEFT trainers |
@@ -41,6 +42,7 @@
 // take the paper's full hyper-parameter lists.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod adapters;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -12,7 +12,7 @@ use std::io::{Read, Write};
 
 const MAGIC: &[u8; 8] = b"LORDSCK1";
 
-fn write_mat(w: &mut impl Write, m: &Matrix) -> std::io::Result<()> {
+pub(crate) fn write_mat(w: &mut impl Write, m: &Matrix) -> std::io::Result<()> {
     w.write_all(&(m.rows as u32).to_le_bytes())?;
     w.write_all(&(m.cols as u32).to_le_bytes())?;
     for v in &m.data {
@@ -21,7 +21,7 @@ fn write_mat(w: &mut impl Write, m: &Matrix) -> std::io::Result<()> {
     Ok(())
 }
 
-fn read_mat(r: &mut impl Read) -> std::io::Result<Matrix> {
+pub(crate) fn read_mat(r: &mut impl Read) -> std::io::Result<Matrix> {
     let mut b4 = [0u8; 4];
     r.read_exact(&mut b4)?;
     let rows = u32::from_le_bytes(b4) as usize;
@@ -112,6 +112,24 @@ impl Model {
         }
         Ok(model)
     }
+
+    /// Export this model's LoRDS scale factors as a named adapter artifact
+    /// (the PEFT trainer's hand-off to the serving side).
+    pub fn save_adapter(&self, id: &str, path: &str) -> anyhow::Result<()> {
+        let art = crate::adapters::AdapterArtifact::from_model(self, id)?;
+        art.save(path)?;
+        Ok(())
+    }
+
+    /// Load a PEFT adapter artifact and dense-merge its (B′, A′) factors
+    /// into this LoRDS-quantized model; returns the adapter id. Online
+    /// multi-tenant serving registers the artifact with an
+    /// [`AdapterRegistry`](crate::adapters::AdapterRegistry) instead.
+    pub fn load_adapter(&mut self, path: &str) -> anyhow::Result<String> {
+        let art = crate::adapters::AdapterArtifact::load(path)?;
+        art.factors.apply_to(self)?;
+        Ok(art.id)
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +162,50 @@ mod tests {
         } else {
             panic!();
         }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn adapter_export_import_roundtrip() {
+        let cfg = ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let mut model = Model::init(&cfg, 7);
+        model.quantize_lords(
+            cfg.block,
+            &crate::quant::Codebook::normal_float(4),
+            crate::quant::lords::RefineCfg { steps: 2, ..Default::default() },
+            false,
+        );
+        let pristine = model.clone();
+        // simulate a PEFT run: nudge the scale factors
+        for layer in model.layers.iter_mut() {
+            for (_, lw) in layer.linears_mut() {
+                if let LinearWeight::Lords { q, .. } = lw {
+                    for v in q.b.data.iter_mut() {
+                        *v += 0.01;
+                    }
+                }
+            }
+        }
+        let path = std::env::temp_dir().join("lords_model_adapter_test.bin");
+        let path = path.to_str().unwrap();
+        model.save_adapter("tuned", path).unwrap();
+        let mut fresh = pristine;
+        let id = fresh.load_adapter(path).unwrap();
+        assert_eq!(id, "tuned");
+        assert_eq!(
+            crate::adapters::AdapterFactors::from_model(&fresh),
+            crate::adapters::AdapterFactors::from_model(&model)
+        );
         std::fs::remove_file(path).ok();
     }
 

@@ -106,6 +106,21 @@ impl LinearWeight {
         }
     }
 
+    /// Multi-tenant inference forward: dequantize the shared packed codes
+    /// through a tenant adapter's (B′, A′) instead of the baked-in factors.
+    /// Only meaningful for frozen-code LoRDS linears — the only
+    /// representation whose adaptation is a pure scale swap.
+    pub fn forward_adapted(&self, x: &Matrix, pair: &crate::adapters::BaPair) -> Matrix {
+        match self {
+            LinearWeight::Lords { q, shadow_w: None } => {
+                q.matmul_transb_with(x, &pair.b, &pair.a)
+            }
+            other => panic!(
+                "adapter override requires a frozen-code LoRDS linear, got {other:?}"
+            ),
+        }
+    }
+
     /// Training forward: returns output + cache for backward. Frozen-code
     /// representations take the same fused packed path as [`Self::forward`];
     /// only QAT materializes Ŵ (the STE fake-quant needs it anyway, and the

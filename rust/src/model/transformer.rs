@@ -6,6 +6,7 @@
 
 use super::attention::{attention_bwd, attention_decode, attention_fwd, rope_bwd, rope_fwd, AttnCache};
 use super::linear::{LinearCache, LinearGrads, LinearWeight};
+use crate::adapters::{AdapterFactors, BaPair};
 use super::loss::{cross_entropy_bwd, cross_entropy_fwd};
 use super::norm::{rmsnorm_bwd, rmsnorm_fwd, NormCache};
 use crate::config::ModelCfg;
@@ -470,27 +471,42 @@ impl Model {
 
     /// Prefill one sequence into a KV cache; returns last-position logits.
     pub fn prefill(&self, tokens: &[usize], cache: &mut KvCache) -> Vec<f32> {
+        self.prefill_with(tokens, cache, None)
+    }
+
+    /// Prefill through an optional tenant adapter: every frozen-code LoRDS
+    /// linear dequantizes the shared packed codes through the adapter's
+    /// (B′, A′) slot instead of the baked-in factors (multi-tenant serving;
+    /// `None` = the base tenant).
+    pub fn prefill_with(
+        &self,
+        tokens: &[usize],
+        cache: &mut KvCache,
+        adapter: Option<&AdapterFactors>,
+    ) -> Vec<f32> {
         let h = self.cfg.n_heads;
         let theta = 10_000.0f32;
         let s = tokens.len();
         assert!(s <= self.cfg.max_seq);
         let mut x = self.embed(tokens);
         for (li, layer) in self.layers.iter().enumerate() {
+            let lf = adapter.map(|f| &f.layers[li]);
+            let ov = |slot: usize| lf.and_then(|l| l.linears[slot].as_ref());
             let (h1, _) = rmsnorm_fwd(&x, &layer.attn_norm);
-            let mut q = layer.wq.forward(&h1);
-            let mut k = layer.wk.forward(&h1);
-            let v = layer.wv.forward(&h1);
+            let mut q = fwd(&layer.wq, &h1, ov(0));
+            let mut k = fwd(&layer.wk, &h1, ov(1));
+            let v = fwd(&layer.wv, &h1, ov(2));
             rope_fwd(&mut q, h, 0, theta);
             rope_fwd(&mut k, h, 0, theta);
             cache.k[li].paste(0, 0, &k);
             cache.v[li].paste(0, 0, &v);
             let (att, _) = attention_fwd(&q, &k, &v, h);
-            let o = layer.wo.forward(&att);
+            let o = fwd(&layer.wo, &att, ov(3));
             x.add_assign(&o);
             let (h2, _) = rmsnorm_fwd(&x, &layer.mlp_norm);
-            let gate_pre = layer.w_gate.forward(&h2);
-            let up = layer.w_up.forward(&h2);
-            let down = layer.w_down.forward(&swiglu(&gate_pre, &up));
+            let gate_pre = fwd(&layer.w_gate, &h2, ov(4));
+            let up = fwd(&layer.w_up, &h2, ov(5));
+            let down = fwd(&layer.w_down, &swiglu(&gate_pre, &up), ov(6));
             x.add_assign(&down);
         }
         cache.len = s;
@@ -501,33 +517,56 @@ impl Model {
 
     /// One decode step for one sequence.
     pub fn decode(&self, token: usize, cache: &mut KvCache) -> Vec<f32> {
+        self.decode_with(token, cache, None)
+    }
+
+    /// One decode step through an optional tenant adapter (see
+    /// [`Self::prefill_with`]).
+    pub fn decode_with(
+        &self,
+        token: usize,
+        cache: &mut KvCache,
+        adapter: Option<&AdapterFactors>,
+    ) -> Vec<f32> {
         let h = self.cfg.n_heads;
         let theta = 10_000.0f32;
         let pos = cache.len;
         assert!(pos < self.cfg.max_seq, "KV cache full");
         let mut x = self.embed(&[token]);
         for (li, layer) in self.layers.iter().enumerate() {
+            let lf = adapter.map(|f| &f.layers[li]);
+            let ov = |slot: usize| lf.and_then(|l| l.linears[slot].as_ref());
             let (h1, _) = rmsnorm_fwd(&x, &layer.attn_norm);
-            let mut q = layer.wq.forward(&h1);
-            let mut k = layer.wk.forward(&h1);
-            let v = layer.wv.forward(&h1);
+            let mut q = fwd(&layer.wq, &h1, ov(0));
+            let mut k = fwd(&layer.wk, &h1, ov(1));
+            let v = fwd(&layer.wv, &h1, ov(2));
             rope_fwd(&mut q, h, pos, theta);
             rope_fwd(&mut k, h, pos, theta);
             cache.k[li].paste(pos, 0, &k);
             cache.v[li].paste(pos, 0, &v);
             let att = attention_decode(&q, &cache.k[li], &cache.v[li], pos + 1, h);
-            let o = layer.wo.forward(&att);
+            let o = fwd(&layer.wo, &att, ov(3));
             x.add_assign(&o);
             let (h2, _) = rmsnorm_fwd(&x, &layer.mlp_norm);
-            let gate_pre = layer.w_gate.forward(&h2);
-            let up = layer.w_up.forward(&h2);
-            let down = layer.w_down.forward(&swiglu(&gate_pre, &up));
+            let gate_pre = fwd(&layer.w_gate, &h2, ov(4));
+            let up = fwd(&layer.w_up, &h2, ov(5));
+            let down = fwd(&layer.w_down, &swiglu(&gate_pre, &up), ov(6));
             x.add_assign(&down);
         }
         cache.len = pos + 1;
         let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
         let logits = crate::tensor::matmul_transb(&xf, &self.lm_head);
         logits.row(0).to_vec()
+    }
+}
+
+/// One linear forward, dispatched through a tenant adapter slot when
+/// present (slots positionally match [`LayerWeights::linears`] order).
+#[inline]
+fn fwd(lw: &LinearWeight, x: &Matrix, ov: Option<&BaPair>) -> Matrix {
+    match ov {
+        Some(pair) => lw.forward_adapted(x, pair),
+        None => lw.forward(x),
     }
 }
 
@@ -702,6 +741,28 @@ mod tests {
         let dec = model.decode(tokens[7], &mut cache);
         crate::util::prop::assert_allclose(&dec, full.row(7), 1e-3, 1e-3, "decode logits");
         assert_eq!(cache.len, 8);
+    }
+
+    #[test]
+    fn adapted_prefill_decode_matches_merged_factors() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 13);
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 2, ..Default::default() }, false);
+        let mut rng = Rng::new(14);
+        let adapter = crate::adapters::AdapterFactors::from_model(&model).perturbed(0.05, &mut rng);
+        // merged reference: bake the tenant factors into a clone
+        let mut merged = model.clone();
+        adapter.apply_to(&mut merged).unwrap();
+        let tokens: Vec<usize> = (0..6).map(|_| rng.below(cfg.vocab)).collect();
+        let mut c1 = KvCache::new(&cfg);
+        let mut c2 = KvCache::new(&cfg);
+        let a = model.prefill_with(&tokens[..5], &mut c1, Some(&adapter));
+        let b = merged.prefill(&tokens[..5], &mut c2);
+        crate::util::prop::assert_allclose(&a, &b, 1e-6, 1e-6, "adapted prefill");
+        let d1 = model.decode_with(tokens[5], &mut c1, Some(&adapter));
+        let d2 = merged.decode(tokens[5], &mut c2);
+        crate::util::prop::assert_allclose(&d1, &d2, 1e-6, 1e-6, "adapted decode");
     }
 
     #[test]

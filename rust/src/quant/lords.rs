@@ -183,12 +183,49 @@ impl LordsQuant {
     /// reconstructing the scale tile S[j0..j1, :] = B[j0..j1, :]·A per
     /// row-tile, mirroring the Pallas kernel (`kernels::fused`).
     pub fn matmul_transb(&self, x: &Matrix) -> Matrix {
-        kernels::lords_matmul_transb(x, &self.codes, &self.codebook.levels, &self.b, &self.a)
+        self.matmul_transb_opt(x, None)
     }
 
     /// Fused y = g · Ŵ (the backward-dx pattern), also Ŵ-free.
     pub fn matmul(&self, g: &Matrix) -> Matrix {
-        kernels::lords_matmul(g, &self.codes, &self.codebook.levels, &self.b, &self.a)
+        self.matmul_opt(g, None)
+    }
+
+    /// Fused forward with an optional per-call scale override — the
+    /// multi-tenant serving entry point: `None` dequantizes through the
+    /// baked-in factors, `Some((B′, A′))` through a tenant adapter's (same
+    /// shared packed codes either way; the adapter rank may differ — §3.4).
+    pub fn matmul_transb_opt(&self, x: &Matrix, adapter: Option<(&Matrix, &Matrix)>) -> Matrix {
+        kernels::lords_matmul_transb_adapter(
+            x,
+            &self.codes,
+            &self.codebook.levels,
+            &self.b,
+            &self.a,
+            adapter,
+        )
+    }
+
+    /// Fused backward-dx with an optional per-call scale override (see
+    /// [`Self::matmul_transb_opt`]).
+    pub fn matmul_opt(&self, g: &Matrix, adapter: Option<(&Matrix, &Matrix)>) -> Matrix {
+        kernels::lords_matmul_adapter(g, &self.codes, &self.codebook.levels, &self.b, &self.a, adapter)
+    }
+
+    /// Tenant-view forward y = x · Ŵ′ᵀ with Ŵ′ = lut[Q] ⊙ (B′A′).
+    pub fn matmul_transb_with(&self, x: &Matrix, b: &Matrix, a: &Matrix) -> Matrix {
+        self.matmul_transb_opt(x, Some((b, a)))
+    }
+
+    /// Tenant-view y = g · Ŵ′ (see [`Self::matmul_transb_with`]).
+    pub fn matmul_with(&self, g: &Matrix, b: &Matrix, a: &Matrix) -> Matrix {
+        self.matmul_opt(g, Some((b, a)))
+    }
+
+    /// Dense-merged tenant weight Ŵ′ = lut[Q] ⊙ (B′A′) — the reference the
+    /// fused adapter path is tested against.
+    pub fn dequantize_with(&self, b: &Matrix, a: &Matrix) -> Matrix {
+        self.q_values().hadamard(&matmul(b, a))
     }
 
     /// Bytes of packed code storage + fp32 side-cars (B, A).
@@ -308,6 +345,35 @@ mod tests {
             assert_allclose(&fused.data, &dense.data, 1e-4, 1e-4, "fused lords matmul");
             Ok(())
         });
+    }
+
+    #[test]
+    fn tenant_view_matches_dense_merged() {
+        let mut rng = Rng::new(9);
+        let w = llm_like(&mut rng, 24, 32);
+        let cfg = RefineCfg { steps: 10, ..Default::default() };
+        let (q, _) = LordsQuant::quantize_with_rank(&w, 16, 2, &nf4(), cfg);
+        // tenant factors at a different rank than the quantizer's
+        let mut prng = Rng::new(10);
+        let b2 = Matrix::randn(24, 3, 0.2, &mut prng);
+        let a2 = Matrix::randn(3, 32, 0.2, &mut prng);
+        let w_merged = q.dequantize_with(&b2, &a2);
+        let x = Matrix::randn(5, 32, 1.0, &mut prng);
+        assert_allclose(
+            &q.matmul_transb_with(&x, &b2, &a2).data,
+            &matmul_transb(&x, &w_merged).data,
+            1e-4,
+            1e-4,
+            "tenant fwd",
+        );
+        let g = Matrix::randn(5, 24, 1.0, &mut prng);
+        assert_allclose(
+            &q.matmul_with(&g, &b2, &a2).data,
+            &matmul(&g, &w_merged).data,
+            1e-4,
+            1e-4,
+            "tenant bwd",
+        );
     }
 
     #[test]

@@ -67,6 +67,24 @@ impl NativeTrainer {
         log
     }
 
+    /// Package the PEFT-tuned (B′, A′) scale factors of `model` as a named,
+    /// servable adapter artifact — the hand-off from fine-tuning to the
+    /// multi-tenant serving side (`adapters::AdapterRegistry`). The packed
+    /// codes stay with the shared base; the artifact carries only the
+    /// rank-r factors (~r·(n+m) floats per linear).
+    pub fn export_adapter(
+        &self,
+        model: &Model,
+        id: &str,
+    ) -> anyhow::Result<crate::adapters::AdapterArtifact> {
+        anyhow::ensure!(
+            self.kind == TrainKind::Peft,
+            "adapter export is a PEFT-path operation (trainer kind is {:?})",
+            self.kind
+        );
+        crate::adapters::AdapterArtifact::from_model(model, id)
+    }
+
     /// One optimization step on an explicit batch; returns the loss.
     pub fn step(&mut self, model: &mut Model, tokens: &[usize], targets: &[usize]) -> f32 {
         let (loss, grads) = model.loss_and_grads(tokens, targets, self.cfg.batch, tokens.len() / self.cfg.batch);
@@ -239,6 +257,31 @@ mod tests {
             assert_ne!(q.b.data, b_before.data, "B must move");
         }
         assert_eq!(model.tok_emb.data, emb_before.data, "embeddings frozen in PEFT");
+    }
+
+    #[test]
+    fn peft_run_exports_a_servable_adapter() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 5);
+        let corpus = Corpus::generate(CorpusKind::Wiki, cfg.vocab, 6000, 500, 5);
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 2, ..Default::default() }, false);
+        let pristine = crate::adapters::AdapterFactors::from_model(&model);
+        let mut peft = NativeTrainer::new(train_cfg(5, 2e-3), TrainKind::Peft);
+        peft.run(&mut model, &corpus);
+        let art = peft.export_adapter(&model, "tenant-a").unwrap();
+        assert_eq!(art.id, "tenant-a");
+        assert_ne!(art.factors, pristine, "PEFT must have moved the factors");
+        // the artifact applies cleanly onto a fresh copy of the same base
+        let mut fresh = Model::init(&cfg, 5);
+        fresh.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 2, ..Default::default() }, false);
+        art.factors.validate_against(&fresh).unwrap();
+        art.factors.apply_to(&mut fresh).unwrap();
+        assert_eq!(crate::adapters::AdapterFactors::from_model(&fresh), art.factors);
+        // a pre-training trainer must refuse to export
+        let pre = NativeTrainer::new(train_cfg(1, 1e-3), TrainKind::Pretrain);
+        assert!(pre.export_adapter(&model, "x").is_err());
     }
 
     #[test]

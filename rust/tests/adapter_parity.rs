@@ -1,0 +1,218 @@
+//! Multi-tenant adapter gate: the fused kernels serving a tenant's
+//! (B′, A′) scale override must match the dense-merged reference within
+//! 1e-4 across {2, 3, 4}-bit codes, and a served batch mixing ≥ 3 adapters
+//! over one shared `PackedCodes` base must reproduce each tenant's
+//! dedicated single-tenant serve exactly — the acceptance bar for the
+//! `adapters` subsystem.
+
+use lords::adapters::{AdapterFactors, AdapterRegistry, BASE_ADAPTER};
+use lords::config::{ModelCfg, ServeCfg};
+use lords::coordinator::engine::{Engine, SeqState};
+use lords::coordinator::{NativeEngine, Request, Server};
+use lords::model::{KvCache, LinearWeight, Model};
+use lords::quant::lords::{LordsQuant, RefineCfg};
+use lords::quant::Codebook;
+use lords::report::testbed::{llm_like_weight, ModuleShape};
+use lords::tensor::{matmul, matmul_transb, Matrix};
+use lords::util::prop::{max_abs_diff, prop_check};
+use lords::util::Rng;
+
+const TOL: f32 = 1e-4;
+
+#[test]
+fn fused_with_adapter_matches_dense_merged_all_bit_widths() {
+    for bits in [2u32, 3, 4] {
+        let cb = Codebook::normal_float(bits);
+        prop_check(6, |g| {
+            let n = g.usize(4..=40);
+            let m = g.usize(2..=6) * 8;
+            let t = g.usize(1..=10);
+            let base_rank = g.usize(1..=3);
+            let adapter_rank = g.usize(1..=4); // may differ from base_rank
+            let mut rng = g.rng().fork(300 + bits as u64);
+            let w = llm_like_weight(ModuleShape { name: "W", n, m }, &mut rng);
+            let cfg = RefineCfg { steps: 8, ..Default::default() };
+            let (q, _) = LordsQuant::quantize_with_rank(&w, 8, base_rank, &cb, cfg);
+            if !q.b.all_finite() || !q.a.all_finite() {
+                return Err(format!("non-finite scale factors at {n}x{m}"));
+            }
+            // tenant factors: a PEFT-shaped perturbation at its own rank
+            let b2 = Matrix::randn(n, adapter_rank, 0.25, &mut rng);
+            let a2 = Matrix::randn(adapter_rank, m, 0.25, &mut rng);
+            let w_merged = q.dequantize_with(&b2, &a2);
+            let x = Matrix::randn(t, m, 1.0, &mut rng);
+            let fwd = q.matmul_transb_with(&x, &b2, &a2);
+            let want = matmul_transb(&x, &w_merged);
+            let diff = max_abs_diff(&fwd.data, &want.data);
+            if diff > TOL {
+                return Err(format!("nf{bits} fwd {n}x{m} t={t}: {diff} > {TOL}"));
+            }
+            let gup = Matrix::randn(t, n, 1.0, &mut rng);
+            let bwd = q.matmul_with(&gup, &b2, &a2);
+            let want_b = matmul(&gup, &w_merged);
+            let diff_b = max_abs_diff(&bwd.data, &want_b.data);
+            if diff_b > TOL {
+                return Err(format!("nf{bits} bwd {n}x{m} t={t}: {diff_b} > {TOL}"));
+            }
+            Ok(())
+        });
+    }
+}
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 48,
+        block: 8,
+        codebook: "nf4".into(),
+        qlora_rank: 4,
+    }
+}
+
+fn lords_model(cfg: &ModelCfg, seed: u64) -> Model {
+    let mut model = Model::init(cfg, seed);
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: 3, ..Default::default() },
+        false,
+    );
+    model
+}
+
+fn serve_cfg() -> ServeCfg {
+    ServeCfg {
+        decode_buckets: vec![1, 2, 4],
+        prefill_buckets: vec![1, 2, 4],
+        batch_window_us: 0,
+        max_queue: 64,
+        max_new_tokens: 8,
+        workers: 1,
+    }
+}
+
+fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(77);
+    (0..n)
+        .map(|i| {
+            Request::new(i as u64, (0..prompt_len).map(|_| rng.below(vocab)).collect(), max_new)
+        })
+        .collect()
+}
+
+/// The acceptance criterion: one shared packed base, a served batch mixing
+/// ≥ 3 adapters (+ the base tenant), and every tenant's output must match
+/// its dense-merged reference — token streams exactly, logits ≤ 1e-4.
+#[test]
+fn served_mixed_batch_matches_per_tenant_dense_references() {
+    let cfg = tiny_cfg();
+    let model = lords_model(&cfg, 11);
+    let base_factors = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(12);
+    let tenants = ["tenant-a", "tenant-b", "tenant-c"];
+    let factors: Vec<AdapterFactors> =
+        tenants.iter().map(|_| base_factors.perturbed(0.08, &mut arng)).collect();
+
+    // --- multi-tenant serve: 8 requests cycling base + 3 adapters
+    let mut engine = NativeEngine::new(model.clone(), "mt");
+    for (t, f) in tenants.iter().zip(&factors) {
+        engine.register_adapter(t, f.clone()).unwrap();
+    }
+    let cycle = [BASE_ADAPTER, tenants[0], tenants[1], tenants[2]];
+    let mut reqs = requests(8, 10, 5, cfg.vocab);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.adapter = cycle[i % cycle.len()].to_string();
+    }
+    let mut server = Server::new(engine, serve_cfg());
+    let mixed = server.run(reqs).unwrap();
+    assert_eq!(mixed.metrics.completed, 8);
+    assert!(
+        mixed.metrics.per_adapter.len() >= 4,
+        "batch must have mixed ≥ 3 adapters + base: {:?}",
+        mixed.metrics.per_adapter.keys().collect::<Vec<_>>()
+    );
+
+    // --- per-tenant references: merge each adapter into its own copy of
+    // the base and serve that tenant's requests alone
+    for (ti, tenant) in cycle.iter().enumerate() {
+        let mut merged = model.clone();
+        if *tenant != BASE_ADAPTER {
+            factors[ti - 1].apply_to(&mut merged).unwrap();
+        }
+        let mut single = Server::new(NativeEngine::new(merged, tenant), serve_cfg());
+        let solo_reqs: Vec<Request> = requests(8, 10, 5, cfg.vocab)
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % cycle.len() == ti)
+            .map(|(_, r)| r)
+            .collect();
+        let solo = single.run(solo_reqs).unwrap();
+        for want in &solo.responses {
+            let got = mixed.responses.iter().find(|r| r.id == want.id).unwrap();
+            assert_eq!(got.adapter, *tenant);
+            assert_eq!(
+                got.tokens, want.tokens,
+                "tenant {tenant} req {}: mixed-batch serve diverged from its \
+                 dense-merged single-tenant reference",
+                want.id
+            );
+        }
+    }
+
+    // --- logits-level bound vs a fully dense merged model (≤ 1e-4)
+    let mut rng = Rng::new(13);
+    let prompt: Vec<usize> = (0..10).map(|_| rng.below(cfg.vocab)).collect();
+    for (tenant_f, _) in factors.iter().zip(tenants.iter()) {
+        let mut dense_ref = model.clone();
+        tenant_f.apply_to(&mut dense_ref).unwrap();
+        dense_ref.map_linears(|w| LinearWeight::Dense(w.clone()));
+        let mut c1 = KvCache::new(&cfg);
+        let mut c2 = KvCache::new(&cfg);
+        let fused = model.prefill_with(&prompt, &mut c1, Some(tenant_f));
+        let dense = dense_ref.prefill(&prompt, &mut c2);
+        let diff = max_abs_diff(&fused, &dense);
+        assert!(diff <= TOL, "adapted prefill vs dense-merged: {diff} > {TOL}");
+    }
+}
+
+#[test]
+fn inflight_eviction_is_deferred_at_the_engine() {
+    let cfg = tiny_cfg();
+    let model = lords_model(&cfg, 21);
+    let base_factors = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(22);
+    let mut engine =
+        NativeEngine::with_registry(model, "evict", AdapterRegistry::unbounded());
+    engine.register_adapter("t0", base_factors.perturbed(0.05, &mut arng)).unwrap();
+
+    let mut rng = Rng::new(23);
+    let prompt: Vec<usize> = (0..8).map(|_| rng.below(cfg.vocab)).collect();
+    let mut seqs = vec![SeqState {
+        id: 1,
+        prompt_len: prompt.len(),
+        tokens: prompt,
+        max_new: 4,
+        last_logits: vec![],
+        adapter: "t0".into(),
+    }];
+    engine.prefill(&mut seqs).unwrap();
+    assert_eq!(engine.registry().pins("t0"), 1);
+
+    // evicting a pinned adapter is deferred; the in-flight sequence keeps
+    // decoding against it, but new sequences can no longer pin it
+    assert!(!engine.evict_adapter("t0"));
+    assert!(engine.registry().get("t0").is_some());
+    let next = seqs[0].next_token();
+    seqs[0].tokens.push(next);
+    engine.decode(&mut seqs).unwrap();
+    assert!(!engine.registry().contains("t0"));
+
+    // releasing the sequence fires the deferred eviction
+    engine.release(1);
+    assert!(engine.registry().get("t0").is_none());
+    assert_eq!(engine.registry().stats().deferred_evictions, 1);
+}
