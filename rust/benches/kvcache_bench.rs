@@ -1,0 +1,185 @@
+//! KV-cache bench — decode throughput, KV memory, and max concurrent
+//! sequences at a fixed pool byte budget, for dense f32 vs 8-bit vs 4-bit
+//! packed KV (rank-r low-rank scales per block, `kvquant`).
+//!
+//! Per format the serve trace reports prefill/decode/total tokens/s and
+//! the pool's peak sealed-storage bytes; a fixed 64 MiB budget is then
+//! sized per format to report how many worst-case (`max_seq`) sequences
+//! it admits — the lever that multiplies serving concurrency. The 8-bit
+//! run also checks token-parity against the dense trace.
+//!
+//! Expected shape: 8/4-bit decode within a modest factor of dense (the
+//! fused packed attention pays one dequant sweep per cached row), with
+//! ≥ 3.5x KV-bytes reduction and ≥ 2x admitted sequences at 4-bit.
+//!
+//! Results are written to `BENCH_kvcache.json` (override with
+//! `LORDS_BENCH_JSON=path`).
+
+use lords::bench::TableBuilder;
+use lords::config::ServeCfg;
+use lords::coordinator::{NativeEngine, Request, Server};
+use lords::kvquant::{KvBits, KvPool, KvQuantCfg};
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::testbed::{full_mode, model_zoo, Testbed};
+use lords::util::Rng;
+
+const BUDGET_MIB: usize = 64;
+
+struct Point {
+    kv_bits: u32,
+    block_bytes: usize,
+    kv_peak_mib: f64,
+    prefill_tps: f64,
+    decode_tps: f64,
+    total_tps: f64,
+    max_concurrent_at_budget: usize,
+    token_match_vs_dense: bool,
+}
+
+fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(7);
+    (0..n)
+        .map(|i| {
+            Request::new(i as u64, (0..prompt_len).map(|_| rng.below(vocab)).collect(), max_new)
+        })
+        .collect()
+}
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner(
+        "KV cache",
+        "block-pooled packed KV: decode throughput + KV MiB + concurrency at a fixed budget",
+    );
+
+    let full = full_mode();
+    let (name, cfg) = model_zoo().remove(0);
+    let tb = Testbed::build(name, &cfg, if full { 300 } else { 120 }, 0);
+    let n_requests = if full { 16 } else { 8 };
+    let max_new = if full { 32 } else { 16 };
+    let prompt_len = cfg.max_seq / 2;
+    let mut model = tb.model.clone();
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: 30, ..Default::default() },
+        false,
+    );
+
+    let mut t = TableBuilder::new(&format!(
+        "KV cache — dense vs packed blocks (native engine; {BUDGET_MIB} MiB budget column)"
+    ))
+    .headers(&[
+        "KV",
+        "B/block",
+        "Peak KV MiB",
+        "Prefill tok/s",
+        "Decode tok/s",
+        "Total tok/s",
+        "Max seqs @ budget",
+        "Tokens = dense",
+    ]);
+
+    let mut points: Vec<Point> = Vec::new();
+    let mut dense_tokens: Vec<Vec<usize>> = Vec::new();
+    for bits in [KvBits::F32, KvBits::Int8, KvBits::Int4] {
+        let kv = KvQuantCfg::with_bits(bits);
+        let engine = NativeEngine::with_kv(model.clone(), bits.name(), kv);
+        let serve = ServeCfg { kv_bits: bits.as_u32(), ..Default::default() };
+        let mut server = Server::new(engine, serve);
+        let report = server.run(requests(n_requests, prompt_len, max_new, cfg.vocab)).unwrap();
+        let m = &report.metrics;
+        let pool = server.engine.kv_pool();
+        let tokens: Vec<Vec<usize>> = report.responses.iter().map(|r| r.tokens.clone()).collect();
+        let token_match = if bits == KvBits::F32 {
+            dense_tokens = tokens;
+            true
+        } else {
+            tokens == dense_tokens
+        };
+        // concurrency at the fixed budget, independent of the serve above
+        let sized = KvPool::with_byte_budget(
+            kv,
+            cfg.n_layers,
+            cfg.d_model,
+            BUDGET_MIB << 20,
+            cfg.max_seq,
+        );
+        let p = Point {
+            kv_bits: bits.as_u32(),
+            block_bytes: pool.block_bytes(),
+            kv_peak_mib: pool.peak_bytes() as f64 / (1024.0 * 1024.0),
+            prefill_tps: m.prefill_tps(),
+            decode_tps: m.decode_tps(),
+            total_tps: m.total_tps(),
+            max_concurrent_at_budget: sized.max_concurrent_full_seqs(cfg.max_seq),
+            token_match_vs_dense: token_match,
+        };
+        eprintln!(
+            "[kvcache] {}: decode {:.1} tok/s, peak KV {:.2} MiB, {} seqs @ {BUDGET_MIB} MiB{}",
+            bits.name(),
+            p.decode_tps,
+            p.kv_peak_mib,
+            p.max_concurrent_at_budget,
+            if token_match { "" } else { "  [token mismatch]" }
+        );
+        t.row(vec![
+            bits.name().into(),
+            p.block_bytes.to_string(),
+            format!("{:.2}", p.kv_peak_mib),
+            format!("{:.1}", p.prefill_tps),
+            format!("{:.1}", p.decode_tps),
+            format!("{:.1}", p.total_tps),
+            p.max_concurrent_at_budget.to_string(),
+            token_match.to_string(),
+        ]);
+        points.push(p);
+    }
+    t.print();
+
+    let dense = &points[0];
+    println!(
+        "\n(acceptance: 4-bit KV bytes {:.2}x smaller, {:.2}x max sequences at {BUDGET_MIB} MiB; \
+         8-bit token-identical: {})",
+        dense.block_bytes as f64 / points[2].block_bytes as f64,
+        points[2].max_concurrent_at_budget as f64 / dense.max_concurrent_at_budget.max(1) as f64,
+        points[1].token_match_vs_dense
+    );
+    write_json(&points, full);
+}
+
+fn write_json(points: &[Point], full: bool) {
+    let path = std::env::var("LORDS_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kvcache.json").to_string()
+    });
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"kvcache_bench\",\n");
+    s.push_str("  \"unit\": \"tokens_per_second_and_bytes\",\n");
+    s.push_str(&format!("  \"full_mode\": {full},\n"));
+    s.push_str(&format!("  \"threads\": {},\n", lords::util::ThreadPool::global().size()));
+    s.push_str(&format!("  \"budget_mib\": {BUDGET_MIB},\n"));
+    s.push_str("  \"measured\": true,\n");
+    s.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kv_bits\": {}, \"block_bytes\": {}, \"kv_peak_mib\": {:.4}, \
+             \"prefill_tps\": {:.2}, \"decode_tps\": {:.2}, \"total_tps\": {:.2}, \
+             \"max_concurrent_at_budget\": {}, \"token_match_vs_dense\": {}}}{}\n",
+            p.kv_bits,
+            p.block_bytes,
+            p.kv_peak_mib,
+            p.prefill_tps,
+            p.decode_tps,
+            p.total_tps,
+            p.max_concurrent_at_budget,
+            p.token_match_vs_dense,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, &s) {
+        Ok(()) => eprintln!("[kvcache] wrote baseline {path}"),
+        Err(e) => eprintln!("[kvcache] could not write {path}: {e}"),
+    }
+}

@@ -197,6 +197,16 @@ pub struct ServeCfg {
     /// Max new tokens per request (hard cap).
     pub max_new_tokens: usize,
     pub workers: usize,
+    /// KV-cache storage precision for engines with an owned pool:
+    /// 32 (dense f32), 8, or 4 (bit-packed blocks with low-rank scales).
+    /// Consumed by engine *constructors* (CLI / bench code builds the
+    /// `NativeEngine` with a matching `KvQuantCfg`); `Server` itself only
+    /// reads `kv_budget_mib` — the engine's own config is authoritative.
+    pub kv_bits: u32,
+    /// KV pool byte budget in MiB; 0 = auto (worst case: `max_concurrent`
+    /// dense f32 sequences — quantized formats then fit more sequences in
+    /// the same bytes).
+    pub kv_budget_mib: f64,
 }
 
 impl Default for ServeCfg {
@@ -208,6 +218,8 @@ impl Default for ServeCfg {
             max_queue: 256,
             max_new_tokens: 128,
             workers: 1,
+            kv_bits: 32,
+            kv_budget_mib: 0.0,
         }
     }
 }
@@ -221,6 +233,8 @@ impl ServeCfg {
             max_queue: doc.usize_or("serve", "max_queue", d.max_queue),
             max_new_tokens: doc.usize_or("serve", "max_new_tokens", d.max_new_tokens),
             workers: doc.usize_or("serve", "workers", d.workers),
+            kv_bits: doc.usize_or("serve", "kv_bits", d.kv_bits as usize) as u32,
+            kv_budget_mib: doc.f32_or("serve", "kv_budget_mib", d.kv_budget_mib as f32) as f64,
             ..d
         }
     }
@@ -252,6 +266,8 @@ mod tests {
         assert_eq!(m.vocab, 512);
         let s = ServeCfg::from_doc(&doc);
         assert_eq!(s.max_queue, 9);
+        assert_eq!(s.kv_bits, 32);
+        assert_eq!(s.kv_budget_mib, 0.0);
         let t = TrainCfg::from_doc(&doc, "qat");
         assert_eq!(t.steps, 77);
     }

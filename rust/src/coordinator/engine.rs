@@ -4,7 +4,8 @@
 
 use super::request::greedy;
 use crate::adapters::{AdapterFactors, AdapterRegistry, BASE_ADAPTER};
-use crate::model::{KvCache, Model};
+use crate::kvquant::{KvPool, KvQuantCfg};
+use crate::model::Model;
 use crate::runtime::{ExecutorHandle, HostTensor, Manifest};
 use std::collections::HashMap;
 
@@ -43,28 +44,52 @@ pub trait Engine {
     /// One decode step for all sequences (token already appended by the
     /// server); refreshes `last_logits`.
     fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()>;
-    /// Free per-sequence state.
+    /// Free per-sequence state (KV storage included).
     fn release(&mut self, id: u64);
     fn name(&self) -> String;
+
+    /// Size the engine's KV store from a byte budget (`None` = worst case:
+    /// `max_concurrent` dense f32 sequences of `max_seq` tokens). Called
+    /// once by `Server::new`, before any sequence is admitted. Engines
+    /// without an owned KV pool ignore it.
+    fn kv_init(&mut self, budget_bytes: Option<usize>, max_concurrent: usize) {
+        let _ = (budget_bytes, max_concurrent);
+    }
+
+    /// Can the engine's KV store admit `n` more worst-case sequences?
+    /// Engines without an owned pool always say yes (the server's
+    /// `max_concurrent` cap still bounds them).
+    fn kv_can_admit(&self, n: usize) -> bool {
+        let _ = n;
+        true
+    }
 }
 
 // ---------------------------------------------------------------- native
 
-/// Rust-native engine: per-sequence dense KV caches on the `model::Model`,
-/// plus an [`AdapterRegistry`] of hot-swappable per-tenant LoRDS scale
-/// adapters over the model's shared packed base.
+/// Fallback pool sizing for engines used without a `Server` (direct
+/// prefill/decode in tests and examples): this many worst-case sequences.
+const DEFAULT_POOL_SEQS: usize = 64;
+
+/// Rust-native engine: a block-pooled (optionally quantized) KV store
+/// ([`KvPool`]) on the `model::Model`, plus an [`AdapterRegistry`] of
+/// hot-swappable per-tenant LoRDS scale adapters over the model's shared
+/// packed base.
 ///
 /// Every linear in the prefill/decode loop dispatches through
 /// `LinearWeight::forward` (or its adapter-override variant), i.e. the
 /// fused bit-packed kernels (`kernels::fused`) for quantized formats — the
-/// engine never touches a dense dequantized weight, for any tenant.
+/// engine never touches a dense dequantized weight, for any tenant. With
+/// `kv_bits` at 8 or 4 the KV cache is bit-packed too, and attention runs
+/// fused over the packed blocks (`kvquant::attention`).
 ///
 /// Tenant routing: each sequence's adapter id is pinned in the registry at
 /// prefill admission and released with the sequence, so a hot eviction of
 /// an in-flight adapter is deferred, never unsafe.
 pub struct NativeEngine {
     pub model: Model,
-    caches: HashMap<u64, KvCache>,
+    pool: KvPool,
+    kv_cfg: KvQuantCfg,
     label: String,
     registry: AdapterRegistry,
     /// adapter id pinned per in-flight sequence (base tenant omitted).
@@ -73,24 +98,50 @@ pub struct NativeEngine {
 
 impl NativeEngine {
     pub fn new(model: Model, label: &str) -> NativeEngine {
-        Self::with_registry(model, label, AdapterRegistry::unbounded())
+        Self::with_registry_kv(model, label, AdapterRegistry::unbounded(), KvQuantCfg::default())
+    }
+
+    /// Engine with an explicit KV-cache format (f32 | int8 | int4 blocks).
+    pub fn with_kv(model: Model, label: &str, kv: KvQuantCfg) -> NativeEngine {
+        Self::with_registry_kv(model, label, AdapterRegistry::unbounded(), kv)
     }
 
     /// Engine with an explicit adapter registry (byte-budgeted multi-tenant
     /// serving).
     pub fn with_registry(model: Model, label: &str, registry: AdapterRegistry) -> NativeEngine {
+        Self::with_registry_kv(model, label, registry, KvQuantCfg::default())
+    }
+
+    /// Engine with both an adapter registry and a KV-cache format.
+    pub fn with_registry_kv(
+        model: Model,
+        label: &str,
+        registry: AdapterRegistry,
+        kv: KvQuantCfg,
+    ) -> NativeEngine {
         crate::info!(
-            "native engine[{label}]: {:.2} MiB packed weights ({} fp32 side-car params)",
+            "native engine[{label}]: {:.2} MiB packed weights ({} fp32 side-car params), {} KV",
             model.weight_bytes() as f64 / (1024.0 * 1024.0),
-            model.float_params()
+            model.float_params(),
+            kv.bits.name()
         );
+        let cfg = &model.cfg;
+        let per_seq = cfg.max_seq.div_ceil(kv.block_tokens);
+        let pool =
+            KvPool::new(kv, cfg.n_layers, cfg.d_model, DEFAULT_POOL_SEQS * per_seq);
         NativeEngine {
             model,
-            caches: HashMap::new(),
+            pool,
+            kv_cfg: kv,
             label: label.to_string(),
             registry,
             seq_adapter: HashMap::new(),
         }
+    }
+
+    /// The engine's KV pool (capacity, peak bytes, per-block cost).
+    pub fn kv_pool(&self) -> &KvPool {
+        &self.pool
     }
 
     /// Validate a tenant's factors against this engine's model, then
@@ -122,10 +173,45 @@ impl Engine for NativeEngine {
         self.model.cfg.max_seq
     }
 
+    fn kv_init(&mut self, budget_bytes: Option<usize>, max_concurrent: usize) {
+        if self.pool.active_sequences() > 0 {
+            crate::info!("kv_init skipped: {} sequences in flight", self.pool.active_sequences());
+            return;
+        }
+        let cfg = &self.model.cfg;
+        // the default budget fits exactly `max_concurrent` dense f32
+        // sequences (sealed blocks + one staging tail each) — quantized
+        // formats then fit several times more sequences in the same bytes
+        let per_seq = cfg.max_seq.div_ceil(self.kv_cfg.block_tokens);
+        let budget = budget_bytes.unwrap_or(
+            max_concurrent * (per_seq + 1) * self.pool.dense_block_bytes(),
+        );
+        self.pool = KvPool::with_byte_budget(
+            self.kv_cfg,
+            cfg.n_layers,
+            cfg.d_model,
+            budget,
+            cfg.max_seq,
+        );
+        crate::info!(
+            "native engine[{}]: KV pool {} blocks x {} B ({} KV, {:.1} MiB budget)",
+            self.label,
+            self.pool.capacity_blocks(),
+            self.pool.block_bytes(),
+            self.kv_cfg.bits.name(),
+            budget as f64 / (1024.0 * 1024.0)
+        );
+    }
+
+    fn kv_can_admit(&self, n: usize) -> bool {
+        self.pool.can_admit_n(n, self.model.cfg.max_seq)
+    }
+
     fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
-        // Validate the whole batch before taking any pin or KV cache: a bad
-        // tenant id must fail the batch cleanly, not leak pins and caches
-        // for the sequences processed before it.
+        // Validate the whole batch before taking any pin or KV storage: a
+        // bad tenant id or an over-committed pool must fail the batch
+        // cleanly, not leak pins and blocks for the sequences processed
+        // before it.
         for s in seqs.iter() {
             anyhow::ensure!(
                 self.registry.contains(&s.adapter),
@@ -133,35 +219,54 @@ impl Engine for NativeEngine {
                 s.adapter,
                 s.id
             );
+            anyhow::ensure!(
+                s.prompt_len <= self.model.cfg.max_seq,
+                "prompt {} > max_seq {} (seq {})",
+                s.prompt_len,
+                self.model.cfg.max_seq,
+                s.id
+            );
+            anyhow::ensure!(
+                self.pool.seq_len(s.id).is_none(),
+                "sequence id {} is already in flight",
+                s.id
+            );
         }
+        anyhow::ensure!(
+            self.pool.can_admit_n(seqs.len(), self.model.cfg.max_seq),
+            "KV pool cannot admit {} sequences ({} blocks free)",
+            seqs.len(),
+            self.pool.free_blocks()
+        );
         for s in seqs.iter_mut() {
             let pinned = self.registry.acquire(&s.adapter);
             debug_assert!(pinned, "adapter '{}' validated above", s.adapter);
             if s.adapter != BASE_ADAPTER {
                 self.seq_adapter.insert(s.id, s.adapter.clone());
             }
-            let mut cache = KvCache::new(&self.model.cfg);
+            // worst-case reservation: decode can never run out mid-sequence
+            let reserved = self.pool.reserve(s.id, self.model.cfg.max_seq);
+            debug_assert!(reserved, "admission validated above");
             let factors = self.registry.get(&s.adapter);
             s.last_logits =
-                self.model.prefill_with(&s.tokens[..s.prompt_len], &mut cache, factors);
-            self.caches.insert(s.id, cache);
+                self.model
+                    .prefill_pooled(&s.tokens[..s.prompt_len], &mut self.pool, s.id, factors)?;
         }
         Ok(())
     }
 
     fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
         for s in seqs.iter_mut() {
-            let cache = self.caches.get_mut(&s.id).expect("prefilled");
             let tok = *s.tokens.last().unwrap();
             // pinned at prefill ⇒ still resident even if eviction is pending
             let factors = self.registry.get(&s.adapter);
-            s.last_logits = self.model.decode_with(tok, cache, factors);
+            s.last_logits = self.model.decode_pooled(tok, &mut self.pool, s.id, factors)?;
         }
         Ok(())
     }
 
     fn release(&mut self, id: u64) {
-        self.caches.remove(&id);
+        self.pool.release(id);
         if let Some(adapter) = self.seq_adapter.remove(&id) {
             self.registry.release(&adapter);
         }

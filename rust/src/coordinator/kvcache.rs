@@ -1,11 +1,21 @@
-//! Paged KV-cache block allocator (admission control).
+//! Paged KV-cache block allocator (admission control + block ownership).
 //!
 //! The cache budget is divided into fixed-size token blocks; a sequence of
-//! length L holds ⌈L / block_tokens⌉ blocks per layer-group. The allocator
-//! decides admission (can a new sequence's worst case fit?) and tracks
+//! length L holds ⌈L / block_tokens⌉ blocks. The allocator decides
+//! admission (can a new sequence's worst case fit?) and tracks
 //! per-sequence block lists so completion frees exactly what was taken.
 //! Invariants (property-tested): never exceeds capacity, no double-free,
 //! no block owned by two sequences.
+//!
+//! Since the quantized paged KV-cache landed, these block ids are **real
+//! storage handles**: [`KvPool`](crate::kvquant::KvPool) embeds an
+//! allocator and maps each owned id to that block's K/V tile slots, so the
+//! ownership invariants above are exactly the pool's no-aliasing
+//! guarantees. [`Self::owned_blocks`] exposes a sequence's id list (in
+//! reservation order — block *i* of a sequence holds tokens
+//! `[i·block_tokens, (i+1)·block_tokens)`), and [`Self::try_release`] is
+//! the recoverable release the server path uses (a stray release of an
+//! unknown sequence must not panic mid-serve).
 
 use std::collections::HashMap;
 
@@ -66,11 +76,32 @@ impl KvBlockAllocator {
         true
     }
 
-    /// Release all blocks owned by `seq`. Panics on double-free.
-    pub fn release(&mut self, seq: u64) {
-        let blocks = self.owned.remove(&seq).unwrap_or_else(|| panic!("double free of seq {seq}"));
+    /// Blocks owned by `seq`, in reservation order (block `i` covers
+    /// tokens `[i·block_tokens, (i+1)·block_tokens)`). Empty for unknown
+    /// sequences.
+    pub fn owned_blocks(&self, seq: u64) -> &[usize] {
+        self.owned.get(&seq).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Release all blocks owned by `seq`, returning their ids so a
+    /// storage-backed caller can clear the corresponding slots. `None`
+    /// (and no change) for unknown sequences — the recoverable form the
+    /// server path uses.
+    pub fn try_release(&mut self, seq: u64) -> Option<Vec<usize>> {
+        let blocks = self.owned.remove(&seq)?;
+        let ids = blocks.clone();
         self.free.extend(blocks);
         debug_assert!(self.free.len() <= self.capacity);
+        Some(ids)
+    }
+
+    /// Release all blocks owned by `seq`. Panics on double-free (strict
+    /// variant for callers that own the bookkeeping; serve paths use
+    /// [`Self::try_release`]).
+    pub fn release(&mut self, seq: u64) {
+        if self.try_release(seq).is_none() {
+            panic!("double free of seq {seq}");
+        }
     }
 
     pub fn active_sequences(&self) -> usize {
@@ -114,6 +145,31 @@ mod tests {
         a.reserve(7, 8);
         a.release(7);
         a.release(7);
+    }
+
+    #[test]
+    fn try_release_is_recoverable_and_returns_ids() {
+        let mut a = KvBlockAllocator::new(4, 8);
+        assert!(a.try_release(7).is_none(), "unknown seq is a no-op");
+        a.reserve(7, 24); // 3 blocks
+        let owned: Vec<usize> = a.owned_blocks(7).to_vec();
+        assert_eq!(owned.len(), 3);
+        let freed = a.try_release(7).unwrap();
+        assert_eq!(freed, owned, "released ids match ownership order");
+        assert!(a.try_release(7).is_none(), "second release is recoverable");
+        assert_eq!(a.free_blocks(), 4);
+        assert!(a.owned_blocks(7).is_empty());
+    }
+
+    #[test]
+    fn owned_blocks_grow_in_order() {
+        let mut a = KvBlockAllocator::new(8, 4);
+        a.reserve(1, 4);
+        let first = a.owned_blocks(1).to_vec();
+        a.reserve(1, 12);
+        let grown = a.owned_blocks(1).to_vec();
+        assert_eq!(grown.len(), 3);
+        assert_eq!(&grown[..1], &first[..], "growth appends, never reorders");
     }
 
     #[test]

@@ -2,8 +2,8 @@
 //! model (the vLLM-router-shaped component of this reproduction):
 //!
 //! * [`request`]  — request/response types and greedy sampling.
-//! * [`kvcache`]  — paged KV-block allocator (admission control: how many
-//!   concurrent sequences fit the cache budget; no-double-free invariants).
+//! * [`kvcache`]  — paged KV-block allocator (admission control +
+//!   storage-backed block ownership; no-double-free invariants).
 //! * [`batcher`]  — dynamic batcher: arrival queue → bucketed batches under
 //!   a latency window (continuous batching at the decode step level).
 //! * [`engine`]   — the execution backends: native Rust model or PJRT
@@ -25,6 +25,24 @@
 //! prefill/decode call, pinning the adapter for the sequence's lifetime so
 //! hot eviction is deferred, never unsafe. The PJRT engine serves only the
 //! base tenant (per-tenant artifacts are a future lowering).
+//!
+//! # KV memory model (quantized paged cache)
+//!
+//! The [`NativeEngine`] owns a [`KvPool`](crate::kvquant::KvPool): the
+//! [`kvcache::KvBlockAllocator`]'s reservations are real storage handles —
+//! each owned block id indexes the per-layer K/V tile slots holding that
+//! block's `block_tokens` positions, either dense f32 or bit-packed 4/8-bit
+//! codes with rank-r low-rank scale factors fit at seal time
+//! ([`kvquant`](crate::kvquant)). Admission flows through the engine
+//! ([`Engine::kv_can_admit`](engine::Engine::kv_can_admit)): `Server::new`
+//! sizes the pool from a **byte budget**
+//! ([`ServeCfg::kv_budget_mib`](crate::config::ServeCfg), default = what
+//! `max_concurrent` dense worst-case sequences need), so dropping
+//! `kv_bits` from 32 to 8 or 4 multiplies how many sequences the same
+//! bytes admit. Each admitted sequence reserves its worst case up front —
+//! decode can never run out of blocks mid-sequence — and
+//! [`Engine::release`](engine::Engine::release) frees blocks and adapter
+//! pins together (a stray release is recoverable, never a panic).
 
 pub mod batcher;
 pub mod engine;

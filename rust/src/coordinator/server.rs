@@ -8,7 +8,6 @@
 
 use super::batcher::Batcher;
 use super::engine::{Engine, SeqState};
-use super::kvcache::KvBlockAllocator;
 use super::metrics::ServeMetrics;
 use super::request::{Request, Response};
 use crate::config::ServeCfg;
@@ -17,7 +16,6 @@ use std::time::{Duration, Instant};
 pub struct Server<E: Engine> {
     pub engine: E,
     batcher: Batcher,
-    allocator: KvBlockAllocator,
     cfg: ServeCfg,
 }
 
@@ -30,11 +28,18 @@ pub struct ServeReport {
 
 impl<E: Engine> Server<E> {
     pub fn new(engine: E, cfg: ServeCfg) -> Server<E> {
-        let max_seq = engine.max_seq();
-        // KV budget: enough blocks for max_bucket concurrent full sequences
-        let block_tokens = 16;
+        let mut engine = engine;
+        // KV budget in real bytes: an explicit `kv_budget_mib`, or (by
+        // default) exactly what `max_concurrent` dense f32 worst-case
+        // sequences would need — quantized KV formats then fit more blocks
+        // (and so more sequences) in the same bytes.
         let max_concurrent = *cfg.decode_buckets.last().unwrap();
-        let capacity = max_concurrent * max_seq.div_ceil(block_tokens);
+        let budget = if cfg.kv_budget_mib > 0.0 {
+            Some((cfg.kv_budget_mib * 1024.0 * 1024.0) as usize)
+        } else {
+            None
+        };
+        engine.kv_init(budget, max_concurrent);
         Server {
             engine,
             batcher: Batcher::new(
@@ -42,7 +47,6 @@ impl<E: Engine> Server<E> {
                 Duration::from_micros(cfg.batch_window_us),
                 cfg.max_queue,
             ),
-            allocator: KvBlockAllocator::new(capacity, block_tokens),
             cfg,
         }
     }
@@ -65,56 +69,57 @@ impl<E: Engine> Server<E> {
                 }
             }
 
-            // 2. admit a prefill batch if capacity allows
+            // 2. admit a prefill batch if capacity allows. The engine's KV
+            // pool is the storage owner and answers admission: cap the
+            // batch at what it can take (monotone, so every popped batch
+            // is admissible — no requeue churn).
             let slots_left = max_concurrent.saturating_sub(running.len());
-            let kv_ok = |alloc: &KvBlockAllocator, n: usize, max_seq: usize| {
-                (0..n).all(|_| alloc.blocks_for(max_seq) <= alloc.free_blocks() / n.max(1))
-            };
-            if slots_left > 0 {
-                if let Some(batch) = self.batcher.pop_batch(Instant::now(), slots_left) {
+            let mut admit = slots_left;
+            while admit > 0 && !self.engine.kv_can_admit(admit) {
+                admit -= 1;
+            }
+            if admit == 0 && running.is_empty() && !self.batcher.is_empty() {
+                anyhow::bail!(
+                    "KV pool cannot admit even one worst-case sequence — \
+                     raise kv_budget_mib or lower max_seq"
+                );
+            }
+            if admit > 0 {
+                if let Some(batch) = self.batcher.pop_batch(Instant::now(), admit) {
                     let n = batch.len();
-                    if kv_ok(&self.allocator, n, self.engine.max_seq()) {
-                        let mut seqs: Vec<SeqState> = Vec::with_capacity(n);
-                        let mut timings = Vec::with_capacity(n);
-                        for req in batch {
-                            let ok = self.allocator.reserve(req.id, self.engine.max_seq());
-                            debug_assert!(ok, "admission raced capacity");
-                            let queue_s = req.arrival.elapsed().as_secs_f64();
-                            metrics.adapter(&req.adapter).requests += 1;
-                            timings.push(ReqTiming {
-                                id: req.id,
-                                queue_s,
-                                prefill_s: 0.0,
-                                decode_s: 0.0,
-                            });
-                            seqs.push(SeqState {
-                                id: req.id,
-                                prompt_len: req.prompt.len(),
-                                tokens: req.prompt,
-                                max_new: req.max_new_tokens.min(
-                                    self.engine.max_seq().saturating_sub(1).saturating_sub(0),
-                                ),
-                                last_logits: vec![],
-                                adapter: req.adapter,
-                            });
-                        }
-                        let t0 = Instant::now();
-                        self.engine.prefill(&mut seqs)?;
-                        let dt = t0.elapsed().as_secs_f64();
-                        metrics.prefill_secs += dt;
-                        let per_prefill = dt / seqs.len() as f64;
-                        for (s, t) in seqs.iter().zip(timings.iter_mut()) {
-                            metrics.prefill_tokens += s.prompt_len;
-                            metrics.adapter(&s.adapter).prefill_tokens += s.prompt_len;
-                            t.prefill_s = per_prefill;
-                        }
-                        running.extend(seqs.into_iter().zip(timings));
-                    } else {
-                        // push back (rare: KV fragmentation) — requeue
-                        for req in batch {
-                            let _ = self.batcher.push(req);
-                        }
+                    let mut seqs: Vec<SeqState> = Vec::with_capacity(n);
+                    let mut timings = Vec::with_capacity(n);
+                    for req in batch {
+                        let queue_s = req.arrival.elapsed().as_secs_f64();
+                        metrics.adapter(&req.adapter).requests += 1;
+                        timings.push(ReqTiming {
+                            id: req.id,
+                            queue_s,
+                            prefill_s: 0.0,
+                            decode_s: 0.0,
+                        });
+                        seqs.push(SeqState {
+                            id: req.id,
+                            prompt_len: req.prompt.len(),
+                            tokens: req.prompt,
+                            max_new: req.max_new_tokens.min(
+                                self.engine.max_seq().saturating_sub(1).saturating_sub(0),
+                            ),
+                            last_logits: vec![],
+                            adapter: req.adapter,
+                        });
                     }
+                    let t0 = Instant::now();
+                    self.engine.prefill(&mut seqs)?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    metrics.prefill_secs += dt;
+                    let per_prefill = dt / seqs.len() as f64;
+                    for (s, t) in seqs.iter().zip(timings.iter_mut()) {
+                        metrics.prefill_tokens += s.prompt_len;
+                        metrics.adapter(&s.adapter).prefill_tokens += s.prompt_len;
+                        t.prefill_s = per_prefill;
+                    }
+                    running.extend(seqs.into_iter().zip(timings));
                 }
             }
 
@@ -131,7 +136,6 @@ impl<E: Engine> Server<E> {
                 for (s, t) in running.drain(..) {
                     if s.done() || s.tokens.len() >= self.engine.max_seq() {
                         self.engine.release(s.id);
-                        self.allocator.release(s.id);
                         metrics.completed += 1;
                         metrics.adapter(&s.adapter).completed += 1;
                         metrics.latency.add(t.queue_s + t.prefill_s + t.decode_s);
@@ -214,6 +218,8 @@ mod tests {
             max_queue: 64,
             max_new_tokens: 8,
             workers: 1,
+            kv_bits: 32,
+            kv_budget_mib: 0.0,
         };
         Server::new(NativeEngine::new(model, "fp"), serve)
     }
@@ -296,6 +302,8 @@ mod tests {
             max_queue: 64,
             max_new_tokens: 8,
             workers: 1,
+            kv_bits: 32,
+            kv_budget_mib: 0.0,
         };
         let mut srv = Server::new(engine, serve);
         let tenants = ["base", "t0", "t1"];
@@ -335,5 +343,46 @@ mod tests {
         let report = srv.run(reqs(1, 40, 100)).unwrap();
         // 48 max_seq - 40 prompt = at most 8 new tokens
         assert!(report.responses[0].tokens.len() <= 8);
+    }
+
+    #[test]
+    fn quantized_kv_serves_to_completion_in_less_memory() {
+        use crate::kvquant::{KvBits, KvQuantCfg};
+        let cfg = ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 48,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let serve = ServeCfg {
+            decode_buckets: vec![1, 2, 4],
+            prefill_buckets: vec![1, 2, 4],
+            batch_window_us: 0,
+            max_queue: 64,
+            max_new_tokens: 8,
+            workers: 1,
+            kv_bits: 8,
+            kv_budget_mib: 0.0,
+        };
+        let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
+        let engine = NativeEngine::with_kv(Model::init(&cfg, 0), "kv8", kv);
+        let mut srv = Server::new(engine, serve);
+        let report = srv.run(reqs(6, 12, 6)).unwrap();
+        assert_eq!(report.metrics.completed, 6);
+        for r in &report.responses {
+            assert_eq!(r.tokens.len(), 6);
+        }
+        let pool = srv.engine.kv_pool();
+        assert!(pool.block_bytes() < pool.dense_block_bytes());
+        // same byte budget as the dense auto-sizing, more concurrency
+        assert!(pool.max_concurrent_full_seqs(cfg.max_seq) > 4);
+        // everything released on completion
+        assert_eq!(pool.used_blocks(), 0);
+        assert_eq!(pool.active_sequences(), 0);
     }
 }

@@ -1,0 +1,204 @@
+//! Fused attention over the block-pooled KV store: `q·K̂ᵀ` and
+//! `softmax·V̂` computed directly against packed codes.
+//!
+//! Both kernels walk a [`KvSeqView`] row by row. A packed row is
+//! dequantized into a single D-float scratch buffer (rank-r scale row
+//! reconstruction + LUT multiply — [`PackedTile::dequant_row_into`]
+//! (super::scales::PackedTile::dequant_row_into)); dense/tail rows are
+//! plain copies. Peak live dequantized state is **one row**, versus the
+//! full `len × D` K and V of the dense path — the same never-materialize
+//! discipline as the weight kernels in [`kernels::fused`](crate::kernels).
+//!
+//! Numerics: per key row, the head-sliced dot products, softmax, and
+//! weighted-V accumulation happen in the same order as the dense
+//! reference ([`model::attention`](crate::model::attention)), so in f32
+//! mode the pooled path is bit-identical to the old contiguous cache.
+
+use super::pool::KvSeqView;
+use crate::tensor::Matrix;
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Decode-step attention: one query row (1×D, post-RoPE) over the first
+/// `view.len` cached positions. Mirrors
+/// [`attention_decode`](crate::model::attention::attention_decode) with the
+/// cache read through the pool.
+pub fn decode_packed(q: &Matrix, view: &KvSeqView, n_heads: usize) -> Matrix {
+    let d = q.cols;
+    assert_eq!(d, view.d, "query width {} vs cache {}", d, view.d);
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let len = view.len;
+    let mut out = Matrix::zeros(1, d);
+    let mut crow = vec![0u8; d];
+    let mut row = vec![0.0f32; d];
+    let mut scores = vec![0.0f32; n_heads * len];
+    for j in 0..len {
+        view.k_row_into(j, &mut crow, &mut row);
+        for h in 0..n_heads {
+            let base = h * hd;
+            let qh = &q.row(0)[base..base + hd];
+            scores[h * len + j] = dot(qh, &row[base..base + hd]) * scale;
+        }
+    }
+    for h in 0..n_heads {
+        softmax_inplace(&mut scores[h * len..(h + 1) * len]);
+    }
+    for j in 0..len {
+        view.v_row_into(j, &mut crow, &mut row);
+        for h in 0..n_heads {
+            let w = scores[h * len + j];
+            let base = h * hd;
+            let oh = &mut out.row_mut(0)[base..base + hd];
+            for (o, &vv) in oh.iter_mut().zip(&row[base..base + hd]) {
+                *o += w * vv;
+            }
+        }
+    }
+    out
+}
+
+/// Causal prefill attention: every query row `i` of `q` (S×D, post-RoPE)
+/// attends positions `0..=i` of the pool window (`view.len` must equal
+/// `q.rows`). Two sweeps over the cache — scores, then weighted V — each
+/// dequantizing every packed row exactly once.
+pub fn prefill_packed(q: &Matrix, view: &KvSeqView, n_heads: usize) -> Matrix {
+    let s = q.rows;
+    let d = q.cols;
+    assert_eq!(s, view.len, "prefill window {} vs query rows {s}", view.len);
+    assert_eq!(d, view.d, "query width {} vs cache {}", d, view.d);
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Matrix::zeros(s, d);
+    let mut crow = vec![0u8; d];
+    let mut row = vec![0.0f32; d];
+    let mut probs: Vec<Matrix> = (0..n_heads).map(|_| Matrix::zeros(s, s)).collect();
+    for j in 0..s {
+        view.k_row_into(j, &mut crow, &mut row);
+        for (h, p) in probs.iter_mut().enumerate() {
+            let base = h * hd;
+            let kh = &row[base..base + hd];
+            for i in j..s {
+                let qh = &q.row(i)[base..base + hd];
+                p.set(i, j, dot(qh, kh) * scale);
+            }
+        }
+    }
+    for p in probs.iter_mut() {
+        for i in 0..s {
+            softmax_inplace(&mut p.row_mut(i)[..=i]);
+        }
+    }
+    for j in 0..s {
+        view.v_row_into(j, &mut crow, &mut row);
+        for (h, p) in probs.iter().enumerate() {
+            let base = h * hd;
+            let vh = &row[base..base + hd];
+            for i in j..s {
+                let w = p.at(i, j);
+                if w == 0.0 {
+                    continue;
+                }
+                let oh = &mut out.row_mut(i)[base..base + hd];
+                for (o, &vv) in oh.iter_mut().zip(vh) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn softmax_inplace(s: &mut [f32]) {
+    let maxv = s.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut denom = 0.0f32;
+    for v in s.iter_mut() {
+        *v = (*v - maxv).exp();
+        denom += *v;
+    }
+    let inv = 1.0 / denom;
+    for v in s.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvquant::{KvBits, KvPool, KvQuantCfg};
+    use crate::model::attention::{attention_decode, attention_fwd};
+    use crate::util::prop::{assert_allclose, max_abs_diff, prop_check};
+    use crate::util::Rng;
+
+    fn filled_pool(bits: KvBits, bt: usize, d: usize, len: usize, seed: u64) -> KvPool {
+        let cfg = KvQuantCfg { bits, rank: 1, block_tokens: bt };
+        let mut pool = KvPool::new(cfg, 1, d, len.div_ceil(bt) + 1);
+        let mut rng = Rng::new(seed);
+        let k = Matrix::randn(len, d, 0.5, &mut rng);
+        let v = Matrix::randn(len, d, 0.5, &mut rng);
+        pool.append_rows(1, 0, 0, &k, &v).unwrap();
+        pool.commit(1, len);
+        pool
+    }
+
+    #[test]
+    fn decode_matches_dense_reference_over_dequantized_cache() {
+        prop_check(16, |g| {
+            let bt = *g.pick(&[4usize, 8]);
+            let d = g.usize(1..=4) * 8;
+            let len = g.usize(1..=3 * bt);
+            let bits = *g.pick(&[KvBits::F32, KvBits::Int8, KvBits::Int4]);
+            let heads = *g.pick(&[2usize, 4]);
+            let mut rng = g.rng().fork(5);
+            let pool = filled_pool(bits, bt, d, len, rng.next_u64());
+            let q = Matrix::randn(1, d, 1.0, &mut rng);
+            let fused = decode_packed(&q, &pool.view(1, 0, len), heads);
+            let (dk, dv) = pool.dense_kv(1, 0, len);
+            let want = attention_decode(&q, &dk, &dv, len, heads);
+            let diff = max_abs_diff(&fused.data, &want.data);
+            if diff > 1e-5 {
+                return Err(format!("{bits:?} bt={bt} d={d} len={len}: diff {diff}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefill_matches_dense_reference_and_is_causal() {
+        prop_check(12, |g| {
+            let bt = *g.pick(&[4usize, 8]);
+            let d = g.usize(1..=3) * 8;
+            let s = g.usize(1..=2 * bt + 3);
+            let bits = *g.pick(&[KvBits::F32, KvBits::Int8]);
+            let mut rng = g.rng().fork(7);
+            let pool = filled_pool(bits, bt, d, s, rng.next_u64());
+            let q = Matrix::randn(s, d, 1.0, &mut rng);
+            let fused = prefill_packed(&q, &pool.view(1, 0, s), 2);
+            let (dk, dv) = pool.dense_kv(1, 0, s);
+            let (want, _) = attention_fwd(&q, &dk, &dv, 2);
+            let diff = max_abs_diff(&fused.data, &want.data);
+            if diff > 1e-5 {
+                return Err(format!("{bits:?} bt={bt} d={d} s={s}: diff {diff}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f32_pool_decode_is_exact_vs_contiguous_cache() {
+        // dense mode: the pooled path must agree with the old contiguous
+        // cache to float-exactness (same data, same op order)
+        let (bt, d, len) = (4usize, 16usize, 11usize);
+        let pool = filled_pool(KvBits::F32, bt, d, len, 9);
+        let (dk, dv) = pool.dense_kv(1, 0, len);
+        let mut rng = Rng::new(10);
+        let q = Matrix::randn(1, d, 1.0, &mut rng);
+        let fused = decode_packed(&q, &pool.view(1, 0, len), 2);
+        let want = attention_decode(&q, &dk, &dv, len, 2);
+        assert_allclose(&fused.data, &want.data, 0.0, 1e-7, "f32 pooled decode");
+    }
+}

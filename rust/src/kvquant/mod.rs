@@ -1,0 +1,130 @@
+//! Quantized paged KV-cache — the serving-memory counterpart of the
+//! paper's weight story: element-wise quantization made cheap by modeling
+//! the scale manifold as continuous low-rank factors, applied to the KV
+//! cache instead of the weights.
+//!
+//! Serving memory is dominated by per-sequence K/V tensors, not weights:
+//! a dense f32 cache costs `2 · L · S · D · 4` bytes per sequence. This
+//! module stores K and V as **fixed-token blocks** of bit-packed codes
+//! ([`PackedCodes`](crate::kernels::PackedCodes), 4 or 8 bits) with the
+//! per-block token×channel scale tile held as **rank-r factors**
+//! `S ≈ B·A` (B ∈ R^{T×r}, A ∈ R^{r×D}, r = 1–2) — the LoRDS decomposition
+//! over the activation-scale manifold rather than the weight-scale one.
+//!
+//! * [`scales`]    — the streaming low-rank scale fit: a rank-1 positive
+//!   envelope (per-token × per-channel absmax outer product, clip-free by
+//!   construction) plus an optional NMF refinement for r = 2, and the
+//!   tile quantize/dequantize helpers.
+//! * [`pool`]      — [`KvPool`]: the block-pooled store. Owns real storage
+//!   behind the [`KvBlockAllocator`](crate::coordinator::kvcache::KvBlockAllocator)'s
+//!   admission bookkeeping; sequences append rows into a small dense
+//!   staging tail and every full block is sealed (quantized + packed)
+//!   exactly once, at append time.
+//! * [`attention`] — fused attention over the pool: `q·K̂ᵀ` and
+//!   `softmax·V̂` walk the packed blocks row by row, reconstructing the
+//!   rank-r scale row and dequantizing into one D-float scratch row —
+//!   the full dequantized K/V is never materialized.
+//!
+//! The serving coordinator wires this end-to-end: `NativeEngine` holds a
+//! [`KvPool`] instead of dense per-sequence caches, `ServeCfg`/CLI expose
+//! a `kv_bits` knob (f32 | 8 | 4), and `Server::new` sizes the pool from a
+//! byte budget, so a fixed memory budget admits ~2.6× (8-bit) to ~3.9×
+//! (4-bit) more concurrent sequences than dense f32.
+
+pub mod attention;
+pub mod pool;
+pub mod scales;
+
+pub use pool::{KvPool, KvSeqView};
+pub use scales::fit_scale_factors;
+
+use crate::quant::Codebook;
+
+/// KV-cache storage precision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvBits {
+    /// Dense f32 blocks (the baseline; numerically identical to the old
+    /// per-sequence contiguous cache).
+    F32,
+    /// 8-bit symmetric integer codes + rank-r scale factors per block.
+    Int8,
+    /// 4-bit symmetric integer codes + rank-r scale factors per block.
+    Int4,
+}
+
+impl KvBits {
+    /// Parse the `kv_bits` config knob (32 | 8 | 4).
+    pub fn parse(bits: u32) -> Option<KvBits> {
+        match bits {
+            32 => Some(KvBits::F32),
+            8 => Some(KvBits::Int8),
+            4 => Some(KvBits::Int4),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> u32 {
+        match self {
+            KvBits::F32 => 32,
+            KvBits::Int8 => 8,
+            KvBits::Int4 => 4,
+        }
+    }
+
+    /// Codebook for the packed formats (`None` for f32).
+    pub fn codebook(&self) -> Option<Codebook> {
+        match self {
+            KvBits::F32 => None,
+            KvBits::Int8 => Some(Codebook::int(8)),
+            KvBits::Int4 => Some(Codebook::int(4)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvBits::F32 => "f32",
+            KvBits::Int8 => "int8",
+            KvBits::Int4 => "int4",
+        }
+    }
+}
+
+/// KV-cache quantization configuration (per engine).
+#[derive(Clone, Copy, Debug)]
+pub struct KvQuantCfg {
+    pub bits: KvBits,
+    /// Rank of the per-block scale factors (1–2; 1 = the clip-free
+    /// envelope, 2 adds an NMF refinement component).
+    pub rank: usize,
+    /// Tokens per block (the paging granularity shared with the
+    /// allocator).
+    pub block_tokens: usize,
+}
+
+impl Default for KvQuantCfg {
+    fn default() -> Self {
+        KvQuantCfg { bits: KvBits::F32, rank: 1, block_tokens: 16 }
+    }
+}
+
+impl KvQuantCfg {
+    pub fn with_bits(bits: KvBits) -> KvQuantCfg {
+        KvQuantCfg { bits, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_parse_roundtrip() {
+        for bits in [32u32, 8, 4] {
+            assert_eq!(KvBits::parse(bits).unwrap().as_u32(), bits);
+        }
+        assert_eq!(KvBits::parse(16), None);
+        assert_eq!(KvBits::F32.codebook(), None);
+        assert_eq!(KvBits::Int8.codebook().unwrap().len(), 255);
+        assert_eq!(KvBits::Int4.codebook().unwrap().len(), 15);
+    }
+}

@@ -1,0 +1,494 @@
+//! [`KvPool`] — block-pooled KV storage with admission bookkeeping.
+//!
+//! The pool marries the [`KvBlockAllocator`]'s admission/ownership
+//! invariants (never over capacity, no double-free, no shared blocks) to
+//! real storage: every allocator block id indexes `2 · n_layers` tile
+//! slots (K and V per layer). Sequences append rows into a small dense
+//! staging tail (`block_tokens × D` per layer); when a layer's tail
+//! fills, that layer's K and V tiles are **sealed** — quantized with
+//! rank-r scale factors and bit-packed ([`PackedTile`]) — into the
+//! sequence's next owned block, exactly once. In f32 mode sealing is a
+//! plain copy, making the dense pool numerically identical to the old
+//! contiguous per-sequence cache.
+//!
+//! Reads go through [`KvSeqView`], a per-(sequence, layer) window that
+//! the fused attention kernels ([`super::attention`]) walk row by row —
+//! dequantizing each row into one scratch buffer, never materializing
+//! the full K/V.
+
+use super::scales::PackedTile;
+use super::{KvBits, KvQuantCfg};
+use crate::coordinator::kvcache::KvBlockAllocator;
+use crate::kernels::PackedCodes;
+use crate::quant::Codebook;
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+/// One sealed tile: dense copy (f32 mode) or packed codes + factors.
+#[derive(Clone, Debug)]
+enum Tile {
+    Dense(Matrix),
+    Packed(PackedTile),
+}
+
+/// Per-sequence state: committed length + the dense staging tail.
+#[derive(Clone, Debug)]
+struct SeqKv {
+    /// Tokens fully appended across all layers.
+    len: usize,
+    /// Per-layer staging for the open tail block (block_tokens × D).
+    tail_k: Vec<Matrix>,
+    tail_v: Vec<Matrix>,
+}
+
+/// Block-pooled, optionally quantized KV store (see the module doc).
+#[derive(Debug)]
+pub struct KvPool {
+    cfg: KvQuantCfg,
+    n_layers: usize,
+    d_model: usize,
+    codebook: Option<Codebook>,
+    alloc: KvBlockAllocator,
+    /// `capacity · n_layers · 2` tile slots; `slot(b, l, kv)` indexes them.
+    slots: Vec<Option<Tile>>,
+    seqs: HashMap<u64, SeqKv>,
+    /// High-water mark of [`Self::used_bytes`] (sealed blocks + staging).
+    peak_bytes: usize,
+}
+
+impl KvPool {
+    /// Pool with an explicit block capacity.
+    pub fn new(cfg: KvQuantCfg, n_layers: usize, d_model: usize, capacity_blocks: usize) -> KvPool {
+        assert!(cfg.block_tokens > 0 && n_layers > 0 && d_model > 0);
+        let codebook = cfg.bits.codebook();
+        KvPool {
+            cfg,
+            n_layers,
+            d_model,
+            codebook,
+            alloc: KvBlockAllocator::new(capacity_blocks, cfg.block_tokens),
+            slots: (0..capacity_blocks * n_layers * 2).map(|_| None).collect(),
+            seqs: HashMap::new(),
+            peak_bytes: 0,
+        }
+    }
+
+    /// Pool sized from a byte budget. A worst-case sequence costs its
+    /// sealed blocks **plus one dense staging tail**
+    /// ([`Self::staging_bytes`]); capacity is the block count of as many
+    /// such sequences as the budget holds, clamped so at least one fits.
+    pub fn with_byte_budget(
+        cfg: KvQuantCfg,
+        n_layers: usize,
+        d_model: usize,
+        budget_bytes: usize,
+        max_seq: usize,
+    ) -> KvPool {
+        let probe = KvPool::new(cfg, n_layers, d_model, 0);
+        let per_seq_blocks = probe.blocks_for(max_seq);
+        let per_seq_bytes = per_seq_blocks * probe.block_bytes() + probe.staging_bytes();
+        let capacity = ((budget_bytes / per_seq_bytes) * per_seq_blocks).max(per_seq_blocks);
+        KvPool::new(cfg, n_layers, d_model, capacity)
+    }
+
+    pub fn cfg(&self) -> &KvQuantCfg {
+        &self.cfg
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.cfg.block_tokens
+    }
+
+    /// Bytes of sealed storage per block (codes + factor side-cars for the
+    /// packed formats, plain f32 for dense), across K and V of all layers.
+    /// Pure arithmetic — mirrors the `PackedCodes` word-aligned row layout.
+    pub fn block_bytes(&self) -> usize {
+        let (bt, d) = (self.cfg.block_tokens, self.d_model);
+        let per_tile = match self.cfg.bits {
+            KvBits::F32 => 4 * bt * d,
+            bits => {
+                let cb_len = bits.codebook().expect("packed format").len();
+                let cpw = PackedCodes::codes_per_word(PackedCodes::bits_needed(cb_len));
+                4 * bt * d.div_ceil(cpw) + 4 * (bt * self.cfg.rank + self.cfg.rank * d)
+            }
+        };
+        2 * self.n_layers * per_tile
+    }
+
+    /// Bytes per block if this pool stored dense f32 (the budget yardstick).
+    pub fn dense_block_bytes(&self) -> usize {
+        2 * self.n_layers * 4 * self.cfg.block_tokens * self.d_model
+    }
+
+    /// Dense f32 staging bytes every active sequence holds for its open
+    /// tail block (one dense block's worth, regardless of `kv_bits`).
+    pub fn staging_bytes(&self) -> usize {
+        self.dense_block_bytes()
+    }
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.alloc.blocks_for(tokens)
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.alloc.free_blocks() + self.alloc.used_blocks()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.alloc.used_blocks()
+    }
+
+    pub fn active_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Bytes currently held: reserved sealed blocks + every active
+    /// sequence's dense staging tail.
+    pub fn used_bytes(&self) -> usize {
+        self.alloc.used_blocks() * self.block_bytes() + self.seqs.len() * self.staging_bytes()
+    }
+
+    /// High-water mark of [`Self::used_bytes`] over the pool's lifetime.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    fn touch_peak(&mut self) {
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes());
+    }
+
+    /// How many full `max_seq`-token sequences this pool can hold at once
+    /// (block capacity; staging is already priced into
+    /// [`Self::with_byte_budget`] sizing).
+    pub fn max_concurrent_full_seqs(&self, max_seq: usize) -> usize {
+        self.capacity_blocks() / self.blocks_for(max_seq).max(1)
+    }
+
+    /// Can `n` more sequences of this worst-case length be admitted?
+    pub fn can_admit_n(&self, n: usize, worst_case_tokens: usize) -> bool {
+        n * self.blocks_for(worst_case_tokens) <= self.alloc.free_blocks()
+    }
+
+    /// Committed token count for a sequence (`None` if unknown).
+    pub fn seq_len(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).map(|s| s.len)
+    }
+
+    fn ensure_seq(&mut self, seq: u64) {
+        let (bt, d, l) = (self.cfg.block_tokens, self.d_model, self.n_layers);
+        self.seqs.entry(seq).or_insert_with(|| SeqKv {
+            len: 0,
+            tail_k: (0..l).map(|_| Matrix::zeros(bt, d)).collect(),
+            tail_v: (0..l).map(|_| Matrix::zeros(bt, d)).collect(),
+        });
+    }
+
+    /// Reserve blocks so the sequence can grow to `tokens` total tokens
+    /// (idempotent growth, like the underlying allocator). Returns false —
+    /// and changes nothing — when the pool cannot satisfy it.
+    pub fn reserve(&mut self, seq: u64, tokens: usize) -> bool {
+        self.ensure_seq(seq);
+        let ok = self.alloc.reserve(seq, tokens);
+        self.touch_peak();
+        ok
+    }
+
+    #[inline]
+    fn slot_idx(&self, block_id: usize, layer: usize, kv: usize) -> usize {
+        (block_id * self.n_layers + layer) * 2 + kv
+    }
+
+    /// Append `k.rows` consecutive positions starting at `pos0` for one
+    /// layer (k and v are rows×D, k post-RoPE). Rows land in the staging
+    /// tail; each position that completes a block seals that layer's K/V
+    /// tiles into the sequence's next owned block. Fails — without writing
+    /// anything — when the pool cannot back the required blocks.
+    pub fn append_rows(
+        &mut self,
+        seq: u64,
+        layer: usize,
+        pos0: usize,
+        k: &Matrix,
+        v: &Matrix,
+    ) -> anyhow::Result<()> {
+        let bt = self.cfg.block_tokens;
+        let d = self.d_model;
+        assert_eq!(k.shape(), v.shape(), "K/V shape mismatch");
+        assert_eq!(k.cols, d, "row width {} != d_model {d}", k.cols);
+        assert!(layer < self.n_layers, "layer {layer} out of range");
+        self.ensure_seq(seq);
+        anyhow::ensure!(
+            self.alloc.reserve(seq, pos0 + k.rows),
+            "KV pool exhausted: seq {seq} needs {} blocks, {} free",
+            self.alloc.blocks_for(pos0 + k.rows),
+            self.alloc.free_blocks()
+        );
+        self.touch_peak();
+        for r in 0..k.rows {
+            let pos = pos0 + r;
+            let ti = pos % bt;
+            {
+                let sk = self.seqs.get_mut(&seq).expect("ensured above");
+                sk.tail_k[layer].row_mut(ti).copy_from_slice(k.row(r));
+                sk.tail_v[layer].row_mut(ti).copy_from_slice(v.row(r));
+            }
+            if ti + 1 == bt {
+                let block_id = self.alloc.owned_blocks(seq)[pos / bt];
+                let (tile_k, tile_v) = {
+                    let sk = self.seqs.get(&seq).expect("ensured above");
+                    (
+                        self.seal_tile(&sk.tail_k[layer]),
+                        self.seal_tile(&sk.tail_v[layer]),
+                    )
+                };
+                let ik = self.slot_idx(block_id, layer, 0);
+                let iv = self.slot_idx(block_id, layer, 1);
+                self.slots[ik] = Some(tile_k);
+                self.slots[iv] = Some(tile_v);
+            }
+        }
+        Ok(())
+    }
+
+    fn seal_tile(&self, tail: &Matrix) -> Tile {
+        match &self.codebook {
+            None => Tile::Dense(tail.clone()),
+            Some(cb) => Tile::Packed(PackedTile::quantize(tail, self.cfg.rank, cb)),
+        }
+    }
+
+    /// Mark `len` tokens as fully appended (all layers written).
+    pub fn commit(&mut self, seq: u64, len: usize) {
+        if let Some(sk) = self.seqs.get_mut(&seq) {
+            sk.len = len;
+        }
+    }
+
+    /// Read window over one (sequence, layer): sealed tiles + the staging
+    /// tail, covering positions `0..len`.
+    pub fn view(&self, seq: u64, layer: usize, len: usize) -> KvSeqView<'_> {
+        let sk = self.seqs.get(&seq).unwrap_or_else(|| panic!("unknown KV sequence {seq}"));
+        let bt = self.cfg.block_tokens;
+        let sealed = len / bt;
+        let owned = self.alloc.owned_blocks(seq);
+        assert!(
+            sealed <= owned.len(),
+            "view of {len} tokens needs {sealed} sealed blocks, seq owns {}",
+            owned.len()
+        );
+        let mut k_tiles = Vec::with_capacity(sealed);
+        let mut v_tiles = Vec::with_capacity(sealed);
+        for bi in 0..sealed {
+            let ik = self.slot_idx(owned[bi], layer, 0);
+            let iv = self.slot_idx(owned[bi], layer, 1);
+            k_tiles.push(self.slots[ik].as_ref().expect("sealed block has storage"));
+            v_tiles.push(self.slots[iv].as_ref().expect("sealed block has storage"));
+        }
+        KvSeqView {
+            len,
+            d: self.d_model,
+            block_tokens: bt,
+            lut: self.codebook.as_ref().map(|cb| cb.levels.as_slice()).unwrap_or(&[]),
+            k_tiles,
+            v_tiles,
+            tail_k: &sk.tail_k[layer],
+            tail_v: &sk.tail_v[layer],
+        }
+    }
+
+    /// Dequantized dense K/V for `0..len` of one layer — the reference the
+    /// parity tests compare the fused kernels against (and a debugging aid;
+    /// the serving path never calls this).
+    pub fn dense_kv(&self, seq: u64, layer: usize, len: usize) -> (Matrix, Matrix) {
+        let view = self.view(seq, layer, len);
+        let mut k = Matrix::zeros(len, self.d_model);
+        let mut v = Matrix::zeros(len, self.d_model);
+        let mut crow = vec![0u8; self.d_model];
+        for j in 0..len {
+            view.k_row_into(j, &mut crow, k.row_mut(j));
+            view.v_row_into(j, &mut crow, v.row_mut(j));
+        }
+        (k, v)
+    }
+
+    /// Free a sequence's blocks and staging. Returns false for unknown
+    /// sequences (recoverable — the server path must never panic on a
+    /// stray release).
+    pub fn release(&mut self, seq: u64) -> bool {
+        let known = self.seqs.remove(&seq).is_some();
+        if let Some(blocks) = self.alloc.try_release(seq) {
+            for b in blocks {
+                for layer in 0..self.n_layers {
+                    let ik = self.slot_idx(b, layer, 0);
+                    let iv = self.slot_idx(b, layer, 1);
+                    self.slots[ik] = None;
+                    self.slots[iv] = None;
+                }
+            }
+            true
+        } else {
+            known
+        }
+    }
+}
+
+/// Read-only window over one (sequence, layer) of a [`KvPool`].
+pub struct KvSeqView<'p> {
+    pub len: usize,
+    pub d: usize,
+    pub block_tokens: usize,
+    /// Codebook levels (empty in f32 mode).
+    pub lut: &'p [f32],
+    k_tiles: Vec<&'p Tile>,
+    v_tiles: Vec<&'p Tile>,
+    tail_k: &'p Matrix,
+    tail_v: &'p Matrix,
+}
+
+impl KvSeqView<'_> {
+    #[inline]
+    fn row_into(&self, tiles: &[&Tile], tail: &Matrix, j: usize, crow: &mut [u8], out: &mut [f32]) {
+        debug_assert!(j < self.len);
+        let bt = self.block_tokens;
+        let sealed_tokens = tiles.len() * bt;
+        if j >= sealed_tokens {
+            out[..self.d].copy_from_slice(&tail.row(j - sealed_tokens)[..self.d]);
+            return;
+        }
+        match tiles[j / bt] {
+            Tile::Dense(m) => out[..self.d].copy_from_slice(m.row(j % bt)),
+            Tile::Packed(t) => t.dequant_row_into(j % bt, self.lut, crow, out),
+        }
+    }
+
+    /// Key row `j` (dequantized when packed) into `out[..d]`.
+    #[inline]
+    pub fn k_row_into(&self, j: usize, crow: &mut [u8], out: &mut [f32]) {
+        self.row_into(&self.k_tiles, self.tail_k, j, crow, out);
+    }
+
+    /// Value row `j` (dequantized when packed) into `out[..d]`.
+    #[inline]
+    pub fn v_row_into(&self, j: usize, crow: &mut [u8], out: &mut [f32]) {
+        self.row_into(&self.v_tiles, self.tail_v, j, crow, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg(bits: KvBits, bt: usize) -> KvQuantCfg {
+        KvQuantCfg { bits, rank: 1, block_tokens: bt }
+    }
+
+    fn rows(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        Matrix::randn(n, d, 0.5, rng)
+    }
+
+    #[test]
+    fn dense_pool_roundtrips_exactly() {
+        let mut pool = KvPool::new(cfg(KvBits::F32, 4), 2, 8, 16);
+        let mut rng = Rng::new(0);
+        let k = rows(&mut rng, 11, 8); // 2 sealed blocks + 3-row tail
+        let v = rows(&mut rng, 11, 8);
+        for layer in 0..2 {
+            pool.append_rows(7, layer, 0, &k, &v).unwrap();
+        }
+        pool.commit(7, 11);
+        for layer in 0..2 {
+            let (dk, dv) = pool.dense_kv(7, layer, 11);
+            assert_eq!(dk.data, k.data, "layer {layer} K");
+            assert_eq!(dv.data, v.data, "layer {layer} V");
+        }
+        assert_eq!(pool.used_blocks(), 3);
+        assert!(pool.release(7));
+        assert_eq!(pool.used_blocks(), 0);
+        assert!(!pool.release(7), "double release is recoverable");
+    }
+
+    #[test]
+    fn packed_pool_bounded_error_and_bytes() {
+        for bits in [KvBits::Int8, KvBits::Int4] {
+            let mut pool = KvPool::new(cfg(bits, 8), 1, 16, 8);
+            let mut rng = Rng::new(1);
+            let k = rows(&mut rng, 20, 16);
+            let v = rows(&mut rng, 20, 16);
+            pool.append_rows(1, 0, 0, &k, &v).unwrap();
+            pool.commit(1, 20);
+            let (dk, dv) = pool.dense_kv(1, 0, 20);
+            let tol = match bits {
+                KvBits::Int8 => 0.03,
+                _ => 0.35,
+            } * k.abs_max().max(v.abs_max());
+            for (a, b) in dk.data.iter().zip(&k.data) {
+                assert!(a.is_finite() && (a - b).abs() <= tol, "{bits:?}: {a} vs {b}");
+            }
+            // tail rows (16..20) are still dense — exact
+            for j in 16..20 {
+                assert_eq!(dk.row(j), k.row(j));
+                assert_eq!(dv.row(j), v.row(j));
+            }
+            assert!(pool.block_bytes() < pool.dense_block_bytes());
+        }
+    }
+
+    #[test]
+    fn exhaustion_is_a_clean_error() {
+        let mut pool = KvPool::new(cfg(KvBits::F32, 4), 1, 4, 2); // 8 tokens max
+        let mut rng = Rng::new(2);
+        let k = rows(&mut rng, 12, 4);
+        let v = rows(&mut rng, 12, 4);
+        assert!(pool.append_rows(1, 0, 0, &k, &v).is_err());
+        // failed append reserved nothing beyond what fit — nothing sealed
+        assert!(pool.can_admit_n(1, 8));
+        let k8 = k.slice(0, 8, 0, 4);
+        let v8 = v.slice(0, 8, 0, 4);
+        pool.append_rows(1, 0, 0, &k8, &v8).unwrap();
+        pool.commit(1, 8);
+        assert!(!pool.can_admit_n(1, 1));
+    }
+
+    #[test]
+    fn budget_sizing_scales_with_bits() {
+        let budget = 4 << 20; // 4 MiB
+        let dense = KvPool::with_byte_budget(cfg(KvBits::F32, 16), 4, 256, budget, 256);
+        let int4 = KvPool::with_byte_budget(cfg(KvBits::Int4, 16), 4, 256, budget, 256);
+        let ratio =
+            int4.max_concurrent_full_seqs(256) as f64 / dense.max_concurrent_full_seqs(256) as f64;
+        assert!(ratio >= 2.0, "4-bit concurrency gain {ratio} < 2x");
+    }
+
+    #[test]
+    fn peak_tracks_high_water_including_staging() {
+        let mut pool = KvPool::new(cfg(KvBits::F32, 4), 1, 4, 8);
+        assert!(pool.reserve(1, 16));
+        assert!(pool.reserve(2, 16));
+        let peak = pool.peak_bytes();
+        assert_eq!(peak, 8 * pool.block_bytes() + 2 * pool.staging_bytes());
+        pool.release(1);
+        pool.release(2);
+        assert_eq!(pool.peak_bytes(), peak, "peak survives release");
+        assert_eq!(pool.used_bytes(), 0);
+    }
+
+    #[test]
+    fn budget_covers_blocks_plus_staging() {
+        // with_byte_budget must price the staging tails in: the worst-case
+        // resident bytes of `max_concurrent_full_seqs` sequences never
+        // exceed the budget
+        let budget = 4 << 20;
+        for bits in [KvBits::F32, KvBits::Int8, KvBits::Int4] {
+            let pool = KvPool::with_byte_budget(cfg(bits, 16), 4, 256, budget, 256);
+            let seqs = pool.max_concurrent_full_seqs(256);
+            let worst =
+                seqs * (pool.blocks_for(256) * pool.block_bytes() + pool.staging_bytes());
+            assert!(worst <= budget, "{bits:?}: worst {worst} B > budget {budget} B");
+        }
+    }
+}

@@ -27,6 +27,7 @@
 //! | [`optim`] | AdamW / SGD / LR schedules |
 //! | [`quant`] | **the paper**: codebooks, block-wise quant, LoRDS (Alg. 1), STE, mixed precision, GPTQ/AWQ/LoftQ/QPiSSA/QLoRA baselines, error metrics |
 //! | [`kernels`] | bit-packed code storage + tiled fused dequant-matmul kernels (the zero-overhead inference claim, Figure 2) |
+//! | [`kvquant`] | quantized paged KV-cache: block-pooled 4/8-bit K/V codes with rank-r low-rank scale factors per block + fused packed attention (the LoRDS idea applied to serving memory) |
 //! | [`adapters`] | multi-tenant LoRDS scale adapters: per-tenant (B′, A′) artifacts + hot-swappable ref-counted registry over one shared packed base (§3.4 at serving time) |
 //! | [`model`] | Llama-style transformer with manual backward + quantized linears |
 //! | [`data`] | synthetic corpus, calibration sampler, task suite |
@@ -50,6 +51,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod kernels;
+pub mod kvquant;
 pub mod linalg;
 pub mod model;
 pub mod optim;

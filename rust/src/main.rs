@@ -20,7 +20,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "quantize", about: "PTQ-quantize the testbed with --method and report PPL/acc" },
     Command { name: "qat", about: "quantization-aware training (LoRDS STE or INT4 baseline)" },
     Command { name: "peft", about: "PEFT fine-tune scaling factors (LoRDS) vs QLoRA adapters" },
-    Command { name: "serve", about: "serve batched requests (--engine native|pjrt, --format lords|nf4|qlora)" },
+    Command { name: "serve", about: "serve batched requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4)" },
     Command { name: "eval", about: "evaluate a checkpoint: perplexity + 7-task zero-shot suite" },
     Command { name: "rank-table", about: "print Appendix-A Table 7 (parity ranks, exact paper shapes)" },
     Command { name: "info", about: "environment + artifact manifest summary" },
@@ -166,7 +166,13 @@ fn cmd_peft(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = model_cfg(args);
-    let serve_cfg = ServeCfg::default();
+    let serve_cfg = ServeCfg {
+        kv_bits: args.get_usize("kv-bits", 32) as u32,
+        kv_budget_mib: args.get_f32("kv-budget-mib", 0.0) as f64,
+        ..ServeCfg::default()
+    };
+    let kv_bits = lords::kvquant::KvBits::parse(serve_cfg.kv_bits)
+        .ok_or_else(|| anyhow::anyhow!("--kv-bits must be 32, 8, or 4"))?;
     let n_requests = args.get_usize("requests", 16);
     let max_new = args.get_usize("max-new", 32);
     let engine_kind = args.get_or("engine", "native");
@@ -174,6 +180,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut rng = Rng::new(args.get_u64("seed", 0));
 
     if engine_kind == "pjrt" {
+        anyhow::ensure!(
+            serve_cfg.kv_bits == 32,
+            "--kv-bits applies to the native engine (pjrt slabs are dense f32)"
+        );
         let dir = args.get_or("artifacts", "artifacts");
         let exec = Executor::spawn(dir)?;
         let manifest = lords::runtime::Manifest::load(dir).map_err(anyhow::Error::msg)?;
@@ -224,9 +234,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 Request::new(i as u64, (0..prompt_len).map(|_| rng.below(cfg.vocab)).collect(), max_new)
             })
             .collect();
-        let mut server = Server::new(NativeEngine::new(model, format), serve_cfg);
+        let kv = lords::kvquant::KvQuantCfg::with_bits(kv_bits);
+        let engine = NativeEngine::with_kv(model, format, kv);
+        let mut server = Server::new(engine, serve_cfg);
         let report = server.run(reqs)?;
         report.metrics.print(&report.engine);
+        println!(
+            "  kv cache: {} blocks x {} B ({}; peak {:.2} MiB)",
+            server.engine.kv_pool().capacity_blocks(),
+            server.engine.kv_pool().block_bytes(),
+            kv_bits.name(),
+            server.engine.kv_pool().peak_bytes() as f64 / (1024.0 * 1024.0)
+        );
     }
     Ok(())
 }

@@ -7,6 +7,7 @@
 use super::attention::{attention_bwd, attention_decode, attention_fwd, rope_bwd, rope_fwd, AttnCache};
 use super::linear::{LinearCache, LinearGrads, LinearWeight};
 use crate::adapters::{AdapterFactors, BaPair};
+use crate::kvquant::KvPool;
 use super::loss::{cross_entropy_bwd, cross_entropy_fwd};
 use super::norm::{rmsnorm_bwd, rmsnorm_fwd, NormCache};
 use crate::config::ModelCfg;
@@ -558,6 +559,97 @@ impl Model {
         let logits = crate::tensor::matmul_transb(&xf, &self.lm_head);
         logits.row(0).to_vec()
     }
+
+    // ------------------------------------------------- pooled (paged) KV
+
+    /// Prefill one sequence into the block-pooled (optionally quantized)
+    /// KV store; returns last-position logits. The packed-KV counterpart
+    /// of [`Self::prefill_with`]: K/V rows stream into the pool (sealed
+    /// blocks are quantized at append time) and attention runs fused over
+    /// the packed blocks + dense tail. Errors when the pool cannot back
+    /// the prompt.
+    pub fn prefill_pooled(
+        &self,
+        tokens: &[usize],
+        pool: &mut KvPool,
+        seq: u64,
+        adapter: Option<&AdapterFactors>,
+    ) -> anyhow::Result<Vec<f32>> {
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let s = tokens.len();
+        anyhow::ensure!(s <= self.cfg.max_seq, "prompt {} > max_seq {}", s, self.cfg.max_seq);
+        anyhow::ensure!(
+            pool.seq_len(seq).unwrap_or(0) == 0,
+            "prefill into non-empty KV sequence {seq}"
+        );
+        let mut x = self.embed(tokens);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let lf = adapter.map(|f| &f.layers[li]);
+            let ov = |slot: usize| lf.and_then(|l| l.linears[slot].as_ref());
+            let (h1, _) = rmsnorm_fwd(&x, &layer.attn_norm);
+            let mut q = fwd(&layer.wq, &h1, ov(0));
+            let mut k = fwd(&layer.wk, &h1, ov(1));
+            let v = fwd(&layer.wv, &h1, ov(2));
+            rope_fwd(&mut q, h, 0, theta);
+            rope_fwd(&mut k, h, 0, theta);
+            pool.append_rows(seq, li, 0, &k, &v)?;
+            let att = crate::kvquant::attention::prefill_packed(&q, &pool.view(seq, li, s), h);
+            let o = fwd(&layer.wo, &att, ov(3));
+            x.add_assign(&o);
+            let (h2, _) = rmsnorm_fwd(&x, &layer.mlp_norm);
+            let gate_pre = fwd(&layer.w_gate, &h2, ov(4));
+            let up = fwd(&layer.w_up, &h2, ov(5));
+            let down = fwd(&layer.w_down, &swiglu(&gate_pre, &up), ov(6));
+            x.add_assign(&down);
+        }
+        pool.commit(seq, s);
+        let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
+        let logits = crate::tensor::matmul_transb(&xf, &self.lm_head);
+        Ok(logits.row(s - 1).to_vec())
+    }
+
+    /// One decode step over the block-pooled KV store (packed-KV
+    /// counterpart of [`Self::decode_with`]).
+    pub fn decode_pooled(
+        &self,
+        token: usize,
+        pool: &mut KvPool,
+        seq: u64,
+        adapter: Option<&AdapterFactors>,
+    ) -> anyhow::Result<Vec<f32>> {
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let pos = pool
+            .seq_len(seq)
+            .ok_or_else(|| anyhow::anyhow!("decode of unknown KV sequence {seq}"))?;
+        anyhow::ensure!(pos < self.cfg.max_seq, "KV cache full for seq {seq}");
+        let mut x = self.embed(&[token]);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let lf = adapter.map(|f| &f.layers[li]);
+            let ov = |slot: usize| lf.and_then(|l| l.linears[slot].as_ref());
+            let (h1, _) = rmsnorm_fwd(&x, &layer.attn_norm);
+            let mut q = fwd(&layer.wq, &h1, ov(0));
+            let mut k = fwd(&layer.wk, &h1, ov(1));
+            let v = fwd(&layer.wv, &h1, ov(2));
+            rope_fwd(&mut q, h, pos, theta);
+            rope_fwd(&mut k, h, pos, theta);
+            pool.append_rows(seq, li, pos, &k, &v)?;
+            let att =
+                crate::kvquant::attention::decode_packed(&q, &pool.view(seq, li, pos + 1), h);
+            let o = fwd(&layer.wo, &att, ov(3));
+            x.add_assign(&o);
+            let (h2, _) = rmsnorm_fwd(&x, &layer.mlp_norm);
+            let gate_pre = fwd(&layer.w_gate, &h2, ov(4));
+            let up = fwd(&layer.w_up, &h2, ov(5));
+            let down = fwd(&layer.w_down, &swiglu(&gate_pre, &up), ov(6));
+            x.add_assign(&down);
+        }
+        pool.commit(seq, pos + 1);
+        let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
+        let logits = crate::tensor::matmul_transb(&xf, &self.lm_head);
+        Ok(logits.row(0).to_vec())
+    }
 }
 
 /// One linear forward, dispatched through a tenant adapter slot when
@@ -763,6 +855,63 @@ mod tests {
         let d1 = model.decode_with(tokens[5], &mut c1, Some(&adapter));
         let d2 = merged.decode(tokens[5], &mut c2);
         crate::util::prop::assert_allclose(&d1, &d2, 1e-6, 1e-6, "adapted decode");
+    }
+
+    #[test]
+    fn pooled_f32_kv_matches_contiguous_cache() {
+        // the paged dense pool must reproduce the per-sequence cache path
+        let cfg = tiny_cfg();
+        let model = Model::init(&cfg, 21);
+        let mut rng = Rng::new(22);
+        let tokens: Vec<usize> = (0..10).map(|_| rng.below(cfg.vocab)).collect();
+        let mut cache = KvCache::new(&cfg);
+        let pre_ref = model.prefill(&tokens[..9], &mut cache);
+        let dec_ref = model.decode(tokens[9], &mut cache);
+
+        let kv = crate::kvquant::KvQuantCfg { block_tokens: 4, ..Default::default() };
+        let mut pool = crate::kvquant::KvPool::new(kv, cfg.n_layers, cfg.d_model, 8);
+        let pre = model.prefill_pooled(&tokens[..9], &mut pool, 1, None).unwrap();
+        crate::util::prop::assert_allclose(&pre, &pre_ref, 1e-6, 1e-6, "pooled prefill");
+        let dec = model.decode_pooled(tokens[9], &mut pool, 1, None).unwrap();
+        crate::util::prop::assert_allclose(&dec, &dec_ref, 1e-6, 1e-6, "pooled decode");
+        assert_eq!(pool.seq_len(1), Some(10));
+    }
+
+    #[test]
+    fn pooled_int8_kv_within_logit_tolerance() {
+        let cfg = tiny_cfg();
+        let model = Model::init(&cfg, 23);
+        let mut rng = Rng::new(24);
+        let tokens: Vec<usize> = (0..12).map(|_| rng.below(cfg.vocab)).collect();
+        let mut cache = KvCache::new(&cfg);
+        let pre_ref = model.prefill(&tokens[..11], &mut cache);
+        let dec_ref = model.decode(tokens[11], &mut cache);
+
+        let kv = crate::kvquant::KvQuantCfg {
+            bits: crate::kvquant::KvBits::Int8,
+            rank: 1,
+            block_tokens: 4,
+        };
+        let mut pool = crate::kvquant::KvPool::new(kv, cfg.n_layers, cfg.d_model, 8);
+        let pre = model.prefill_pooled(&tokens[..11], &mut pool, 1, None).unwrap();
+        let dec = model.decode_pooled(tokens[11], &mut pool, 1, None).unwrap();
+        let dp = crate::util::prop::max_abs_diff(&pre, &pre_ref);
+        let dd = crate::util::prop::max_abs_diff(&dec, &dec_ref);
+        assert!(dp <= 1e-2 && dd <= 1e-2, "int8 KV logit drift: prefill {dp}, decode {dd}");
+    }
+
+    #[test]
+    fn pooled_kv_pool_exhaustion_is_recoverable() {
+        let cfg = tiny_cfg();
+        let model = Model::init(&cfg, 25);
+        let kv = crate::kvquant::KvQuantCfg { block_tokens: 4, ..Default::default() };
+        // one block only: an 8-token prompt cannot fit
+        let mut pool = crate::kvquant::KvPool::new(kv, cfg.n_layers, cfg.d_model, 1);
+        let tokens: Vec<usize> = (0..8).collect();
+        assert!(model.prefill_pooled(&tokens, &mut pool, 1, None).is_err());
+        pool.release(1);
+        let short: Vec<usize> = (0..4).collect();
+        assert!(model.prefill_pooled(&short, &mut pool, 2, None).is_ok());
     }
 
     #[test]

@@ -92,6 +92,8 @@ fn serve_cfg() -> ServeCfg {
         max_queue: 64,
         max_new_tokens: 8,
         workers: 1,
+        kv_bits: 32,
+        kv_budget_mib: 0.0,
     }
 }
 

@@ -1,0 +1,264 @@
+//! Quantized paged KV-cache gate: the fused packed-KV attention path must
+//! match the dense per-sequence cache within 1e-2 logit tolerance at
+//! 8-bit (token-identical on a served trace), 4-bit must degrade
+//! gracefully (bounded error, no NaNs), and the pool must uphold the
+//! allocator's invariants over real storage: no leak, no aliasing,
+//! eviction-safety — the acceptance bar for the `kvquant` subsystem.
+
+use lords::config::{ModelCfg, ServeCfg};
+use lords::coordinator::{NativeEngine, Request, Server};
+use lords::kvquant::{KvBits, KvPool, KvQuantCfg};
+use lords::model::{KvCache, Model};
+use lords::tensor::Matrix;
+use lords::util::prop::{max_abs_diff, prop_check};
+use lords::util::Rng;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 48,
+        block: 8,
+        codebook: "nf4".into(),
+        qlora_rank: 4,
+    }
+}
+
+fn serve_cfg(kv_bits: u32) -> ServeCfg {
+    ServeCfg {
+        decode_buckets: vec![1, 2, 4],
+        prefill_buckets: vec![1, 2, 4],
+        batch_window_us: 0,
+        max_queue: 64,
+        max_new_tokens: 8,
+        workers: 1,
+        kv_bits,
+        kv_budget_mib: 0.0,
+    }
+}
+
+fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(99);
+    (0..n)
+        .map(|i| {
+            Request::new(i as u64, (0..prompt_len).map(|_| rng.below(vocab)).collect(), max_new)
+        })
+        .collect()
+}
+
+/// 8-bit packed KV vs the dense per-sequence cache: logits within 1e-2
+/// through prefill and a decode tail.
+#[test]
+fn int8_kv_matches_dense_within_logit_tolerance() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 31);
+    let mut rng = Rng::new(32);
+    let tokens: Vec<usize> = (0..20).map(|_| rng.below(cfg.vocab)).collect();
+
+    let mut cache = KvCache::new(&cfg);
+    let mut want = vec![model.prefill(&tokens[..14], &mut cache)];
+    for &t in &tokens[14..] {
+        want.push(model.decode(t, &mut cache));
+    }
+
+    let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 4 };
+    let mut pool = KvPool::new(kv, cfg.n_layers, cfg.d_model, 16);
+    let mut got = vec![model.prefill_pooled(&tokens[..14], &mut pool, 1, None).unwrap()];
+    for &t in &tokens[14..] {
+        got.push(model.decode_pooled(t, &mut pool, 1, None).unwrap());
+    }
+    for (step, (g, w)) in got.iter().zip(&want).enumerate() {
+        let diff = max_abs_diff(g, w);
+        assert!(diff <= 1e-2, "step {step}: 8-bit KV logit drift {diff} > 1e-2");
+    }
+}
+
+/// 4-bit packed KV degrades gracefully: logits stay finite and bounded.
+#[test]
+fn int4_kv_degrades_gracefully() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 33);
+    let mut rng = Rng::new(34);
+    let tokens: Vec<usize> = (0..18).map(|_| rng.below(cfg.vocab)).collect();
+
+    let mut cache = KvCache::new(&cfg);
+    let mut want = vec![model.prefill(&tokens[..12], &mut cache)];
+    for &t in &tokens[12..] {
+        want.push(model.decode(t, &mut cache));
+    }
+
+    for rank in [1usize, 2] {
+        let kv = KvQuantCfg { bits: KvBits::Int4, rank, block_tokens: 4 };
+        let mut pool = KvPool::new(kv, cfg.n_layers, cfg.d_model, 16);
+        let mut got = vec![model.prefill_pooled(&tokens[..12], &mut pool, 1, None).unwrap()];
+        for &t in &tokens[12..] {
+            got.push(model.decode_pooled(t, &mut pool, 1, None).unwrap());
+        }
+        for (step, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(g.iter().all(|v| v.is_finite()), "rank {rank} step {step}: NaN/inf logits");
+            let diff = max_abs_diff(g, w);
+            assert!(diff <= 0.5, "rank {rank} step {step}: 4-bit drift {diff} unbounded");
+        }
+    }
+}
+
+/// The acceptance trace: a batched serve at 8-bit KV must emit exactly
+/// the token streams of the dense-KV serve.
+#[test]
+fn served_trace_token_match_at_8bit() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 41);
+
+    let mut dense_srv = Server::new(NativeEngine::new(model.clone(), "kv32"), serve_cfg(32));
+    let dense = dense_srv.run(requests(6, 12, 6, cfg.vocab)).unwrap();
+    assert_eq!(dense.metrics.completed, 6);
+
+    let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
+    let mut packed_srv =
+        Server::new(NativeEngine::with_kv(model, "kv8", kv), serve_cfg(8));
+    let packed = packed_srv.run(requests(6, 12, 6, cfg.vocab)).unwrap();
+    assert_eq!(packed.metrics.completed, 6);
+
+    for (d, p) in dense.responses.iter().zip(&packed.responses) {
+        assert_eq!(d.id, p.id);
+        assert_eq!(
+            d.tokens, p.tokens,
+            "req {}: 8-bit KV serve diverged from the dense trace",
+            d.id
+        );
+    }
+    // the packed pool really is smaller per block
+    let pool = packed_srv.engine.kv_pool();
+    assert!(pool.block_bytes() * 2 < pool.dense_block_bytes());
+}
+
+/// Fixed byte budget ⇒ quantized KV admits ≥ 2x (4-bit: ≥ 3.5x bytes,
+/// ≥ 2x sequences) the concurrent sequences of dense f32.
+#[test]
+fn fixed_budget_concurrency_gain() {
+    let (layers, d, bt, max_seq) = (4usize, 256usize, 16usize, 256usize);
+    let budget = 32 << 20;
+    let mk = |bits| {
+        KvPool::with_byte_budget(
+            KvQuantCfg { bits, rank: 1, block_tokens: bt },
+            layers,
+            d,
+            budget,
+            max_seq,
+        )
+    };
+    let dense = mk(KvBits::F32);
+    let int8 = mk(KvBits::Int8);
+    let int4 = mk(KvBits::Int4);
+    let bytes_ratio_4 = dense.block_bytes() as f64 / int4.block_bytes() as f64;
+    assert!(bytes_ratio_4 >= 3.5, "4-bit KV bytes reduction {bytes_ratio_4} < 3.5x");
+    let conc = |p: &KvPool| p.max_concurrent_full_seqs(max_seq);
+    assert!(
+        conc(&int4) >= 2 * conc(&dense),
+        "4-bit concurrency {} < 2x dense {}",
+        conc(&int4),
+        conc(&dense)
+    );
+    assert!(conc(&int8) > conc(&dense), "8-bit must beat dense concurrency");
+}
+
+/// Pool property gate over real storage: interleaved reserve / append /
+/// release must never leak blocks, never alias two sequences' data, and
+/// survive release + reuse (eviction-safety). Dense mode makes the check
+/// exact: every live sequence must read back exactly what it appended.
+#[test]
+fn pool_no_leak_no_aliasing_eviction_safe() {
+    prop_check(24, |g| {
+        let bt = *g.pick(&[2usize, 4]);
+        let d = 4usize;
+        let capacity = g.usize(2..=12);
+        let kv = KvQuantCfg { bits: KvBits::F32, rank: 1, block_tokens: bt };
+        let mut pool = KvPool::new(kv, 1, d, capacity);
+        let mut rng = g.rng().fork(17);
+        // mirror of appended rows per live sequence
+        let mut live: Vec<(u64, Matrix)> = Vec::new();
+        for step in 0..60u64 {
+            let grow = g.bool() && !live.is_empty();
+            if grow {
+                // grow a random live sequence by 1..=bt rows
+                let idx = rng.below(live.len());
+                let (seq, mirror) = &mut live[idx];
+                let n = 1 + rng.below(bt);
+                let k = Matrix::randn(n, d, 1.0, &mut rng);
+                if pool.append_rows(*seq, 0, mirror.rows, &k, &k).is_ok() {
+                    let mut grown = Matrix::zeros(mirror.rows + n, d);
+                    grown.paste(0, 0, mirror);
+                    grown.paste(mirror.rows, 0, &k);
+                    *mirror = grown;
+                    pool.commit(*seq, mirror.rows);
+                }
+            } else if g.bool() || live.is_empty() {
+                // admit a new sequence
+                let seq = 1000 + step;
+                let n = 1 + rng.below(2 * bt);
+                let k = Matrix::randn(n, d, 1.0, &mut rng);
+                if pool.append_rows(seq, 0, 0, &k, &k).is_ok() {
+                    pool.commit(seq, n);
+                    live.push((seq, k));
+                } else {
+                    pool.release(seq); // clean up the empty entry
+                }
+            } else {
+                let idx = rng.below(live.len());
+                let (seq, _) = live.swap_remove(idx);
+                if !pool.release(seq) {
+                    return Err(format!("release of live seq {seq} reported unknown"));
+                }
+                if pool.release(seq) {
+                    return Err(format!("double release of seq {seq} reported success"));
+                }
+            }
+            // no leak: allocator arithmetic must always balance
+            if pool.used_blocks() + pool.free_blocks() != capacity {
+                return Err(format!(
+                    "leak at step {step}: used {} + free {} != cap {capacity}",
+                    pool.used_blocks(),
+                    pool.free_blocks()
+                ));
+            }
+            // no aliasing / eviction-safety: every live sequence reads back
+            // exactly its own rows (a shared or stale block would corrupt)
+            for (seq, mirror) in &live {
+                let (dk, dv) = pool.dense_kv(*seq, 0, mirror.rows);
+                if dk.data != mirror.data || dv.data != mirror.data {
+                    return Err(format!("seq {seq} read back foreign/stale data"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The packed formats uphold the same storage invariants (bounded error
+/// instead of exactness for sealed rows).
+#[test]
+fn packed_pool_survives_reuse() {
+    let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 4 };
+    let mut pool = KvPool::new(kv, 2, 8, 6);
+    let mut rng = Rng::new(55);
+    for round in 0..5u64 {
+        let k = Matrix::randn(9, 8, 0.5, &mut rng);
+        let v = Matrix::randn(9, 8, 0.5, &mut rng);
+        for layer in 0..2 {
+            pool.append_rows(round, layer, 0, &k, &v).unwrap();
+        }
+        pool.commit(round, 9);
+        let tol = 0.03 * k.abs_max().max(v.abs_max());
+        for layer in 0..2 {
+            let (dk, dv) = pool.dense_kv(round, layer, 9);
+            for (a, b) in dk.data.iter().zip(&k.data).chain(dv.data.iter().zip(&v.data)) {
+                assert!((a - b).abs() <= tol, "round {round}: stale or aliased block");
+            }
+        }
+        assert!(pool.release(round));
+        assert_eq!(pool.used_blocks(), 0, "round {round} leaked blocks");
+    }
+}
