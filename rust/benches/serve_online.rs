@@ -1,0 +1,183 @@
+//! Online serving bench — streaming latency under open-loop load through
+//! the sessioned submit/step API: TTFT / ITL / queue-wait percentiles and
+//! goodput at deterministic Poisson-like arrival rates, for dense f32 vs
+//! 8-bit vs 4-bit packed KV over the fused LoRDS base.
+//!
+//! Protocol: a closed-loop `run_trace` first measures each format's peak
+//! request rate; the open-loop driver then replays the workload at ~50%
+//! and ~90% of that rate. At 0.5x the server keeps up and ITL ≈ the
+//! decode step; at 0.9x the queue forms and TTFT p99 shows the kvquant
+//! concurrency headroom (quantized KV admits more sequences per byte, so
+//! it degrades later).
+//!
+//! Results are written to `BENCH_serve_online.json` (override with
+//! `LORDS_BENCH_JSON=path`).
+
+use lords::config::ServeCfg;
+use lords::coordinator::{run_open_loop, NativeEngine, Request, Server};
+use lords::kvquant::{KvBits, KvQuantCfg};
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::testbed::{full_mode, model_zoo, Testbed};
+use lords::util::Rng;
+
+struct Point {
+    kv_bits: u32,
+    rate_frac: f64,
+    rate_rps: f64,
+    completed: usize,
+    total_tps: f64,
+    ttft_p50_ms: f64,
+    ttft_p99_ms: f64,
+    itl_p50_ms: f64,
+    itl_p99_ms: f64,
+    queue_p50_ms: f64,
+    queue_p99_ms: f64,
+}
+
+fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(7);
+    (0..n)
+        .map(|i| {
+            Request::new(i as u64, (0..prompt_len).map(|_| rng.below(vocab)).collect(), max_new)
+        })
+        .collect()
+}
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner(
+        "Serve online",
+        "open-loop streaming latency (TTFT/ITL/queue percentiles) through submit/step",
+    );
+
+    let full = full_mode();
+    let (name, cfg) = model_zoo().remove(0);
+    let tb = Testbed::build(name, &cfg, if full { 300 } else { 120 }, 0);
+    let n_requests = if full { 32 } else { 12 };
+    let max_new = if full { 24 } else { 12 };
+    let prompt_len = cfg.max_seq / 4;
+    let mut model = tb.model.clone();
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: 30, ..Default::default() },
+        false,
+    );
+
+    let mut t = lords::bench::TableBuilder::new(
+        "Serve online — open-loop latency percentiles (native engine, fused LoRDS base)",
+    )
+    .headers(&[
+        "KV",
+        "Load",
+        "Rate req/s",
+        "Done",
+        "Total tok/s",
+        "TTFT p50/p99 ms",
+        "ITL p50/p99 ms",
+        "Queue p50/p99 ms",
+    ]);
+
+    let mut points: Vec<Point> = Vec::new();
+    for bits in [KvBits::F32, KvBits::Int8, KvBits::Int4] {
+        // closed-loop calibration: the format's peak request rate
+        let kv = KvQuantCfg::with_bits(bits);
+        let serve = ServeCfg { kv_bits: bits.as_u32(), ..Default::default() };
+        let mut server =
+            Server::new(NativeEngine::with_kv(model.clone(), bits.name(), kv), serve);
+        let closed = server
+            .run_trace(requests(n_requests, prompt_len, max_new, cfg.vocab))
+            .unwrap();
+        let peak_rps = closed.metrics.completed as f64 / closed.metrics.wall_secs.max(1e-9);
+        eprintln!("[serve_online] {}: peak {:.1} req/s closed-loop", bits.name(), peak_rps);
+
+        for rate_frac in [0.5, 0.9] {
+            let rate_rps = (peak_rps * rate_frac).max(1.0);
+            let report = run_open_loop(
+                &mut server,
+                requests(n_requests, prompt_len, max_new, cfg.vocab),
+                rate_rps,
+                11,
+            )
+            .unwrap();
+            let m = &report.metrics;
+            let p = Point {
+                kv_bits: bits.as_u32(),
+                rate_frac,
+                rate_rps,
+                completed: m.completed,
+                total_tps: m.total_tps(),
+                ttft_p50_ms: m.ttft.p50() * 1e3,
+                ttft_p99_ms: m.ttft.p99() * 1e3,
+                itl_p50_ms: m.itl.p50() * 1e3,
+                itl_p99_ms: m.itl.p99() * 1e3,
+                queue_p50_ms: m.queue_wait.p50() * 1e3,
+                queue_p99_ms: m.queue_wait.p99() * 1e3,
+            };
+            eprintln!(
+                "[serve_online] {} @ {:.0}% load: ttft p99 {:.2} ms, itl p99 {:.2} ms",
+                bits.name(),
+                rate_frac * 100.0,
+                p.ttft_p99_ms,
+                p.itl_p99_ms
+            );
+            t.row(vec![
+                bits.name().into(),
+                format!("{:.0}%", rate_frac * 100.0),
+                format!("{rate_rps:.1}"),
+                p.completed.to_string(),
+                format!("{:.1}", p.total_tps),
+                format!("{:.2}/{:.2}", p.ttft_p50_ms, p.ttft_p99_ms),
+                format!("{:.2}/{:.2}", p.itl_p50_ms, p.itl_p99_ms),
+                format!("{:.2}/{:.2}", p.queue_p50_ms, p.queue_p99_ms),
+            ]);
+            points.push(p);
+        }
+    }
+    t.print();
+    println!(
+        "\n(shape check: at 50% load queue-wait ≈ 0 and ITL tracks the decode step; \
+         at 90% load TTFT p99 grows — later for int8/int4, whose budgets admit more \
+         concurrent sequences)"
+    );
+    write_json(&points, full);
+}
+
+fn write_json(points: &[Point], full: bool) {
+    let path = std::env::var("LORDS_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_online.json").to_string()
+    });
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"serve_online\",\n");
+    s.push_str("  \"unit\": \"milliseconds_and_tokens_per_second\",\n");
+    s.push_str(&format!("  \"full_mode\": {full},\n"));
+    s.push_str(&format!("  \"threads\": {},\n", lords::util::ThreadPool::global().size()));
+    s.push_str("  \"measured\": true,\n");
+    s.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kv_bits\": {}, \"rate_frac\": {:.2}, \"rate_rps\": {:.2}, \
+             \"completed\": {}, \"total_tps\": {:.2}, \"ttft_p50_ms\": {:.3}, \
+             \"ttft_p99_ms\": {:.3}, \"itl_p50_ms\": {:.3}, \"itl_p99_ms\": {:.3}, \
+             \"queue_p50_ms\": {:.3}, \"queue_p99_ms\": {:.3}}}{}\n",
+            p.kv_bits,
+            p.rate_frac,
+            p.rate_rps,
+            p.completed,
+            p.total_tps,
+            p.ttft_p50_ms,
+            p.ttft_p99_ms,
+            p.itl_p50_ms,
+            p.itl_p99_ms,
+            p.queue_p50_ms,
+            p.queue_p99_ms,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, &s) {
+        Ok(()) => eprintln!("[serve_online] wrote baseline {path}"),
+        Err(e) => eprintln!("[serve_online] could not write {path}: {e}"),
+    }
+}

@@ -86,7 +86,7 @@ fn main() {
         r.adapter = tenant_ids[i % n_tenants].clone();
     }
     let mut server = Server::new(engine, ServeCfg::default());
-    let report = server.run(reqs).unwrap();
+    let report = server.run_trace(reqs).unwrap();
     eprintln!(
         "[table5b] lords 1-base-{n_tenants}-adapters: total {:.1} tok/s ({:.2} MiB)",
         report.metrics.total_tps(),
@@ -103,7 +103,7 @@ fn main() {
     let bytes_base = engine_base.weight_bytes();
     let mut server_base = Server::new(engine_base, ServeCfg::default());
     let report_base =
-        server_base.run(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
+        server_base.run_trace(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
     row(&mut t, "LoRDS single tenant (base)", 1, bytes_base, &report_base.metrics);
 
     // ---------------- QLoRA: additive adapters need one engine per tenant
@@ -131,7 +131,7 @@ fn main() {
             .filter(|(i, _)| i % n_tenants == ti)
             .map(|(_, r)| r)
             .collect();
-        let rep = server.run(share).unwrap();
+        let rep = server.run_trace(share).unwrap();
         agg.prefill_tokens += rep.metrics.prefill_tokens;
         agg.decode_tokens += rep.metrics.decode_tokens;
         agg.prefill_secs += rep.metrics.prefill_secs;

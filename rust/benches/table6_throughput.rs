@@ -62,7 +62,7 @@ fn main() {
         let engine = NativeEngine::new(model, format);
         let mib = engine.weight_bytes() as f64 / (1024.0 * 1024.0);
         let mut server = Server::new(engine, ServeCfg::default());
-        let report = server.run(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
+        let report = server.run_trace(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
         let m = &report.metrics;
         eprintln!("[table6] native/{format}: total {:.1} tok/s ({mib:.2} MiB weights)", m.total_tps());
         t.row(vec![
@@ -103,7 +103,7 @@ fn main() {
                 let plen = engine.prefill_seq;
                 let mut server = Server::new(engine, ServeCfg::default());
                 let reqs = requests(n_requests.min(8), plen, max_new, mcfg.vocab, 2);
-                match server.run(reqs) {
+                match server.run_trace(reqs) {
                     Ok(report) => {
                         let m = &report.metrics;
                         eprintln!("[table6] pjrt/{format}: total {:.1} tok/s", m.total_tps());

@@ -150,7 +150,7 @@ fn main() -> anyhow::Result<()> {
         .map(|i| Request::new(i as u64, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), 24))
         .collect();
     let mut server = Server::new(NativeEngine::new(m_peft, "lords-peft"), ServeCfg::default());
-    let report = server.run(reqs)?;
+    let report = server.run_trace(reqs)?;
     report.metrics.print(&report.engine);
 
     println!("\nE2E complete — all five lifecycle stages ran on one checkpoint.");

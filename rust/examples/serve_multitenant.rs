@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let mut server = Server::new(engine, ServeCfg::default());
-    let report = server.run(reqs)?;
+    let report = server.run_trace(reqs)?;
     report.metrics.print(&report.engine);
     report.metrics.print_adapters();
 

@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
                 .map(|i| Request::new(i as u64, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), max_new))
                 .collect();
             let mut server = Server::new(engine, ServeCfg::default());
-            let report = server.run(reqs)?;
+            let report = server.run_trace(reqs)?;
             report.metrics.print(&report.engine);
             println!("first completion: {:?}", &report.responses[0].tokens[..8.min(report.responses[0].tokens.len())]);
         }
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
                 .map(|i| Request::new(i as u64, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), max_new))
                 .collect();
             let mut server = Server::new(NativeEngine::new(model, "lords"), ServeCfg::default());
-            let report = server.run(reqs)?;
+            let report = server.run_trace(reqs)?;
             report.metrics.print(&report.engine);
         }
     }

@@ -207,6 +207,11 @@ pub struct ServeCfg {
     /// dense f32 sequences — quantized formats then fit more sequences in
     /// the same bytes).
     pub kv_budget_mib: f64,
+    /// Open-loop arrival rate in requests/second for the `serve` CLI and
+    /// bench drivers; 0 = closed-loop trace (all requests at t=0).
+    /// Arrivals are a deterministic seeded Poisson-like process
+    /// (`coordinator::driver`).
+    pub rate_rps: f64,
 }
 
 impl Default for ServeCfg {
@@ -220,6 +225,7 @@ impl Default for ServeCfg {
             workers: 1,
             kv_bits: 32,
             kv_budget_mib: 0.0,
+            rate_rps: 0.0,
         }
     }
 }
@@ -235,6 +241,7 @@ impl ServeCfg {
             workers: doc.usize_or("serve", "workers", d.workers),
             kv_bits: doc.usize_or("serve", "kv_bits", d.kv_bits as usize) as u32,
             kv_budget_mib: doc.f32_or("serve", "kv_budget_mib", d.kv_budget_mib as f32) as f64,
+            rate_rps: doc.f32_or("serve", "rate_rps", d.rate_rps as f32) as f64,
             ..d
         }
     }
@@ -268,6 +275,7 @@ mod tests {
         assert_eq!(s.max_queue, 9);
         assert_eq!(s.kv_bits, 32);
         assert_eq!(s.kv_budget_mib, 0.0);
+        assert_eq!(s.rate_rps, 0.0);
         let t = TrainCfg::from_doc(&doc, "qat");
         assert_eq!(t.steps, 77);
     }

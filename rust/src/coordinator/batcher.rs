@@ -56,6 +56,21 @@ impl Batcher {
         self.queue.is_empty()
     }
 
+    /// The first `n` queued requests in FIFO order — the server peeks
+    /// these to size KV-aware admission before popping a batch (a popped
+    /// batch is always a prefix of the queue, so the peeked lengths match
+    /// what `pop_batch` will hand back).
+    pub fn peek(&self, n: usize) -> impl Iterator<Item = &Request> {
+        self.queue.iter().take(n)
+    }
+
+    /// Remove a queued request by id (client cancellation before
+    /// admission). Preserves FIFO order of the remainder.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let pos = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(pos)
+    }
+
     fn largest_bucket_leq(&self, n: usize) -> Option<usize> {
         self.buckets.iter().copied().filter(|&b| b <= n).max()
     }

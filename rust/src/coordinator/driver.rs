@@ -1,0 +1,105 @@
+//! Open-loop arrival driver for the online serving API.
+//!
+//! The trace shim ([`Server::run_trace`]) is closed-loop: every request is
+//! available at t=0 and the server is never idle, which measures peak
+//! throughput but says nothing about latency under load. This driver plays
+//! an **open-loop** workload: request arrival times are drawn from a
+//! deterministic Poisson-like process (exponential inter-arrival gaps from
+//! the seeded [`util::rng`](crate::util::Rng)) and submitted when the wall
+//! clock reaches them, whether or not the server has caught up — exactly
+//! the regime where TTFT/ITL and queue-wait percentiles become meaningful.
+//!
+//! The arrival *schedule* is bit-for-bit reproducible for a given seed;
+//! the measured latencies are of course machine-dependent.
+
+use super::engine::Engine;
+use super::request::Request;
+use super::server::{Event, ServeReport, Server};
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Deterministic Poisson-like arrival offsets (seconds from start) for
+/// `n` requests at `rate_rps` mean arrivals per second: cumulative sums of
+/// exponential inter-arrival gaps drawn from the seeded RNG.
+pub fn poisson_arrivals(n: usize, rate_rps: f64, seed: u64) -> Vec<f64> {
+    assert!(rate_rps > 0.0, "open-loop driver needs a positive arrival rate");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            // inverse-CDF exponential; 1 - u avoids ln(0)
+            t += -(1.0 - rng.f64()).ln() / rate_rps;
+            t
+        })
+        .collect()
+}
+
+/// Play `requests` through the sessioned API open-loop at `rate_rps`
+/// arrivals per second (arrival schedule seeded by `seed`), stepping the
+/// server continuously until every request is resolved (done, rejected,
+/// or cancelled). Returns the standard [`ServeReport`]; streaming
+/// percentiles live in its metrics (`ttft` / `itl` / `queue_wait`).
+pub fn run_open_loop<E: Engine>(
+    server: &mut Server<E>,
+    requests: Vec<Request>,
+    rate_rps: f64,
+    seed: u64,
+) -> anyhow::Result<ServeReport> {
+    server.reset_metrics();
+    let offsets = poisson_arrivals(requests.len(), rate_rps, seed);
+    let mut pending = requests.into_iter().zip(offsets).peekable();
+    let mut responses = Vec::new();
+    let wall0 = Instant::now();
+    loop {
+        // submit every request whose arrival time has passed, stamping the
+        // *scheduled* arrival — a submission delayed by a long prefill or
+        // decode tick still charges that delay to queue-wait/TTFT (exactly
+        // the congestion the open-loop regime exists to measure)
+        while pending.peek().is_some_and(|(_, at)| wall0.elapsed().as_secs_f64() >= *at) {
+            let (mut req, at) = pending.next().unwrap();
+            req.arrival = wall0 + std::time::Duration::from_secs_f64(at);
+            let _ = server.submit(req); // rejections already counted
+        }
+        for ev in server.step()? {
+            if let Event::Done { response } = ev {
+                responses.push(response);
+            }
+        }
+        if pending.peek().is_none() && server.is_idle() {
+            break;
+        }
+        // idle gap before the next scheduled arrival: sleep most of it
+        // (the last millisecond spins for sub-ms submission precision)
+        if server.is_idle() {
+            if let Some((_, at)) = pending.peek() {
+                let gap = *at - wall0.elapsed().as_secs_f64();
+                if gap > 2e-3 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(gap - 1e-3));
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+    server.metrics.wall_secs = wall0.elapsed().as_secs_f64();
+    responses.sort_by_key(|r| r.id);
+    Ok(ServeReport { responses, metrics: server.reset_metrics(), engine: server.engine.name() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_schedule_is_deterministic_and_rate_shaped() {
+        let a = poisson_arrivals(256, 100.0, 5);
+        let b = poisson_arrivals(256, 100.0, 5);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        let c = poisson_arrivals(256, 100.0, 6);
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(a.windows(2).all(|w| w[1] > w[0]), "offsets strictly increase");
+        // mean inter-arrival ≈ 1/rate (law of large numbers, loose bound)
+        let mean_gap = a.last().unwrap() / a.len() as f64;
+        assert!((mean_gap - 0.01).abs() < 0.005, "mean gap {mean_gap} far from 10ms");
+    }
+}

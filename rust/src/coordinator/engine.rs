@@ -2,11 +2,12 @@
 //! PJRT artifact path (bucketed prefill/decode executables, per-sequence
 //! host-side KV slabs packed into batch tensors per step).
 
-use super::request::greedy;
+use super::request::{sample, Request, SamplingParams};
 use crate::adapters::{AdapterFactors, AdapterRegistry, BASE_ADAPTER};
 use crate::kvquant::{KvPool, KvQuantCfg};
 use crate::model::Model;
 use crate::runtime::{ExecutorHandle, HostTensor, Manifest};
+use crate::util::Rng;
 use std::collections::HashMap;
 
 /// In-flight sequence state owned by the server.
@@ -20,9 +21,34 @@ pub struct SeqState {
     pub last_logits: Vec<f32>,
     /// tenant adapter id this sequence is served under
     pub adapter: String,
+    /// per-request sampling policy
+    pub params: SamplingParams,
+    /// generation ends when a sampled token lands in this set
+    pub stop_tokens: Vec<usize>,
+    /// the sequence's private seeded sampling stream
+    pub rng: Rng,
+    /// a sampled token hit the stop set (set by the server)
+    pub stopped: bool,
 }
 
 impl SeqState {
+    /// Sequence state for an admitted request. `max_seq` caps `max_new` so
+    /// the sequence can never outgrow the engine.
+    pub fn admit(req: &Request, max_seq: usize) -> SeqState {
+        SeqState {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: req.prompt.clone(),
+            max_new: req.max_new_tokens.min(max_seq.saturating_sub(1)),
+            last_logits: vec![],
+            adapter: req.adapter.clone(),
+            params: req.params.clone(),
+            stop_tokens: req.stop_tokens.clone(),
+            rng: req.params.rng_for(req.id),
+            stopped: false,
+        }
+    }
+
     pub fn generated(&self) -> usize {
         self.tokens.len() - self.prompt_len
     }
@@ -31,8 +57,21 @@ impl SeqState {
         self.generated() >= self.max_new
     }
 
-    pub fn next_token(&self) -> usize {
-        greedy(&self.last_logits)
+    /// Generation over: budget exhausted, stop token sampled, or the
+    /// context window is full.
+    pub fn finished(&self, max_seq: usize) -> bool {
+        self.stopped || self.done() || self.tokens.len() >= max_seq
+    }
+
+    /// Sample the next token from `last_logits` under this sequence's
+    /// sampling policy (greedy by default; advances the seeded stream
+    /// otherwise).
+    pub fn next_token(&mut self) -> usize {
+        // split borrows: logits/params are read-only, the rng advances
+        let logits = std::mem::take(&mut self.last_logits);
+        let tok = sample(&logits, &self.params, &mut self.rng);
+        self.last_logits = logits;
+        tok
     }
 }
 
@@ -56,12 +95,24 @@ pub trait Engine {
         let _ = (budget_bytes, max_concurrent);
     }
 
-    /// Can the engine's KV store admit `n` more worst-case sequences?
-    /// Engines without an owned pool always say yes (the server's
+    /// Can the engine's KV store admit new sequences whose worst-case
+    /// total lengths (prompt + capped `max_new_tokens`) are `seq_tokens`?
+    /// Admission is by **actual** requested footprint, not `max_seq`
+    /// worst case, so short requests pack far more densely. Engines
+    /// without an owned pool always say yes (the server's
     /// `max_concurrent` cap still bounds them).
-    fn kv_can_admit(&self, n: usize) -> bool {
-        let _ = n;
+    fn kv_can_admit(&self, seq_tokens: &[usize]) -> bool {
+        let _ = seq_tokens;
         true
+    }
+
+    /// Can this engine serve the given tenant right now? Used by the
+    /// server to reject bad submissions before they consume queue slots
+    /// (and again at admission, in case the adapter was evicted while the
+    /// request was queued). Engines without a registry serve only the
+    /// base tenant.
+    fn supports_adapter(&self, adapter: &str) -> bool {
+        adapter == BASE_ADAPTER
     }
 }
 
@@ -166,6 +217,14 @@ impl NativeEngine {
     pub fn weight_bytes(&self) -> usize {
         self.model.weight_bytes() + self.registry.used_bytes()
     }
+
+    /// Worst-case KV tokens one sequence reserves (prompt + capped
+    /// `max_new`, never past `max_seq`) — must agree with
+    /// [`Request::required_kv_tokens`] so admission and reservation see
+    /// the same number.
+    fn seq_reservation(&self, s: &SeqState) -> usize {
+        (s.prompt_len + s.max_new).min(self.model.cfg.max_seq)
+    }
 }
 
 impl Engine for NativeEngine {
@@ -203,8 +262,12 @@ impl Engine for NativeEngine {
         );
     }
 
-    fn kv_can_admit(&self, n: usize) -> bool {
-        self.pool.can_admit_n(n, self.model.cfg.max_seq)
+    fn kv_can_admit(&self, seq_tokens: &[usize]) -> bool {
+        self.pool.can_admit_lengths(seq_tokens)
+    }
+
+    fn supports_adapter(&self, adapter: &str) -> bool {
+        self.registry.contains(adapter)
     }
 
     fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
@@ -232,10 +295,12 @@ impl Engine for NativeEngine {
                 s.id
             );
         }
+        let lens: Vec<usize> = seqs.iter().map(|s| self.seq_reservation(s)).collect();
         anyhow::ensure!(
-            self.pool.can_admit_n(seqs.len(), self.model.cfg.max_seq),
-            "KV pool cannot admit {} sequences ({} blocks free)",
+            self.pool.can_admit_lengths(&lens),
+            "KV pool cannot admit {} sequences needing {:?} tokens ({} blocks free)",
             seqs.len(),
+            lens,
             self.pool.free_blocks()
         );
         for s in seqs.iter_mut() {
@@ -244,8 +309,11 @@ impl Engine for NativeEngine {
             if s.adapter != BASE_ADAPTER {
                 self.seq_adapter.insert(s.id, s.adapter.clone());
             }
-            // worst-case reservation: decode can never run out mid-sequence
-            let reserved = self.pool.reserve(s.id, self.model.cfg.max_seq);
+            // reserve the request's actual worst case (prompt + max_new,
+            // capped at max_seq): decode can never run out mid-sequence,
+            // and short requests no longer hold max_seq-sized reservations
+            let need = self.seq_reservation(s);
+            let reserved = self.pool.reserve(s.id, need);
             debug_assert!(reserved, "admission validated above");
             let factors = self.registry.get(&s.adapter);
             s.last_logits =

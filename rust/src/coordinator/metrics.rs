@@ -1,8 +1,10 @@
 //! Serving metrics: per-phase token throughput + request latency summaries
 //! — exactly the Prefill / Decode / Total tokens-per-second columns of
-//! Table 6, plus p50/p99 request latency for the serving example — and
-//! per-tenant counters for multi-tenant adapter serving (the
-//! `table5_multitenant` bench's breakdown).
+//! Table 6, plus p50/p99 request latency for the serving example — and,
+//! for the online API, streaming-latency percentiles computed from
+//! per-token timestamps: TTFT (arrival → first token), ITL (gap between
+//! consecutive streamed tokens of one sequence), and queue wait. Per-tenant
+//! counters back the `table5_multitenant` bench's breakdown.
 
 use crate::util::Summary;
 use std::collections::HashMap;
@@ -15,6 +17,10 @@ pub struct AdapterCounters {
     pub prefill_tokens: usize,
     pub decode_tokens: usize,
     pub completed: usize,
+    /// admitted requests cancelled by the client mid-decode (queued
+    /// cancels never hit the tenant's `requests` counter, so they are
+    /// not charged here either — `ServeMetrics::cancelled` counts both)
+    pub cancelled: usize,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -26,8 +32,14 @@ pub struct ServeMetrics {
     pub wall_secs: f64,
     pub completed: usize,
     pub rejected: usize,
+    /// requests cancelled by the client (queued or mid-decode)
+    pub cancelled: usize,
     pub latency: Summary,
     pub queue_wait: Summary,
+    /// time to first token: request arrival → first streamed token
+    pub ttft: Summary,
+    /// inter-token latency: gap between consecutive tokens of a sequence
+    pub itl: Summary,
     /// per-tenant breakdown (adapter id → counters)
     pub per_adapter: HashMap<String, AdapterCounters>,
 }
@@ -66,7 +78,7 @@ impl ServeMetrics {
 
     pub fn print(&self, label: &str) {
         println!(
-            "  {label:<16} prefill {:>9.1} tok/s | decode {:>8.1} tok/s | total {:>8.1} tok/s | p50 {:.1}ms p99 {:.1}ms | done {} rej {}",
+            "  {label:<16} prefill {:>9.1} tok/s | decode {:>8.1} tok/s | total {:>8.1} tok/s | p50 {:.1}ms p99 {:.1}ms | done {} rej {} can {}",
             self.prefill_tps(),
             self.decode_tps(),
             self.total_tps(),
@@ -74,6 +86,20 @@ impl ServeMetrics {
             self.latency.p99() * 1e3,
             self.completed,
             self.rejected,
+            self.cancelled,
+        );
+    }
+
+    /// Streaming-latency percentiles (the online serving bench's columns).
+    pub fn print_streaming(&self) {
+        println!(
+            "    ttft p50 {:.2}ms p99 {:.2}ms | itl p50 {:.2}ms p99 {:.2}ms | queue p50 {:.2}ms p99 {:.2}ms",
+            self.ttft.p50() * 1e3,
+            self.ttft.p99() * 1e3,
+            self.itl.p50() * 1e3,
+            self.itl.p99() * 1e3,
+            self.queue_wait.p50() * 1e3,
+            self.queue_wait.p99() * 1e3,
         );
     }
 }

@@ -1,17 +1,49 @@
 //! The serving coordinator — the L3 deployment layer around the quantized
 //! model (the vLLM-router-shaped component of this reproduction):
 //!
-//! * [`request`]  — request/response types and greedy sampling.
+//! * [`request`]  — request/response types, per-request [`SamplingParams`]
+//!   (greedy / temperature / top-k, seeded) and stop conditions.
 //! * [`kvcache`]  — paged KV-block allocator (admission control +
 //!   storage-backed block ownership; no-double-free invariants).
 //! * [`batcher`]  — dynamic batcher: arrival queue → bucketed batches under
 //!   a latency window (continuous batching at the decode step level).
 //! * [`engine`]   — the execution backends: native Rust model or PJRT
 //!   artifacts (bucketed prefill/decode executables).
-//! * [`server`]   — the serving loop: admit → prefill → interleaved decode
-//!   → complete, with per-phase throughput metrics (Table 6's columns).
-//! * [`metrics`]  — latency/throughput accounting, incl. per-tenant
-//!   counters.
+//! * [`server`]   — the **online serving API**: sessioned submit / step /
+//!   cancel with streaming [`Event`]s, plus the `run_trace` offline shim.
+//! * [`driver`]   — open-loop Poisson arrival harness (seeded,
+//!   deterministic schedule) for latency-under-load measurement.
+//! * [`metrics`]  — throughput + latency accounting: per-phase tok/s,
+//!   request latency, TTFT / ITL / queue-wait percentiles from per-token
+//!   timestamps, per-tenant counters.
+//!
+//! # Session lifecycle (the online API)
+//!
+//! ```text
+//! submit ──► queued ──► admitted ──► prefill ──► decode ──► Done
+//!    │          │  (KV-aware batch)    │   Event::Token per step  │
+//!    │          │                      │                          │
+//!    ▼          ▼                      ▼                          ▼
+//! Err(Reject) Event::Rejected      cancel() ⇒ Event::Cancelled  blocks+pins
+//!  (backpressure: queue full,      (KV blocks + adapter pin     released
+//!   bad id/prompt/tenant)           released immediately)
+//! ```
+//!
+//! [`Server::submit`](server::Server::submit) validates and queues one
+//! request (or refuses it with a [`RejectReason`](server::RejectReason) —
+//! admission is explicit, backpressure is the caller's signal).
+//! [`Server::step`](server::Server::step) advances one tick — admit a
+//! prefill batch if capacity allows, then one decode step for every
+//! running sequence — and returns the streaming events: one
+//! [`Event::Token`](server::Event) per sequence per tick, then
+//! [`Event::Done`](server::Event) carrying the finished [`Response`].
+//! [`Server::cancel`](server::Server::cancel) drops a queued or mid-decode
+//! request; its KV blocks and adapter pin are released immediately, so a
+//! cancelled sequence can never leak pool capacity.
+//! [`Server::run_trace`](server::Server::run_trace) reimplements the old
+//! closed-loop trace player on top of submit + step (token-identical), and
+//! [`driver::run_open_loop`] plays deterministic Poisson arrivals against
+//! the same API for TTFT/ITL benchmarking.
 //!
 //! # Tenant routing (multi-tenant adapter serving)
 //!
@@ -23,8 +55,11 @@
 //! differ. [`NativeEngine`] resolves the id against its
 //! [`AdapterRegistry`](crate::adapters::AdapterRegistry) per
 //! prefill/decode call, pinning the adapter for the sequence's lifetime so
-//! hot eviction is deferred, never unsafe. The PJRT engine serves only the
-//! base tenant (per-tenant artifacts are a future lowering).
+//! hot eviction is deferred, never unsafe. Cancellation releases the pin
+//! with the sequence. A tenant evicted while its request is still queued
+//! surfaces as `Event::Rejected`, not a failed batch. The PJRT engine
+//! serves only the base tenant (per-tenant artifacts are a future
+//! lowering).
 //!
 //! # KV memory model (quantized paged cache)
 //!
@@ -34,23 +69,29 @@
 //! block's `block_tokens` positions, either dense f32 or bit-packed 4/8-bit
 //! codes with rank-r low-rank scale factors fit at seal time
 //! ([`kvquant`](crate::kvquant)). Admission flows through the engine
-//! ([`Engine::kv_can_admit`](engine::Engine::kv_can_admit)): `Server::new`
-//! sizes the pool from a **byte budget**
+//! ([`Engine::kv_can_admit`](engine::Engine::kv_can_admit)) and is
+//! **KV-aware**: each queued request is priced at its actual worst case —
+//! prompt length + requested `max_new_tokens`, capped at `max_seq` — and
+//! the engine reserves exactly that at prefill, so short requests pack
+//! many more concurrent sequences than the old `max_seq`-worst-case
+//! accounting. `Server::new` sizes the pool from a **byte budget**
 //! ([`ServeCfg::kv_budget_mib`](crate::config::ServeCfg), default = what
 //! `max_concurrent` dense worst-case sequences need), so dropping
 //! `kv_bits` from 32 to 8 or 4 multiplies how many sequences the same
-//! bytes admit. Each admitted sequence reserves its worst case up front —
-//! decode can never run out of blocks mid-sequence — and
-//! [`Engine::release`](engine::Engine::release) frees blocks and adapter
+//! bytes admit. Reservation up front means decode can never run out of
+//! blocks mid-sequence; [`Engine::release`](engine::Engine::release) —
+//! called on completion *and* cancellation — frees blocks and adapter
 //! pins together (a stray release is recoverable, never a panic).
 
 pub mod batcher;
+pub mod driver;
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
+pub use driver::{poisson_arrivals, run_open_loop};
 pub use engine::{Engine, NativeEngine, PjrtEngine};
-pub use request::{Request, Response};
-pub use server::{ServeReport, Server};
+pub use request::{Request, Response, SamplingParams};
+pub use server::{Event, RejectReason, SeqId, ServeReport, Server};

@@ -1,9 +1,40 @@
 //! Request/response types + sampling. Every request carries a tenant
-//! adapter id ([`BASE_ADAPTER`] by default) that the engine resolves
-//! against its [`AdapterRegistry`](crate::adapters::AdapterRegistry).
+//! adapter id ([`BASE_ADAPTER`] by default), per-request [`SamplingParams`]
+//! (greedy / temperature / top-k, seeded), and stop conditions
+//! (`max_new_tokens` plus an optional stop-token set) that the server
+//! checks as tokens stream out.
 
 use crate::adapters::BASE_ADAPTER;
+use crate::util::Rng;
 use std::time::Instant;
+
+/// Per-request sampling policy. The default (`temperature == 0`) is greedy
+/// argmax — deterministic and what every paper-table bench uses. A positive
+/// temperature samples from the (optionally top-k-truncated) softmax with a
+/// per-request seeded RNG, so two identical runs produce identical streams.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 ⇒ greedy argmax; > 0.0 ⇒ softmax sampling at this temperature.
+    pub temperature: f32,
+    /// Restrict sampling to the k highest logits (0 ⇒ full vocabulary).
+    pub top_k: usize,
+    /// Seed for the per-sequence sampling stream (mixed with the request
+    /// id, so batchmates sharing a seed still draw independent streams).
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    /// Greedy argmax (the default: temperature 0).
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    /// The sequence's private sampling stream: seed mixed with the request
+    /// id so every sequence draws independently and reproducibly.
+    pub fn rng_for(&self, id: u64) -> Rng {
+        Rng::new(self.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -14,6 +45,11 @@ pub struct Request {
     /// Serving tenant: a registered adapter id, or [`BASE_ADAPTER`] for the
     /// unadapted base model.
     pub adapter: String,
+    /// Per-request sampling policy (default: greedy).
+    pub params: SamplingParams,
+    /// Generation ends early when a sampled token is in this set (the stop
+    /// token is included in the output).
+    pub stop_tokens: Vec<usize>,
 }
 
 impl Request {
@@ -24,6 +60,8 @@ impl Request {
             max_new_tokens,
             arrival: Instant::now(),
             adapter: BASE_ADAPTER.to_string(),
+            params: SamplingParams::default(),
+            stop_tokens: Vec::new(),
         }
     }
 
@@ -31,6 +69,26 @@ impl Request {
     pub fn with_adapter(mut self, adapter: &str) -> Request {
         self.adapter = adapter.to_string();
         self
+    }
+
+    /// Set the sampling policy (builder style).
+    pub fn with_sampling(mut self, params: SamplingParams) -> Request {
+        self.params = params;
+        self
+    }
+
+    /// Set the stop-token set (builder style).
+    pub fn with_stop_tokens(mut self, stop: Vec<usize>) -> Request {
+        self.stop_tokens = stop;
+        self
+    }
+
+    /// Worst-case KV footprint in tokens: the prompt plus every new token
+    /// the request may generate, capped at `max_seq`. This is the exact
+    /// amount the engine reserves at admission, so the batcher's KV-aware
+    /// admission and the engine's reservation can never disagree.
+    pub fn required_kv_tokens(&self, max_seq: usize) -> usize {
+        (self.prompt.len() + self.max_new_tokens.min(max_seq.saturating_sub(1))).min(max_seq)
     }
 }
 
@@ -45,6 +103,8 @@ pub struct Response {
     pub queue_s: f64,
     pub prefill_s: f64,
     pub decode_s: f64,
+    /// seconds from arrival to the first streamed token
+    pub ttft_s: f64,
 }
 
 impl Response {
@@ -61,6 +121,36 @@ pub fn greedy(logits: &[f32]) -> usize {
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap_or(0)
+}
+
+/// Sample a token under `params`: greedy at temperature 0, otherwise a
+/// categorical draw from the top-k-truncated softmax at the given
+/// temperature using the sequence's seeded RNG.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> usize {
+    if params.temperature <= 0.0 || logits.len() <= 1 {
+        return greedy(logits);
+    }
+    let k = match params.top_k {
+        0 => logits.len(),
+        k => k.min(logits.len()),
+    };
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    let max = logits[idx[0]];
+    let weights: Vec<f64> =
+        idx.iter().map(|&i| (((logits[i] - max) / params.temperature) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (&i, w) in idx.iter().zip(&weights) {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    idx[k - 1]
 }
 
 #[cfg(test)]
@@ -83,6 +173,7 @@ mod tests {
             queue_s: 0.1,
             prefill_s: 0.2,
             decode_s: 0.3,
+            ttft_s: 0.25,
         };
         assert!((r.total_s() - 0.6).abs() < 1e-12);
     }
@@ -91,7 +182,57 @@ mod tests {
     fn requests_default_to_the_base_tenant() {
         let r = Request::new(0, vec![1], 4);
         assert_eq!(r.adapter, BASE_ADAPTER);
+        assert_eq!(r.params, SamplingParams::greedy());
+        assert!(r.stop_tokens.is_empty());
         let r2 = Request::new(1, vec![1], 4).with_adapter("tenant-a");
         assert_eq!(r2.adapter, "tenant-a");
+    }
+
+    #[test]
+    fn required_kv_tokens_caps_at_max_seq() {
+        let r = Request::new(0, vec![0; 10], 6);
+        assert_eq!(r.required_kv_tokens(48), 16);
+        assert_eq!(r.required_kv_tokens(12), 12);
+        let greedy_cap = Request::new(1, vec![0; 10], 1000);
+        assert_eq!(greedy_cap.required_kv_tokens(48), 48);
+    }
+
+    #[test]
+    fn zero_temperature_sampling_is_greedy() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1f32, 2.0, -1.0, 1.9];
+        let p = SamplingParams::greedy();
+        for _ in 0..8 {
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic_and_respects_top_k() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32) * 0.25).collect();
+        let p = SamplingParams { temperature: 1.0, top_k: 4, seed: 7 };
+        let mut a = p.rng_for(3);
+        let mut b = p.rng_for(3);
+        for _ in 0..64 {
+            let ta = sample(&logits, &p, &mut a);
+            let tb = sample(&logits, &p, &mut b);
+            assert_eq!(ta, tb, "same seed must replay the same stream");
+            assert!(ta >= 12, "top-4 of ascending logits is {{12..15}}, got {ta}");
+        }
+    }
+
+    #[test]
+    fn sampling_streams_differ_across_requests() {
+        let logits: Vec<f32> = (0..32).map(|i| (i % 7) as f32 * 0.3).collect();
+        let p = SamplingParams { temperature: 2.0, top_k: 0, seed: 9 };
+        let a: Vec<usize> = {
+            let mut r = p.rng_for(1);
+            (0..32).map(|_| sample(&logits, &p, &mut r)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut r = p.rng_for(2);
+            (0..32).map(|_| sample(&logits, &p, &mut r)).collect()
+        };
+        assert_ne!(a, b, "different request ids must draw independent streams");
     }
 }

@@ -1,22 +1,95 @@
-//! The serving loop: admission (KV budget) → dynamic batching → prefill →
-//! continuous decode → completion, with per-phase metrics.
+//! The online serving API: sessioned **submit / step / cancel** with
+//! streaming events, replacing the old closed-loop batch-trace driver.
 //!
-//! Offline-bench style driver: all requests are submitted up front with
-//! synthetic arrival jitter; `run` plays the trace to completion. This is
-//! how the Table-6 bench measures prefill/decode/total throughput for the
-//! three weight formats.
+//! * [`Server::submit`] — admission with explicit backpressure: a request
+//!   is validated (id, prompt, tenant) and queued, or rejected with a
+//!   [`RejectReason`].
+//! * [`Server::step`] — advances the serving loop one tick (admit a
+//!   prefill batch if capacity allows, then one decode step for every
+//!   running sequence) and returns the [`Event`]s produced: streamed
+//!   tokens, completions, rejections, cancellations.
+//! * [`Server::cancel`] — drops a queued or in-flight request, releasing
+//!   its KV blocks and adapter pin immediately.
+//! * [`Server::run_trace`] — the old offline behavior as a thin shim over
+//!   `submit` + `step`: plays a request trace to completion and returns a
+//!   [`ServeReport`], token-identical to the pre-redesign `run()`.
+//!
+//! Per-token timestamps feed the streaming latency metrics (TTFT / ITL /
+//! queue wait percentiles in [`ServeMetrics`]); see
+//! [`driver`](super::driver) for the open-loop Poisson arrival harness
+//! that exercises them.
 
 use super::batcher::Batcher;
 use super::engine::{Engine, SeqState};
 use super::metrics::ServeMetrics;
 use super::request::{Request, Response};
 use crate::config::ServeCfg;
+use std::collections::{HashSet, VecDeque};
 use std::time::{Duration, Instant};
+
+/// Handle for an accepted request (the request's own id, echoed back).
+pub type SeqId = u64;
+
+/// Why a submission (or a queued request at admission time) was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The arrival queue is at `max_queue` — backpressure; retry later.
+    QueueFull,
+    /// Another queued or running request already uses this id.
+    DuplicateId,
+    /// The engine cannot serve this tenant (unknown or evicted adapter).
+    UnknownAdapter,
+    /// The prompt exceeds the engine's context window.
+    PromptTooLong,
+    /// Empty prompts cannot be prefetched.
+    EmptyPrompt,
+    /// The request's KV footprint (prompt + max_new) exceeds what the
+    /// pool can ever hold, even with nothing else in flight.
+    KvBudgetExceeded,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            RejectReason::QueueFull => "queue full",
+            RejectReason::DuplicateId => "duplicate request id",
+            RejectReason::UnknownAdapter => "unknown adapter",
+            RejectReason::PromptTooLong => "prompt too long",
+            RejectReason::EmptyPrompt => "empty prompt",
+            RejectReason::KvBudgetExceeded => "request exceeds the KV pool budget",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Streaming output of [`Server::step`].
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A sequence produced its next token (`index` counts generated
+    /// tokens from 0).
+    Token { id: SeqId, token: usize, index: usize },
+    /// A sequence finished (budget, stop token, or context window) —
+    /// carries the complete response.
+    Done { response: Response },
+    /// A queued request was refused at admission (e.g. its adapter was
+    /// evicted while it waited).
+    Rejected { id: SeqId, reason: RejectReason },
+    /// A queued or running request was cancelled by the client.
+    Cancelled { id: SeqId },
+}
 
 pub struct Server<E: Engine> {
     pub engine: E,
+    /// Accumulated serving metrics; reset by [`Server::reset_metrics`]
+    /// (and at the start of every [`Server::run_trace`]).
+    pub metrics: ServeMetrics,
     batcher: Batcher,
     cfg: ServeCfg,
+    running: Vec<(SeqState, ReqTiming)>,
+    /// ids currently queued or running (duplicate-submission guard)
+    live: HashSet<u64>,
+    /// events produced between steps (cancellations), delivered next step
+    pending_events: Vec<Event>,
 }
 
 #[derive(Debug)]
@@ -42,152 +115,313 @@ impl<E: Engine> Server<E> {
         engine.kv_init(budget, max_concurrent);
         Server {
             engine,
+            metrics: ServeMetrics::default(),
             batcher: Batcher::new(
                 cfg.prefill_buckets.clone(),
                 Duration::from_micros(cfg.batch_window_us),
                 cfg.max_queue,
             ),
             cfg,
+            running: Vec::new(),
+            live: HashSet::new(),
+            pending_events: Vec::new(),
         }
     }
 
-    /// Play a request trace to completion.
-    pub fn run(&mut self, requests: Vec<Request>) -> anyhow::Result<ServeReport> {
-        let mut metrics = ServeMetrics::default();
-        let mut responses = Vec::with_capacity(requests.len());
-        let wall0 = Instant::now();
-        let mut pending: std::collections::VecDeque<Request> = requests.into();
-        let mut running: Vec<(SeqState, ReqTiming)> = Vec::new();
-        let max_concurrent = *self.cfg.decode_buckets.last().unwrap();
+    /// Nothing queued, running, or waiting to be reported.
+    pub fn is_idle(&self) -> bool {
+        self.batcher.is_empty() && self.running.is_empty() && self.pending_events.is_empty()
+    }
 
-        while !pending.is_empty() || !self.batcher.is_empty() || !running.is_empty() {
-            // 1. feed the batcher (arrival process: everything available now)
+    /// Number of sequences currently in the decode loop.
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Number of requests waiting in the arrival queue.
+    pub fn num_queued(&self) -> usize {
+        self.batcher.len()
+    }
+
+    /// Start a fresh measurement window (e.g. between open-loop phases).
+    pub fn reset_metrics(&mut self) -> ServeMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+
+    /// Submit one request for serving. On acceptance the request is queued
+    /// (its tokens will stream from subsequent [`Server::step`] calls) and
+    /// its id is echoed back as the [`SeqId`] handle. On rejection nothing
+    /// is retained and the caller owns the backpressure decision.
+    pub fn submit(&mut self, req: Request) -> Result<SeqId, RejectReason> {
+        let reason = if self.live.contains(&req.id) {
+            Some(RejectReason::DuplicateId)
+        } else if req.prompt.is_empty() {
+            Some(RejectReason::EmptyPrompt)
+        } else if req.prompt.len() > self.engine.max_seq() {
+            Some(RejectReason::PromptTooLong)
+        } else if !self.engine.supports_adapter(&req.adapter) {
+            Some(RejectReason::UnknownAdapter)
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            self.metrics.rejected += 1;
+            return Err(reason);
+        }
+        let id = req.id;
+        if !self.batcher.push(req) {
+            self.metrics.rejected += 1;
+            return Err(RejectReason::QueueFull);
+        }
+        self.live.insert(id);
+        Ok(id)
+    }
+
+    /// Cancel a queued or running request. Returns true when the request
+    /// was found: its KV blocks and adapter pin are released immediately
+    /// and an [`Event::Cancelled`] is delivered by the next [`step`].
+    /// Unknown (or already finished) ids return false.
+    ///
+    /// [`step`]: Server::step
+    pub fn cancel(&mut self, id: SeqId) -> bool {
+        if self.batcher.remove(id).is_some() {
+            // never admitted — nothing to release in the engine, and no
+            // per-adapter count: those track admitted work only (the
+            // tenant's `requests` counter never saw this one)
+            self.live.remove(&id);
+            self.metrics.cancelled += 1;
+            self.pending_events.push(Event::Cancelled { id });
+            return true;
+        }
+        if let Some(pos) = self.running.iter().position(|(s, _)| s.id == id) {
+            let (s, _) = self.running.remove(pos);
+            self.engine.release(s.id);
+            self.live.remove(&id);
+            self.metrics.cancelled += 1;
+            self.metrics.adapter(&s.adapter).cancelled += 1;
+            self.pending_events.push(Event::Cancelled { id });
+            return true;
+        }
+        false
+    }
+
+    /// Advance the serving loop one tick: deliver pending cancellations,
+    /// admit a prefill batch if capacity allows, then run one decode step
+    /// for every running sequence — streaming each produced token as an
+    /// [`Event::Token`] and each completion as an [`Event::Done`].
+    ///
+    /// Returns an empty vector when the server is idle.
+    pub fn step(&mut self) -> anyhow::Result<Vec<Event>> {
+        let mut events = std::mem::take(&mut self.pending_events);
+        self.admit(&mut events)?;
+        self.decode_tick(&mut events)?;
+        Ok(events)
+    }
+
+    /// Admission: pop the largest admissible prefill batch and run it.
+    fn admit(&mut self, events: &mut Vec<Event>) -> anyhow::Result<()> {
+        let max_concurrent = *self.cfg.decode_buckets.last().unwrap();
+        let slots_left = max_concurrent.saturating_sub(self.running.len());
+        if slots_left == 0 || self.batcher.is_empty() {
+            return Ok(());
+        }
+        // KV-aware admission: size the batch by the queued requests'
+        // actual footprints (prompt + capped max_new), not max_seq worst
+        // case. The engine's answer is monotone in a prefix, so every
+        // popped batch is admissible — no requeue churn.
+        let max_seq = self.engine.max_seq();
+        let want = slots_left.min(self.batcher.len());
+        let lens: Vec<usize> =
+            self.batcher.peek(want).map(|r| r.required_kv_tokens(max_seq)).collect();
+        let mut admit = want;
+        while admit > 0 && !self.engine.kv_can_admit(&lens[..admit]) {
+            admit -= 1;
+        }
+        if admit == 0 {
+            if self.running.is_empty() {
+                // nothing is in flight, so every block is free: the front
+                // request can never be admitted. Reject it (rather than
+                // wedging the whole queue behind it) and let the next
+                // step() try its successors. Unreachable for the stock
+                // engines — pool sizing always fits one worst-case
+                // sequence — but a misconfigured pool must not livelock.
+                let id = self.batcher.peek(1).next().expect("queue non-empty").id;
+                let req = self.batcher.remove(id).expect("peeked above");
+                self.live.remove(&req.id);
+                self.metrics.rejected += 1;
+                events.push(Event::Rejected {
+                    id: req.id,
+                    reason: RejectReason::KvBudgetExceeded,
+                });
+            }
+            return Ok(()); // otherwise blocks free up as running sequences finish
+        }
+        let Some(batch) = self.batcher.pop_batch(Instant::now(), admit) else {
+            return Ok(());
+        };
+        let mut seqs: Vec<SeqState> = Vec::with_capacity(batch.len());
+        let mut timings: Vec<ReqTiming> = Vec::with_capacity(batch.len());
+        for req in batch {
+            // re-validate the tenant: it may have been evicted while the
+            // request sat in the queue — reject that one request instead
+            // of failing the whole batch
+            if !self.engine.supports_adapter(&req.adapter) {
+                self.live.remove(&req.id);
+                self.metrics.rejected += 1;
+                events.push(Event::Rejected {
+                    id: req.id,
+                    reason: RejectReason::UnknownAdapter,
+                });
+                continue;
+            }
+            let queue_s = req.arrival.elapsed().as_secs_f64();
+            self.metrics.adapter(&req.adapter).requests += 1;
+            timings.push(ReqTiming {
+                arrival: req.arrival,
+                queue_s,
+                prefill_s: 0.0,
+                decode_s: 0.0,
+                ttft_s: 0.0,
+                last_token: None,
+            });
+            seqs.push(SeqState::admit(&req, max_seq));
+        }
+        if seqs.is_empty() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        self.engine.prefill(&mut seqs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.prefill_secs += dt;
+        let per_prefill = dt / seqs.len() as f64;
+        for (s, t) in seqs.iter().zip(timings.iter_mut()) {
+            self.metrics.prefill_tokens += s.prompt_len;
+            self.metrics.adapter(&s.adapter).prefill_tokens += s.prompt_len;
+            t.prefill_s = per_prefill;
+        }
+        self.running.extend(seqs.into_iter().zip(timings));
+        Ok(())
+    }
+
+    /// One decode tick: sample + stream a token for every running
+    /// sequence, complete the finished ones, batch-decode the rest.
+    fn decode_tick(&mut self, events: &mut Vec<Event>) -> anyhow::Result<()> {
+        if self.running.is_empty() {
+            return Ok(());
+        }
+        let max_seq = self.engine.max_seq();
+        // sample + append + stream the next token for every sequence
+        let now = Instant::now();
+        for (s, t) in self.running.iter_mut() {
+            let next = s.next_token();
+            s.tokens.push(next);
+            if s.stop_tokens.contains(&next) {
+                s.stopped = true;
+            }
+            events.push(Event::Token { id: s.id, token: next, index: s.generated() - 1 });
+            match t.last_token {
+                None => {
+                    t.ttft_s = now.duration_since(t.arrival).as_secs_f64();
+                    self.metrics.ttft.add(t.ttft_s);
+                }
+                Some(prev) => {
+                    self.metrics.itl.add(now.duration_since(prev).as_secs_f64());
+                }
+            }
+            t.last_token = Some(now);
+        }
+        // sequences that just produced their final token complete
+        let mut decode_batch: Vec<(SeqState, ReqTiming)> = Vec::with_capacity(self.running.len());
+        for (s, t) in self.running.drain(..) {
+            if s.finished(max_seq) {
+                self.engine.release(s.id);
+                self.live.remove(&s.id);
+                self.metrics.completed += 1;
+                self.metrics.adapter(&s.adapter).completed += 1;
+                self.metrics.latency.add(t.queue_s + t.prefill_s + t.decode_s);
+                self.metrics.queue_wait.add(t.queue_s);
+                events.push(Event::Done {
+                    response: Response {
+                        id: s.id,
+                        prompt_len: s.prompt_len,
+                        tokens: s.tokens[s.prompt_len..].to_vec(),
+                        adapter: s.adapter,
+                        queue_s: t.queue_s,
+                        prefill_s: t.prefill_s,
+                        decode_s: t.decode_s,
+                        ttft_s: t.ttft_s,
+                    },
+                });
+            } else {
+                decode_batch.push((s, t));
+            }
+        }
+        if !decode_batch.is_empty() {
+            let mut seqs: Vec<SeqState> = decode_batch.iter().map(|(s, _)| s.clone()).collect();
+            let t0 = Instant::now();
+            self.engine.decode(&mut seqs)?;
+            let dt = t0.elapsed().as_secs_f64();
+            self.metrics.decode_secs += dt;
+            self.metrics.decode_tokens += seqs.len();
+            for s in &seqs {
+                self.metrics.adapter(&s.adapter).decode_tokens += 1;
+            }
+            let per = dt / seqs.len() as f64;
+            for ((old, timing), new) in decode_batch.iter_mut().zip(seqs) {
+                *old = new;
+                timing.decode_s += per;
+            }
+            self.running = decode_batch;
+        }
+        Ok(())
+    }
+
+    /// Compatibility shim: play a request trace to completion through
+    /// `submit` + `step`. Token-identical to the pre-redesign closed-loop
+    /// `run()` — all requests arrive up front, the loop drains them, and
+    /// the report carries every completed response sorted by id.
+    /// Rejected submissions (queue backpressure, bad requests) are counted
+    /// in the metrics and dropped, exactly as before.
+    pub fn run_trace(&mut self, requests: Vec<Request>) -> anyhow::Result<ServeReport> {
+        self.metrics = ServeMetrics::default();
+        let mut pending: VecDeque<Request> = requests.into();
+        let mut responses = Vec::new();
+        let wall0 = Instant::now();
+        while !pending.is_empty() || !self.is_idle() {
+            // arrival process: everything available now; on the first
+            // rejection (queue full), stop feeding until the next tick
             while let Some(req) = pending.pop_front() {
-                if !self.batcher.push(req) {
-                    metrics.rejected += 1;
+                if self.submit(req).is_err() {
                     break;
                 }
             }
-
-            // 2. admit a prefill batch if capacity allows. The engine's KV
-            // pool is the storage owner and answers admission: cap the
-            // batch at what it can take (monotone, so every popped batch
-            // is admissible — no requeue churn).
-            let slots_left = max_concurrent.saturating_sub(running.len());
-            let mut admit = slots_left;
-            while admit > 0 && !self.engine.kv_can_admit(admit) {
-                admit -= 1;
-            }
-            if admit == 0 && running.is_empty() && !self.batcher.is_empty() {
-                anyhow::bail!(
-                    "KV pool cannot admit even one worst-case sequence — \
-                     raise kv_budget_mib or lower max_seq"
-                );
-            }
-            if admit > 0 {
-                if let Some(batch) = self.batcher.pop_batch(Instant::now(), admit) {
-                    let n = batch.len();
-                    let mut seqs: Vec<SeqState> = Vec::with_capacity(n);
-                    let mut timings = Vec::with_capacity(n);
-                    for req in batch {
-                        let queue_s = req.arrival.elapsed().as_secs_f64();
-                        metrics.adapter(&req.adapter).requests += 1;
-                        timings.push(ReqTiming {
-                            id: req.id,
-                            queue_s,
-                            prefill_s: 0.0,
-                            decode_s: 0.0,
-                        });
-                        seqs.push(SeqState {
-                            id: req.id,
-                            prompt_len: req.prompt.len(),
-                            tokens: req.prompt,
-                            max_new: req.max_new_tokens.min(
-                                self.engine.max_seq().saturating_sub(1).saturating_sub(0),
-                            ),
-                            last_logits: vec![],
-                            adapter: req.adapter,
-                        });
-                    }
-                    let t0 = Instant::now();
-                    self.engine.prefill(&mut seqs)?;
-                    let dt = t0.elapsed().as_secs_f64();
-                    metrics.prefill_secs += dt;
-                    let per_prefill = dt / seqs.len() as f64;
-                    for (s, t) in seqs.iter().zip(timings.iter_mut()) {
-                        metrics.prefill_tokens += s.prompt_len;
-                        metrics.adapter(&s.adapter).prefill_tokens += s.prompt_len;
-                        t.prefill_s = per_prefill;
-                    }
-                    running.extend(seqs.into_iter().zip(timings));
+            for ev in self.step()? {
+                if let Event::Done { response } = ev {
+                    responses.push(response);
                 }
-            }
-
-            // 3. decode step for all running sequences
-            if !running.is_empty() {
-                // append the sampled token, then batch-decode
-                for (s, _) in running.iter_mut() {
-                    let next = s.next_token();
-                    s.tokens.push(next);
-                }
-                // sequences that just produced their final token complete
-                let mut still: Vec<(SeqState, ReqTiming)> = Vec::with_capacity(running.len());
-                let mut decode_batch: Vec<(SeqState, ReqTiming)> = Vec::with_capacity(running.len());
-                for (s, t) in running.drain(..) {
-                    if s.done() || s.tokens.len() >= self.engine.max_seq() {
-                        self.engine.release(s.id);
-                        metrics.completed += 1;
-                        metrics.adapter(&s.adapter).completed += 1;
-                        metrics.latency.add(t.queue_s + t.prefill_s + t.decode_s);
-                        metrics.queue_wait.add(t.queue_s);
-                        responses.push(Response {
-                            id: s.id,
-                            prompt_len: s.prompt_len,
-                            tokens: s.tokens[s.prompt_len..].to_vec(),
-                            adapter: s.adapter,
-                            queue_s: t.queue_s,
-                            prefill_s: t.prefill_s,
-                            decode_s: t.decode_s,
-                        });
-                    } else {
-                        decode_batch.push((s, t));
-                    }
-                }
-                if !decode_batch.is_empty() {
-                    let mut seqs: Vec<SeqState> =
-                        decode_batch.iter().map(|(s, _)| s.clone()).collect();
-                    let t0 = Instant::now();
-                    self.engine.decode(&mut seqs)?;
-                    let dt = t0.elapsed().as_secs_f64();
-                    metrics.decode_secs += dt;
-                    metrics.decode_tokens += seqs.len();
-                    for s in &seqs {
-                        metrics.adapter(&s.adapter).decode_tokens += 1;
-                    }
-                    let per = dt / seqs.len() as f64;
-                    for ((old, timing), new) in decode_batch.iter_mut().zip(seqs) {
-                        *old = new;
-                        timing.decode_s += per;
-                    }
-                    still.extend(decode_batch);
-                }
-                running = still;
             }
         }
-
-        metrics.wall_secs = wall0.elapsed().as_secs_f64();
+        self.metrics.wall_secs = wall0.elapsed().as_secs_f64();
         responses.sort_by_key(|r| r.id);
-        Ok(ServeReport { responses, metrics, engine: self.engine.name() })
+        Ok(ServeReport {
+            responses,
+            metrics: self.reset_metrics(),
+            engine: self.engine.name(),
+        })
     }
 }
 
+/// Per-request serving timestamps (queue/prefill/decode attribution plus
+/// the per-token stamps behind TTFT/ITL).
 #[derive(Clone, Debug)]
 struct ReqTiming {
-    #[allow(dead_code)]
-    id: u64,
+    arrival: Instant,
     queue_s: f64,
     prefill_s: f64,
     decode_s: f64,
+    ttft_s: f64,
+    /// when this sequence's latest token was streamed
+    last_token: Option<Instant>,
 }
 
 #[cfg(test)]
@@ -220,6 +454,7 @@ mod tests {
             workers: 1,
             kv_bits: 32,
             kv_budget_mib: 0.0,
+            rate_rps: 0.0,
         };
         Server::new(NativeEngine::new(model, "fp"), serve)
     }
@@ -234,7 +469,7 @@ mod tests {
     #[test]
     fn serves_all_requests_to_completion() {
         let mut srv = tiny_server();
-        let report = srv.run(reqs(9, 12, 6)).unwrap();
+        let report = srv.run_trace(reqs(9, 12, 6)).unwrap();
         assert_eq!(report.responses.len(), 9);
         assert_eq!(report.metrics.completed, 9);
         for r in &report.responses {
@@ -244,14 +479,18 @@ mod tests {
         assert!(report.metrics.prefill_tokens == 9 * 12);
         assert!(report.metrics.decode_tokens >= 9 * 5);
         assert!(report.metrics.total_tps() > 0.0);
+        // streaming latency percentiles came from per-token timestamps
+        assert_eq!(report.metrics.ttft.len(), 9);
+        assert!(report.metrics.itl.len() >= 9 * 5);
+        assert!(report.metrics.ttft.p50() >= 0.0);
     }
 
     #[test]
     fn deterministic_outputs_per_request() {
         let mut a = tiny_server();
         let mut b = tiny_server();
-        let ra = a.run(reqs(4, 10, 5)).unwrap();
-        let rb = b.run(reqs(4, 10, 5)).unwrap();
+        let ra = a.run_trace(reqs(4, 10, 5)).unwrap();
+        let rb = b.run_trace(reqs(4, 10, 5)).unwrap();
         for (x, y) in ra.responses.iter().zip(&rb.responses) {
             assert_eq!(x.tokens, y.tokens);
         }
@@ -261,13 +500,126 @@ mod tests {
     fn batched_serving_matches_single_stream() {
         // tokens generated must be independent of batching decisions
         let mut batched = tiny_server();
-        let rep_b = batched.run(reqs(6, 10, 4)).unwrap();
+        let rep_b = batched.run_trace(reqs(6, 10, 4)).unwrap();
         for want in rep_b.responses.iter() {
             let mut single = tiny_server();
             let one = reqs(6, 10, 4).remove(want.id as usize);
-            let rep_s = single.run(vec![one]).unwrap();
+            let rep_s = single.run_trace(vec![one]).unwrap();
             assert_eq!(rep_s.responses[0].tokens, want.tokens, "req {}", want.id);
         }
+    }
+
+    #[test]
+    fn submit_step_streams_tokens_incrementally() {
+        let mut srv = tiny_server();
+        let id = srv.submit(reqs(1, 10, 4).remove(0)).unwrap();
+        assert_eq!(id, 0);
+        assert!(!srv.is_idle());
+        let mut streamed = Vec::new();
+        let mut done = None;
+        let mut token_events = 0;
+        while done.is_none() {
+            for ev in srv.step().unwrap() {
+                match ev {
+                    Event::Token { id: eid, token, index } => {
+                        assert_eq!(eid, id);
+                        assert_eq!(index, token_events, "tokens stream in order");
+                        token_events += 1;
+                        streamed.push(token);
+                    }
+                    Event::Done { response } => done = Some(response),
+                    other => panic!("unexpected event {other:?}"),
+                }
+            }
+        }
+        assert!(srv.is_idle());
+        let resp = done.unwrap();
+        assert_eq!(resp.tokens, streamed, "Done carries exactly the streamed tokens");
+        assert_eq!(resp.tokens.len(), 4);
+        // and the incremental path matches the trace shim token-for-token
+        let mut shim = tiny_server();
+        let rep = shim.run_trace(reqs(1, 10, 4)).unwrap();
+        assert_eq!(rep.responses[0].tokens, streamed);
+    }
+
+    #[test]
+    fn duplicate_and_invalid_submissions_are_rejected() {
+        let mut srv = tiny_server();
+        srv.submit(Request::new(7, vec![1, 2, 3], 4)).unwrap();
+        assert_eq!(
+            srv.submit(Request::new(7, vec![1, 2, 3], 4)),
+            Err(RejectReason::DuplicateId)
+        );
+        assert_eq!(srv.submit(Request::new(8, vec![], 4)), Err(RejectReason::EmptyPrompt));
+        assert_eq!(
+            srv.submit(Request::new(9, vec![1; 100], 4)),
+            Err(RejectReason::PromptTooLong)
+        );
+        assert_eq!(
+            srv.submit(Request::new(10, vec![1, 2], 2).with_adapter("ghost-tenant")),
+            Err(RejectReason::UnknownAdapter)
+        );
+        assert_eq!(srv.metrics.rejected, 4);
+        // the one accepted request still serves to completion
+        let mut completed = 0;
+        while !srv.is_idle() {
+            for ev in srv.step().unwrap() {
+                if matches!(ev, Event::Done { .. }) {
+                    completed += 1;
+                }
+            }
+        }
+        assert_eq!(completed, 1);
+    }
+
+    #[test]
+    fn queue_backpressure_rejects_when_full() {
+        let mut srv = tiny_server();
+        srv.batcher.max_queue = 2;
+        assert!(srv.submit(Request::new(0, vec![1, 2], 2)).is_ok());
+        assert!(srv.submit(Request::new(1, vec![1, 2], 2)).is_ok());
+        assert_eq!(srv.submit(Request::new(2, vec![1, 2], 2)), Err(RejectReason::QueueFull));
+        // a rejected id is not retained: it can be resubmitted once the
+        // queue drains
+        srv.step().unwrap();
+        assert!(srv.submit(Request::new(2, vec![1, 2], 2)).is_ok());
+    }
+
+    #[test]
+    fn cancel_releases_queued_and_running_requests() {
+        let mut srv = tiny_server();
+        for r in reqs(6, 12, 8) {
+            srv.submit(r).unwrap();
+        }
+        // cancel one while still queued (max_concurrent = 4, so ids 4/5 wait)
+        srv.step().unwrap();
+        assert!(srv.cancel(5));
+        // cancel one mid-decode
+        assert!(srv.cancel(0));
+        assert!(!srv.cancel(0), "already cancelled");
+        assert!(!srv.cancel(99), "never submitted");
+        let evs = srv.step().unwrap();
+        let cancelled: Vec<SeqId> = evs
+            .iter()
+            .filter_map(|e| match e {
+                Event::Cancelled { id } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cancelled, vec![5, 0]);
+        let mut done = 0;
+        while !srv.is_idle() {
+            for ev in srv.step().unwrap() {
+                if matches!(ev, Event::Done { .. }) {
+                    done += 1;
+                }
+            }
+        }
+        assert_eq!(done, 4);
+        assert_eq!(srv.metrics.cancelled, 2);
+        // every block (cancelled included) went back to the pool
+        assert_eq!(srv.engine.kv_pool().used_blocks(), 0);
+        assert_eq!(srv.engine.kv_pool().active_sequences(), 0);
     }
 
     #[test]
@@ -304,6 +656,7 @@ mod tests {
             workers: 1,
             kv_bits: 32,
             kv_budget_mib: 0.0,
+            rate_rps: 0.0,
         };
         let mut srv = Server::new(engine, serve);
         let tenants = ["base", "t0", "t1"];
@@ -311,7 +664,7 @@ mod tests {
         for (i, r) in requests.iter_mut().enumerate() {
             r.adapter = tenants[i % 3].to_string();
         }
-        let report = srv.run(requests).unwrap();
+        let report = srv.run_trace(requests).unwrap();
         assert_eq!(report.metrics.completed, 6);
         for t in tenants {
             let c = &report.metrics.per_adapter[t];
@@ -330,17 +683,43 @@ mod tests {
     }
 
     #[test]
-    fn unknown_adapter_fails_the_run() {
+    fn unknown_adapter_is_rejected_not_fatal() {
         let mut srv = tiny_server();
-        let requests =
-            vec![Request::new(0, vec![1, 2, 3, 4], 2).with_adapter("ghost-tenant")];
-        assert!(srv.run(requests).is_err());
+        // submit-time rejection for unknown tenants
+        assert_eq!(
+            srv.submit(Request::new(0, vec![1, 2, 3, 4], 2).with_adapter("ghost-tenant")),
+            Err(RejectReason::UnknownAdapter)
+        );
+        // and a trace containing one still completes the valid requests
+        let mut requests = reqs(3, 8, 2);
+        requests[1].adapter = "ghost-tenant".into();
+        let report = srv.run_trace(requests).unwrap();
+        assert_eq!(report.metrics.completed, 2);
+        assert_eq!(report.metrics.rejected, 1);
+        assert!(report.responses.iter().all(|r| r.id != 1));
+    }
+
+    #[test]
+    fn stop_tokens_end_generation_early() {
+        // a stop set covering the whole vocabulary stops every sequence at
+        // exactly one generated token, whatever the model emits
+        let mut srv = tiny_server();
+        let requests: Vec<Request> = reqs(4, 10, 8)
+            .into_iter()
+            .map(|r| r.with_stop_tokens((0..32).collect()))
+            .collect();
+        let report = srv.run_trace(requests).unwrap();
+        assert_eq!(report.metrics.completed, 4);
+        for r in &report.responses {
+            assert_eq!(r.tokens.len(), 1, "stop token ends the stream (and is included)");
+        }
+        assert_eq!(srv.engine.kv_pool().used_blocks(), 0);
     }
 
     #[test]
     fn respects_max_seq() {
         let mut srv = tiny_server();
-        let report = srv.run(reqs(1, 40, 100)).unwrap();
+        let report = srv.run_trace(reqs(1, 40, 100)).unwrap();
         // 48 max_seq - 40 prompt = at most 8 new tokens
         assert!(report.responses[0].tokens.len() <= 8);
     }
@@ -368,11 +747,12 @@ mod tests {
             workers: 1,
             kv_bits: 8,
             kv_budget_mib: 0.0,
+            rate_rps: 0.0,
         };
         let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
         let engine = NativeEngine::with_kv(Model::init(&cfg, 0), "kv8", kv);
         let mut srv = Server::new(engine, serve);
-        let report = srv.run(reqs(6, 12, 6)).unwrap();
+        let report = srv.run_trace(reqs(6, 12, 6)).unwrap();
         assert_eq!(report.metrics.completed, 6);
         for r in &report.responses {
             assert_eq!(r.tokens.len(), 6);

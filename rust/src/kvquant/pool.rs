@@ -54,6 +54,10 @@ pub struct KvPool {
     seqs: HashMap<u64, SeqKv>,
     /// High-water mark of [`Self::used_bytes`] (sealed blocks + staging).
     peak_bytes: usize,
+    /// Byte budget this pool was sized from ([`Self::with_byte_budget`]);
+    /// admission keeps reserved blocks + staging tails within it. `None`
+    /// for capacity-sized pools.
+    budget_bytes: Option<usize>,
 }
 
 impl KvPool {
@@ -70,6 +74,7 @@ impl KvPool {
             slots: (0..capacity_blocks * n_layers * 2).map(|_| None).collect(),
             seqs: HashMap::new(),
             peak_bytes: 0,
+            budget_bytes: None,
         }
     }
 
@@ -88,7 +93,12 @@ impl KvPool {
         let per_seq_blocks = probe.blocks_for(max_seq);
         let per_seq_bytes = per_seq_blocks * probe.block_bytes() + probe.staging_bytes();
         let capacity = ((budget_bytes / per_seq_bytes) * per_seq_blocks).max(per_seq_blocks);
-        KvPool::new(cfg, n_layers, d_model, capacity)
+        let mut pool = KvPool::new(cfg, n_layers, d_model, capacity);
+        // remember the budget so length-based admission also prices the
+        // dense staging tail every admitted sequence holds — block
+        // capacity alone would let many short sequences overshoot it
+        pool.budget_bytes = Some(budget_bytes.max(per_seq_bytes));
+        pool
     }
 
     pub fn cfg(&self) -> &KvQuantCfg {
@@ -171,6 +181,28 @@ impl KvPool {
     /// Can `n` more sequences of this worst-case length be admitted?
     pub fn can_admit_n(&self, n: usize, worst_case_tokens: usize) -> bool {
         n * self.blocks_for(worst_case_tokens) <= self.alloc.free_blocks()
+    }
+
+    /// Can sequences with these individual worst-case token counts all be
+    /// admitted? This is the KV-aware admission path: each entry is one
+    /// request's actual footprint (prompt + capped `max_new`), so short
+    /// requests pack many more sequences into the same blocks than
+    /// `max_seq`-worst-case accounting would. Byte-budgeted pools also
+    /// charge one dense staging tail per sequence (resident regardless of
+    /// `kv_bits`), so admission never commits more bytes than the budget.
+    pub fn can_admit_lengths(&self, lens: &[usize]) -> bool {
+        let blocks: usize = lens.iter().map(|&t| self.blocks_for(t)).sum();
+        if blocks > self.alloc.free_blocks() {
+            return false;
+        }
+        match self.budget_bytes {
+            None => true,
+            Some(budget) => {
+                (self.alloc.used_blocks() + blocks) * self.block_bytes()
+                    + (self.seqs.len() + lens.len()) * self.staging_bytes()
+                    <= budget
+            }
+        }
     }
 
     /// Committed token count for a sequence (`None` if unknown).
@@ -475,6 +507,24 @@ mod tests {
         pool.release(2);
         assert_eq!(pool.peak_bytes(), peak, "peak survives release");
         assert_eq!(pool.used_bytes(), 0);
+    }
+
+    #[test]
+    fn budgeted_admission_charges_staging_tails() {
+        // budget = exactly one worst-case sequence: 3 blocks + 1 tail
+        // (4 x 128 B with bt=4, 1 layer, d=4, max_seq=12)
+        let pool = KvPool::with_byte_budget(cfg(KvBits::F32, 4), 1, 4, 512, 12);
+        assert_eq!(pool.capacity_blocks(), 3);
+        // one worst-case sequence: exactly the budget
+        assert!(pool.can_admit_lengths(&[12]));
+        // two short sequences: 2 blocks + 2 tails = the budget
+        assert!(pool.can_admit_lengths(&[4, 4]));
+        // three short sequences fit the blocks but their tails overshoot
+        // the byte budget — admission must refuse
+        assert!(!pool.can_admit_lengths(&[4, 4, 4]));
+        // capacity-sized pools (no budget) admit by blocks alone
+        let unbudgeted = KvPool::new(cfg(KvBits::F32, 4), 1, 4, 3);
+        assert!(unbudgeted.can_admit_lengths(&[4, 4, 4]));
     }
 
     #[test]

@@ -34,7 +34,7 @@
 //! | [`train`] | LM pre-training, QAT, PEFT trainers |
 //! | [`eval`] | perplexity + zero-shot-style accuracy harness |
 //! | [`runtime`] | PJRT client (feature `pjrt`) or stub, artifact manifest, executable cache |
-//! | [`coordinator`] | request router, dynamic batcher, prefill/decode scheduler, KV-block allocator, metrics |
+//! | [`coordinator`] | online serving API (sessioned submit/stream/cancel + offline trace shim), dynamic batcher with KV-aware admission, prefill/decode scheduler, open-loop arrival driver, KV-block allocator, TTFT/ITL metrics |
 //! | [`bench`] | timing harness + markdown table rendering |
 //! | [`report`] | paper-style table renderers shared by benches |
 

@@ -20,7 +20,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "quantize", about: "PTQ-quantize the testbed with --method and report PPL/acc" },
     Command { name: "qat", about: "quantization-aware training (LoRDS STE or INT4 baseline)" },
     Command { name: "peft", about: "PEFT fine-tune scaling factors (LoRDS) vs QLoRA adapters" },
-    Command { name: "serve", about: "serve batched requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4)" },
+    Command { name: "serve", about: "serve requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4, --rate RPS for open-loop streaming, --temperature/--top-k/--sample-seed)" },
     Command { name: "eval", about: "evaluate a checkpoint: perplexity + 7-task zero-shot suite" },
     Command { name: "rank-table", about: "print Appendix-A Table 7 (parity ranks, exact paper shapes)" },
     Command { name: "info", about: "environment + artifact manifest summary" },
@@ -164,11 +164,33 @@ fn cmd_peft(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Play the requests through the server — open-loop at `rate` req/s when
+/// positive, otherwise the closed-loop trace — and print the metrics
+/// (streaming percentiles included for open-loop runs).
+fn drive_serve<E: lords::coordinator::Engine>(
+    server: &mut Server<E>,
+    reqs: Vec<Request>,
+    rate: f64,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let report = if rate > 0.0 {
+        lords::coordinator::run_open_loop(server, reqs, rate, seed)?
+    } else {
+        server.run_trace(reqs)?
+    };
+    report.metrics.print(&report.engine);
+    if rate > 0.0 {
+        report.metrics.print_streaming();
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = model_cfg(args);
     let serve_cfg = ServeCfg {
         kv_bits: args.get_usize("kv-bits", 32) as u32,
         kv_budget_mib: args.get_f32("kv-budget-mib", 0.0) as f64,
+        rate_rps: args.get_f32("rate", 0.0) as f64,
         ..ServeCfg::default()
     };
     let kv_bits = lords::kvquant::KvBits::parse(serve_cfg.kv_bits)
@@ -177,7 +199,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_new = args.get_usize("max-new", 32);
     let engine_kind = args.get_or("engine", "native");
     let format = args.get_or("format", "lords");
-    let mut rng = Rng::new(args.get_u64("seed", 0));
+    let seed = args.get_u64("seed", 0);
+    let mut rng = Rng::new(seed);
+    // per-request sampling policy: greedy unless a temperature is given
+    let sampling = lords::coordinator::SamplingParams {
+        temperature: args.get_f32("temperature", 0.0),
+        top_k: args.get_usize("top-k", 0),
+        seed: args.get_u64("sample-seed", 0),
+    };
+    let rate = serve_cfg.rate_rps;
 
     if engine_kind == "pjrt" {
         anyhow::ensure!(
@@ -208,11 +238,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let reqs: Vec<Request> = (0..n_requests)
             .map(|i| {
                 Request::new(i as u64, (0..prompt_len).map(|_| rng.below(mcfg.vocab)).collect(), max_new)
+                    .with_sampling(sampling.clone())
             })
             .collect();
         let mut server = Server::new(engine, serve_cfg);
-        let report = server.run(reqs)?;
-        report.metrics.print(&report.engine);
+        drive_serve(&mut server, reqs, rate, seed)?;
     } else {
         let tb = Testbed::build("llama3-mini", &cfg, args.get_usize("pretrain-steps", 300), 0);
         let mut model = tb.model.clone();
@@ -232,13 +262,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let reqs: Vec<Request> = (0..n_requests)
             .map(|i| {
                 Request::new(i as u64, (0..prompt_len).map(|_| rng.below(cfg.vocab)).collect(), max_new)
+                    .with_sampling(sampling.clone())
             })
             .collect();
         let kv = lords::kvquant::KvQuantCfg::with_bits(kv_bits);
         let engine = NativeEngine::with_kv(model, format, kv);
         let mut server = Server::new(engine, serve_cfg);
-        let report = server.run(reqs)?;
-        report.metrics.print(&report.engine);
+        drive_serve(&mut server, reqs, rate, seed)?;
         println!(
             "  kv cache: {} blocks x {} B ({}; peak {:.2} MiB)",
             server.engine.kv_pool().capacity_blocks(),

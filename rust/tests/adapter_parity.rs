@@ -94,6 +94,7 @@ fn serve_cfg() -> ServeCfg {
         workers: 1,
         kv_bits: 32,
         kv_budget_mib: 0.0,
+        rate_rps: 0.0,
     }
 }
 
@@ -130,7 +131,7 @@ fn served_mixed_batch_matches_per_tenant_dense_references() {
         r.adapter = cycle[i % cycle.len()].to_string();
     }
     let mut server = Server::new(engine, serve_cfg());
-    let mixed = server.run(reqs).unwrap();
+    let mixed = server.run_trace(reqs).unwrap();
     assert_eq!(mixed.metrics.completed, 8);
     assert!(
         mixed.metrics.per_adapter.len() >= 4,
@@ -152,7 +153,7 @@ fn served_mixed_batch_matches_per_tenant_dense_references() {
             .filter(|(i, _)| i % cycle.len() == ti)
             .map(|(_, r)| r)
             .collect();
-        let solo = single.run(solo_reqs).unwrap();
+        let solo = single.run_trace(solo_reqs).unwrap();
         for want in &solo.responses {
             let got = mixed.responses.iter().find(|r| r.id == want.id).unwrap();
             assert_eq!(got.adapter, *tenant);
@@ -193,14 +194,8 @@ fn inflight_eviction_is_deferred_at_the_engine() {
 
     let mut rng = Rng::new(23);
     let prompt: Vec<usize> = (0..8).map(|_| rng.below(cfg.vocab)).collect();
-    let mut seqs = vec![SeqState {
-        id: 1,
-        prompt_len: prompt.len(),
-        tokens: prompt,
-        max_new: 4,
-        last_logits: vec![],
-        adapter: "t0".into(),
-    }];
+    let mut seqs =
+        vec![SeqState::admit(&Request::new(1, prompt, 4).with_adapter("t0"), cfg.max_seq)];
     engine.prefill(&mut seqs).unwrap();
     assert_eq!(engine.registry().pins("t0"), 1);
 

@@ -37,6 +37,7 @@ fn serve_cfg(kv_bits: u32) -> ServeCfg {
         workers: 1,
         kv_bits,
         kv_budget_mib: 0.0,
+        rate_rps: 0.0,
     }
 }
 
@@ -113,13 +114,13 @@ fn served_trace_token_match_at_8bit() {
     let model = Model::init(&cfg, 41);
 
     let mut dense_srv = Server::new(NativeEngine::new(model.clone(), "kv32"), serve_cfg(32));
-    let dense = dense_srv.run(requests(6, 12, 6, cfg.vocab)).unwrap();
+    let dense = dense_srv.run_trace(requests(6, 12, 6, cfg.vocab)).unwrap();
     assert_eq!(dense.metrics.completed, 6);
 
     let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
     let mut packed_srv =
         Server::new(NativeEngine::with_kv(model, "kv8", kv), serve_cfg(8));
-    let packed = packed_srv.run(requests(6, 12, 6, cfg.vocab)).unwrap();
+    let packed = packed_srv.run_trace(requests(6, 12, 6, cfg.vocab)).unwrap();
     assert_eq!(packed.metrics.completed, 6);
 
     for (d, p) in dense.responses.iter().zip(&packed.responses) {

@@ -90,7 +90,7 @@ fn qat_then_peft_then_serve() {
         NativeEngine::new(m, "lords"),
         ServeCfg { decode_buckets: vec![1, 2, 4], prefill_buckets: vec![1, 2, 4], ..Default::default() },
     );
-    let report = server.run(reqs).unwrap();
+    let report = server.run_trace(reqs).unwrap();
     assert_eq!(report.metrics.completed, 5);
     assert!(report.responses.iter().all(|r| r.tokens.len() == 8));
 }

@@ -1,0 +1,315 @@
+//! Online serving API gate: the `run_trace` shim must be token-identical
+//! to the pre-redesign closed-loop `run()` (batching-invariant golden
+//! check + incremental submit/step equivalence), cancellation at random
+//! mid-decode steps must never leak KV blocks or adapter pins (100+
+//! cancels), seeded `SamplingParams` must replay bit-identically, and
+//! KV-aware admission must pack short requests past the old
+//! `max_seq`-worst-case limit.
+
+use lords::adapters::AdapterFactors;
+use lords::config::{ModelCfg, ServeCfg};
+use lords::coordinator::{
+    run_open_loop, Engine, Event, NativeEngine, RejectReason, Request, SamplingParams, Server,
+};
+use lords::model::Model;
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::util::prop::prop_check;
+use lords::util::Rng;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 48,
+        block: 8,
+        codebook: "nf4".into(),
+        qlora_rank: 4,
+    }
+}
+
+fn serve_cfg() -> ServeCfg {
+    ServeCfg {
+        decode_buckets: vec![1, 2, 4],
+        prefill_buckets: vec![1, 2, 4],
+        batch_window_us: 0,
+        max_queue: 64,
+        max_new_tokens: 8,
+        workers: 1,
+        kv_bits: 32,
+        kv_budget_mib: 0.0,
+        rate_rps: 0.0,
+    }
+}
+
+fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(7);
+    (0..n)
+        .map(|i| {
+            Request::new(i as u64, (0..prompt_len).map(|_| rng.below(vocab)).collect(), max_new)
+        })
+        .collect()
+}
+
+/// The acceptance criterion: `run_trace` is a faithful shim. Its token
+/// streams are batching-invariant (each request reproduces its dedicated
+/// single-request serve exactly — the property the pre-redesign `run()`
+/// was gated on, so equality here is equality with the old driver), and
+/// the raw submit/step session produces the same streams again.
+#[test]
+fn run_trace_shim_is_token_identical_to_golden_single_streams() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 5);
+
+    let mut srv = Server::new(NativeEngine::new(model.clone(), "shim"), serve_cfg());
+    let trace = srv.run_trace(requests(8, 12, 6, cfg.vocab)).unwrap();
+    assert_eq!(trace.metrics.completed, 8);
+
+    // golden reference: every request served alone in a fresh server
+    for want in &trace.responses {
+        let mut single = Server::new(NativeEngine::new(model.clone(), "solo"), serve_cfg());
+        let one = requests(8, 12, 6, cfg.vocab).remove(want.id as usize);
+        let solo = single.run_trace(vec![one]).unwrap();
+        assert_eq!(
+            solo.responses[0].tokens, want.tokens,
+            "req {}: trace shim diverged from its single-stream golden",
+            want.id
+        );
+    }
+
+    // incremental session: submit everything, step to completion by hand
+    let mut online = Server::new(NativeEngine::new(model, "online"), serve_cfg());
+    for r in requests(8, 12, 6, cfg.vocab) {
+        online.submit(r).unwrap();
+    }
+    let mut responses = Vec::new();
+    while !online.is_idle() {
+        for ev in online.step().unwrap() {
+            if let Event::Done { response } = ev {
+                responses.push(response);
+            }
+        }
+    }
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 8);
+    for (got, want) in responses.iter().zip(&trace.responses) {
+        assert_eq!(got.tokens, want.tokens, "req {}: session API diverged from shim", got.id);
+    }
+}
+
+/// The acceptance criterion: 100+ cancellations at random decode steps,
+/// with multi-tenant requests in flight, leak zero KV blocks and zero
+/// adapter pins.
+#[test]
+fn random_mid_decode_cancels_leak_nothing() {
+    let cfg = tiny_cfg();
+    let mut model = Model::init(&cfg, 13);
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: 2, ..Default::default() },
+        false,
+    );
+    let base = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(14);
+    let t0 = base.perturbed(0.05, &mut arng);
+    let t1 = base.perturbed(0.05, &mut arng);
+    let tenants = ["base", "t0", "t1"];
+
+    // 50 cases x 2+ cancels each ≥ 100 random mid-decode cancels total
+    prop_check(50, |g| {
+        let mut engine = NativeEngine::new(model.clone(), "cancel");
+        engine.register_adapter("t0", t0.clone()).unwrap();
+        engine.register_adapter("t1", t1.clone()).unwrap();
+        let mut srv = Server::new(engine, serve_cfg());
+
+        let n = g.usize(4..=8);
+        let mut ids: Vec<u64> = Vec::new();
+        let mut reqs = requests(n, 12, 8, 32);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.adapter = tenants[i % tenants.len()].to_string();
+            ids.push(r.id);
+        }
+        for r in reqs {
+            srv.submit(r).map_err(|e| format!("submit rejected: {e}"))?;
+        }
+        // advance into decode, then cancel 2–3 random requests (each at a
+        // random point of its lifetime: queued, mid-decode, or finished)
+        let mut cancelled = 0usize;
+        let planned = g.usize(2..=3).max(2);
+        while cancelled < planned {
+            let steps = g.usize(1..=4);
+            for _ in 0..steps {
+                srv.step().map_err(|e| format!("step failed: {e}"))?;
+            }
+            let victim = ids[g.usize(0..=ids.len() - 1)];
+            srv.cancel(victim); // false when already finished — still a draw
+            cancelled += 1;
+        }
+        // drain the remainder
+        let mut guard = 0;
+        while !srv.is_idle() {
+            srv.step().map_err(|e| format!("drain step failed: {e}"))?;
+            guard += 1;
+            if guard > 1000 {
+                return Err("server failed to drain after cancels".into());
+            }
+        }
+        // zero leaked blocks, zero leaked pins
+        let pool = srv.engine.kv_pool();
+        if pool.used_blocks() != 0 {
+            return Err(format!("{} KV blocks leaked", pool.used_blocks()));
+        }
+        if pool.active_sequences() != 0 {
+            return Err(format!("{} sequences leaked", pool.active_sequences()));
+        }
+        for t in ["t0", "t1"] {
+            if srv.engine.registry().pins(t) != 0 {
+                return Err(format!("adapter '{t}' leaked {} pins", srv.engine.registry().pins(t)));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Seeded sampling: two identical runs replay identical token streams;
+/// a different sampling seed produces a different stream.
+#[test]
+fn seeded_sampling_is_deterministic_across_runs() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 21);
+    let sampled = |sample_seed: u64| -> Vec<Vec<usize>> {
+        let mut srv = Server::new(NativeEngine::new(model.clone(), "sampled"), serve_cfg());
+        let reqs: Vec<Request> = requests(4, 10, 6, cfg.vocab)
+            .into_iter()
+            .map(|r| {
+                r.with_sampling(SamplingParams {
+                    temperature: 0.8,
+                    top_k: 8,
+                    seed: sample_seed,
+                })
+            })
+            .collect();
+        let rep = srv.run_trace(reqs).unwrap();
+        assert_eq!(rep.metrics.completed, 4);
+        rep.responses.iter().map(|r| r.tokens.clone()).collect()
+    };
+    let a = sampled(42);
+    let b = sampled(42);
+    assert_eq!(a, b, "same sampling seed must replay the same streams");
+    let c = sampled(43);
+    assert_ne!(a, c, "a different sampling seed must explore a different stream");
+    // sampled tokens are still valid vocabulary entries
+    for stream in &a {
+        assert_eq!(stream.len(), 6);
+        assert!(stream.iter().all(|&t| t < cfg.vocab));
+    }
+}
+
+/// KV-aware admission: a budget holding exactly one `max_seq` worst case
+/// (3 blocks + 1 staging tail) now serves two short requests
+/// *concurrently* — admission and reservation price prompt + max_new
+/// instead of max_seq — while never committing more bytes than the
+/// budget (staging tails included).
+#[test]
+fn kv_aware_admission_packs_short_requests() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 31);
+    let mut serve = serve_cfg();
+    // 8 KiB: exactly one worst-case sequence (3 x 2 KiB blocks + 2 KiB tail)
+    let budget_bytes = 8192usize;
+    serve.kv_budget_mib = budget_bytes as f64 / (1024.0 * 1024.0);
+    let mut srv = Server::new(NativeEngine::new(model, "tight"), serve);
+
+    // short requests: 8-token prompt + 4 new = 12 tokens = 1 block each
+    let report = srv.run_trace(requests(6, 8, 4, cfg.vocab)).unwrap();
+    assert_eq!(report.metrics.completed, 6, "tight budget must still serve short requests");
+
+    let pool = srv.engine.kv_pool();
+    assert_eq!(pool.capacity_blocks(), 3, "budget sized for one worst-case sequence");
+    // the old max_seq-worst-case accounting admits one sequence at a time…
+    assert!(!pool.can_admit_n(2, cfg.max_seq));
+    // …but actual-length admission packs two 12-token sequences (a third
+    // would fit the blocks, but its staging tail would overshoot the
+    // byte budget — admission must stay honest)
+    assert!(srv.engine.kv_can_admit(&[12, 12]));
+    assert!(!srv.engine.kv_can_admit(&[12, 12, 12]));
+    // two really were resident at once, and the budget was never exceeded
+    assert!(
+        pool.peak_bytes() >= 2 * (pool.block_bytes() + pool.staging_bytes()),
+        "peak {} B shows no concurrency under the tight budget",
+        pool.peak_bytes()
+    );
+    assert!(
+        pool.peak_bytes() <= budget_bytes,
+        "peak {} B overshot the {budget_bytes} B budget",
+        pool.peak_bytes()
+    );
+}
+
+/// A tenant evicted while its request waits in the queue surfaces as an
+/// `Event::Rejected` for that request only — the batch is not poisoned.
+#[test]
+fn eviction_while_queued_rejects_only_that_request() {
+    let cfg = tiny_cfg();
+    let mut model = Model::init(&cfg, 41);
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: 2, ..Default::default() },
+        false,
+    );
+    let base = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(42);
+    let mut engine = NativeEngine::new(model, "evict");
+    engine.register_adapter("doomed", base.perturbed(0.05, &mut arng)).unwrap();
+    let mut srv = Server::new(engine, serve_cfg());
+
+    let mut reqs = requests(3, 8, 3, cfg.vocab);
+    reqs[1].adapter = "doomed".into();
+    for r in reqs {
+        srv.submit(r).unwrap();
+    }
+    // evict before any step: request 1 is queued, nothing is pinned yet
+    assert!(srv.engine.evict_adapter("doomed"));
+    let mut rejected = Vec::new();
+    let mut done = 0;
+    while !srv.is_idle() {
+        for ev in srv.step().unwrap() {
+            match ev {
+                Event::Rejected { id, reason } => {
+                    assert_eq!(reason, RejectReason::UnknownAdapter);
+                    rejected.push(id);
+                }
+                Event::Done { .. } => done += 1,
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(rejected, vec![1]);
+    assert_eq!(done, 2);
+}
+
+/// The open-loop driver resolves every request and reports streaming
+/// percentiles from per-token timestamps.
+#[test]
+fn open_loop_driver_resolves_all_requests_with_latency_metrics() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 51);
+    let mut srv = Server::new(NativeEngine::new(model, "open"), serve_cfg());
+    // high rate: arrivals bunch up and the queue actually forms
+    let report = run_open_loop(&mut srv, requests(8, 10, 5, cfg.vocab), 500.0, 3).unwrap();
+    assert_eq!(report.metrics.completed, 8);
+    assert_eq!(report.responses.len(), 8);
+    assert_eq!(report.metrics.ttft.len(), 8, "one TTFT sample per request");
+    assert_eq!(report.metrics.itl.len(), 8 * 4, "ITL gap per generated token after the first");
+    for r in &report.responses {
+        assert_eq!(r.tokens.len(), 5);
+        assert!(r.ttft_s >= 0.0);
+    }
+    assert!(report.metrics.wall_secs > 0.0);
+    assert_eq!(srv.engine.kv_pool().used_blocks(), 0);
+}
