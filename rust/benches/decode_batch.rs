@@ -1,0 +1,249 @@
+//! Batched decode tick bench — the looped per-sequence decode
+//! (`NativeEngine::decode_reference`) vs the batched tenant-grouped tick
+//! (`Engine::decode`) at B ∈ {1, 4, 16, 64} running sequences, with 1 and
+//! 4 tenants.
+//!
+//! The quantity under test is per-tick packed-weight traffic: the looped
+//! path streams + dequantizes + scale-reconstructs every weight tile once
+//! **per sequence** (`B × bytes(W)` per tick), the batched tick once **per
+//! tenant-group** (`groups × bytes(W)`). The weight-stream columns are
+//! analytic (exact from `Model::weight_bytes`); tok/s is measured. Both
+//! paths are token-identical (gated by `tests/decode_batch.rs`), so this
+//! is a pure throughput comparison.
+//!
+//! Expected shape: batched decode approaches `B / groups ×` less weight
+//! traffic — ≥ 4x analytic reduction at B = 16 single-tenant (it is 16x) —
+//! with measured speedups tracking it at the memory-bound sizes.
+//!
+//! Results are written to `BENCH_decode_batch.json` (override with
+//! `LORDS_BENCH_JSON=path`).
+
+use lords::adapters::AdapterFactors;
+use lords::bench::harness::time_once;
+use lords::bench::TableBuilder;
+use lords::coordinator::engine::SeqState;
+use lords::coordinator::{Engine, NativeEngine, Request};
+use lords::model::Model;
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::testbed::{full_mode, model_zoo, Testbed};
+use lords::util::Rng;
+
+const PROMPT_LEN: usize = 16;
+
+struct Point {
+    batch: usize,
+    tenants: usize,
+    groups: usize,
+    looped_tps: f64,
+    batched_tps: f64,
+    speedup: f64,
+    weight_mib: f64,
+    looped_stream_mib_per_tick: f64,
+    batched_stream_mib_per_tick: f64,
+    stream_ratio: f64,
+}
+
+fn build_engine(model: &Model, adapters: &[AdapterFactors], label: &str) -> NativeEngine {
+    let mut engine = NativeEngine::new(model.clone(), label);
+    for (i, a) in adapters.iter().enumerate() {
+        engine.register_adapter(&format!("t{i}"), a.clone()).unwrap();
+    }
+    engine
+}
+
+/// Prefill `b` sequences round-robined over `base + adapters` tenants.
+fn prefill_batch(
+    engine: &mut NativeEngine,
+    b: usize,
+    tenants: usize,
+    max_seq: usize,
+    vocab: usize,
+    ticks: usize,
+) -> Vec<SeqState> {
+    let mut rng = Rng::new(17);
+    let mut seqs: Vec<SeqState> = (0..b as u64)
+        .map(|id| {
+            let prompt: Vec<usize> = (0..PROMPT_LEN).map(|_| rng.below(vocab)).collect();
+            let tenant = match id as usize % tenants {
+                0 => "base".to_string(),
+                t => format!("t{}", t - 1),
+            };
+            SeqState::admit(&Request::new(id, prompt, ticks).with_adapter(&tenant), max_seq)
+        })
+        .collect();
+    engine.prefill(&mut seqs).unwrap();
+    seqs
+}
+
+/// Advance `ticks` decode ticks (greedy sampling), timing only the engine
+/// calls. `batched = false` drives the per-sequence reference loop.
+fn run_ticks(
+    engine: &mut NativeEngine,
+    seqs: &mut Vec<SeqState>,
+    ticks: usize,
+    batched: bool,
+) -> f64 {
+    let mut secs = 0.0;
+    for _ in 0..ticks {
+        for s in seqs.iter_mut() {
+            let tok = s.next_token();
+            s.tokens.push(tok);
+        }
+        let (res, dt) = time_once(|| {
+            if batched {
+                engine.decode(seqs)
+            } else {
+                engine.decode_reference(seqs)
+            }
+        });
+        res.unwrap();
+        secs += dt.as_secs_f64();
+    }
+    secs
+}
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner(
+        "decode batch",
+        "looped per-sequence decode vs batched tenant-grouped tick (weight streams per tick)",
+    );
+
+    let full = full_mode();
+    let (name, cfg) = model_zoo().remove(0);
+    let tb = Testbed::build(name, &cfg, if full { 300 } else { 120 }, 0);
+    let ticks = if full { 32 } else { 8 };
+    let mut model = tb.model.clone();
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: 30, ..Default::default() },
+        false,
+    );
+    let weight_bytes = model.weight_bytes();
+    let weight_mib = weight_bytes as f64 / (1024.0 * 1024.0);
+    let base_factors = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(3);
+    let adapters: Vec<AdapterFactors> =
+        (0..3).map(|_| base_factors.perturbed(0.05, &mut arng)).collect();
+
+    let mut t = TableBuilder::new(&format!(
+        "Batched decode tick — {name}, 4-bit LoRDS, packed weights {weight_mib:.2} MiB"
+    ))
+    .headers(&[
+        "B",
+        "Tenants",
+        "Groups",
+        "Looped tok/s",
+        "Batched tok/s",
+        "Speedup",
+        "W-stream looped MiB/tick",
+        "W-stream batched MiB/tick",
+        "Stream ratio",
+    ]);
+
+    let mut points: Vec<Point> = Vec::new();
+    for &b in &[1usize, 4, 16, 64] {
+        for &tenants in &[1usize, 4] {
+            if tenants > b {
+                continue;
+            }
+            let groups = tenants.min(b);
+            // fresh engine per leg so each path decodes the same positions
+            let mut eng = build_engine(&model, &adapters[..tenants - 1], "looped");
+            let mut seqs = prefill_batch(&mut eng, b, tenants, cfg.max_seq, cfg.vocab, ticks);
+            let looped_secs = run_ticks(&mut eng, &mut seqs, ticks, false);
+
+            let mut eng = build_engine(&model, &adapters[..tenants - 1], "batched");
+            let mut seqs = prefill_batch(&mut eng, b, tenants, cfg.max_seq, cfg.vocab, ticks);
+            let batched_secs = run_ticks(&mut eng, &mut seqs, ticks, true);
+            assert_eq!(eng.last_decode_groups(), groups, "tick must form {groups} groups");
+
+            let tokens = (b * ticks) as f64;
+            let p = Point {
+                batch: b,
+                tenants,
+                groups,
+                looped_tps: tokens / looped_secs.max(1e-12),
+                batched_tps: tokens / batched_secs.max(1e-12),
+                speedup: looped_secs / batched_secs.max(1e-12),
+                weight_mib,
+                looped_stream_mib_per_tick: b as f64 * weight_mib,
+                batched_stream_mib_per_tick: groups as f64 * weight_mib,
+                stream_ratio: b as f64 / groups as f64,
+            };
+            eprintln!(
+                "[decode_batch] B={b} tenants={tenants}: looped {:.1} tok/s, batched {:.1} tok/s \
+                 ({:.2}x), weight stream {:.1} → {:.1} MiB/tick ({:.0}x)",
+                p.looped_tps,
+                p.batched_tps,
+                p.speedup,
+                p.looped_stream_mib_per_tick,
+                p.batched_stream_mib_per_tick,
+                p.stream_ratio,
+            );
+            t.row(vec![
+                b.to_string(),
+                tenants.to_string(),
+                groups.to_string(),
+                format!("{:.1}", p.looped_tps),
+                format!("{:.1}", p.batched_tps),
+                format!("{:.2}", p.speedup),
+                format!("{:.1}", p.looped_stream_mib_per_tick),
+                format!("{:.1}", p.batched_stream_mib_per_tick),
+                format!("{:.0}x", p.stream_ratio),
+            ]);
+            points.push(p);
+        }
+    }
+    t.print();
+
+    let b16 = points
+        .iter()
+        .find(|p| p.batch == 16 && p.tenants == 1)
+        .expect("B=16 single-tenant point");
+    println!(
+        "\n(acceptance: per-tick packed-weight bytes at B=16 single tenant drop {:.0}x — \
+         {:.1} MiB → {:.1} MiB; ≥ 4x required)",
+        b16.stream_ratio, b16.looped_stream_mib_per_tick, b16.batched_stream_mib_per_tick
+    );
+    write_json(&points, full);
+}
+
+fn write_json(points: &[Point], full: bool) {
+    let path = std::env::var("LORDS_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode_batch.json").to_string()
+    });
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"decode_batch\",\n");
+    s.push_str("  \"unit\": \"tokens_per_second_and_weight_stream_mib_per_tick\",\n");
+    s.push_str(&format!("  \"full_mode\": {full},\n"));
+    s.push_str(&format!("  \"threads\": {},\n", lords::util::ThreadPool::global().size()));
+    s.push_str("  \"measured\": true,\n");
+    s.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"batch\": {}, \"tenants\": {}, \"groups\": {}, \"looped_tps\": {:.2}, \
+             \"batched_tps\": {:.2}, \"speedup\": {:.3}, \"weight_mib\": {:.4}, \
+             \"looped_stream_mib_per_tick\": {:.4}, \"batched_stream_mib_per_tick\": {:.4}, \
+             \"stream_ratio\": {:.2}}}{}\n",
+            p.batch,
+            p.tenants,
+            p.groups,
+            p.looped_tps,
+            p.batched_tps,
+            p.speedup,
+            p.weight_mib,
+            p.looped_stream_mib_per_tick,
+            p.batched_stream_mib_per_tick,
+            p.stream_ratio,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, &s) {
+        Ok(()) => eprintln!("[decode_batch] wrote baseline {path}"),
+        Err(e) => eprintln!("[decode_batch] could not write {path}: {e}"),
+    }
+}

@@ -84,6 +84,15 @@ fn main() -> anyhow::Result<()> {
     let report = server.run_trace(reqs)?;
     report.metrics.print(&report.engine);
     report.metrics.print_adapters();
+    // the batched tick streams each packed weight once per tenant-group,
+    // not once per sequence — with 4 tenants in flight a full batch of B
+    // sequences reads ≤ 4 x bytes(W) per tick instead of B x bytes(W)
+    println!(
+        "    avg decode batch {:.1} seqs/tick over {} ticks; last tick formed {} tenant-group(s)",
+        report.metrics.avg_decode_batch(),
+        report.metrics.decode_ticks,
+        server.engine.last_decode_groups(),
+    );
 
     // hot swap + LRU eviction: a new tenant displaces the least recently
     // used one (the budget holds only three adapters)

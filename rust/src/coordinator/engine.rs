@@ -5,7 +5,7 @@
 use super::request::{sample, Request, SamplingParams};
 use crate::adapters::{AdapterFactors, AdapterRegistry, BASE_ADAPTER};
 use crate::kvquant::{KvPool, KvQuantCfg};
-use crate::model::Model;
+use crate::model::{DecodeRow, DecodeScratch, Model};
 use crate::runtime::{ExecutorHandle, HostTensor, Manifest};
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -81,7 +81,9 @@ pub trait Engine {
     /// Prefill each sequence's prompt; fills `last_logits`.
     fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()>;
     /// One decode step for all sequences (token already appended by the
-    /// server); refreshes `last_logits`.
+    /// server); refreshes `last_logits`. Implementations may batch or
+    /// regroup internally but must NOT reorder the slice — the server
+    /// keeps per-sequence timing state index-aligned with it.
     fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()>;
     /// Free per-sequence state (KV storage included).
     fn release(&mut self, id: u64);
@@ -134,6 +136,16 @@ const DEFAULT_POOL_SEQS: usize = 64;
 /// `kv_bits` at 8 or 4 the KV cache is bit-packed too, and attention runs
 /// fused over the packed blocks (`kvquant::attention`).
 ///
+/// Decode is **batched**: one tick stacks every running sequence's
+/// activation into B×d matrices, stable-groups them by tenant, and runs
+/// each fused kernel once per tenant-group
+/// ([`Model::decode_batch_pooled`]) — per-tick packed-weight traffic is
+/// `groups × bytes(W)`, not `B × bytes(W)` — while pooled attention for
+/// the batch fans out across the global thread pool. Activations live in
+/// a reusable per-engine [`DecodeScratch`] arena (no per-token
+/// allocation). The old per-sequence loop survives as
+/// [`NativeEngine::decode_reference`] for parity tests and benches.
+///
 /// Tenant routing: each sequence's adapter id is pinned in the registry at
 /// prefill admission and released with the sequence, so a hot eviction of
 /// an in-flight adapter is deferred, never unsafe.
@@ -145,6 +157,10 @@ pub struct NativeEngine {
     registry: AdapterRegistry,
     /// adapter id pinned per in-flight sequence (base tenant omitted).
     seq_adapter: HashMap<u64, String>,
+    /// reusable activation arena for the batched decode tick.
+    scratch: DecodeScratch,
+    /// tenant-groups formed by the last decode tick (weight streams/tick).
+    last_decode_groups: usize,
 }
 
 impl NativeEngine {
@@ -187,6 +203,8 @@ impl NativeEngine {
             label: label.to_string(),
             registry,
             seq_adapter: HashMap::new(),
+            scratch: DecodeScratch::new(),
+            last_decode_groups: 0,
         }
     }
 
@@ -224,6 +242,26 @@ impl NativeEngine {
     /// the same number.
     fn seq_reservation(&self, s: &SeqState) -> usize {
         (s.prompt_len + s.max_new).min(self.model.cfg.max_seq)
+    }
+
+    /// Tenant-groups formed by the most recent decode tick — the number
+    /// of times each packed weight was streamed that tick (vs. once per
+    /// sequence on the old per-sequence loop).
+    pub fn last_decode_groups(&self) -> usize {
+        self.last_decode_groups
+    }
+
+    /// The pre-batching decode path — one [`Model::decode_pooled`] call
+    /// per sequence, each re-streaming every packed weight. Kept as the
+    /// token-identity reference for the batched tick (tests and the
+    /// decode_batch bench); the serving loop uses [`Engine::decode`].
+    pub fn decode_reference(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        for s in seqs.iter_mut() {
+            let tok = *s.tokens.last().unwrap();
+            let factors = self.registry.get(&s.adapter);
+            s.last_logits = self.model.decode_pooled(tok, &mut self.pool, s.id, factors)?;
+        }
+        Ok(())
     }
 }
 
@@ -323,12 +361,40 @@ impl Engine for NativeEngine {
         Ok(())
     }
 
+    /// One **batched** decode tick: the whole running set advances through
+    /// [`Model::decode_batch_pooled`] in one call. Sequences are
+    /// stable-grouped by tenant first (re-establishing the batcher's
+    /// grouping, which interleaves as batches admitted at different ticks
+    /// mix), so each fused weight kernel runs once per tenant-group
+    /// instead of once per sequence. Results scatter back by original
+    /// index — the slice order is never changed.
     fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
-        for s in seqs.iter_mut() {
-            let tok = *s.tokens.last().unwrap();
-            // pinned at prefill ⇒ still resident even if eviction is pending
-            let factors = self.registry.get(&s.adapter);
-            s.last_logits = self.model.decode_pooled(tok, &mut self.pool, s.id, factors)?;
+        if seqs.is_empty() {
+            return Ok(());
+        }
+        let mut order: Vec<usize> = (0..seqs.len()).collect();
+        order.sort_by(|&i, &j| seqs[i].adapter.cmp(&seqs[j].adapter)); // stable
+        let rows: Vec<DecodeRow<'_>> = order
+            .iter()
+            .map(|&i| {
+                let s = &seqs[i];
+                DecodeRow {
+                    seq: s.id,
+                    token: *s.tokens.last().unwrap(),
+                    // pinned at prefill ⇒ still resident even if eviction
+                    // is pending
+                    adapter: self.registry.get(&s.adapter),
+                }
+            })
+            .collect();
+        // the model reports the groups it actually formed (factor-instance
+        // identity), the ground truth for weight streams this tick
+        self.last_decode_groups =
+            self.model.decode_batch_pooled(&rows, &mut self.pool, &mut self.scratch)?;
+        for (r, &i) in order.iter().enumerate() {
+            let s = &mut seqs[i];
+            s.last_logits.clear();
+            s.last_logits.extend_from_slice(self.scratch.logits().row(r));
         }
         Ok(())
     }
@@ -527,23 +593,27 @@ impl Engine for PjrtEngine {
         // continuous batching admits sequences at different times, so the
         // running set can be ragged in cache position; each decode artifact
         // takes a single `cur`, so group same-position sequences per call.
-        seqs.sort_by_key(|s| self.slabs[&s.id].len);
+        // Grouping runs over an index permutation — the slice itself keeps
+        // its order (the server's timing state is index-aligned with it).
+        let mut order: Vec<usize> = (0..seqs.len()).collect();
+        order.sort_by_key(|&i| self.slabs[&seqs[i].id].len);
         let mut idx = 0;
-        while idx < seqs.len() {
-            let cur0 = self.slabs[&seqs[idx].id].len;
+        while idx < order.len() {
+            let cur0 = self.slabs[&seqs[order[idx]].id].len;
             let mut n = 1;
-            while idx + n < seqs.len()
+            while idx + n < order.len()
                 && n < max_bucket
-                && self.slabs[&seqs[idx + n].id].len == cur0
+                && self.slabs[&seqs[order[idx + n]].id].len == cur0
             {
                 n += 1;
             }
             let b = Self::bucket_geq(&self.decode_buckets, n);
-            let chunk = &mut seqs[idx..idx + n];
-            let ids: Vec<u64> = chunk.iter().map(|s| s.id).collect();
+            let chunk = &order[idx..idx + n];
+            let ids: Vec<u64> = chunk.iter().map(|&i| seqs[i].id).collect();
             let cur = cur0;
             anyhow::ensure!(cur < self.max_seq, "KV slab full");
-            let mut toks: Vec<i32> = chunk.iter().map(|s| *s.tokens.last().unwrap() as i32).collect();
+            let mut toks: Vec<i32> =
+                chunk.iter().map(|&i| *seqs[i].tokens.last().unwrap() as i32).collect();
             // pad ids by repeating the first sequence (results discarded)
             let mut padded_ids = ids.clone();
             while padded_ids.len() < b {
@@ -562,8 +632,8 @@ impl Engine for PjrtEngine {
             let logits = out[0].f32s();
             // only unpack the real (non-padded) sequences
             self.unpack(&ids, b, out[1].f32s(), out[2].f32s(), cur + 1);
-            for (bi, s) in chunk.iter_mut().enumerate() {
-                s.last_logits = logits[bi * self.vocab..(bi + 1) * self.vocab].to_vec();
+            for (bi, &i) in chunk.iter().enumerate() {
+                seqs[i].last_logits = logits[bi * self.vocab..(bi + 1) * self.vocab].to_vec();
             }
             idx += n;
         }

@@ -27,6 +27,10 @@ pub struct AdapterCounters {
 pub struct ServeMetrics {
     pub prefill_tokens: usize,
     pub decode_tokens: usize,
+    /// batched decode ticks run (each tick advances every running
+    /// sequence with one engine call; `decode_tokens / decode_ticks` is
+    /// the average decode batch size)
+    pub decode_ticks: usize,
     pub prefill_secs: f64,
     pub decode_secs: f64,
     pub wall_secs: f64,
@@ -56,6 +60,12 @@ impl ServeMetrics {
     /// Total throughput over wall-clock (the paper's Total column).
     pub fn total_tps(&self) -> f64 {
         (self.prefill_tokens + self.decode_tokens) as f64 / self.wall_secs.max(1e-12)
+    }
+
+    /// Average decode batch size per tick (sequences advanced per engine
+    /// call — what the batched tick amortizes weight streaming over).
+    pub fn avg_decode_batch(&self) -> f64 {
+        self.decode_tokens as f64 / self.decode_ticks.max(1) as f64
     }
 
     /// Counter cell for tenant `id`, created on first touch.
@@ -93,13 +103,14 @@ impl ServeMetrics {
     /// Streaming-latency percentiles (the online serving bench's columns).
     pub fn print_streaming(&self) {
         println!(
-            "    ttft p50 {:.2}ms p99 {:.2}ms | itl p50 {:.2}ms p99 {:.2}ms | queue p50 {:.2}ms p99 {:.2}ms",
+            "    ttft p50 {:.2}ms p99 {:.2}ms | itl p50 {:.2}ms p99 {:.2}ms | queue p50 {:.2}ms p99 {:.2}ms | avg decode batch {:.1}",
             self.ttft.p50() * 1e3,
             self.ttft.p99() * 1e3,
             self.itl.p50() * 1e3,
             self.itl.p99() * 1e3,
             self.queue_wait.p50() * 1e3,
             self.queue_wait.p99() * 1e3,
+            self.avg_decode_batch(),
         );
     }
 }

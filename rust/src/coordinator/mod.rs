@@ -82,6 +82,30 @@
 //! blocks mid-sequence; [`Engine::release`](engine::Engine::release) —
 //! called on completion *and* cancellation — frees blocks and adapter
 //! pins together (a stray release is recoverable, never a panic).
+//!
+//! # The batched decode tick (weight streams per tick = tenant-groups)
+//!
+//! `Server::step`'s decode phase advances the **entire running set with
+//! one engine call** and no per-tick cloning (the running sequences and
+//! their timing state live in index-aligned vectors, so the engine
+//! borrows `&mut [SeqState]` directly; engines must not reorder it). On
+//! the native engine that call is
+//! [`Model::decode_batch_pooled`](crate::model::Model::decode_batch_pooled):
+//! the batch's activations are stacked into B×d matrices, stable-grouped
+//! by tenant (re-establishing the batcher's grouping, which interleaves
+//! as admission waves mix), and each fused bit-packed kernel runs **once
+//! per tenant-group** — so one tick reads each packed weight
+//! `tenant-groups` times instead of `batch-size` times, the traffic drop
+//! the `decode_batch` bench quantifies. Pooled attention stays
+//! per-sequence over each sequence's own blocks but fans the
+//! per-(sequence, head) sweeps out across the global thread pool with
+//! per-worker reusable scratch; all other activations live in a reusable
+//! per-engine arena ([`DecodeScratch`](crate::model::DecodeScratch)).
+//! Batching never changes tokens: the tick is bitwise identical to the
+//! per-sequence reference loop
+//! ([`NativeEngine::decode_reference`](engine::NativeEngine::decode_reference),
+//! gated by `tests/decode_batch.rs`). `ServeMetrics::avg_decode_batch`
+//! reports how many sequences each tick amortized over.
 
 pub mod batcher;
 pub mod driver;

@@ -85,7 +85,14 @@ pub struct Server<E: Engine> {
     pub metrics: ServeMetrics,
     batcher: Batcher,
     cfg: ServeCfg,
-    running: Vec<(SeqState, ReqTiming)>,
+    /// In-flight sequences. Kept as a plain `Vec<SeqState>` (with
+    /// `timings` index-aligned beside it) so the engine's batched decode
+    /// tick borrows the whole running set as one `&mut [SeqState]` —
+    /// no per-tick clone of every sequence's token/logit buffers.
+    running: Vec<SeqState>,
+    /// Per-request serving timestamps, index-aligned with `running`
+    /// (engines must not reorder the slice — see [`Engine::decode`]).
+    timings: Vec<ReqTiming>,
     /// ids currently queued or running (duplicate-submission guard)
     live: HashSet<u64>,
     /// events produced between steps (cancellations), delivered next step
@@ -123,6 +130,7 @@ impl<E: Engine> Server<E> {
             ),
             cfg,
             running: Vec::new(),
+            timings: Vec::new(),
             live: HashSet::new(),
             pending_events: Vec::new(),
         }
@@ -193,8 +201,9 @@ impl<E: Engine> Server<E> {
             self.pending_events.push(Event::Cancelled { id });
             return true;
         }
-        if let Some(pos) = self.running.iter().position(|(s, _)| s.id == id) {
-            let (s, _) = self.running.remove(pos);
+        if let Some(pos) = self.running.iter().position(|s| s.id == id) {
+            let s = self.running.remove(pos);
+            self.timings.remove(pos);
             self.engine.release(s.id);
             self.live.remove(&id);
             self.metrics.cancelled += 1;
@@ -299,12 +308,15 @@ impl<E: Engine> Server<E> {
             self.metrics.adapter(&s.adapter).prefill_tokens += s.prompt_len;
             t.prefill_s = per_prefill;
         }
-        self.running.extend(seqs.into_iter().zip(timings));
+        self.running.extend(seqs);
+        self.timings.extend(timings);
         Ok(())
     }
 
     /// One decode tick: sample + stream a token for every running
-    /// sequence, complete the finished ones, batch-decode the rest.
+    /// sequence, complete the finished ones, then advance the rest with a
+    /// **single** batched engine call (`Engine::decode` over the whole
+    /// running set — the engine amortizes weight streaming across it).
     fn decode_tick(&mut self, events: &mut Vec<Event>) -> anyhow::Result<()> {
         if self.running.is_empty() {
             return Ok(());
@@ -312,7 +324,7 @@ impl<E: Engine> Server<E> {
         let max_seq = self.engine.max_seq();
         // sample + append + stream the next token for every sequence
         let now = Instant::now();
-        for (s, t) in self.running.iter_mut() {
+        for (s, t) in self.running.iter_mut().zip(self.timings.iter_mut()) {
             let next = s.next_token();
             s.tokens.push(next);
             if s.stop_tokens.contains(&next) {
@@ -330,9 +342,12 @@ impl<E: Engine> Server<E> {
             }
             t.last_token = Some(now);
         }
-        // sequences that just produced their final token complete
-        let mut decode_batch: Vec<(SeqState, ReqTiming)> = Vec::with_capacity(self.running.len());
-        for (s, t) in self.running.drain(..) {
+        // sequences that just produced their final token complete; the
+        // rest are retained in order (no clone — the engine decodes the
+        // running vec in place)
+        let seqs = std::mem::take(&mut self.running);
+        let timings = std::mem::take(&mut self.timings);
+        for (s, t) in seqs.into_iter().zip(timings) {
             if s.finished(max_seq) {
                 self.engine.release(s.id);
                 self.live.remove(&s.id);
@@ -353,25 +368,24 @@ impl<E: Engine> Server<E> {
                     },
                 });
             } else {
-                decode_batch.push((s, t));
+                self.running.push(s);
+                self.timings.push(t);
             }
         }
-        if !decode_batch.is_empty() {
-            let mut seqs: Vec<SeqState> = decode_batch.iter().map(|(s, _)| s.clone()).collect();
+        if !self.running.is_empty() {
             let t0 = Instant::now();
-            self.engine.decode(&mut seqs)?;
+            self.engine.decode(&mut self.running)?;
             let dt = t0.elapsed().as_secs_f64();
             self.metrics.decode_secs += dt;
-            self.metrics.decode_tokens += seqs.len();
-            for s in &seqs {
+            self.metrics.decode_ticks += 1;
+            self.metrics.decode_tokens += self.running.len();
+            for s in self.running.iter() {
                 self.metrics.adapter(&s.adapter).decode_tokens += 1;
             }
-            let per = dt / seqs.len() as f64;
-            for ((old, timing), new) in decode_batch.iter_mut().zip(seqs) {
-                *old = new;
-                timing.decode_s += per;
+            let per = dt / self.running.len() as f64;
+            for t in self.timings.iter_mut() {
+                t.decode_s += per;
             }
-            self.running = decode_batch;
         }
         Ok(())
     }
@@ -483,6 +497,9 @@ mod tests {
         assert_eq!(report.metrics.ttft.len(), 9);
         assert!(report.metrics.itl.len() >= 9 * 5);
         assert!(report.metrics.ttft.p50() >= 0.0);
+        // decode ran as batched ticks (max_concurrent 4 ⇒ avg batch > 1)
+        assert!(report.metrics.decode_ticks > 0);
+        assert!(report.metrics.avg_decode_batch() > 1.0);
     }
 
     #[test]

@@ -17,8 +17,14 @@ pub const ROW_TILE: usize = 8;
 
 /// Contiguous 4-accumulator dot product — the same microkernel shape as
 /// `tensor::gemm::matmul_transb`, so LLVM vectorizes both identically.
+///
+/// Shared across the weight kernels here and the fused packed attention
+/// ([`kvquant::attention`](crate::kvquant::attention)) / dense attention
+/// ([`model::attention`](crate::model::attention)) score sweeps, so every
+/// hot dot product in the serving path compiles to the same vectorized
+/// loop (re-exported as `kernels::dot`).
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     let k = a.len();
     debug_assert_eq!(k, b.len());
     let (mut acc0, mut acc1, mut acc2, mut acc3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
@@ -98,13 +104,30 @@ pub fn lords_matmul_transb(
     b: &Matrix,
     a: &Matrix,
 ) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, codes.rows());
+    lords_matmul_transb_into(x, codes, lut, b, a, &mut y);
+    y
+}
+
+/// [`lords_matmul_transb`] writing into a caller-owned t×n output (every
+/// element is overwritten — no zeroing required). The batched decode tick
+/// reuses one activation arena across tokens/layers instead of allocating
+/// a fresh output per linear per token.
+pub fn lords_matmul_transb_into(
+    x: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    b: &Matrix,
+    a: &Matrix,
+    y: &mut Matrix,
+) {
     let (n, m) = (codes.rows(), codes.cols());
     assert_eq!(x.cols, m, "x width {} vs codes {}", x.cols, m);
     assert_eq!(b.rows, n, "B rows");
     assert_eq!(a.cols, m, "A cols");
     assert_eq!(b.cols, a.rows, "rank mismatch");
     let t = x.rows;
-    let mut y = Matrix::zeros(t, n);
+    assert_eq!(y.shape(), (t, n), "out shape {:?} vs ({t}, {n})", y.shape());
     let yp = SharedMut(y.data.as_mut_ptr());
     let ypr = &yp;
     ThreadPool::global().parallel_for(n, move |lo, hi| {
@@ -134,7 +157,6 @@ pub fn lords_matmul_transb(
             j0 = j1;
         }
     });
-    y
 }
 
 /// Fused LoRDS backward-dx: `y = g · (lut[Q] ⊙ (B·A))`.
@@ -203,6 +225,21 @@ pub fn lords_matmul_transb_adapter(
     lords_matmul_transb(x, codes, lut, b, a)
 }
 
+/// [`lords_matmul_transb_adapter`] writing into a caller-owned output
+/// (see [`lords_matmul_transb_into`]).
+pub fn lords_matmul_transb_adapter_into(
+    x: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    base_b: &Matrix,
+    base_a: &Matrix,
+    adapter: Option<(&Matrix, &Matrix)>,
+    y: &mut Matrix,
+) {
+    let (b, a) = adapter.unwrap_or((base_b, base_a));
+    lords_matmul_transb_into(x, codes, lut, b, a, y);
+}
+
 /// Multi-tenant backward-dx: [`lords_matmul`] with per-call scale factors
 /// (see [`lords_matmul_transb_adapter`]).
 pub fn lords_matmul_adapter(
@@ -227,13 +264,28 @@ pub fn blockwise_matmul_transb(
     scales: &Matrix,
     block: usize,
 ) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, codes.rows());
+    blockwise_matmul_transb_into(x, codes, lut, scales, block, &mut y);
+    y
+}
+
+/// [`blockwise_matmul_transb`] writing into a caller-owned t×n output
+/// (see [`lords_matmul_transb_into`]).
+pub fn blockwise_matmul_transb_into(
+    x: &Matrix,
+    codes: &PackedCodes,
+    lut: &[f32],
+    scales: &Matrix,
+    block: usize,
+    y: &mut Matrix,
+) {
     let (n, m) = (codes.rows(), codes.cols());
     assert_eq!(x.cols, m, "x width {} vs codes {}", x.cols, m);
     assert!(block > 0 && m % block == 0, "block {block} !| cols {m}");
     assert_eq!(scales.rows, n, "scale rows");
     assert_eq!(scales.cols, m / block, "scale cols");
     let t = x.rows;
-    let mut y = Matrix::zeros(t, n);
+    assert_eq!(y.shape(), (t, n), "out shape {:?} vs ({t}, {n})", y.shape());
     let yp = SharedMut(y.data.as_mut_ptr());
     let ypr = &yp;
     ThreadPool::global().parallel_for(n, move |lo, hi| {
@@ -258,7 +310,6 @@ pub fn blockwise_matmul_transb(
             j0 = j1;
         }
     });
-    y
 }
 
 /// Fused block-wise backward-dx: `y = g · (lut[Q] ⊙ (s ⊗ 1))`.
@@ -422,6 +473,31 @@ mod tests {
         assert_allclose(&fwd.data, &matmul_transb(&x, &w_merged).data, 1e-4, 1e-4, "adapter fwd");
         let bwd = lords_matmul_adapter(&gup, &codes, &lut, &b, &a, Some((&b2, &a2)));
         assert_allclose(&bwd.data, &matmul(&gup, &w_merged).data, 1e-4, 1e-4, "adapter bwd");
+    }
+
+    #[test]
+    fn into_variants_match_allocating_path_on_a_dirty_buffer() {
+        // the decode tick reuses one arena across tokens — stale contents
+        // must be fully overwritten, not accumulated into
+        let mut rng = crate::util::Rng::new(31);
+        let (n, m, t) = (19, 24, 6);
+        let lut: Vec<f32> = (0..16).map(|i| i as f32 / 15.0 - 0.5).collect();
+        let flat: Vec<u8> = (0..n * m).map(|_| rng.below(16) as u8).collect();
+        let codes = PackedCodes::from_flat(4, n, m, &flat);
+        let b = Matrix::randn(n, 2, 0.3, &mut rng);
+        let a = Matrix::randn(2, m, 0.3, &mut rng);
+        let x = Matrix::randn(t, m, 1.0, &mut rng);
+        let mut dirty = Matrix::from_fn(t, n, |i, j| (i + j) as f32 + 7.0);
+        lords_matmul_transb_into(&x, &codes, &lut, &b, &a, &mut dirty);
+        assert_eq!(dirty.data, lords_matmul_transb(&x, &codes, &lut, &b, &a).data);
+
+        let mut scales = Matrix::randn(n, m / 8, 0.5, &mut rng);
+        for v in scales.data.iter_mut() {
+            *v = v.abs() + 0.1;
+        }
+        let mut dirty2 = Matrix::from_fn(t, n, |i, j| (i * j) as f32 - 3.0);
+        blockwise_matmul_transb_into(&x, &codes, &lut, &scales, 8, &mut dirty2);
+        assert_eq!(dirty2.data, blockwise_matmul_transb(&x, &codes, &lut, &scales, 8).data);
     }
 
     #[test]

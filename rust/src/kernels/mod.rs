@@ -54,6 +54,23 @@
 //! shadow weights (STE fake-quant produces Ŵ as a training byproduct) and
 //! `effective()` consumers like checkpointing and the PJRT bridge.
 //!
+//! # Amortization across the serving batch (the batched decode tick)
+//!
+//! Steps 1–2 above — stream the packed tile, reconstruct its scale rows,
+//! dequantize — are per-*weight* work; only step 3 scales with the number
+//! of x rows. A 1×m decode forward is therefore the kernels' worst case:
+//! all of the dequant cost, one dot per tile row. The serving path fixes
+//! this at the tick level: `Model::decode_batch_pooled` stacks the whole
+//! running batch into B×m activations (stable-grouped by tenant, since a
+//! tenant swap changes the scale factors) and calls each kernel **once
+//! per tenant-group**, so per tick every packed weight streams
+//! `tenant-groups` times — not `batch-size` times — and steps 1–2 amortize
+//! over the group's rows exactly as they do over a prefill's sequence
+//! rows. The forward kernels also come in `_into` variants
+//! ([`fused::lords_matmul_transb_into`] and friends) that write into a
+//! caller-owned buffer, so the decode tick's activation arena is reused
+//! across tokens and layers with zero per-call allocation.
+//!
 //! # Multi-tenant adapter override
 //!
 //! The LoRDS kernels take their scale factors per call, so a served tenant
@@ -67,7 +84,8 @@ pub mod fused;
 pub mod packed;
 
 pub use fused::{
-    blockwise_matmul, blockwise_matmul_transb, lords_matmul, lords_matmul_adapter,
-    lords_matmul_transb, lords_matmul_transb_adapter,
+    blockwise_matmul, blockwise_matmul_transb, blockwise_matmul_transb_into, dot, lords_matmul,
+    lords_matmul_adapter, lords_matmul_transb, lords_matmul_transb_adapter,
+    lords_matmul_transb_adapter_into, lords_matmul_transb_into,
 };
 pub use packed::PackedCodes;

@@ -13,13 +13,38 @@
 //! weighted-V accumulation happen in the same order as the dense
 //! reference ([`model::attention`](crate::model::attention)), so in f32
 //! mode the pooled path is bit-identical to the old contiguous cache.
+//! Both paths share the [`kernels::dot`](crate::kernels::dot)
+//! 4-accumulator microkernel, so attention scores vectorize exactly like
+//! the fused weight GEMMs.
+//!
+//! Batched decode ([`decode_packed_batch`]) dispatches the per-sequence
+//! score/weighted-V sweeps as work items on the global
+//! [`ThreadPool`](crate::util::ThreadPool): each worker walks its
+//! sequences' packed blocks once (one dequant sweep per block row serves
+//! every head attending it) with a single reusable [`AttnScratch`] —
+//! per-row results are identical to the serial [`decode_packed`].
 
 use super::pool::KvSeqView;
+use crate::kernels::dot;
 use crate::tensor::Matrix;
+use crate::util::{SharedMut, ThreadPool};
 
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+/// Reusable scratch for the decode attention sweep: the packed-row
+/// dequant buffers and per-head score vector `decode_packed` used to
+/// allocate on every call. [`decode_packed_batch`] keeps one per worker
+/// thread (persistent across layers, groups, and ticks); the serial
+/// [`decode_packed`] reference wrapper still allocates per call.
+#[derive(Debug, Default)]
+pub struct AttnScratch {
+    crow: Vec<u8>,
+    row: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
 }
 
 /// Decode-step attention: one query row (1×D, post-RoPE) over the first
@@ -27,38 +52,94 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// [`attention_decode`](crate::model::attention::attention_decode) with the
 /// cache read through the pool.
 pub fn decode_packed(q: &Matrix, view: &KvSeqView, n_heads: usize) -> Matrix {
-    let d = q.cols;
+    let mut out = Matrix::zeros(1, q.cols);
+    decode_packed_into(q.row(0), view, n_heads, &mut AttnScratch::new(), out.row_mut(0));
+    out
+}
+
+/// [`decode_packed`] on slices: query row `q` (len D) → `out[..D]`
+/// (zeroed then accumulated), with all working storage borrowed from a
+/// caller-owned [`AttnScratch`] — the decode hot loop's allocation-free
+/// entry point.
+pub fn decode_packed_into(
+    q: &[f32],
+    view: &KvSeqView,
+    n_heads: usize,
+    s: &mut AttnScratch,
+    out: &mut [f32],
+) {
+    let d = q.len();
     assert_eq!(d, view.d, "query width {} vs cache {}", d, view.d);
+    assert!(out.len() >= d, "out width {} < {d}", out.len());
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
     let len = view.len;
-    let mut out = Matrix::zeros(1, d);
-    let mut crow = vec![0u8; d];
-    let mut row = vec![0.0f32; d];
-    let mut scores = vec![0.0f32; n_heads * len];
+    out[..d].fill(0.0);
+    s.crow.resize(d, 0);
+    s.row.resize(d, 0.0);
+    s.scores.resize(n_heads * len, 0.0);
     for j in 0..len {
-        view.k_row_into(j, &mut crow, &mut row);
+        view.k_row_into(j, &mut s.crow, &mut s.row);
         for h in 0..n_heads {
             let base = h * hd;
-            let qh = &q.row(0)[base..base + hd];
-            scores[h * len + j] = dot(qh, &row[base..base + hd]) * scale;
+            let qh = &q[base..base + hd];
+            s.scores[h * len + j] = dot(qh, &s.row[base..base + hd]) * scale;
         }
     }
     for h in 0..n_heads {
-        softmax_inplace(&mut scores[h * len..(h + 1) * len]);
+        softmax_inplace(&mut s.scores[h * len..(h + 1) * len]);
     }
     for j in 0..len {
-        view.v_row_into(j, &mut crow, &mut row);
+        view.v_row_into(j, &mut s.crow, &mut s.row);
         for h in 0..n_heads {
-            let w = scores[h * len + j];
+            let w = s.scores[h * len + j];
             let base = h * hd;
-            let oh = &mut out.row_mut(0)[base..base + hd];
-            for (o, &vv) in oh.iter_mut().zip(&row[base..base + hd]) {
+            let oh = &mut out[base..base + hd];
+            for (o, &vv) in oh.iter_mut().zip(&s.row[base..base + hd]) {
                 *o += w * vv;
             }
         }
     }
-    out
+}
+
+thread_local! {
+    /// Each pool worker's attention scratch. Workers are long-lived
+    /// threads, so the buffers persist across layers, groups, and ticks —
+    /// steady-state batched decode performs no attention-scratch
+    /// allocation at all.
+    static ATTN_SCRATCH: std::cell::RefCell<AttnScratch> = const {
+        std::cell::RefCell::new(AttnScratch {
+            crow: Vec::new(),
+            row: Vec::new(),
+            scores: Vec::new(),
+        })
+    };
+}
+
+/// One serving tick's decode attention for a whole batch: row `i` of `q`
+/// attends sequence `views[i]` over its own pooled blocks, writing row
+/// `i` of `out`. Sequences are independent, so the per-(sequence, head)
+/// sweeps are dispatched across the global thread pool — each worker owns
+/// a disjoint range of output rows and its thread's persistent
+/// [`AttnScratch`]. Row-for-row identical to calling [`decode_packed`]
+/// per sequence.
+pub fn decode_packed_batch(q: &Matrix, views: &[KvSeqView], n_heads: usize, out: &mut Matrix) {
+    let b = views.len();
+    let d = q.cols;
+    assert_eq!(q.rows, b, "query rows {} vs sequences {b}", q.rows);
+    assert_eq!(out.shape(), (b, d), "out shape {:?} vs ({b}, {d})", out.shape());
+    let op = SharedMut(out.data.as_mut_ptr());
+    let opr = &op;
+    ThreadPool::global().parallel_for(b, move |lo, hi| {
+        ATTN_SCRATCH.with(|s| {
+            let scratch = &mut s.borrow_mut();
+            for i in lo..hi {
+                // rows [lo, hi) of `out` are owned by this worker — disjoint
+                let orow = unsafe { std::slice::from_raw_parts_mut(opr.0.add(i * d), d) };
+                decode_packed_into(q.row(i), &views[i], n_heads, scratch, orow);
+            }
+        });
+    });
 }
 
 /// Causal prefill attention: every query row `i` of `q` (S×D, post-RoPE)
@@ -183,6 +264,39 @@ mod tests {
             let diff = max_abs_diff(&fused.data, &want.data);
             if diff > 1e-5 {
                 return Err(format!("{bits:?} bt={bt} d={d} s={s}: diff {diff}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_decode_is_row_identical_to_serial() {
+        // mixed lengths and bit-widths in one "tick": every row of the
+        // parallel batch must equal its serial decode_packed result bitwise
+        prop_check(8, |g| {
+            let d = g.usize(1..=3) * 8;
+            let heads = *g.pick(&[2usize, 4]);
+            let b = g.usize(1..=6);
+            let mut rng = g.rng().fork(17);
+            let mut pools = Vec::new();
+            let mut lens = Vec::new();
+            for _ in 0..b {
+                let bits = *g.pick(&[KvBits::F32, KvBits::Int8, KvBits::Int4]);
+                let len = g.usize(1..=11);
+                pools.push(filled_pool(bits, 4, d, len, rng.next_u64()));
+                lens.push(len);
+            }
+            let q = Matrix::randn(b, d, 1.0, &mut rng);
+            let views: Vec<_> =
+                pools.iter().zip(&lens).map(|(p, &l)| p.view(1, 0, l)).collect();
+            let mut out = Matrix::from_fn(b, d, |i, j| (i + j) as f32); // dirty
+            decode_packed_batch(&q, &views, heads, &mut out);
+            for i in 0..b {
+                let want =
+                    decode_packed(&q.slice(i, i + 1, 0, d), &views[i], heads);
+                if out.row(i) != want.row(0) {
+                    return Err(format!("row {i} (len {}) differs", lens[i]));
+                }
             }
             Ok(())
         });

@@ -247,7 +247,6 @@ impl KvPool {
         k: &Matrix,
         v: &Matrix,
     ) -> anyhow::Result<()> {
-        let bt = self.cfg.block_tokens;
         let d = self.d_model;
         assert_eq!(k.shape(), v.shape(), "K/V shape mismatch");
         assert_eq!(k.cols, d, "row width {} != d_model {d}", k.cols);
@@ -261,29 +260,63 @@ impl KvPool {
         );
         self.touch_peak();
         for r in 0..k.rows {
-            let pos = pos0 + r;
-            let ti = pos % bt;
-            {
-                let sk = self.seqs.get_mut(&seq).expect("ensured above");
-                sk.tail_k[layer].row_mut(ti).copy_from_slice(k.row(r));
-                sk.tail_v[layer].row_mut(ti).copy_from_slice(v.row(r));
-            }
-            if ti + 1 == bt {
-                let block_id = self.alloc.owned_blocks(seq)[pos / bt];
-                let (tile_k, tile_v) = {
-                    let sk = self.seqs.get(&seq).expect("ensured above");
-                    (
-                        self.seal_tile(&sk.tail_k[layer]),
-                        self.seal_tile(&sk.tail_v[layer]),
-                    )
-                };
-                let ik = self.slot_idx(block_id, layer, 0);
-                let iv = self.slot_idx(block_id, layer, 1);
-                self.slots[ik] = Some(tile_k);
-                self.slots[iv] = Some(tile_v);
-            }
+            self.stage_row(seq, layer, pos0 + r, k.row(r), v.row(r));
         }
         Ok(())
+    }
+
+    /// Append one position for one layer from D-slices (k post-RoPE) —
+    /// the batched decode tick's entry point: no 1×D `Matrix` wrapper per
+    /// token per layer. Same semantics as a one-row [`Self::append_rows`].
+    pub fn append_row(
+        &mut self,
+        seq: u64,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> anyhow::Result<()> {
+        let d = self.d_model;
+        assert_eq!(k_row.len(), d, "K row width {} != d_model {d}", k_row.len());
+        assert_eq!(v_row.len(), d, "V row width {} != d_model {d}", v_row.len());
+        assert!(layer < self.n_layers, "layer {layer} out of range");
+        self.ensure_seq(seq);
+        anyhow::ensure!(
+            self.alloc.reserve(seq, pos + 1),
+            "KV pool exhausted: seq {seq} needs {} blocks, {} free",
+            self.alloc.blocks_for(pos + 1),
+            self.alloc.free_blocks()
+        );
+        self.touch_peak();
+        self.stage_row(seq, layer, pos, k_row, v_row);
+        Ok(())
+    }
+
+    /// Copy one position into the staging tail; seal the layer's K/V tiles
+    /// into the owning block when the position completes it. Storage for
+    /// `pos` must already be reserved.
+    fn stage_row(&mut self, seq: u64, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        let bt = self.cfg.block_tokens;
+        let ti = pos % bt;
+        {
+            let sk = self.seqs.get_mut(&seq).expect("ensured by callers");
+            sk.tail_k[layer].row_mut(ti).copy_from_slice(k_row);
+            sk.tail_v[layer].row_mut(ti).copy_from_slice(v_row);
+        }
+        if ti + 1 == bt {
+            let block_id = self.alloc.owned_blocks(seq)[pos / bt];
+            let (tile_k, tile_v) = {
+                let sk = self.seqs.get(&seq).expect("ensured by callers");
+                (
+                    self.seal_tile(&sk.tail_k[layer]),
+                    self.seal_tile(&sk.tail_v[layer]),
+                )
+            };
+            let ik = self.slot_idx(block_id, layer, 0);
+            let iv = self.slot_idx(block_id, layer, 1);
+            self.slots[ik] = Some(tile_k);
+            self.slots[iv] = Some(tile_v);
+        }
     }
 
     fn seal_tile(&self, tail: &Matrix) -> Tile {
@@ -468,6 +501,30 @@ mod tests {
             }
             assert!(pool.block_bytes() < pool.dense_block_bytes());
         }
+    }
+
+    #[test]
+    fn append_row_matches_append_rows() {
+        let mut a = KvPool::new(cfg(KvBits::Int8, 4), 2, 8, 8);
+        let mut b = KvPool::new(cfg(KvBits::Int8, 4), 2, 8, 8);
+        let mut rng = Rng::new(5);
+        let k = rows(&mut rng, 10, 8);
+        let v = rows(&mut rng, 10, 8);
+        for layer in 0..2 {
+            a.append_rows(1, layer, 0, &k, &v).unwrap();
+            for r in 0..10 {
+                b.append_row(1, layer, r, k.row(r), v.row(r)).unwrap();
+            }
+        }
+        a.commit(1, 10);
+        b.commit(1, 10);
+        for layer in 0..2 {
+            let (ak, av) = a.dense_kv(1, layer, 10);
+            let (bk, bv) = b.dense_kv(1, layer, 10);
+            assert_eq!(ak.data, bk.data, "layer {layer} K");
+            assert_eq!(av.data, bv.data, "layer {layer} V");
+        }
+        assert_eq!(a.used_blocks(), b.used_blocks());
     }
 
     #[test]

@@ -34,7 +34,7 @@
 //! | [`train`] | LM pre-training, QAT, PEFT trainers |
 //! | [`eval`] | perplexity + zero-shot-style accuracy harness |
 //! | [`runtime`] | PJRT client (feature `pjrt`) or stub, artifact manifest, executable cache |
-//! | [`coordinator`] | online serving API (sessioned submit/stream/cancel + offline trace shim), dynamic batcher with KV-aware admission, prefill/decode scheduler, open-loop arrival driver, KV-block allocator, TTFT/ITL metrics |
+//! | [`coordinator`] | online serving API (sessioned submit/stream/cancel + offline trace shim), dynamic batcher with KV-aware admission, **batched decode tick** (fused kernels run once per tenant-group per tick, parallel pooled attention, zero per-token allocation), open-loop arrival driver, KV-block allocator, TTFT/ITL metrics |
 //! | [`bench`] | timing harness + markdown table rendering |
 //! | [`report`] | paper-style table renderers shared by benches |
 

@@ -5,7 +5,14 @@
 //! Shapes: a sequence is S×D row-major; heads are contiguous hd-sized column
 //! groups. RoPE matches `python/compile/model.py`: pairs (2i, 2i+1) rotated
 //! by θ_i(pos) = pos / theta^(2i/hd).
+//!
+//! Score and weighted-V dot products run through the shared
+//! [`kernels::dot`](crate::kernels::dot) 4-accumulator microkernel — the
+//! same op order as the fused packed attention in
+//! [`kvquant::attention`](crate::kvquant::attention), keeping the pooled
+//! f32 path bit-identical to this dense reference.
 
+use crate::kernels::dot;
 use crate::tensor::Matrix;
 
 /// Apply RoPE in place to an S×D matrix of H heads, positions pos0..pos0+S.
@@ -18,25 +25,36 @@ pub fn rope_bwd(g: &mut Matrix, n_heads: usize, pos0: usize, theta: f32) {
     rope_apply(g, n_heads, pos0, theta, true);
 }
 
+/// Apply RoPE to one D-row at absolute position `pos` — the batched
+/// decode tick rotates each stacked row at its own cache position.
+/// Identical per-row math to [`rope_fwd`].
+pub fn rope_row(row: &mut [f32], n_heads: usize, pos: usize, theta: f32) {
+    rope_apply_row(row, n_heads, pos, theta, false);
+}
+
 fn rope_apply(x: &mut Matrix, n_heads: usize, pos0: usize, theta: f32, inverse: bool) {
-    let d = x.cols;
-    let hd = d / n_heads;
-    assert_eq!(d % n_heads, 0);
+    assert_eq!(x.cols % n_heads, 0);
     for s in 0..x.rows {
-        let pos = (pos0 + s) as f32;
-        let row = x.row_mut(s);
-        for h in 0..n_heads {
-            let base = h * hd;
-            for i in 0..hd / 2 {
-                let freq = 1.0 / theta.powf(2.0 * i as f32 / hd as f32);
-                let ang = pos * freq;
-                let (sin, cos) = ang.sin_cos();
-                let sin = if inverse { -sin } else { sin };
-                let x1 = row[base + 2 * i];
-                let x2 = row[base + 2 * i + 1];
-                row[base + 2 * i] = x1 * cos - x2 * sin;
-                row[base + 2 * i + 1] = x1 * sin + x2 * cos;
-            }
+        rope_apply_row(x.row_mut(s), n_heads, pos0 + s, theta, inverse);
+    }
+}
+
+fn rope_apply_row(row: &mut [f32], n_heads: usize, pos: usize, theta: f32, inverse: bool) {
+    let d = row.len();
+    assert_eq!(d % n_heads, 0, "row width {d} not divisible into {n_heads} heads");
+    let hd = d / n_heads;
+    let pos = pos as f32;
+    for h in 0..n_heads {
+        let base = h * hd;
+        for i in 0..hd / 2 {
+            let freq = 1.0 / theta.powf(2.0 * i as f32 / hd as f32);
+            let ang = pos * freq;
+            let (sin, cos) = ang.sin_cos();
+            let sin = if inverse { -sin } else { sin };
+            let x1 = row[base + 2 * i];
+            let x2 = row[base + 2 * i + 1];
+            row[base + 2 * i] = x1 * cos - x2 * sin;
+            row[base + 2 * i + 1] = x1 * sin + x2 * cos;
         }
     }
 }
@@ -65,8 +83,7 @@ pub fn attention_fwd(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> (Mat
             let mut maxv = f32::NEG_INFINITY;
             for j in 0..=i {
                 let kj = &k.row(j)[base..base + hd];
-                let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
-                let sc = dot * scale;
+                let sc = dot(qi, kj) * scale;
                 p.set(i, j, sc);
                 maxv = maxv.max(sc);
             }
@@ -123,7 +140,7 @@ pub fn attention_bwd(
             let mut dp = vec![0.0f32; i + 1];
             for j in 0..=i {
                 let vj = &v.row(j)[base..base + hd];
-                dp[j] = gi.iter().zip(vj).map(|(a, b)| a * b).sum();
+                dp[j] = dot(gi, vj);
                 let pij = p.at(i, j);
                 let dvj = &mut dv.row_mut(j)[base..base + hd];
                 for (o, &gv) in dvj.iter_mut().zip(gi) {
@@ -131,12 +148,12 @@ pub fn attention_bwd(
                 }
             }
             // softmax backward: ds_ij = p_ij (dp_ij − Σ_k p_ik dp_ik)
-            let dot: f32 = (0..=i).map(|j| p.at(i, j) * dp[j]).sum();
+            let pdp: f32 = (0..=i).map(|j| p.at(i, j) * dp[j]).sum();
             // dq_i += Σ_j ds_ij k_j · scale ; dk_j += ds_ij q_i · scale
             let qi: Vec<f32> = q.row(i)[base..base + hd].to_vec();
             let dqi = &mut dq.row_mut(i)[base..base + hd];
             for j in 0..=i {
-                let ds = p.at(i, j) * (dp[j] - dot) * scale;
+                let ds = p.at(i, j) * (dp[j] - pdp) * scale;
                 if ds == 0.0 {
                     continue;
                 }
@@ -174,7 +191,7 @@ pub fn attention_decode(
         let mut maxv = f32::NEG_INFINITY;
         for (j, sc) in scores.iter_mut().enumerate() {
             let kj = &k_cache.row(j)[base..base + hd];
-            *sc = qh.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+            *sc = dot(qh, kj) * scale;
             maxv = maxv.max(*sc);
         }
         let mut denom = 0.0f32;

@@ -16,7 +16,7 @@ use crate::quant::baselines::QloraLinear;
 use crate::quant::ste;
 use crate::quant::QuantizedLinear;
 use crate::quant::{BlockwiseQuant, Codebook, LordsQuant};
-use crate::tensor::{matmul, matmul_at_b, matmul_transb, Matrix};
+use crate::tensor::{matmul, matmul_at_b, matmul_transb, matmul_transb_into, Matrix};
 
 /// Weight representation of one linear layer (y = x·Wᵀ).
 #[derive(Clone, Debug)]
@@ -106,6 +106,24 @@ impl LinearWeight {
         }
     }
 
+    /// Inference forward writing into a caller-owned t×n buffer (fully
+    /// overwritten) — the batched decode tick's allocation-free path,
+    /// numerically identical to [`Self::forward`] (both run the same
+    /// kernels). QAT mode still materializes Ŵ (the STE fake-quant needs
+    /// it); only its output write is allocation-free.
+    pub fn forward_into(&self, x: &Matrix, out: &mut Matrix) {
+        match self {
+            LinearWeight::Dense(w) => matmul_transb_into(x, w, out),
+            LinearWeight::Lords { q, shadow_w: None } => q.matmul_transb_opt_into(x, None, out),
+            LinearWeight::Lords { q, shadow_w: Some(w) } => {
+                let fq = ste::fake_quant(w, &q.b, &q.a, &q.codebook);
+                matmul_transb_into(x, &fq.w_hat, out);
+            }
+            LinearWeight::Blockwise(q) => q.matmul_transb_into(x, out),
+            LinearWeight::Qlora(q) => q.forward_into(x, out),
+        }
+    }
+
     /// Multi-tenant inference forward: dequantize the shared packed codes
     /// through a tenant adapter's (B′, A′) instead of the baked-in factors.
     /// Only meaningful for frozen-code LoRDS linears — the only
@@ -114,6 +132,24 @@ impl LinearWeight {
         match self {
             LinearWeight::Lords { q, shadow_w: None } => {
                 q.matmul_transb_with(x, &pair.b, &pair.a)
+            }
+            other => panic!(
+                "adapter override requires a frozen-code LoRDS linear, got {other:?}"
+            ),
+        }
+    }
+
+    /// [`Self::forward_adapted`] writing into a caller-owned t×n buffer
+    /// (see [`Self::forward_into`]).
+    pub fn forward_adapted_into(
+        &self,
+        x: &Matrix,
+        pair: &crate::adapters::BaPair,
+        out: &mut Matrix,
+    ) {
+        match self {
+            LinearWeight::Lords { q, shadow_w: None } => {
+                q.matmul_transb_opt_into(x, Some((&pair.b, &pair.a)), out)
             }
             other => panic!(
                 "adapter override requires a frozen-code LoRDS linear, got {other:?}"

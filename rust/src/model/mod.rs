@@ -22,4 +22,4 @@ pub mod norm;
 pub mod transformer;
 
 pub use linear::{LinearGrads, LinearWeight};
-pub use transformer::{KvCache, LayerWeights, Model};
+pub use transformer::{DecodeRow, DecodeScratch, KvCache, LayerWeights, Model};

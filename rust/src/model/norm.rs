@@ -34,6 +34,41 @@ pub fn rmsnorm_fwd(x: &Matrix, gamma: &[f32]) -> (Matrix, NormCache) {
     (y, NormCache { inv_rms })
 }
 
+/// Cache-free inference forward writing into a caller-owned t×d buffer
+/// (fully overwritten) — per-row math identical to [`rmsnorm_fwd`], used
+/// by the batched decode tick to reuse one norm buffer across layers and
+/// tokens.
+pub fn rmsnorm_fwd_into(x: &Matrix, gamma: &[f32], y: &mut Matrix) {
+    assert_eq!(x.cols, gamma.len());
+    assert_eq!(y.shape(), x.shape(), "out shape {:?} vs {:?}", y.shape(), x.shape());
+    let d = x.cols;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        let out = y.row_mut(i);
+        for j in 0..d {
+            out[j] = row[j] * inv * gamma[j];
+        }
+    }
+}
+
+/// In-place variant of [`rmsnorm_fwd_into`]: each row's RMS is computed
+/// before the row is overwritten, so the per-row math is identical.
+pub fn rmsnorm_fwd_inplace(x: &mut Matrix, gamma: &[f32]) {
+    assert_eq!(x.cols, gamma.len());
+    let d = x.cols;
+    for i in 0..x.rows {
+        let row = x.row_mut(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for j in 0..d {
+            // same association as rmsnorm_fwd: (x · inv) · γ, bit-for-bit
+            row[j] = row[j] * inv * gamma[j];
+        }
+    }
+}
+
 /// Backward: returns (dx, dgamma).
 pub fn rmsnorm_bwd(
     x: &Matrix,

@@ -4,12 +4,14 @@
 //!
 //! Parameter names/shapes mirror `python/compile/model.py` one-to-one.
 
-use super::attention::{attention_bwd, attention_decode, attention_fwd, rope_bwd, rope_fwd, AttnCache};
+use super::attention::{
+    attention_bwd, attention_decode, attention_fwd, rope_bwd, rope_fwd, rope_row, AttnCache,
+};
 use super::linear::{LinearCache, LinearGrads, LinearWeight};
 use crate::adapters::{AdapterFactors, BaPair};
 use crate::kvquant::KvPool;
 use super::loss::{cross_entropy_bwd, cross_entropy_fwd};
-use super::norm::{rmsnorm_bwd, rmsnorm_fwd, NormCache};
+use super::norm::{rmsnorm_bwd, rmsnorm_fwd, rmsnorm_fwd_inplace, rmsnorm_fwd_into, NormCache};
 use crate::config::ModelCfg;
 use crate::quant::lords::RefineCfg;
 use crate::quant::{BlockwiseQuant, Codebook};
@@ -137,6 +139,87 @@ pub struct ForwardCache {
     x_pre_final: Matrix,
     x_final: Matrix,
     tokens: Vec<usize>,
+}
+
+/// One sequence's slot in a batched decode tick
+/// ([`Model::decode_batch_pooled`]).
+#[derive(Clone, Copy)]
+pub struct DecodeRow<'a> {
+    /// KV-pool sequence id.
+    pub seq: u64,
+    /// The token to decode (sampled from the previous tick's logits).
+    pub token: usize,
+    /// Resolved tenant factors (`None` = the base tenant). Rows sharing
+    /// an adapter should be contiguous: each maximal run forms one
+    /// tenant-group, and every packed weight streams once per group.
+    pub adapter: Option<&'a AdapterFactors>,
+}
+
+/// Reusable activation arena for the batched decode tick: every buffer is
+/// reshaped in place (`fit`, capacity kept) instead of freshly allocated
+/// per token per layer, so a steady-state serving loop performs no
+/// per-tick activation allocations beyond the per-group attention views.
+#[derive(Debug)]
+pub struct DecodeScratch {
+    /// running activation (B×d)
+    x: Matrix,
+    /// RMSNorm output, shared by the attention and MLP halves (B×d)
+    norm: Matrix,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    att: Matrix,
+    /// wo / w_down projection output before the residual add (B×d)
+    proj: Matrix,
+    gate: Matrix,
+    up: Matrix,
+    /// whole-batch final hidden state: each tenant-group deposits its
+    /// rows here so the (adapter-independent) final norm + lm_head run
+    /// once per tick, not once per group
+    hidden: Matrix,
+    logits: Matrix,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        let z = || Matrix::zeros(0, 0);
+        DecodeScratch {
+            x: z(),
+            norm: z(),
+            q: z(),
+            k: z(),
+            v: z(),
+            att: z(),
+            proj: z(),
+            gate: z(),
+            up: z(),
+            hidden: z(),
+            logits: z(),
+        }
+    }
+
+    /// The last tick's logits: one row per [`DecodeRow`], in call order.
+    pub fn logits(&self) -> &Matrix {
+        &self.logits
+    }
+}
+
+impl Default for DecodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Reshape a scratch matrix in place, reusing its allocation whenever the
+/// size already matches (the steady-state tick: no fill, no realloc).
+/// Contents are unspecified afterwards; every consumer fully overwrites.
+fn fit(m: &mut Matrix, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    if m.data.len() != rows * cols {
+        m.data.clear();
+        m.data.resize(rows * cols, 0.0);
+    }
 }
 
 impl Model {
@@ -650,6 +733,158 @@ impl Model {
         let logits = crate::tensor::matmul_transb(&xf, &self.lm_head);
         Ok(logits.row(0).to_vec())
     }
+
+    /// One **batched** decode tick over the block-pooled KV store: row `i`
+    /// advances `rows[i]` by one token, with results in
+    /// [`DecodeScratch::logits`] (row per input row, in order).
+    ///
+    /// This is the amortized counterpart of calling [`Self::decode_pooled`]
+    /// once per sequence — and token-identical to it, bitwise: every op is
+    /// row-wise (RMSNorm, RoPE at each sequence's own position, residuals,
+    /// SwiGLU), the fused weight kernels produce per-row dots that do not
+    /// depend on the batch size, and attention runs per sequence over its
+    /// own blocks ([`decode_packed_batch`]
+    /// (crate::kvquant::attention::decode_packed_batch), dispatched across
+    /// the global thread pool). What changes is the memory traffic: the
+    /// batch is split into maximal runs of rows sharing one adapter
+    /// (tenant-groups), and each [`LinearWeight`] forward runs **once per
+    /// group** — every ROW_TILE of packed codes is streamed, dequantized,
+    /// and scale-reconstructed once per group per tick instead of once per
+    /// sequence, dropping per-tick weight reads from `B × bytes(W)` to
+    /// `groups × bytes(W)`.
+    ///
+    /// Returns the number of tenant-groups the tick formed (the weight
+    /// streams it paid).
+    ///
+    /// Fails — before any K/V row is appended — when a row names an
+    /// unknown sequence, a full cache, or a duplicated sequence id, or
+    /// when the pool cannot back every row's next position (each row's
+    /// blocks are reserved up front, so a tick never partially advances
+    /// the batch; reservations are idempotent growth, so pre-reserved
+    /// serving sequences pay nothing here).
+    pub fn decode_batch_pooled(
+        &self,
+        rows: &[DecodeRow<'_>],
+        pool: &mut KvPool,
+        scratch: &mut DecodeScratch,
+    ) -> anyhow::Result<usize> {
+        let mut pos = Vec::with_capacity(rows.len());
+        let mut seen = std::collections::HashSet::with_capacity(rows.len());
+        for r in rows {
+            let p = pool
+                .seq_len(r.seq)
+                .ok_or_else(|| anyhow::anyhow!("decode of unknown KV sequence {}", r.seq))?;
+            anyhow::ensure!(p < self.cfg.max_seq, "KV cache full for seq {}", r.seq);
+            anyhow::ensure!(seen.insert(r.seq), "duplicate sequence {} in decode batch", r.seq);
+            anyhow::ensure!(
+                pool.reserve(r.seq, p + 1),
+                "KV pool cannot back position {} of seq {} ({} blocks free)",
+                p + 1,
+                r.seq,
+                pool.free_blocks()
+            );
+            pos.push(p);
+        }
+        fit(&mut scratch.hidden, rows.len(), self.cfg.d_model);
+        let mut groups = 0;
+        let mut g0 = 0;
+        while g0 < rows.len() {
+            let mut g1 = g0 + 1;
+            while g1 < rows.len() && same_adapter(rows[g0].adapter, rows[g1].adapter) {
+                g1 += 1;
+            }
+            self.decode_group(&rows[g0..g1], &pos[g0..g1], g0, pool, scratch)?;
+            groups += 1;
+            g0 = g1;
+        }
+        // final norm + lm_head are adapter-independent: run them once over
+        // the whole tick, so the vocab×d head weight streams once — not
+        // once per group
+        rmsnorm_fwd_inplace(&mut scratch.hidden, &self.final_norm);
+        fit(&mut scratch.logits, rows.len(), self.cfg.vocab);
+        crate::tensor::matmul_transb_into(&scratch.hidden, &self.lm_head, &mut scratch.logits);
+        Ok(groups)
+    }
+
+    /// One tenant-group of a batched decode tick: all rows share
+    /// `rows[0].adapter`, so each linear forward streams its packed weight
+    /// exactly once for the whole group.
+    fn decode_group(
+        &self,
+        rows: &[DecodeRow<'_>],
+        pos: &[usize],
+        out_row0: usize,
+        pool: &mut KvPool,
+        scratch: &mut DecodeScratch,
+    ) -> anyhow::Result<()> {
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let d = self.cfg.d_model;
+        let b = rows.len();
+        let adapter = rows[0].adapter;
+        fit(&mut scratch.x, b, d);
+        for (i, r) in rows.iter().enumerate() {
+            scratch.x.row_mut(i).copy_from_slice(self.tok_emb.row(r.token));
+        }
+        fit(&mut scratch.norm, b, d);
+        fit(&mut scratch.q, b, d);
+        fit(&mut scratch.k, b, d);
+        fit(&mut scratch.v, b, d);
+        fit(&mut scratch.att, b, d);
+        fit(&mut scratch.proj, b, d);
+        fit(&mut scratch.gate, b, self.cfg.d_ff);
+        fit(&mut scratch.up, b, self.cfg.d_ff);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let lf = adapter.map(|f| &f.layers[li]);
+            let ov = |slot: usize| lf.and_then(|l| l.linears[slot].as_ref());
+            rmsnorm_fwd_into(&scratch.x, &layer.attn_norm, &mut scratch.norm);
+            fwd_into(&layer.wq, &scratch.norm, ov(0), &mut scratch.q);
+            fwd_into(&layer.wk, &scratch.norm, ov(1), &mut scratch.k);
+            fwd_into(&layer.wv, &scratch.norm, ov(2), &mut scratch.v);
+            for i in 0..b {
+                rope_row(scratch.q.row_mut(i), h, pos[i], theta);
+                rope_row(scratch.k.row_mut(i), h, pos[i], theta);
+            }
+            for (i, r) in rows.iter().enumerate() {
+                pool.append_row(r.seq, li, pos[i], scratch.k.row(i), scratch.v.row(i))?;
+            }
+            // appends done: the pool is read-only for the attention sweep
+            let views: Vec<_> = rows
+                .iter()
+                .zip(pos)
+                .map(|(r, &p)| pool.view(r.seq, li, p + 1))
+                .collect();
+            crate::kvquant::attention::decode_packed_batch(&scratch.q, &views, h, &mut scratch.att);
+            drop(views);
+            fwd_into(&layer.wo, &scratch.att, ov(3), &mut scratch.proj);
+            scratch.x.add_assign(&scratch.proj);
+            rmsnorm_fwd_into(&scratch.x, &layer.mlp_norm, &mut scratch.norm);
+            fwd_into(&layer.w_gate, &scratch.norm, ov(4), &mut scratch.gate);
+            fwd_into(&layer.w_up, &scratch.norm, ov(5), &mut scratch.up);
+            swiglu_inplace(&mut scratch.gate, &scratch.up);
+            fwd_into(&layer.w_down, &scratch.gate, ov(6), &mut scratch.proj);
+            scratch.x.add_assign(&scratch.proj);
+        }
+        for (r, &p) in rows.iter().zip(pos) {
+            pool.commit(r.seq, p + 1);
+        }
+        // deposit this group's final hidden rows for the batch-wide head
+        for i in 0..b {
+            scratch.hidden.row_mut(out_row0 + i).copy_from_slice(scratch.x.row(i));
+        }
+        Ok(())
+    }
+}
+
+/// Two decode rows belong to one tenant-group iff they resolve to the
+/// same factors instance (both base, or the same registry entry).
+#[inline]
+fn same_adapter(a: Option<&AdapterFactors>, b: Option<&AdapterFactors>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => std::ptr::eq(x, y),
+        _ => false,
+    }
 }
 
 /// One linear forward, dispatched through a tenant adapter slot when
@@ -662,8 +897,26 @@ fn fwd(lw: &LinearWeight, x: &Matrix, ov: Option<&BaPair>) -> Matrix {
     }
 }
 
+/// [`fwd`] into a caller-owned buffer (the batched tick's scratch arena).
+#[inline]
+fn fwd_into(lw: &LinearWeight, x: &Matrix, ov: Option<&BaPair>, out: &mut Matrix) {
+    match ov {
+        Some(pair) => lw.forward_adapted_into(x, pair, out),
+        None => lw.forward_into(x, out),
+    }
+}
+
 fn swiglu(gate_pre: &Matrix, up: &Matrix) -> Matrix {
     gate_pre.zip_map(up, |g, u| silu(g) * u)
+}
+
+/// In-place SwiGLU: `gate[i] = silu(gate[i]) * up[i]` — elementwise
+/// identical to [`swiglu`], reusing the gate buffer as the output.
+fn swiglu_inplace(gate_pre: &mut Matrix, up: &Matrix) {
+    debug_assert_eq!(gate_pre.shape(), up.shape());
+    for (g, &u) in gate_pre.data.iter_mut().zip(&up.data) {
+        *g = silu(*g) * u;
+    }
 }
 
 fn swiglu_bwd(gate_pre: &Matrix, up: &Matrix, d_out: &Matrix) -> (Matrix, Matrix) {
@@ -898,6 +1151,78 @@ mod tests {
         let dp = crate::util::prop::max_abs_diff(&pre, &pre_ref);
         let dd = crate::util::prop::max_abs_diff(&dec, &dec_ref);
         assert!(dp <= 1e-2 && dd <= 1e-2, "int8 KV logit drift: prefill {dp}, decode {dd}");
+    }
+
+    fn argmax(v: &[f32]) -> usize {
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    }
+
+    #[test]
+    fn batched_decode_tick_is_bitwise_identical_to_per_sequence_loop() {
+        let cfg = tiny_cfg();
+        let mut model = Model::init(&cfg, 41);
+        model.quantize_lords(cfg.block, &Codebook::normal_float(4),
+                             RefineCfg { steps: 2, ..Default::default() }, false);
+        let mut rng = Rng::new(42);
+        let kv = crate::kvquant::KvQuantCfg { block_tokens: 4, ..Default::default() };
+        let mut pa = crate::kvquant::KvPool::new(kv, cfg.n_layers, cfg.d_model, 64);
+        let mut pb = crate::kvquant::KvPool::new(kv, cfg.n_layers, cfg.d_model, 64);
+        let lens = [5usize, 3, 7]; // ragged cache positions
+        let mut last: Vec<usize> = Vec::new();
+        for (i, &l) in lens.iter().enumerate() {
+            let prompt: Vec<usize> = (0..l).map(|_| rng.below(cfg.vocab)).collect();
+            let seq = i as u64 + 1;
+            let la = model.prefill_pooled(&prompt, &mut pa, seq, None).unwrap();
+            let lb = model.prefill_pooled(&prompt, &mut pb, seq, None).unwrap();
+            assert_eq!(la, lb);
+            last.push(argmax(&la));
+        }
+        let mut scratch = DecodeScratch::new();
+        for tick in 0..4 {
+            let mut ref_logits = Vec::new();
+            for (i, &t) in last.iter().enumerate() {
+                ref_logits.push(model.decode_pooled(t, &mut pa, i as u64 + 1, None).unwrap());
+            }
+            let rows: Vec<DecodeRow> = last
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| DecodeRow { seq: i as u64 + 1, token: t, adapter: None })
+                .collect();
+            model.decode_batch_pooled(&rows, &mut pb, &mut scratch).unwrap();
+            for (i, want) in ref_logits.iter().enumerate() {
+                assert_eq!(
+                    scratch.logits().row(i),
+                    want.as_slice(),
+                    "tick {tick} row {i}: batched logits must be bitwise identical"
+                );
+            }
+            last = ref_logits.iter().map(|l| argmax(l)).collect();
+        }
+    }
+
+    #[test]
+    fn batched_decode_rejects_bad_rows() {
+        let cfg = tiny_cfg();
+        let model = Model::init(&cfg, 43);
+        let kv = crate::kvquant::KvQuantCfg { block_tokens: 4, ..Default::default() };
+        let mut pool = crate::kvquant::KvPool::new(kv, cfg.n_layers, cfg.d_model, 64);
+        model.prefill_pooled(&[1, 2, 3], &mut pool, 1, None).unwrap();
+        let mut scratch = DecodeScratch::new();
+        // unknown sequence
+        let rows = [DecodeRow { seq: 9, token: 1, adapter: None }];
+        assert!(model.decode_batch_pooled(&rows, &mut pool, &mut scratch).is_err());
+        // duplicate sequence ids in one tick
+        let rows = [
+            DecodeRow { seq: 1, token: 1, adapter: None },
+            DecodeRow { seq: 1, token: 2, adapter: None },
+        ];
+        assert!(model.decode_batch_pooled(&rows, &mut pool, &mut scratch).is_err());
+        // a failed tick appended nothing
+        assert_eq!(pool.seq_len(1), Some(3));
     }
 
     #[test]

@@ -37,11 +37,19 @@ impl QloraLinear {
     /// Forward: y = x·Ŵᵀ + s · (x·L_aᵀ)·L_bᵀ — the base path fused, the
     /// adapter path necessarily separate (unmergeable).
     pub fn forward(&self, x: &Matrix) -> Matrix {
-        let mut y = self.base.matmul_transb(x);
+        let mut y = Matrix::zeros(x.rows, self.base.rows);
+        self.forward_into(x, &mut y);
+        y
+    }
+
+    /// [`Self::forward`] writing the base term into a caller-owned t×n
+    /// output, then accumulating the adapter term (the small t×r
+    /// intermediates still allocate — the unmergeable two-GEMM tax).
+    pub fn forward_into(&self, x: &Matrix, y: &mut Matrix) {
+        self.base.matmul_transb_into(x, y);
         let t = matmul_transb(x, &self.lora_a); // x·L_aᵀ : t×r
         let adapter = matmul_transb(&t, &self.lora_b); // ·L_bᵀ : t×n
         y.axpy(self.scaling, &adapter);
-        y
     }
 
     /// Adapter gradients given x (t×m) and upstream g = ∂L/∂y (t×n):

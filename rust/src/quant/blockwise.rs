@@ -113,6 +113,19 @@ impl BlockwiseQuant {
         kernels::blockwise_matmul_transb(x, &self.codes, &self.codebook.levels, &self.scales, self.block)
     }
 
+    /// [`Self::matmul_transb`] writing into a caller-owned t×n output
+    /// (fully overwritten; see `kernels::blockwise_matmul_transb_into`).
+    pub fn matmul_transb_into(&self, x: &Matrix, y: &mut Matrix) {
+        kernels::blockwise_matmul_transb_into(
+            x,
+            &self.codes,
+            &self.codebook.levels,
+            &self.scales,
+            self.block,
+            y,
+        );
+    }
+
     /// Fused y = g · Ŵ (the backward-dx pattern), also Ŵ-free.
     pub fn matmul(&self, g: &Matrix) -> Matrix {
         kernels::blockwise_matmul(g, &self.codes, &self.codebook.levels, &self.scales, self.block)

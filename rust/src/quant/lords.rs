@@ -206,6 +206,26 @@ impl LordsQuant {
         )
     }
 
+    /// [`Self::matmul_transb_opt`] writing into a caller-owned t×n output
+    /// (fully overwritten) — the allocation-free path of the batched
+    /// decode tick.
+    pub fn matmul_transb_opt_into(
+        &self,
+        x: &Matrix,
+        adapter: Option<(&Matrix, &Matrix)>,
+        y: &mut Matrix,
+    ) {
+        kernels::lords_matmul_transb_adapter_into(
+            x,
+            &self.codes,
+            &self.codebook.levels,
+            &self.b,
+            &self.a,
+            adapter,
+            y,
+        );
+    }
+
     /// Fused backward-dx with an optional per-call scale override (see
     /// [`Self::matmul_transb_opt`]).
     pub fn matmul_opt(&self, g: &Matrix, adapter: Option<(&Matrix, &Matrix)>) -> Matrix {

@@ -52,9 +52,18 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// C = A·Bᵀ (A: m×k, B: n×k). The serving-path pattern `x · Ŵᵀ`.
 pub fn matmul_transb(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_transb_into(a, b, &mut c);
+    c
+}
+
+/// [`matmul_transb`] writing into a caller-owned m×n output. Every element
+/// of C is overwritten (no zeroing needed), so the serving loop can reuse
+/// one activation buffer across decode ticks instead of allocating.
+pub fn matmul_transb_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.cols, "matmul_transb: {}x{} @ ({}x{})ᵀ", a.rows, a.cols, b.rows, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Matrix::zeros(m, n);
+    assert_eq!(c.shape(), (m, n), "out shape {:?} vs ({m}, {n})", c.shape());
     let run = |lo: usize, hi: usize, c_data: &mut [f32]| {
         for i in lo..hi {
             let a_row = a.row(i);
@@ -82,8 +91,7 @@ pub fn matmul_transb(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     };
-    dispatch_rows(m, k * n, &mut c, run);
-    c
+    dispatch_rows(m, k * n, c, run);
 }
 
 /// C = Aᵀ·B (A: k×m, B: k×n) — the dW = xᵀ·g backprop pattern.
@@ -204,6 +212,16 @@ mod tests {
         let par = matmul(&a, &b);
         let naive = naive_matmul(&a, &b);
         assert_allclose(&par.data, &naive.data, 1e-4, 1e-4, "parallel gemm");
+    }
+
+    #[test]
+    fn matmul_transb_into_overwrites_dirty_buffer() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(5, 12, 1.0, &mut rng);
+        let b = Matrix::randn(9, 12, 1.0, &mut rng);
+        let mut dirty = Matrix::from_fn(5, 9, |i, j| (i * 31 + j) as f32);
+        matmul_transb_into(&a, &b, &mut dirty);
+        assert_eq!(dirty.data, matmul_transb(&a, &b).data);
     }
 
     #[test]

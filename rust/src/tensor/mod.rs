@@ -4,5 +4,5 @@
 pub mod gemm;
 pub mod matrix;
 
-pub use gemm::{matmul, matmul_at_b, matmul_transb};
+pub use gemm::{matmul, matmul_at_b, matmul_transb, matmul_transb_into};
 pub use matrix::Matrix;

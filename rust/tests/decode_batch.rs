@@ -1,0 +1,275 @@
+//! Batched decode tick gate: one serving tick must be **token-identical**
+//! to the old per-sequence decode loop, bitwise — across mixed tenants
+//! (base + two adapters), ragged sequence lengths, and every KV format
+//! ({f32, int8, int4}) — while streaming each packed weight once per
+//! tenant-group instead of once per sequence.
+//!
+//! Three layers of gate:
+//! * model level — `Model::decode_batch_pooled` vs a `decode_pooled` loop
+//!   over property-sampled tenancy/length/bit-width mixes;
+//! * engine level — `Engine::decode` (batched) vs
+//!   `NativeEngine::decode_reference` across ragged admission waves, plus
+//!   the tenant-group count the tick amortizes weight streaming over;
+//! * serving level — a mixed-tenant quantized `run_trace` reproduces each
+//!   request's dedicated single-stream golden (the pre-batching serving
+//!   behavior), so the `serve_online` goldens are unchanged.
+
+use lords::adapters::AdapterFactors;
+use lords::config::{ModelCfg, ServeCfg};
+use lords::coordinator::engine::SeqState;
+use lords::coordinator::{Engine, NativeEngine, Request, Server};
+use lords::kvquant::{KvBits, KvPool, KvQuantCfg};
+use lords::model::{DecodeRow, DecodeScratch, Model};
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::util::prop::prop_check;
+use lords::util::Rng;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+        block: 8,
+        codebook: "nf4".into(),
+        qlora_rank: 4,
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+fn quantized_model(cfg: &ModelCfg, seed: u64) -> Model {
+    let mut model = Model::init(cfg, seed);
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: 2, ..Default::default() },
+        false,
+    );
+    model
+}
+
+/// Model-level property: mixed tenants (base + 2 adapters guaranteed in
+/// every case), mixed prompt lengths, {f32, int8, int4} KV — the batched
+/// tick's logits equal the per-sequence loop's, bitwise, tick after tick.
+#[test]
+fn batched_tick_is_token_identical_across_tenants_lengths_and_kv_formats() {
+    let cfg = tiny_cfg();
+    let model = quantized_model(&cfg, 11);
+    let base = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(12);
+    let adapters = [base.perturbed(0.05, &mut arng), base.perturbed(0.05, &mut arng)];
+    let factors = |t: usize| -> Option<&AdapterFactors> {
+        match t {
+            0 => None,
+            i => Some(&adapters[i - 1]),
+        }
+    };
+    prop_check(8, |g| {
+        let bits = *g.pick(&[KvBits::F32, KvBits::Int8, KvBits::Int4]);
+        let kv = KvQuantCfg { bits, rank: 1, block_tokens: 4 };
+        let nseq = g.usize(3..=6);
+        let mut rng = g.rng().fork(3);
+        let mut pool_ref = KvPool::new(kv, cfg.n_layers, cfg.d_model, 256);
+        let mut pool_bat = KvPool::new(kv, cfg.n_layers, cfg.d_model, 256);
+        // base + both adapters always present; extra sequences random
+        let tenancy: Vec<usize> =
+            (0..nseq).map(|i| if i < 3 { i } else { g.usize(0..=2) }).collect();
+        let lens: Vec<usize> = (0..nseq).map(|_| g.usize(1..=10)).collect();
+        let mut last = Vec::new();
+        for i in 0..nseq {
+            let prompt: Vec<usize> = (0..lens[i]).map(|_| rng.below(cfg.vocab)).collect();
+            let seq = i as u64 + 1;
+            let la = model
+                .prefill_pooled(&prompt, &mut pool_ref, seq, factors(tenancy[i]))
+                .unwrap();
+            let lb = model
+                .prefill_pooled(&prompt, &mut pool_bat, seq, factors(tenancy[i]))
+                .unwrap();
+            assert_eq!(la, lb, "prefill must agree before the tick comparison");
+            last.push(argmax(&la));
+        }
+        // the engine stable-groups by tenant before the batched call
+        let mut order: Vec<usize> = (0..nseq).collect();
+        order.sort_by_key(|&i| tenancy[i]);
+        let mut scratch = DecodeScratch::new();
+        for tick in 0..3 {
+            let mut ref_logits: Vec<Vec<f32>> = Vec::with_capacity(nseq);
+            for i in 0..nseq {
+                ref_logits.push(
+                    model
+                        .decode_pooled(last[i], &mut pool_ref, i as u64 + 1, factors(tenancy[i]))
+                        .unwrap(),
+                );
+            }
+            let rows: Vec<DecodeRow> = order
+                .iter()
+                .map(|&i| DecodeRow {
+                    seq: i as u64 + 1,
+                    token: last[i],
+                    adapter: factors(tenancy[i]),
+                })
+                .collect();
+            let groups = model.decode_batch_pooled(&rows, &mut pool_bat, &mut scratch).unwrap();
+            let mut distinct = tenancy.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            if groups != distinct.len() {
+                return Err(format!(
+                    "{bits:?} nseq={nseq}: {groups} tenant-groups formed, expected {}",
+                    distinct.len()
+                ));
+            }
+            for (r, &i) in order.iter().enumerate() {
+                if scratch.logits().row(r) != ref_logits[i].as_slice() {
+                    return Err(format!(
+                        "{bits:?} nseq={nseq} tick {tick} seq {i} (tenant {}): \
+                         batched logits diverge from per-sequence reference",
+                        tenancy[i]
+                    ));
+                }
+            }
+            last = ref_logits.iter().map(|l| argmax(l)).collect();
+        }
+        Ok(())
+    });
+}
+
+/// Engine-level gate: `Engine::decode` (the batched tick) matches
+/// `decode_reference` bitwise across ragged admission waves, and the tick
+/// forms exactly one tenant-group per distinct resident adapter.
+#[test]
+fn engine_batched_decode_matches_reference_across_admission_waves() {
+    let cfg = tiny_cfg();
+    let model = quantized_model(&cfg, 21);
+    let base = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(22);
+    let a0 = base.perturbed(0.05, &mut arng);
+    let a1 = base.perturbed(0.05, &mut arng);
+    let mut batched = NativeEngine::new(model.clone(), "batched");
+    let mut reference = NativeEngine::new(model, "reference");
+    for eng in [&mut batched, &mut reference] {
+        eng.register_adapter("t0", a0.clone()).unwrap();
+        eng.register_adapter("t1", a1.clone()).unwrap();
+    }
+
+    let tenants = ["base", "t0", "t1", "t0"];
+    let admit = |eng: &mut NativeEngine, ids: std::ops::Range<u64>, plen: usize| {
+        let mut rng = Rng::new(100 + ids.start);
+        let mut seqs: Vec<SeqState> = ids
+            .map(|id| {
+                let prompt: Vec<usize> =
+                    (0..plen + id as usize % 3).map(|_| rng.below(32)).collect();
+                let req = Request::new(id, prompt, 8)
+                    .with_adapter(tenants[id as usize % tenants.len()]);
+                SeqState::admit(&req, 32)
+            })
+            .collect();
+        eng.prefill(&mut seqs).unwrap();
+        seqs
+    };
+
+    let mut seqs_b = admit(&mut batched, 0..3, 4);
+    let mut seqs_r = admit(&mut reference, 0..3, 4);
+    for wave in 0..2 {
+        for _tick in 0..3 {
+            for (b, r) in seqs_b.iter_mut().zip(seqs_r.iter_mut()) {
+                assert_eq!(b.last_logits, r.last_logits, "logits diverged before tick");
+                let tok = b.next_token();
+                b.tokens.push(tok);
+                let tok_r = r.next_token();
+                r.tokens.push(tok_r);
+                assert_eq!(tok, tok_r, "sampled tokens diverged");
+            }
+            batched.decode(&mut seqs_b).unwrap();
+            reference.decode_reference(&mut seqs_r).unwrap();
+            for (b, r) in seqs_b.iter().zip(seqs_r.iter()) {
+                assert_eq!(
+                    b.last_logits, r.last_logits,
+                    "wave {wave}: batched tick diverged from per-sequence loop (seq {})",
+                    b.id
+                );
+            }
+            // one weight stream per distinct tenant in the running set
+            let mut distinct: Vec<&str> =
+                seqs_b.iter().map(|s| s.adapter.as_str()).collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert_eq!(batched.last_decode_groups(), distinct.len());
+        }
+        if wave == 0 {
+            // second admission wave lands at a different cache position —
+            // the running set becomes ragged in both position and tenant
+            seqs_b.extend(admit(&mut batched, 3..5, 6));
+            seqs_r.extend(admit(&mut reference, 3..5, 6));
+        }
+    }
+}
+
+/// Serving-level gate: a mixed-tenant, quantized-KV `run_trace` still
+/// reproduces every request's dedicated single-stream golden — the same
+/// property the pre-batching serving loop was gated on, so the
+/// `serve_online` goldens are unchanged by the batched tick.
+#[test]
+fn mixed_tenant_quantized_serve_matches_single_stream_goldens() {
+    let cfg = tiny_cfg();
+    let serve = ServeCfg {
+        decode_buckets: vec![1, 2, 4],
+        prefill_buckets: vec![1, 2, 4],
+        batch_window_us: 0,
+        max_queue: 64,
+        max_new_tokens: 6,
+        workers: 1,
+        kv_bits: 8,
+        kv_budget_mib: 0.0,
+        rate_rps: 0.0,
+    };
+    let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
+    let model = quantized_model(&cfg, 31);
+    let base = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(32);
+    let adapters = [base.perturbed(0.05, &mut arng), base.perturbed(0.05, &mut arng)];
+    let build = || {
+        let mut engine = NativeEngine::with_kv(model.clone(), "mt", kv);
+        engine.register_adapter("t0", adapters[0].clone()).unwrap();
+        engine.register_adapter("t1", adapters[1].clone()).unwrap();
+        Server::new(engine, serve.clone())
+    };
+    let requests = |only: Option<u64>| -> Vec<Request> {
+        let mut rng = Rng::new(33);
+        let tenants = ["base", "t0", "t1"];
+        (0..6u64)
+            .map(|id| {
+                let prompt: Vec<usize> =
+                    (0..6 + id as usize % 4).map(|_| rng.below(cfg.vocab)).collect();
+                Request::new(id, prompt, 6).with_adapter(tenants[id as usize % 3])
+            })
+            .filter(|r| match only {
+                None => true,
+                Some(id) => r.id == id,
+            })
+            .collect()
+    };
+    let mut srv = build();
+    let report = srv.run_trace(requests(None)).unwrap();
+    assert_eq!(report.metrics.completed, 6);
+    assert!(report.metrics.avg_decode_batch() > 1.0, "ticks actually batched");
+    for want in &report.responses {
+        let mut solo = build();
+        let golden = solo.run_trace(requests(Some(want.id))).unwrap();
+        assert_eq!(
+            golden.responses[0].tokens, want.tokens,
+            "req {} ({}): batched serve diverged from its single-stream golden",
+            want.id, want.adapter
+        );
+    }
+}
