@@ -1,0 +1,245 @@
+//! Continuous-batching + shared-prefix serving bench — the two ROADMAP
+//! success criteria for the chunked scheduler:
+//!
+//! 1. **TTFT vs longest co-resident prompt.** A mixed long/short open-loop
+//!    trace is replayed against the lockstep schedule
+//!    (`prefill_chunk_tokens = 0`: a whole prompt per tick) and the
+//!    chunked schedule (one KV block per tick). Short-request TTFT p99
+//!    under lockstep scales with the longest prompt admitted beside it;
+//!    under the chunked schedule it stays bounded by the chunk size.
+//! 2. **KV blocks vs shared-prefix session count.** N concurrent sessions
+//!    over one system prefix are served with prefix sharing on and off:
+//!    shared, the prefix's blocks are stored (and prefilled) once and the
+//!    per-session cost is the private tail — O(1) in the prefix; unshared,
+//!    both grow O(N · prefix).
+//!
+//! Results are written to `BENCH_serve_prefix.json` (override with
+//! `LORDS_BENCH_JSON=path`).
+
+use lords::config::ServeCfg;
+use lords::coordinator::{run_open_loop, Event, NativeEngine, Request, Server};
+use lords::kvquant::{KvBits, KvQuantCfg};
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::report::testbed::{full_mode, model_zoo, Testbed};
+use lords::util::Rng;
+
+struct TtftPoint {
+    longest_prompt: usize,
+    chunk_tokens: usize,
+    short_ttft_p99_ms: f64,
+    prefill_chunks: usize,
+    completed: usize,
+}
+
+struct PrefixPoint {
+    sessions: usize,
+    sharing: bool,
+    peak_kv_blocks: usize,
+    prefill_tokens: usize,
+    prefix_hit_tokens: usize,
+}
+
+fn p99(mut xs: Vec<f64>) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[((xs.len() as f64 * 0.99).ceil() as usize - 1).min(xs.len() - 1)]
+}
+
+fn main() {
+    lords::util::logging::init();
+    lords::bench::harness::banner(
+        "Serve prefix",
+        "chunked-prefill TTFT isolation + shared-prefix KV reuse (continuous batching)",
+    );
+
+    let full = full_mode();
+    let (name, cfg) = model_zoo().remove(0);
+    let tb = Testbed::build(name, &cfg, if full { 200 } else { 60 }, 0);
+    let mut model = tb.model.clone();
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: if full { 30 } else { 10 }, ..Default::default() },
+        false,
+    );
+    let kv = KvQuantCfg::with_bits(KvBits::Int8);
+    let bt = kv.block_tokens;
+    let serve = |chunk: usize| ServeCfg {
+        batch_window_us: 0,
+        kv_bits: 8,
+        prefill_chunk_tokens: chunk,
+        ..Default::default()
+    };
+
+    // ---- 1: short-request TTFT p99 vs the longest co-resident prompt
+    let n_short = if full { 24 } else { 12 };
+    let n_long = if full { 6 } else { 3 };
+    let short_len = bt;
+    let max_new = 8;
+    let mut t = lords::bench::TableBuilder::new(
+        "Short-request TTFT p99 vs longest co-resident prompt (open loop, int8 KV)",
+    )
+    .headers(&["Longest prompt", "Schedule", "Short TTFT p99 ms", "Prefill chunks", "Done"]);
+    let mut ttft_points: Vec<TtftPoint> = Vec::new();
+    for frac in [4usize, 2] {
+        let long_len = cfg.max_seq / frac;
+        for chunk in [0usize, bt] {
+            let mut server = Server::new(
+                NativeEngine::with_kv(model.clone(), "ttft", kv),
+                serve(chunk),
+            );
+            // every 5th request is a long prompt; ids < 1000 are short
+            let mut rng = Rng::new(7);
+            let reqs: Vec<Request> = (0..n_short + n_long)
+                .map(|i| {
+                    let (id, plen) = if i % 5 == 0 && i / 5 < n_long {
+                        (1000 + i as u64, long_len)
+                    } else {
+                        (i as u64, short_len)
+                    };
+                    Request::new(id, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), max_new)
+                })
+                .collect();
+            let report = run_open_loop(&mut server, reqs, 200.0, 11).unwrap();
+            let short_ttfts: Vec<f64> = report
+                .responses
+                .iter()
+                .filter(|r| r.id < 1000)
+                .map(|r| r.ttft_s * 1e3)
+                .collect();
+            let p = TtftPoint {
+                longest_prompt: long_len,
+                chunk_tokens: chunk,
+                short_ttft_p99_ms: p99(short_ttfts),
+                prefill_chunks: report.metrics.prefill_chunks,
+                completed: report.metrics.completed,
+            };
+            t.row(vec![
+                long_len.to_string(),
+                if chunk == 0 { "lockstep".into() } else { format!("chunked({chunk})") },
+                format!("{:.3}", p.short_ttft_p99_ms),
+                p.prefill_chunks.to_string(),
+                p.completed.to_string(),
+            ]);
+            ttft_points.push(p);
+        }
+    }
+    t.print();
+    println!(
+        "\n(shape check: lockstep short-TTFT p99 grows with the longest prompt; \
+         chunked stays near the one-chunk tick time)"
+    );
+
+    // ---- 2: KV blocks and prefill tokens vs shared-prefix session count
+    let prefix_len = cfg.max_seq / 2; // block-aligned: max_seq is a block multiple
+    let tail_len = 8;
+    let mut t = lords::bench::TableBuilder::new(
+        "KV footprint for N sessions over one shared prefix (int8 KV)",
+    )
+    .headers(&["Sessions", "Prefix sharing", "Peak KV blocks", "Prefill tokens", "Hit tokens"]);
+    let mut prefix_points: Vec<PrefixPoint> = Vec::new();
+    for n in [1usize, 2, 4, 8] {
+        for sharing in [true, false] {
+            let mut engine = NativeEngine::with_kv(model.clone(), "prefix", kv);
+            engine.set_prefix_sharing(sharing);
+            let mut server = Server::new(engine, serve(bt));
+            let mut rng = Rng::new(13);
+            let prefix: Vec<usize> = (0..prefix_len).map(|_| rng.below(cfg.vocab)).collect();
+            let session = |id: u64, rng: &mut Rng| {
+                let mut prompt = prefix.clone();
+                prompt.extend((0..tail_len).map(|_| rng.below(cfg.vocab)));
+                Request::new(id, prompt, max_new)
+            };
+            // warm the cache with one untracked session, then reset metrics
+            server.submit(session(999, &mut rng)).unwrap();
+            while !server.is_idle() {
+                server.step().unwrap();
+            }
+            server.reset_metrics();
+            let warm_blocks = server.engine.kv_pool().used_blocks();
+            // N concurrent sessions over the same prefix
+            for id in 0..n as u64 {
+                server.submit(session(id, &mut rng)).unwrap();
+            }
+            let mut peak = warm_blocks;
+            let mut done = 0;
+            while !server.is_idle() {
+                for ev in server.step().unwrap() {
+                    if let Event::Done { .. } = ev {
+                        done += 1;
+                    }
+                }
+                peak = peak.max(server.engine.kv_pool().used_blocks());
+            }
+            assert_eq!(done, n, "all sessions complete");
+            let p = PrefixPoint {
+                sessions: n,
+                sharing,
+                peak_kv_blocks: peak,
+                prefill_tokens: server.metrics.prefill_tokens,
+                prefix_hit_tokens: server.metrics.prefix_hit_tokens,
+            };
+            t.row(vec![
+                n.to_string(),
+                if sharing { "on".into() } else { "off".to_string() },
+                p.peak_kv_blocks.to_string(),
+                p.prefill_tokens.to_string(),
+                p.prefix_hit_tokens.to_string(),
+            ]);
+            prefix_points.push(p);
+        }
+    }
+    t.print();
+    println!(
+        "\n(shape check: with sharing on, peak blocks ≈ prefix/block_tokens + N·tail and \
+         prefill tokens grow by the tail only — O(1) in the prefix; off, both grow O(N·prefix))"
+    );
+    write_json(&ttft_points, &prefix_points, full);
+}
+
+fn write_json(ttft: &[TtftPoint], prefix: &[PrefixPoint], full: bool) {
+    let path = std::env::var("LORDS_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_prefix.json").to_string()
+    });
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"serve_prefix\",\n");
+    s.push_str("  \"unit\": \"milliseconds_blocks_and_tokens\",\n");
+    s.push_str(&format!("  \"full_mode\": {full},\n"));
+    s.push_str(&format!("  \"threads\": {},\n", lords::util::ThreadPool::global().size()));
+    s.push_str("  \"measured\": true,\n");
+    s.push_str("  \"ttft_vs_longest_prompt\": [\n");
+    for (i, p) in ttft.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"longest_prompt\": {}, \"prefill_chunk_tokens\": {}, \
+             \"short_ttft_p99_ms\": {:.3}, \"prefill_chunks\": {}, \"completed\": {}}}{}\n",
+            p.longest_prompt,
+            p.chunk_tokens,
+            p.short_ttft_p99_ms,
+            p.prefill_chunks,
+            p.completed,
+            if i + 1 == ttft.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"kv_blocks_vs_shared_sessions\": [\n");
+    for (i, p) in prefix.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"sessions\": {}, \"prefix_sharing\": {}, \"peak_kv_blocks\": {}, \
+             \"prefill_tokens\": {}, \"prefix_hit_tokens\": {}}}{}\n",
+            p.sessions,
+            p.sharing,
+            p.peak_kv_blocks,
+            p.prefill_tokens,
+            p.prefix_hit_tokens,
+            if i + 1 == prefix.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, &s) {
+        Ok(()) => eprintln!("[serve_prefix] wrote baseline {path}"),
+        Err(e) => eprintln!("[serve_prefix] could not write {path}: {e}"),
+    }
+}

@@ -76,9 +76,14 @@ fn main() -> anyhow::Result<()> {
     for (id, s) in streams.iter().enumerate() {
         println!("  session {id} streamed {} tokens: {:?}...", s.len(), &s[..s.len().min(6)]);
     }
+    // blocks still held belong to the shared-prefix cache, not to leaked
+    // sequences — flushing it drains the pool completely
+    let cached = server.engine.kv_pool().used_blocks();
+    server.engine.flush_prefix_cache();
     let pool = server.engine.kv_pool();
     println!(
-        "pool after cancel + drain: {} used blocks, {} active sequences (leak-free)",
+        "pool after cancel + drain: {cached} prefix-cached blocks, {} used after flush, \
+         {} active sequences (leak-free)",
         pool.used_blocks(),
         pool.active_sequences()
     );

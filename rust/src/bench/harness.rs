@@ -38,8 +38,15 @@ impl BenchResult {
 }
 
 /// Benchmark a closure: `warmup` seconds of warmup, then measure for
-/// `measure` seconds (at least 5 iterations).
+/// `measure` seconds (at least 5 iterations). Under the CI smoke switch
+/// (`LORDS_BENCH_SMOKE=1`, see `report::testbed::smoke_mode`) both
+/// windows are capped so every bench binary finishes in seconds.
 pub fn bench_fn(name: &str, warmup: f64, measure: f64, mut f: impl FnMut()) -> BenchResult {
+    let (warmup, measure) = if crate::report::testbed::smoke_mode() {
+        (warmup.min(0.02), measure.min(0.1))
+    } else {
+        (warmup, measure)
+    };
     // warmup
     let t0 = Instant::now();
     while t0.elapsed().as_secs_f64() < warmup {

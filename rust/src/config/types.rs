@@ -212,6 +212,13 @@ pub struct ServeCfg {
     /// Arrivals are a deterministic seeded Poisson-like process
     /// (`coordinator::driver`).
     pub rate_rps: f64,
+    /// Per-tick prefill token budget for chunked (continuous-batching)
+    /// prefill: each tick advances in-flight prompts by at most this many
+    /// tokens total before the decode tick runs, so a long prompt costs
+    /// running streams at most one chunk of extra inter-token latency.
+    /// 0 = unlimited (whole remaining prompt per tick, the lockstep
+    /// schedule). Ignored by engines without chunked-prefill support.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for ServeCfg {
@@ -226,6 +233,7 @@ impl Default for ServeCfg {
             kv_bits: 32,
             kv_budget_mib: 0.0,
             rate_rps: 0.0,
+            prefill_chunk_tokens: 256,
         }
     }
 }
@@ -242,6 +250,11 @@ impl ServeCfg {
             kv_bits: doc.usize_or("serve", "kv_bits", d.kv_bits as usize) as u32,
             kv_budget_mib: doc.f32_or("serve", "kv_budget_mib", d.kv_budget_mib as f32) as f64,
             rate_rps: doc.f32_or("serve", "rate_rps", d.rate_rps as f32) as f64,
+            prefill_chunk_tokens: doc.usize_or(
+                "serve",
+                "prefill_chunk_tokens",
+                d.prefill_chunk_tokens,
+            ),
             ..d
         }
     }

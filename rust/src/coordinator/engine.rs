@@ -4,7 +4,7 @@
 
 use super::request::{sample, Request, SamplingParams};
 use crate::adapters::{AdapterFactors, AdapterRegistry, BASE_ADAPTER};
-use crate::kvquant::{KvPool, KvQuantCfg};
+use crate::kvquant::{KvPool, KvQuantCfg, PrefixCache};
 use crate::model::{DecodeRow, DecodeScratch, Model};
 use crate::runtime::{ExecutorHandle, HostTensor, Manifest};
 use crate::util::Rng;
@@ -29,6 +29,9 @@ pub struct SeqState {
     pub rng: Rng,
     /// a sampled token hit the stop set (set by the server)
     pub stopped: bool,
+    /// prompt tokens whose KV is committed (shared-prefix forks start > 0;
+    /// chunked prefill advances it; == `prompt_len` once decodable)
+    pub prefilled: usize,
 }
 
 impl SeqState {
@@ -46,11 +49,17 @@ impl SeqState {
             stop_tokens: req.stop_tokens.clone(),
             rng: req.params.rng_for(req.id),
             stopped: false,
+            prefilled: 0,
         }
     }
 
     pub fn generated(&self) -> usize {
         self.tokens.len() - self.prompt_len
+    }
+
+    /// The whole prompt's KV is committed — the sequence can decode.
+    pub fn prefill_done(&self) -> bool {
+        self.prefilled >= self.prompt_len
     }
 
     pub fn done(&self) -> bool {
@@ -80,6 +89,45 @@ pub trait Engine {
     fn max_seq(&self) -> usize;
     /// Prefill each sequence's prompt; fills `last_logits`.
     fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()>;
+
+    /// Can [`Self::admit_seqs`] + [`Self::prefill_chunk`] drive this
+    /// engine's prefill incrementally? Engines answering false (fixed-shape
+    /// artifact paths) are served with one whole-batch [`Self::prefill`]
+    /// at admission — the pre-continuous-batching schedule.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Admit sequences without computing anything: validate the batch,
+    /// pin tenant state, attach any shared prompt prefix (setting
+    /// `prefilled` past the shared tokens), and reserve KV for the
+    /// remainder. All-or-nothing: on error no sequence keeps pins or
+    /// storage. Only meaningful when [`Self::supports_chunked_prefill`].
+    fn admit_seqs(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        let _ = seqs;
+        Ok(())
+    }
+
+    /// Advance one admitted sequence's prefill by up to `budget` tokens
+    /// (rounded to the engine's chunking granularity, at least one chunk).
+    /// Returns the tokens actually computed; fills `last_logits` when the
+    /// prompt completes. The default whole-prompt fallback keeps
+    /// non-chunking engines correct behind the same call.
+    fn prefill_chunk(&mut self, seq: &mut SeqState, budget: usize) -> anyhow::Result<usize> {
+        let _ = budget;
+        let n = seq.prompt_len - seq.prefilled;
+        self.prefill(std::slice::from_mut(seq))?;
+        seq.prefilled = seq.prompt_len;
+        Ok(n)
+    }
+
+    /// How many of this prompt's leading tokens a prefix cache would
+    /// serve for free right now (0 for engines without one). Admission
+    /// uses it to charge a request only its unshared suffix.
+    fn prefix_hit_tokens(&self, adapter: &str, prompt: &[usize]) -> usize {
+        let _ = (adapter, prompt);
+        0
+    }
     /// One decode step for all sequences (token already appended by the
     /// server); refreshes `last_logits`. Implementations may batch or
     /// regroup internally but must NOT reorder the slice — the server
@@ -161,6 +209,9 @@ pub struct NativeEngine {
     scratch: DecodeScratch,
     /// tenant-groups formed by the last decode tick (weight streams/tick).
     last_decode_groups: usize,
+    /// shared-prefix trie over sealed prompt blocks (see
+    /// [`kvquant::prefix`](crate::kvquant::prefix)).
+    prefix: PrefixCache,
 }
 
 impl NativeEngine {
@@ -205,12 +256,36 @@ impl NativeEngine {
             seq_adapter: HashMap::new(),
             scratch: DecodeScratch::new(),
             last_decode_groups: 0,
+            prefix: PrefixCache::new(),
         }
     }
 
     /// The engine's KV pool (capacity, peak bytes, per-block cost).
     pub fn kv_pool(&self) -> &KvPool {
         &self.pool
+    }
+
+    /// The shared-prefix cache (hit/miss counters, cached block count).
+    pub fn prefix_cache(&self) -> &PrefixCache {
+        &self.prefix
+    }
+
+    /// Drop every cached prefix block. After this (with no sequences in
+    /// flight) the pool is exactly as empty as before serving — the
+    /// leak-check tests' final step.
+    pub fn flush_prefix_cache(&mut self) {
+        self.prefix.flush(&mut self.pool);
+    }
+
+    /// Enable/disable prefix sharing (flushes the cache when turning it
+    /// off). The serve bench's no-sharing baseline.
+    pub fn set_prefix_sharing(&mut self, enabled: bool) {
+        if !enabled {
+            self.prefix.flush(&mut self.pool);
+            self.prefix = PrefixCache::disabled();
+        } else if !self.prefix.enabled() {
+            self.prefix = PrefixCache::new();
+        }
     }
 
     /// Validate a tenant's factors against this engine's model, then
@@ -290,6 +365,10 @@ impl Engine for NativeEngine {
             budget,
             cfg.max_seq,
         );
+        // the old pool (and any prefix blocks pinned in it) is gone — start
+        // the trie over against the new storage
+        self.prefix =
+            if self.prefix.enabled() { PrefixCache::new() } else { PrefixCache::disabled() };
         crate::info!(
             "native engine[{}]: KV pool {} blocks x {} B ({} KV, {:.1} MiB budget)",
             self.label,
@@ -301,14 +380,25 @@ impl Engine for NativeEngine {
     }
 
     fn kv_can_admit(&self, seq_tokens: &[usize]) -> bool {
-        self.pool.can_admit_lengths(seq_tokens)
+        // cached prefix blocks nothing references but the trie are
+        // reclaimable: admit_seqs evicts them on demand before reserving
+        self.pool
+            .can_admit_lengths_reclaimable(seq_tokens, self.prefix.evictable_blocks(&self.pool))
     }
 
     fn supports_adapter(&self, adapter: &str) -> bool {
         self.registry.contains(adapter)
     }
 
-    fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefix_hit_tokens(&self, adapter: &str, prompt: &[usize]) -> usize {
+        self.prefix.probe(adapter, prompt, self.pool.block_tokens())
+    }
+
+    fn admit_seqs(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
         // Validate the whole batch before taking any pin or KV storage: a
         // bad tenant id or an over-committed pool must fail the batch
         // cleanly, not leak pins and blocks for the sequences processed
@@ -333,19 +423,53 @@ impl Engine for NativeEngine {
                 s.id
             );
         }
-        let lens: Vec<usize> = seqs.iter().map(|s| self.seq_reservation(s)).collect();
-        anyhow::ensure!(
-            self.pool.can_admit_lengths(&lens),
-            "KV pool cannot admit {} sequences needing {:?} tokens ({} blocks free)",
-            seqs.len(),
-            lens,
-            self.pool.free_blocks()
-        );
-        for s in seqs.iter_mut() {
+        let bt = self.pool.block_tokens();
+        // longest cached prefix per sequence; each hit block gets a
+        // temporary pin so the eviction below can never free it
+        let hits: Vec<Vec<usize>> = seqs
+            .iter()
+            .map(|s| self.prefix.lookup(&s.adapter, &s.tokens[..s.prompt_len], bt))
+            .collect();
+        for b in hits.iter().flatten() {
+            let pinned = self.pool.retain_block(*b);
+            debug_assert!(pinned, "cached blocks are live");
+        }
+        let unpin = |pool: &mut KvPool| {
+            for b in hits.iter().flatten() {
+                pool.release_block(*b);
+            }
+        };
+        // each sequence is charged only its unshared suffix (the shared
+        // tokens are block-aligned, so suffix blocks = total − shared)
+        let lens: Vec<usize> = seqs
+            .iter()
+            .zip(&hits)
+            .map(|(s, h)| self.seq_reservation(s) - h.len() * bt)
+            .collect();
+        // reclaim idle cached blocks (LRU leaves first) until the batch fits
+        while !self.pool.can_admit_lengths(&lens) && self.prefix.evict(&mut self.pool, 1) > 0 {}
+        if !self.pool.can_admit_lengths(&lens) {
+            unpin(&mut self.pool);
+            anyhow::bail!(
+                "KV pool cannot admit {} sequences needing {:?} tokens ({} blocks free)",
+                seqs.len(),
+                lens,
+                self.pool.free_blocks()
+            );
+        }
+        for (s, hit) in seqs.iter_mut().zip(&hits) {
             let pinned = self.registry.acquire(&s.adapter);
             debug_assert!(pinned, "adapter '{}' validated above", s.adapter);
             if s.adapter != BASE_ADAPTER {
                 self.seq_adapter.insert(s.id, s.adapter.clone());
+            }
+            if !hit.is_empty() {
+                let shared = hit.len() * bt;
+                let forked = self.pool.fork_at_block(s.id, hit, shared);
+                debug_assert!(forked, "hit blocks are sealed and pinned");
+                if forked {
+                    s.prefilled = shared;
+                }
             }
             // reserve the request's actual worst case (prompt + max_new,
             // capped at max_seq): decode can never run out mid-sequence,
@@ -353,10 +477,67 @@ impl Engine for NativeEngine {
             let need = self.seq_reservation(s);
             let reserved = self.pool.reserve(s.id, need);
             debug_assert!(reserved, "admission validated above");
-            let factors = self.registry.get(&s.adapter);
-            s.last_logits =
-                self.model
-                    .prefill_pooled(&s.tokens[..s.prompt_len], &mut self.pool, s.id, factors)?;
+        }
+        unpin(&mut self.pool);
+        Ok(())
+    }
+
+    /// One block-aligned chunk of `seq`'s prefill: at most `budget` tokens
+    /// (rounded down to whole blocks, minimum one block, capped at the
+    /// remaining prompt). Newly sealed full prompt blocks are published to
+    /// the prefix trie as they appear, so concurrent sessions can fork
+    /// them while this prompt is still prefilling.
+    fn prefill_chunk(&mut self, s: &mut SeqState, budget: usize) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            s.prefilled < s.prompt_len,
+            "prefill_chunk on completed sequence {}",
+            s.id
+        );
+        let bt = self.pool.block_tokens();
+        let pos0 = s.prefilled;
+        let remaining = s.prompt_len - pos0;
+        let take = if budget >= remaining {
+            remaining
+        } else {
+            ((budget / bt).max(1) * bt).min(remaining)
+        };
+        let end = pos0 + take;
+        let factors = self.registry.get(&s.adapter);
+        let logits = self.model.prefill_chunk_pooled(
+            &s.tokens[pos0..end],
+            pos0,
+            s.prompt_len,
+            &mut self.pool,
+            s.id,
+            factors,
+        )?;
+        s.prefilled = end;
+        if let Some(l) = logits {
+            s.last_logits = l;
+        }
+        let sealed = end / bt;
+        if sealed > pos0 / bt {
+            self.prefix.publish(
+                &s.adapter,
+                &s.tokens[..s.prompt_len],
+                bt,
+                sealed,
+                &mut self.pool,
+                s.id,
+            );
+        }
+        Ok(take)
+    }
+
+    /// Whole-prompt prefill = admission + chunks run to completion with an
+    /// unbounded budget (one chunk per sequence; a prefix hit shrinks it
+    /// to the unshared suffix).
+    fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        self.admit_seqs(seqs)?;
+        for s in seqs.iter_mut() {
+            while !s.prefill_done() {
+                self.prefill_chunk(s, usize::MAX)?;
+            }
         }
         Ok(())
     }

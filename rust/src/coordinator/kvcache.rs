@@ -4,15 +4,27 @@
 //! length L holds ⌈L / block_tokens⌉ blocks. The allocator decides
 //! admission (can a new sequence's worst case fit?) and tracks
 //! per-sequence block lists so completion frees exactly what was taken.
+//!
+//! Blocks are **ref-counted** so sealed prefix blocks can be shared: a
+//! freshly reserved block has refcount 1 (its owner); [`Self::attach`]
+//! lets a new sequence adopt another owner's sealed blocks as its own
+//! prefix (refcount +1 per block), and the prefix cache holds refs of its
+//! own via [`Self::retain`]/[`Self::release_ref`]. A block returns to the
+//! free list only when its last reference drops. Writers must never
+//! mutate a block with refcount > 1 — [`Self::cow_swap`] is the
+//! copy-on-write escape hatch that gives a sequence a private replacement
+//! for one slot of its ownership list.
+//!
 //! Invariants (property-tested): never exceeds capacity, no double-free,
-//! no block owned by two sequences.
+//! every block's refcount equals the number of owning sequences plus
+//! external retains, `used + free == capacity` with shared blocks counted
+//! once.
 //!
 //! Since the quantized paged KV-cache landed, these block ids are **real
 //! storage handles**: [`KvPool`](crate::kvquant::KvPool) embeds an
-//! allocator and maps each owned id to that block's K/V tile slots, so the
-//! ownership invariants above are exactly the pool's no-aliasing
-//! guarantees. [`Self::owned_blocks`] exposes a sequence's id list (in
-//! reservation order — block *i* of a sequence holds tokens
+//! allocator and maps each owned id to that block's K/V tile slots.
+//! [`Self::owned_blocks`] exposes a sequence's id list (in reservation
+//! order — block *i* of a sequence holds tokens
 //! `[i·block_tokens, (i+1)·block_tokens)`), and [`Self::try_release`] is
 //! the recoverable release the server path uses (a stray release of an
 //! unknown sequence must not panic mid-serve).
@@ -27,6 +39,8 @@ pub struct KvBlockAllocator {
     pub block_tokens: usize,
     free: Vec<usize>,
     owned: HashMap<u64, Vec<usize>>,
+    /// per-block reference count; 0 ⇔ on the free list.
+    refs: Vec<u32>,
 }
 
 impl KvBlockAllocator {
@@ -36,6 +50,7 @@ impl KvBlockAllocator {
             block_tokens,
             free: (0..capacity).rev().collect(),
             owned: HashMap::new(),
+            refs: vec![0; capacity],
         }
     }
 
@@ -58,7 +73,7 @@ impl KvBlockAllocator {
 
     /// Reserve blocks for sequence `seq` to cover `tokens` total tokens.
     /// Grows the existing reservation; returns false (no change) if the pool
-    /// cannot satisfy it.
+    /// cannot satisfy it. Fresh blocks start at refcount 1 (the owner).
     pub fn reserve(&mut self, seq: u64, tokens: usize) -> bool {
         let need = self.blocks_for(tokens);
         let have = self.owned.get(&seq).map(|v| v.len()).unwrap_or(0);
@@ -71,9 +86,81 @@ impl KvBlockAllocator {
         }
         let list = self.owned.entry(seq).or_default();
         for _ in 0..extra {
-            list.push(self.free.pop().unwrap());
+            let b = self.free.pop().unwrap();
+            debug_assert_eq!(self.refs[b], 0);
+            self.refs[b] = 1;
+            list.push(b);
         }
         true
+    }
+
+    /// Make brand-new sequence `seq` a co-owner of `blocks` (a shared
+    /// prefix, in token order). Every block must be live (refcount ≥ 1);
+    /// `seq` must not already own anything. Returns false (no change) on
+    /// violation. Subsequent [`Self::reserve`] calls grow past the prefix.
+    pub fn attach(&mut self, seq: u64, blocks: &[usize]) -> bool {
+        if self.owned.contains_key(&seq) {
+            return false;
+        }
+        if blocks.iter().any(|&b| b >= self.capacity || self.refs[b] == 0) {
+            return false;
+        }
+        for &b in blocks {
+            self.refs[b] += 1;
+        }
+        self.owned.insert(seq, blocks.to_vec());
+        true
+    }
+
+    /// Current reference count of a block (0 = free).
+    pub fn refcount(&self, block: usize) -> usize {
+        self.refs.get(block).map(|&r| r as usize).unwrap_or(0)
+    }
+
+    /// Take an extra (non-sequence) reference on a live block — used by the
+    /// prefix cache to keep sealed prompt blocks alive after their last
+    /// owning sequence releases. Returns false if the block is free.
+    pub fn retain(&mut self, block: usize) -> bool {
+        if block >= self.capacity || self.refs[block] == 0 {
+            return false;
+        }
+        self.refs[block] += 1;
+        true
+    }
+
+    /// Drop one reference on a live block. Returns true iff that was the
+    /// last reference (the block is now free and its storage slots must be
+    /// cleared by the caller).
+    pub fn release_ref(&mut self, block: usize) -> bool {
+        assert!(block < self.capacity && self.refs[block] > 0, "release_ref on free block {block}");
+        self.refs[block] -= 1;
+        if self.refs[block] == 0 {
+            self.free.push(block);
+            debug_assert!(self.free.len() <= self.capacity);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Copy-on-write: replace slot `index` of `seq`'s ownership list with a
+    /// fresh private block (refcount 1), dropping the sequence's reference
+    /// on the shared original. Returns the fresh id, or `None` (no change)
+    /// if the pool is exhausted or `seq`/`index` is unknown. The caller
+    /// re-seals its data into the fresh block; the original stays intact
+    /// for its remaining owners.
+    pub fn cow_swap(&mut self, seq: u64, index: usize) -> Option<usize> {
+        let have = self.owned.get(&seq).map(|v| v.len()).unwrap_or(0);
+        if index >= have || self.free.is_empty() {
+            return None;
+        }
+        let fresh = self.free.pop().unwrap();
+        debug_assert_eq!(self.refs[fresh], 0);
+        self.refs[fresh] = 1;
+        let old = std::mem::replace(&mut self.owned.get_mut(&seq).unwrap()[index], fresh);
+        let was_last = self.release_ref(old);
+        debug_assert!(!was_last, "cow_swap on an unshared block {old} (callers should write in place)");
+        Some(fresh)
     }
 
     /// Blocks owned by `seq`, in reservation order (block `i` covers
@@ -83,16 +170,20 @@ impl KvBlockAllocator {
         self.owned.get(&seq).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
-    /// Release all blocks owned by `seq`, returning their ids so a
-    /// storage-backed caller can clear the corresponding slots. `None`
-    /// (and no change) for unknown sequences — the recoverable form the
-    /// server path uses.
+    /// Release `seq`'s ownership of all its blocks, returning the ids whose
+    /// refcount hit zero (fully freed — a storage-backed caller clears
+    /// exactly those slots; shared blocks live on under their other
+    /// references). `None` (and no change) for unknown sequences — the
+    /// recoverable form the server path uses.
     pub fn try_release(&mut self, seq: u64) -> Option<Vec<usize>> {
         let blocks = self.owned.remove(&seq)?;
-        let ids = blocks.clone();
-        self.free.extend(blocks);
-        debug_assert!(self.free.len() <= self.capacity);
-        Some(ids)
+        let mut freed = Vec::with_capacity(blocks.len());
+        for b in blocks {
+            if self.release_ref(b) {
+                freed.push(b);
+            }
+        }
+        Some(freed)
     }
 
     /// Release all blocks owned by `seq`. Panics on double-free (strict
@@ -173,35 +264,135 @@ mod tests {
     }
 
     #[test]
-    fn never_exceeds_capacity_and_no_shared_blocks() {
+    fn attach_shares_blocks_without_consuming_capacity() {
+        let mut a = KvBlockAllocator::new(4, 8);
+        assert!(a.reserve(1, 16)); // 2 blocks
+        let prefix = a.owned_blocks(1).to_vec();
+        assert!(a.attach(2, &prefix), "fresh seq adopts live blocks");
+        assert_eq!(a.used_blocks(), 2, "shared blocks counted once");
+        assert_eq!(a.refcount(prefix[0]), 2);
+        assert!(!a.attach(2, &prefix), "attach refuses a known seq");
+        assert!(a.reserve(2, 24), "growth appends past the shared prefix");
+        assert_eq!(a.owned_blocks(2).len(), 3);
+        assert_eq!(&a.owned_blocks(2)[..2], &prefix[..]);
+
+        // releasing the original owner keeps shared blocks alive
+        let freed = a.try_release(1).unwrap();
+        assert!(freed.is_empty(), "shared blocks must not be freed");
+        assert_eq!(a.refcount(prefix[0]), 1);
+        let freed = a.try_release(2).unwrap();
+        assert_eq!(freed.len(), 3, "last owner frees everything");
+        assert_eq!(a.free_blocks(), 4);
+    }
+
+    #[test]
+    fn retain_keeps_block_alive_past_release() {
+        let mut a = KvBlockAllocator::new(2, 8);
+        a.reserve(1, 8);
+        let b = a.owned_blocks(1)[0];
+        assert!(a.retain(b));
+        let freed = a.try_release(1).unwrap();
+        assert!(freed.is_empty());
+        assert_eq!(a.used_blocks(), 1);
+        assert!(a.release_ref(b), "dropping the retain frees the block");
+        assert_eq!(a.used_blocks(), 0);
+        assert!(!a.retain(b), "cannot retain a free block");
+    }
+
+    #[test]
+    fn cow_swap_gives_private_replacement() {
+        let mut a = KvBlockAllocator::new(4, 8);
+        a.reserve(1, 16);
+        let prefix = a.owned_blocks(1).to_vec();
+        a.attach(2, &prefix);
+        let fresh = a.cow_swap(2, 1).expect("free block available");
+        assert_ne!(fresh, prefix[1]);
+        assert_eq!(a.owned_blocks(2), &[prefix[0], fresh]);
+        assert_eq!(a.owned_blocks(1), &prefix[..], "original owner untouched");
+        assert_eq!(a.refcount(prefix[1]), 1, "shared ref dropped");
+        assert_eq!(a.refcount(fresh), 1);
+    }
+
+    #[test]
+    fn refcounts_balance_under_random_share_and_release() {
         prop_check(64, |g| {
-            let cap = g.usize(1..=32);
+            let cap = g.usize(2..=32);
             let mut a = KvBlockAllocator::new(cap, 8);
             let mut live: Vec<u64> = Vec::new();
-            for step in 0..80 {
-                if g.bool() || live.is_empty() {
-                    let seq = step as u64;
-                    let toks = g.usize(1..=64);
-                    if a.reserve(seq, toks) && !live.contains(&seq) {
-                        live.push(seq);
+            let mut retains: Vec<usize> = Vec::new(); // external refs we hold
+            for step in 0..100 {
+                match g.usize(0..=3) {
+                    0 => {
+                        let seq = step as u64;
+                        let toks = g.usize(1..=64);
+                        if a.reserve(seq, toks) && !live.contains(&seq) {
+                            live.push(seq);
+                        }
                     }
-                } else {
-                    let idx = g.usize(0..=live.len() - 1);
-                    let seq = live.swap_remove(idx);
-                    a.release(seq);
+                    1 if !live.is_empty() => {
+                        // fork: adopt a live seq's block prefix as a new seq
+                        let donor = live[g.usize(0..=live.len() - 1)];
+                        let owned = a.owned_blocks(donor).to_vec();
+                        if !owned.is_empty() {
+                            let upto = g.usize(1..=owned.len());
+                            let seq = 1_000 + step as u64;
+                            if a.attach(seq, &owned[..upto]) {
+                                live.push(seq);
+                            }
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        // external retain (prefix-cache style)
+                        let donor = live[g.usize(0..=live.len() - 1)];
+                        let owned = a.owned_blocks(donor).to_vec();
+                        if !owned.is_empty() {
+                            let b = owned[g.usize(0..=owned.len() - 1)];
+                            if a.retain(b) {
+                                retains.push(b);
+                            }
+                        }
+                    }
+                    _ => {
+                        // release a seq or drop an external retain
+                        if !retains.is_empty() && (g.bool() || live.is_empty()) {
+                            let b = retains.swap_remove(g.usize(0..=retains.len() - 1));
+                            a.release_ref(b);
+                        } else if !live.is_empty() {
+                            let idx = g.usize(0..=live.len() - 1);
+                            let seq = live.swap_remove(idx);
+                            a.release(seq);
+                        }
+                    }
                 }
                 if a.used_blocks() + a.free_blocks() != cap {
                     return Err(format!("leak: used {} free {} cap {cap}", a.used_blocks(), a.free_blocks()));
                 }
-                // ownership disjointness
-                let mut seen = std::collections::HashSet::new();
+                // refcount consistency: every block's count equals the
+                // number of owning sequences plus our external retains
+                let mut expect = vec![0usize; cap];
                 for blocks in a.owned.values() {
-                    for b in blocks {
-                        if !seen.insert(*b) {
-                            return Err(format!("block {b} owned twice"));
-                        }
+                    for &b in blocks {
+                        expect[b] += 1;
                     }
                 }
+                for &b in &retains {
+                    expect[b] += 1;
+                }
+                for b in 0..cap {
+                    if a.refcount(b) != expect[b] {
+                        return Err(format!("block {b}: refcount {} != expected {}", a.refcount(b), expect[b]));
+                    }
+                }
+            }
+            // drain everything: no block may remain allocated
+            for seq in live {
+                a.release(seq);
+            }
+            for b in retains {
+                a.release_ref(b);
+            }
+            if a.free_blocks() != cap {
+                return Err(format!("drained pool leaks: {} free of {cap}", a.free_blocks()));
             }
             Ok(())
         });

@@ -25,7 +25,15 @@ pub struct AdapterCounters {
 
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
+    /// prompt tokens actually prefilled (prefix-cache hits excluded)
     pub prefill_tokens: usize,
+    /// prompt tokens served from the shared-prefix KV cache instead of
+    /// being prefilled (`prefill_tokens + prefix_hit_tokens` is the total
+    /// prompt volume admitted)
+    pub prefix_hit_tokens: usize,
+    /// chunked-prefill engine calls (each advances one sequence by up to
+    /// the per-tick chunk budget; > completed ⇒ prompts were split)
+    pub prefill_chunks: usize,
     pub decode_tokens: usize,
     /// batched decode ticks run (each tick advances every running
     /// sequence with one engine call; `decode_tokens / decode_ticks` is

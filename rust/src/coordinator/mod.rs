@@ -10,7 +10,10 @@
 //! * [`engine`]   — the execution backends: native Rust model or PJRT
 //!   artifacts (bucketed prefill/decode executables).
 //! * [`server`]   — the **online serving API**: sessioned submit / step /
-//!   cancel with streaming [`Event`]s, plus the `run_trace` offline shim.
+//!   cancel with streaming [`Event`]s, the chunked-prefill scheduler
+//!   (continuous batching), plus the `run_trace` offline shim.
+//!   (The shared-prefix trie itself lives with the pool it indexes:
+//!   [`kvquant::prefix`](crate::kvquant::prefix).)
 //! * [`driver`]   — open-loop Poisson arrival harness (seeded,
 //!   deterministic schedule) for latency-under-load measurement.
 //! * [`metrics`]  — throughput + latency accounting: per-phase tok/s,
@@ -32,14 +35,26 @@
 //! [`Server::submit`](server::Server::submit) validates and queues one
 //! request (or refuses it with a [`RejectReason`](server::RejectReason) —
 //! admission is explicit, backpressure is the caller's signal).
-//! [`Server::step`](server::Server::step) advances one tick — admit a
-//! prefill batch if capacity allows, then one decode step for every
-//! running sequence — and returns the streaming events: one
-//! [`Event::Token`](server::Event) per sequence per tick, then
-//! [`Event::Done`](server::Event) carrying the finished [`Response`].
-//! [`Server::cancel`](server::Server::cancel) drops a queued or mid-decode
-//! request; its KV blocks and adapter pin are released immediately, so a
-//! cancelled sequence can never leak pool capacity.
+//! [`Server::step`](server::Server::step) advances one tick in three
+//! phases: **admit** a batch if KV capacity allows (reserving blocks and
+//! claiming any cached shared-prefix blocks up front), **prefill** up to
+//! [`ServeCfg::prefill_chunk_tokens`](crate::config::ServeCfg) prompt
+//! tokens across the admitted-but-unfinished prompts (round-robin, in
+//! KV-block-sized chunks — a long prompt no longer stalls the tick; 0
+//! disables chunking and prefills whole prompts, the lockstep schedule),
+//! then one **decode** step for every running sequence. It returns the
+//! streaming events: one [`Event::Token`](server::Event) per sequence per
+//! tick, then [`Event::Done`](server::Event) carrying the finished
+//! [`Response`]. A sequence graduates from prefilling to running on the
+//! tick its final chunk completes (producing its first token), in
+//! admission order; chunking never changes tokens — the chunked schedule
+//! is bitwise identical to whole-prompt prefill (chunk boundaries fall on
+//! KV-block boundaries, so the sealed/dense split, the quantization
+//! grid, and every logit match; gated by `tests/chunked_prefill.rs`).
+//! [`Server::cancel`](server::Server::cancel) drops a queued,
+//! mid-prefill, or mid-decode request; its KV blocks and adapter pin are
+//! released immediately, so a cancelled sequence can never leak pool
+//! capacity.
 //! [`Server::run_trace`](server::Server::run_trace) reimplements the old
 //! closed-loop trace player on top of submit + step (token-identical), and
 //! [`driver::run_open_loop`] plays deterministic Poisson arrivals against
@@ -82,6 +97,37 @@
 //! blocks mid-sequence; [`Engine::release`](engine::Engine::release) —
 //! called on completion *and* cancellation — frees blocks and adapter
 //! pins together (a stray release is recoverable, never a panic).
+//!
+//! # Shared-prefix KV reuse (ref-counted sealed blocks)
+//!
+//! The [`NativeEngine`] also carries a
+//! [`PrefixCache`](crate::kvquant::prefix): a trie keyed per adapter over
+//! whole prompt token *blocks*, mapping each cached prefix chain to the
+//! sealed [`KvPool`](crate::kvquant::KvPool) blocks holding its KV. The
+//! ownership rules:
+//!
+//! * The trie holds **one retain per cached block**; each sequence that
+//!   forks onto a prefix adds its own retain per shared block. A block is
+//!   freed only when its refcount hits zero — trie eviction and every
+//!   sequence release/cancel each drop exactly the retains they added
+//!   (gated by the cancel-storm test in `tests/serve_online.rs`).
+//! * At **admission**, the longest cached prefix of the prompt (capped at
+//!   `max_shareable`: whole blocks strictly below the prompt's last
+//!   token, so the final position is always computed) is claimed; the
+//!   sequence starts with `prefilled = shared` and is charged only the
+//!   unshared suffix — both in prefill compute and in
+//!   [`ServeMetrics::prefill_tokens`](metrics::ServeMetrics) (hits are
+//!   accounted separately as `prefix_hit_tokens`).
+//! * At **seal time** during prefill, each newly completed block-aligned
+//!   prompt block is published back to the trie, so the first session
+//!   over a system prompt warms the cache for every later one.
+//! * Sealed blocks are **immutable** (copy-on-write discipline): chunk
+//!   boundaries and fork points are block-aligned, so a forked sequence
+//!   writes only its own dense tail, never a shared block.
+//! * Under pool pressure the cache **evicts LRU leaves** (never a block
+//!   some live sequence still retains);
+//!   [`NativeEngine::flush_prefix_cache`](engine::NativeEngine::flush_prefix_cache)
+//!   drains it completely (tenant teardown, tests).
 //!
 //! # The batched decode tick (weight streams per tick = tenant-groups)
 //!

@@ -90,6 +90,15 @@ impl Request {
     pub fn required_kv_tokens(&self, max_seq: usize) -> usize {
         (self.prompt.len() + self.max_new_tokens.min(max_seq.saturating_sub(1))).min(max_seq)
     }
+
+    /// [`Self::required_kv_tokens`] minus a known shared prefix: when the
+    /// engine's prefix cache already holds `shared_tokens` of this prompt
+    /// (block-aligned), admission must charge only the unshared suffix —
+    /// otherwise shared-prefix sessions get rejected for bytes they will
+    /// never allocate.
+    pub fn required_suffix_kv_tokens(&self, max_seq: usize, shared_tokens: usize) -> usize {
+        self.required_kv_tokens(max_seq).saturating_sub(shared_tokens)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -195,6 +204,14 @@ mod tests {
         assert_eq!(r.required_kv_tokens(12), 12);
         let greedy_cap = Request::new(1, vec![0; 10], 1000);
         assert_eq!(greedy_cap.required_kv_tokens(48), 48);
+    }
+
+    #[test]
+    fn suffix_kv_tokens_discount_a_shared_prefix() {
+        let r = Request::new(0, vec![0; 10], 6);
+        assert_eq!(r.required_suffix_kv_tokens(48, 0), 16);
+        assert_eq!(r.required_suffix_kv_tokens(48, 8), 8);
+        assert_eq!(r.required_suffix_kv_tokens(48, 100), 0, "over-share clamps at zero");
     }
 
     #[test]

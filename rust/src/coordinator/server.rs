@@ -4,10 +4,15 @@
 //! * [`Server::submit`] — admission with explicit backpressure: a request
 //!   is validated (id, prompt, tenant) and queued, or rejected with a
 //!   [`RejectReason`].
-//! * [`Server::step`] — advances the serving loop one tick (admit a
-//!   prefill batch if capacity allows, then one decode step for every
-//!   running sequence) and returns the [`Event`]s produced: streamed
-//!   tokens, completions, rejections, cancellations.
+//! * [`Server::step`] — advances the serving loop one tick (admit if
+//!   capacity allows, advance in-flight prompts by one chunk budget, then
+//!   one decode step for every running sequence) and returns the
+//!   [`Event`]s produced: streamed tokens, completions, rejections,
+//!   cancellations. Engines that support chunked prefill get the
+//!   **continuous batching** schedule: a long prompt admits immediately
+//!   and prefills [`ServeCfg::prefill_chunk_tokens`] tokens per tick
+//!   interleaved with decode, so running streams pay at most one chunk of
+//!   extra inter-token latency instead of stalling for the whole prompt.
 //! * [`Server::cancel`] — drops a queued or in-flight request, releasing
 //!   its KV blocks and adapter pin immediately.
 //! * [`Server::run_trace`] — the old offline behavior as a thin shim over
@@ -93,6 +98,15 @@ pub struct Server<E: Engine> {
     /// Per-request serving timestamps, index-aligned with `running`
     /// (engines must not reorder the slice — see [`Engine::decode`]).
     timings: Vec<ReqTiming>,
+    /// Admitted sequences whose prompts are still prefilling (chunked
+    /// engines only); they hold KV reservations and adapter pins but do
+    /// not decode until [`SeqState::prefill_done`].
+    prefilling: Vec<SeqState>,
+    /// Timestamps index-aligned with `prefilling`.
+    prefilling_timings: Vec<ReqTiming>,
+    /// Round-robin start offset into `prefilling` so the per-tick chunk
+    /// budget rotates fairly across co-resident prompts.
+    prefill_cursor: usize,
     /// ids currently queued or running (duplicate-submission guard)
     live: HashSet<u64>,
     /// events produced between steps (cancellations), delivered next step
@@ -131,19 +145,30 @@ impl<E: Engine> Server<E> {
             cfg,
             running: Vec::new(),
             timings: Vec::new(),
+            prefilling: Vec::new(),
+            prefilling_timings: Vec::new(),
+            prefill_cursor: 0,
             live: HashSet::new(),
             pending_events: Vec::new(),
         }
     }
 
-    /// Nothing queued, running, or waiting to be reported.
+    /// Nothing queued, prefilling, running, or waiting to be reported.
     pub fn is_idle(&self) -> bool {
-        self.batcher.is_empty() && self.running.is_empty() && self.pending_events.is_empty()
+        self.batcher.is_empty()
+            && self.running.is_empty()
+            && self.prefilling.is_empty()
+            && self.pending_events.is_empty()
     }
 
     /// Number of sequences currently in the decode loop.
     pub fn num_running(&self) -> usize {
         self.running.len()
+    }
+
+    /// Number of admitted sequences still prefilling their prompts.
+    pub fn num_prefilling(&self) -> usize {
+        self.prefilling.len()
     }
 
     /// Number of requests waiting in the arrival queue.
@@ -201,6 +226,16 @@ impl<E: Engine> Server<E> {
             self.pending_events.push(Event::Cancelled { id });
             return true;
         }
+        if let Some(pos) = self.prefilling.iter().position(|s| s.id == id) {
+            let s = self.prefilling.remove(pos);
+            self.prefilling_timings.remove(pos);
+            self.engine.release(s.id);
+            self.live.remove(&id);
+            self.metrics.cancelled += 1;
+            self.metrics.adapter(&s.adapter).cancelled += 1;
+            self.pending_events.push(Event::Cancelled { id });
+            return true;
+        }
         if let Some(pos) = self.running.iter().position(|s| s.id == id) {
             let s = self.running.remove(pos);
             self.timings.remove(pos);
@@ -215,39 +250,53 @@ impl<E: Engine> Server<E> {
     }
 
     /// Advance the serving loop one tick: deliver pending cancellations,
-    /// admit a prefill batch if capacity allows, then run one decode step
-    /// for every running sequence — streaming each produced token as an
+    /// admit queued requests if capacity allows, advance in-flight prompts
+    /// by up to one chunk budget, then run one decode step for every
+    /// running sequence — streaming each produced token as an
     /// [`Event::Token`] and each completion as an [`Event::Done`].
     ///
     /// Returns an empty vector when the server is idle.
     pub fn step(&mut self) -> anyhow::Result<Vec<Event>> {
         let mut events = std::mem::take(&mut self.pending_events);
         self.admit(&mut events)?;
+        self.prefill_tick()?;
         self.decode_tick(&mut events)?;
         Ok(events)
     }
 
-    /// Admission: pop the largest admissible prefill batch and run it.
+    /// Admission: pop the largest admissible batch. Chunked engines admit
+    /// without computing anything (prefix-cache fork + KV reservation
+    /// only) and hand the sequences to [`Self::prefill_tick`]; legacy
+    /// engines keep the old whole-batch prefill at admission.
     fn admit(&mut self, events: &mut Vec<Event>) -> anyhow::Result<()> {
         let max_concurrent = *self.cfg.decode_buckets.last().unwrap();
-        let slots_left = max_concurrent.saturating_sub(self.running.len());
+        let in_flight = self.running.len() + self.prefilling.len();
+        let slots_left = max_concurrent.saturating_sub(in_flight);
         if slots_left == 0 || self.batcher.is_empty() {
             return Ok(());
         }
         // KV-aware admission: size the batch by the queued requests'
-        // actual footprints (prompt + capped max_new), not max_seq worst
-        // case. The engine's answer is monotone in a prefix, so every
-        // popped batch is admissible — no requeue churn.
+        // actual footprints (prompt + capped max_new, minus any prompt
+        // prefix the engine's cache already holds — shared blocks are
+        // attached, not allocated), not max_seq worst case. The engine's
+        // answer is monotone in a prefix, so every popped batch is
+        // admissible — no requeue churn.
         let max_seq = self.engine.max_seq();
         let want = slots_left.min(self.batcher.len());
-        let lens: Vec<usize> =
-            self.batcher.peek(want).map(|r| r.required_kv_tokens(max_seq)).collect();
+        let lens: Vec<usize> = self
+            .batcher
+            .peek(want)
+            .map(|r| {
+                let shared = self.engine.prefix_hit_tokens(&r.adapter, &r.prompt);
+                r.required_suffix_kv_tokens(max_seq, shared)
+            })
+            .collect();
         let mut admit = want;
         while admit > 0 && !self.engine.kv_can_admit(&lens[..admit]) {
             admit -= 1;
         }
         if admit == 0 {
-            if self.running.is_empty() {
+            if self.running.is_empty() && self.prefilling.is_empty() {
                 // nothing is in flight, so every block is free: the front
                 // request can never be admitted. Reject it (rather than
                 // wedging the whole queue behind it) and let the next
@@ -298,18 +347,94 @@ impl<E: Engine> Server<E> {
         if seqs.is_empty() {
             return Ok(());
         }
+        if self.engine.supports_chunked_prefill() {
+            // Continuous batching: reserve KV + attach any shared prefix
+            // now (no compute), then let prefill_tick spread the prompt
+            // math across decode ticks.
+            self.engine.admit_seqs(&mut seqs)?;
+            for s in seqs.iter() {
+                self.metrics.prefix_hit_tokens += s.prefilled;
+            }
+            self.prefilling.extend(seqs);
+            self.prefilling_timings.extend(timings);
+            return Ok(());
+        }
+        // Legacy lockstep schedule: one whole-batch prefill at admission.
         let t0 = Instant::now();
         self.engine.prefill(&mut seqs)?;
         let dt = t0.elapsed().as_secs_f64();
         self.metrics.prefill_secs += dt;
         let per_prefill = dt / seqs.len() as f64;
-        for (s, t) in seqs.iter().zip(timings.iter_mut()) {
+        for (s, t) in seqs.iter_mut().zip(timings.iter_mut()) {
+            s.prefilled = s.prompt_len;
             self.metrics.prefill_tokens += s.prompt_len;
             self.metrics.adapter(&s.adapter).prefill_tokens += s.prompt_len;
             t.prefill_s = per_prefill;
         }
         self.running.extend(seqs);
         self.timings.extend(timings);
+        Ok(())
+    }
+
+    /// One chunked-prefill tick: spend up to
+    /// [`ServeCfg::prefill_chunk_tokens`] prompt tokens (0 = unlimited)
+    /// across the in-flight prompts, rotating the starting sequence each
+    /// tick so no prompt starves. Completed prompts move to the decode
+    /// set in admission order.
+    fn prefill_tick(&mut self) -> anyhow::Result<()> {
+        if self.prefilling.is_empty() {
+            return Ok(());
+        }
+        let mut remaining = match self.cfg.prefill_chunk_tokens {
+            0 => usize::MAX,
+            n => n,
+        };
+        let n = self.prefilling.len();
+        let t0 = Instant::now();
+        let mut advanced: Vec<usize> = Vec::new();
+        for k in 0..n {
+            if remaining == 0 {
+                break;
+            }
+            let i = (self.prefill_cursor + k) % n;
+            let s = &mut self.prefilling[i];
+            if s.prefill_done() {
+                continue; // admitted this tick after the cursor wrapped
+            }
+            let took = self.engine.prefill_chunk(s, remaining)?;
+            let s = &self.prefilling[i];
+            self.metrics.prefill_chunks += 1;
+            self.metrics.prefill_tokens += took;
+            self.metrics.adapter(&s.adapter).prefill_tokens += took;
+            // a chunk is block-aligned: it may round a tiny budget up to
+            // one full block, so saturate rather than underflow
+            remaining = remaining.saturating_sub(took);
+            advanced.push(i);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.prefill_secs += dt;
+        if !advanced.is_empty() {
+            let per = dt / advanced.len() as f64;
+            for &i in &advanced {
+                self.prefilling_timings[i].prefill_s += per;
+            }
+        }
+        // completed prompts graduate to the decode loop in admission order
+        let seqs = std::mem::take(&mut self.prefilling);
+        let timings = std::mem::take(&mut self.prefilling_timings);
+        for (s, t) in seqs.into_iter().zip(timings) {
+            if s.prefill_done() {
+                self.running.push(s);
+                self.timings.push(t);
+            } else {
+                self.prefilling.push(s);
+                self.prefilling_timings.push(t);
+            }
+        }
+        self.prefill_cursor = match self.prefilling.len() {
+            0 => 0,
+            n => (self.prefill_cursor + 1) % n,
+        };
         Ok(())
     }
 
@@ -469,6 +594,7 @@ mod tests {
             kv_bits: 32,
             kv_budget_mib: 0.0,
             rate_rps: 0.0,
+            prefill_chunk_tokens: 0,
         };
         Server::new(NativeEngine::new(model, "fp"), serve)
     }
@@ -674,6 +800,7 @@ mod tests {
             kv_bits: 32,
             kv_budget_mib: 0.0,
             rate_rps: 0.0,
+            prefill_chunk_tokens: 0,
         };
         let mut srv = Server::new(engine, serve);
         let tenants = ["base", "t0", "t1"];
@@ -765,6 +892,7 @@ mod tests {
             kv_bits: 8,
             kv_budget_mib: 0.0,
             rate_rps: 0.0,
+            prefill_chunk_tokens: 0,
         };
         let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
         let engine = NativeEngine::with_kv(Model::init(&cfg, 0), "kv8", kv);
@@ -774,12 +902,19 @@ mod tests {
         for r in &report.responses {
             assert_eq!(r.tokens.len(), 6);
         }
-        let pool = srv.engine.kv_pool();
-        assert!(pool.block_bytes() < pool.dense_block_bytes());
-        // same byte budget as the dense auto-sizing, more concurrency
-        assert!(pool.max_concurrent_full_seqs(cfg.max_seq) > 4);
-        // everything released on completion
-        assert_eq!(pool.used_blocks(), 0);
-        assert_eq!(pool.active_sequences(), 0);
+        {
+            let pool = srv.engine.kv_pool();
+            assert!(pool.block_bytes() < pool.dense_block_bytes());
+            // same byte budget as the dense auto-sizing, more concurrency
+            assert!(pool.max_concurrent_full_seqs(cfg.max_seq) > 4);
+            // private (non-prefix) storage released on completion: with
+            // block_tokens = 8 and 12-token prompts, the prefix cache may
+            // retain each prompt's first block for future sharing
+            assert_eq!(pool.active_sequences(), 0);
+            assert!(pool.used_blocks() <= 6, "at most one cached block per prompt");
+        }
+        // flushing the prefix cache drains the pool completely
+        srv.engine.flush_prefix_cache();
+        assert_eq!(srv.engine.kv_pool().used_blocks(), 0);
     }
 }

@@ -147,38 +147,52 @@ pub fn decode_packed_batch(q: &Matrix, views: &[KvSeqView], n_heads: usize, out:
 /// `q.rows`). Two sweeps over the cache — scores, then weighted V — each
 /// dequantizing every packed row exactly once.
 pub fn prefill_packed(q: &Matrix, view: &KvSeqView, n_heads: usize) -> Matrix {
-    let s = q.rows;
+    prefill_packed_at(q, view, n_heads, 0)
+}
+
+/// Chunked causal prefill attention: query row `i` of `q` sits at
+/// absolute position `pos0 + i` and attends cache positions
+/// `0..=pos0 + i` (`view.len` must equal `pos0 + q.rows`). With
+/// `pos0 = 0` this is exactly [`prefill_packed`] — same sweeps, same
+/// per-row op order — which is what keeps chunked prefill bitwise
+/// identical to whole prefill: each row's score sweep, softmax window,
+/// and weighted-V accumulation depend only on its absolute position,
+/// never on which chunk carried it.
+pub fn prefill_packed_at(q: &Matrix, view: &KvSeqView, n_heads: usize, pos0: usize) -> Matrix {
+    let n = q.rows;
     let d = q.cols;
-    assert_eq!(s, view.len, "prefill window {} vs query rows {s}", view.len);
+    let len = view.len;
+    assert_eq!(pos0 + n, len, "prefill window {len} vs chunk {pos0}+{n}");
     assert_eq!(d, view.d, "query width {} vs cache {}", d, view.d);
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = Matrix::zeros(s, d);
+    let mut out = Matrix::zeros(n, d);
     let mut crow = vec![0u8; d];
     let mut row = vec![0.0f32; d];
-    let mut probs: Vec<Matrix> = (0..n_heads).map(|_| Matrix::zeros(s, s)).collect();
-    for j in 0..s {
+    let mut probs: Vec<Matrix> = (0..n_heads).map(|_| Matrix::zeros(n, len)).collect();
+    for j in 0..len {
         view.k_row_into(j, &mut crow, &mut row);
         for (h, p) in probs.iter_mut().enumerate() {
             let base = h * hd;
             let kh = &row[base..base + hd];
-            for i in j..s {
+            // causal: rows whose absolute position pos0 + i ≥ j
+            for i in j.saturating_sub(pos0)..n {
                 let qh = &q.row(i)[base..base + hd];
                 p.set(i, j, dot(qh, kh) * scale);
             }
         }
     }
     for p in probs.iter_mut() {
-        for i in 0..s {
-            softmax_inplace(&mut p.row_mut(i)[..=i]);
+        for i in 0..n {
+            softmax_inplace(&mut p.row_mut(i)[..=pos0 + i]);
         }
     }
-    for j in 0..s {
+    for j in 0..len {
         view.v_row_into(j, &mut crow, &mut row);
         for (h, p) in probs.iter().enumerate() {
             let base = h * hd;
             let vh = &row[base..base + hd];
-            for i in j..s {
+            for i in j.saturating_sub(pos0)..n {
                 let w = p.at(i, j);
                 if w == 0.0 {
                     continue;

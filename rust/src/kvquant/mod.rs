@@ -24,6 +24,10 @@
 //!   `softmax·V̂` walk the packed blocks row by row, reconstructing the
 //!   rank-r scale row and dequantizing into one D-float scratch row —
 //!   the full dequantized K/V is never materialized.
+//! * [`prefix`]    — [`PrefixCache`]: a trie over prompt token blocks that
+//!   pins sealed blocks so sessions sharing a system prompt fork its
+//!   quantized KV instead of re-prefilling it (ref-counted, LRU-evicted,
+//!   copy-on-write protected in the pool).
 //!
 //! The serving coordinator wires this end-to-end: `NativeEngine` holds a
 //! [`KvPool`] instead of dense per-sequence caches, `ServeCfg`/CLI expose
@@ -33,9 +37,11 @@
 
 pub mod attention;
 pub mod pool;
+pub mod prefix;
 pub mod scales;
 
 pub use pool::{KvPool, KvSeqView};
+pub use prefix::PrefixCache;
 pub use scales::fit_scale_factors;
 
 use crate::quant::Codebook;

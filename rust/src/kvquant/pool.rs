@@ -1,8 +1,8 @@
 //! [`KvPool`] — block-pooled KV storage with admission bookkeeping.
 //!
 //! The pool marries the [`KvBlockAllocator`]'s admission/ownership
-//! invariants (never over capacity, no double-free, no shared blocks) to
-//! real storage: every allocator block id indexes `2 · n_layers` tile
+//! invariants (never over capacity, no double-free, ref-counted sharing)
+//! to real storage: every allocator block id indexes `2 · n_layers` tile
 //! slots (K and V per layer). Sequences append rows into a small dense
 //! staging tail (`block_tokens × D` per layer); when a layer's tail
 //! fills, that layer's K and V tiles are **sealed** — quantized with
@@ -10,6 +10,17 @@
 //! sequence's next owned block, exactly once. In f32 mode sealing is a
 //! plain copy, making the dense pool numerically identical to the old
 //! contiguous per-sequence cache.
+//!
+//! Sealed blocks can be **shared**: [`Self::fork_at_block`] lets a new
+//! sequence adopt another sequence's sealed prompt blocks as its own
+//! prefix (block-aligned, refcount +1 each, zero new storage), and the
+//! prefix cache pins blocks past their owners' lifetime with
+//! [`Self::retain_block`]/[`Self::release_block`]. Sharing is safe
+//! because sealed tiles are immutable — the only writer-side hazard is a
+//! seal landing in a shared block (possible only when a fork point is not
+//! block-aligned), and [`Self::stage_row`] handles it with copy-on-write:
+//! the sealing sequence swaps in a fresh private block and the original
+//! stays intact for its remaining owners.
 //!
 //! Reads go through [`KvSeqView`], a per-(sequence, layer) window that
 //! the fused attention kernels ([`super::attention`]) walk row by row —
@@ -205,9 +216,92 @@ impl KvPool {
         }
     }
 
+    /// Can sequences with these worst-case token counts be admitted if up
+    /// to `reclaimable` currently-used blocks (e.g. prefix-cache blocks no
+    /// live sequence references) could be evicted first? Same accounting
+    /// as [`Self::can_admit_lengths`], but block capacity and the byte
+    /// budget both credit the evictable blocks. The caller is responsible
+    /// for actually evicting before reserving.
+    pub fn can_admit_lengths_reclaimable(&self, lens: &[usize], reclaimable: usize) -> bool {
+        let reclaimable = reclaimable.min(self.alloc.used_blocks());
+        let blocks: usize = lens.iter().map(|&t| self.blocks_for(t)).sum();
+        if blocks > self.alloc.free_blocks() + reclaimable {
+            return false;
+        }
+        match self.budget_bytes {
+            None => true,
+            Some(budget) => {
+                // evict only as much as the block shortfall demands
+                let evicted = blocks.saturating_sub(self.alloc.free_blocks());
+                (self.alloc.used_blocks() - evicted + blocks) * self.block_bytes()
+                    + (self.seqs.len() + lens.len()) * self.staging_bytes()
+                    <= budget
+            }
+        }
+    }
+
     /// Committed token count for a sequence (`None` if unknown).
     pub fn seq_len(&self, seq: u64) -> Option<usize> {
         self.seqs.get(&seq).map(|s| s.len)
+    }
+
+    /// The block id backing position `pos` of `seq`'s reservation (`None`
+    /// when unreserved). Callers that hand ids to the prefix cache must
+    /// only pass sealed positions.
+    pub fn block_id_at(&self, seq: u64, pos: usize) -> Option<usize> {
+        self.alloc.owned_blocks(seq).get(pos / self.cfg.block_tokens).copied()
+    }
+
+    /// Reference count of a block (0 = free).
+    pub fn block_refcount(&self, block: usize) -> usize {
+        self.alloc.refcount(block)
+    }
+
+    /// Take an extra non-sequence reference on a live sealed block (prefix
+    /// cache pin). Returns false for free blocks.
+    pub fn retain_block(&mut self, block: usize) -> bool {
+        self.alloc.retain(block)
+    }
+
+    /// Drop one non-sequence reference; clears the block's tile slots when
+    /// that was the last reference. Returns true iff the block was freed.
+    pub fn release_block(&mut self, block: usize) -> bool {
+        if self.alloc.release_ref(block) {
+            self.clear_block_slots(block);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fork: make brand-new sequence `seq` start life owning `shared`
+    /// sealed blocks as its first `tokens` committed tokens (refcount +1
+    /// each; zero new storage). `tokens` must equal
+    /// `shared.len() · block_tokens` — forks happen at block boundaries —
+    /// and every shared block must hold sealed K/V tiles for all layers.
+    /// Returns false (no change) on violation. The fork's private life
+    /// continues with ordinary [`Self::reserve`]/[`Self::append_rows`]
+    /// from position `tokens`.
+    pub fn fork_at_block(&mut self, seq: u64, shared: &[usize], tokens: usize) -> bool {
+        if tokens != shared.len() * self.cfg.block_tokens || self.seqs.contains_key(&seq) {
+            return false;
+        }
+        for &b in shared {
+            for layer in 0..self.n_layers {
+                if self.slots[self.slot_idx(b, layer, 0)].is_none()
+                    || self.slots[self.slot_idx(b, layer, 1)].is_none()
+                {
+                    return false;
+                }
+            }
+        }
+        if !self.alloc.attach(seq, shared) {
+            return false;
+        }
+        self.ensure_seq(seq);
+        self.seqs.get_mut(&seq).expect("just ensured").len = tokens;
+        self.touch_peak();
+        true
     }
 
     fn ensure_seq(&mut self, seq: u64) {
@@ -260,7 +354,7 @@ impl KvPool {
         );
         self.touch_peak();
         for r in 0..k.rows {
-            self.stage_row(seq, layer, pos0 + r, k.row(r), v.row(r));
+            self.stage_row(seq, layer, pos0 + r, k.row(r), v.row(r))?;
         }
         Ok(())
     }
@@ -288,14 +382,23 @@ impl KvPool {
             self.alloc.free_blocks()
         );
         self.touch_peak();
-        self.stage_row(seq, layer, pos, k_row, v_row);
-        Ok(())
+        self.stage_row(seq, layer, pos, k_row, v_row)
     }
 
     /// Copy one position into the staging tail; seal the layer's K/V tiles
     /// into the owning block when the position completes it. Storage for
-    /// `pos` must already be reserved.
-    fn stage_row(&mut self, seq: u64, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+    /// `pos` must already be reserved. If the seal would land in a block
+    /// other owners still reference (a non-block-aligned fork wrote into
+    /// its shared tail block), copy-on-write swaps in a fresh private
+    /// block first — the only fallible path (pool exhausted mid-COW).
+    fn stage_row(
+        &mut self,
+        seq: u64,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> anyhow::Result<()> {
         let bt = self.cfg.block_tokens;
         let ti = pos % bt;
         {
@@ -304,7 +407,15 @@ impl KvPool {
             sk.tail_v[layer].row_mut(ti).copy_from_slice(v_row);
         }
         if ti + 1 == bt {
-            let block_id = self.alloc.owned_blocks(seq)[pos / bt];
+            let bi = pos / bt;
+            let mut block_id = self.alloc.owned_blocks(seq)[bi];
+            if self.alloc.refcount(block_id) > 1 {
+                block_id = self.alloc.cow_swap(seq, bi).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "KV pool exhausted during copy-on-write seal: seq {seq} block {bi}"
+                    )
+                })?;
+            }
             let (tile_k, tile_v) = {
                 let sk = self.seqs.get(&seq).expect("ensured by callers");
                 (
@@ -317,6 +428,7 @@ impl KvPool {
             self.slots[ik] = Some(tile_k);
             self.slots[iv] = Some(tile_v);
         }
+        Ok(())
     }
 
     fn seal_tile(&self, tail: &Matrix) -> Tile {
@@ -380,19 +492,25 @@ impl KvPool {
         (k, v)
     }
 
-    /// Free a sequence's blocks and staging. Returns false for unknown
-    /// sequences (recoverable — the server path must never panic on a
-    /// stray release).
+    fn clear_block_slots(&mut self, block: usize) {
+        for layer in 0..self.n_layers {
+            let ik = self.slot_idx(block, layer, 0);
+            let iv = self.slot_idx(block, layer, 1);
+            self.slots[ik] = None;
+            self.slots[iv] = None;
+        }
+    }
+
+    /// Free a sequence's blocks and staging. Only blocks whose last
+    /// reference dropped have their storage cleared — shared prefix blocks
+    /// live on under their remaining owners or prefix-cache pins. Returns
+    /// false for unknown sequences (recoverable — the server path must
+    /// never panic on a stray release).
     pub fn release(&mut self, seq: u64) -> bool {
         let known = self.seqs.remove(&seq).is_some();
-        if let Some(blocks) = self.alloc.try_release(seq) {
-            for b in blocks {
-                for layer in 0..self.n_layers {
-                    let ik = self.slot_idx(b, layer, 0);
-                    let iv = self.slot_idx(b, layer, 1);
-                    self.slots[ik] = None;
-                    self.slots[iv] = None;
-                }
+        if let Some(freed) = self.alloc.try_release(seq) {
+            for b in freed {
+                self.clear_block_slots(b);
             }
             true
         } else {
@@ -582,6 +700,150 @@ mod tests {
         // capacity-sized pools (no budget) admit by blocks alone
         let unbudgeted = KvPool::new(cfg(KvBits::F32, 4), 1, 4, 3);
         assert!(unbudgeted.can_admit_lengths(&[4, 4, 4]));
+    }
+
+    #[test]
+    fn fork_shares_sealed_prefix_without_new_storage() {
+        let mut pool = KvPool::new(cfg(KvBits::Int8, 4), 2, 8, 8);
+        let mut rng = Rng::new(11);
+        let k = rows(&mut rng, 8, 8);
+        let v = rows(&mut rng, 8, 8);
+        for layer in 0..2 {
+            pool.append_rows(1, layer, 0, &k, &v).unwrap();
+        }
+        pool.commit(1, 8);
+        assert_eq!(pool.used_blocks(), 2);
+        let shared: Vec<usize> =
+            (0..2).map(|bi| pool.block_id_at(1, bi * 4).unwrap()).collect();
+
+        assert!(pool.fork_at_block(2, &shared, 8), "fork adopts sealed blocks");
+        assert_eq!(pool.used_blocks(), 2, "fork allocates no new storage");
+        assert_eq!(pool.seq_len(2), Some(8));
+        for layer in 0..2 {
+            let (k1, v1) = pool.dense_kv(1, layer, 8);
+            let (k2, v2) = pool.dense_kv(2, layer, 8);
+            assert_eq!(k1.data, k2.data, "layer {layer} K identical through the fork");
+            assert_eq!(v1.data, v2.data, "layer {layer} V identical through the fork");
+        }
+
+        // the fork grows privately past the shared prefix
+        let k2 = rows(&mut rng, 4, 8);
+        let v2 = rows(&mut rng, 4, 8);
+        for layer in 0..2 {
+            pool.append_rows(2, layer, 8, &k2, &v2).unwrap();
+        }
+        pool.commit(2, 12);
+        assert_eq!(pool.used_blocks(), 3, "only the private suffix block is new");
+
+        // donor's release keeps the shared blocks alive for the fork
+        assert!(pool.release(1));
+        assert_eq!(pool.used_blocks(), 3);
+        let (fk, _) = pool.dense_kv(2, 0, 12);
+        assert_eq!(&fk.data[..8 * 8], &k.data[..], "shared prefix survives donor release");
+        assert!(pool.release(2));
+        assert_eq!(pool.used_blocks(), 0, "last owner frees everything");
+    }
+
+    #[test]
+    fn retained_block_survives_all_owners_and_frees_on_release() {
+        let mut pool = KvPool::new(cfg(KvBits::F32, 4), 1, 4, 4);
+        let mut rng = Rng::new(3);
+        let k = rows(&mut rng, 4, 4);
+        let v = rows(&mut rng, 4, 4);
+        pool.append_rows(1, 0, 0, &k, &v).unwrap();
+        pool.commit(1, 4);
+        let b = pool.block_id_at(1, 0).unwrap();
+        assert!(pool.retain_block(b));
+        assert!(pool.release(1));
+        assert_eq!(pool.used_blocks(), 1, "prefix-cache pin keeps the block");
+        // a fresh sequence can still fork from the pinned block
+        assert!(pool.fork_at_block(9, &[b], 4));
+        let (fk, _) = pool.dense_kv(9, 0, 4);
+        assert_eq!(fk.data, k.data);
+        assert!(pool.release(9));
+        assert!(pool.release_block(b), "dropping the pin frees the block");
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn forked_writes_never_alias_mutate_after_fork_isolation() {
+        // property: whatever a fork writes over shared positions, the
+        // donor's sealed data stays bitwise intact (COW redirects the seal)
+        crate::util::prop::prop_check(16, |g| {
+            let bt = [2, 4, 8][g.usize(0..=2)];
+            let blocks = g.usize(2..=4);
+            let layers = g.usize(1..=2);
+            let d = 4;
+            let mut pool =
+                KvPool::new(cfg(KvBits::F32, bt), layers, d, blocks + 4);
+            let mut rng = Rng::new(g.usize(0..=10_000) as u64);
+            let n = blocks * bt;
+            let k = rows(&mut rng, n, d);
+            let v = rows(&mut rng, n, d);
+            for layer in 0..layers {
+                pool.append_rows(1, layer, 0, &k, &v).unwrap();
+            }
+            pool.commit(1, n);
+            let shared: Vec<usize> =
+                (0..blocks).map(|bi| pool.block_id_at(1, bi * bt).unwrap()).collect();
+            assert!(pool.fork_at_block(2, &shared, n));
+
+            // fork rewrites a suffix of the shared region starting inside
+            // block `from_block` — seals over shared blocks trigger COW
+            let from_block = g.usize(0..=blocks - 1);
+            let pos0 = from_block * bt;
+            let fk = rows(&mut rng, n - pos0, d);
+            let fv = rows(&mut rng, n - pos0, d);
+            for layer in 0..layers {
+                pool.append_rows(2, layer, pos0, &fk, &fv).unwrap();
+            }
+            pool.commit(2, n);
+
+            for layer in 0..layers {
+                let (dk, dv) = pool.dense_kv(1, layer, n);
+                if dk.data != k.data || dv.data != v.data {
+                    return Err(format!(
+                        "donor data corrupted by forked writes (layer {layer}, bt {bt}, from block {from_block})"
+                    ));
+                }
+                let (ck, _) = pool.dense_kv(2, layer, n);
+                if ck.data[pos0 * d..] != fk.data[..] {
+                    return Err("fork lost its own writes".into());
+                }
+                if ck.data[..pos0 * d] != k.data[..pos0 * d] {
+                    return Err("fork lost the untouched shared prefix".into());
+                }
+            }
+            pool.release(1);
+            pool.release(2);
+            if pool.used_blocks() != 0 {
+                return Err(format!("leak: {} blocks after release", pool.used_blocks()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reclaimable_admission_credits_evictable_blocks() {
+        let mut pool = KvPool::new(cfg(KvBits::F32, 4), 1, 4, 3);
+        let mut rng = Rng::new(4);
+        let k = rows(&mut rng, 8, 4);
+        let v = rows(&mut rng, 8, 4);
+        pool.append_rows(1, 0, 0, &k, &v).unwrap();
+        pool.commit(1, 8);
+        let pinned: Vec<usize> = (0..2).map(|bi| pool.block_id_at(1, bi * 4).unwrap()).collect();
+        for &b in &pinned {
+            pool.retain_block(b);
+        }
+        pool.release(1);
+        // 2 of 3 blocks are cache-pinned; a 12-token sequence needs all 3
+        assert!(!pool.can_admit_lengths(&[12]));
+        assert!(pool.can_admit_lengths_reclaimable(&[12], 2));
+        assert!(!pool.can_admit_lengths_reclaimable(&[16], 2), "beyond capacity stays refused");
+        for &b in &pinned {
+            pool.release_block(b);
+        }
+        assert!(pool.can_admit_lengths(&[12]));
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! [`PrefixCache`] — shared-prefix KV reuse over the block pool.
+//!
+//! A trie over **prompt token blocks**: each node covers one
+//! `block_tokens`-sized slice of some previously-served prompt and pins
+//! the sealed [`KvPool`] block holding that slice's quantized K/V (one
+//! [`KvPool::retain_block`] reference per node). Edges are keyed by a
+//! rolling hash chained from the adapter id through each token block —
+//! K/V depend on the projection weights, so the same text under two
+//! adapters caches separately — with the actual tokens stored on the
+//! node and verified on every walk (a hash collision degrades to a miss,
+//! never to wrong KV).
+//!
+//! Serving flow: at admission the engine [`Self::lookup`]s the prompt and
+//! [`KvPool::fork_at_block`]s the matched blocks into the new sequence —
+//! N sessions over one system prompt store and prefill its KV exactly
+//! once, each paying only its private suffix. As a sequence's chunked
+//! prefill seals full prompt blocks, [`Self::publish`] adds them to the
+//! trie. Lookups cap at the largest block multiple **strictly below** the
+//! prompt length, so every admitted sequence prefills at least one token
+//! and produces real last-position logits.
+//!
+//! Memory: cached blocks stay resident after their sequences finish
+//! (refcount ≥ 1 from the trie). They are *evictable* — admission counts
+//! blocks whose only reference is the trie as reclaimable, and
+//! [`Self::evict`] releases least-recently-used leaves (cascading upward)
+//! until enough blocks are free. Evicting a node whose block a live
+//! sequence still shares merely drops the trie's pin; the block itself is
+//! freed by whichever reference drops last.
+
+use super::pool::KvPool;
+use std::collections::HashMap;
+
+const ROOT: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Node {
+    parent: usize,
+    /// Chained hash up to and including this block (the child-map key).
+    hash: u64,
+    /// The exact tokens this block covers — verified on every walk.
+    tokens: Vec<usize>,
+    /// Pinned pool block holding the sealed K/V.
+    block: usize,
+    children: usize,
+    last_used: u64,
+}
+
+/// Prefix trie of sealed, ref-counted KV blocks (see the module doc).
+#[derive(Debug, Default)]
+pub struct PrefixCache {
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<usize>,
+    children: HashMap<(usize, u64), usize>,
+    clock: u64,
+    enabled: bool,
+    /// Lookups that matched at least one block / none.
+    pub hits: usize,
+    pub misses: usize,
+    /// Total prompt tokens served from the cache across all lookups.
+    pub hit_tokens: usize,
+}
+
+impl PrefixCache {
+    pub fn new() -> PrefixCache {
+        PrefixCache { enabled: true, ..Default::default() }
+    }
+
+    /// Disabled cache: lookups miss, publishes are dropped. The serve
+    /// bench's no-sharing baseline.
+    pub fn disabled() -> PrefixCache {
+        PrefixCache::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Live trie nodes == pool blocks the cache holds a reference on.
+    pub fn cached_blocks(&self) -> usize {
+        self.nodes.len() - self.free_nodes.len()
+    }
+
+    fn seed_hash(adapter: &str) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+        for b in adapter.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    fn chain_hash(mut h: u64, tokens: &[usize]) -> u64 {
+        for &t in tokens {
+            for b in (t as u64).to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
+    /// Largest shareable token count for a prompt: whole blocks only, and
+    /// strictly less than the prompt (at least one token must be privately
+    /// prefilled so the sequence computes genuine last-position logits).
+    pub fn max_shareable(prompt_len: usize, block_tokens: usize) -> usize {
+        (prompt_len.saturating_sub(1) / block_tokens) * block_tokens
+    }
+
+    /// Walk the trie for this (adapter, prompt): returns the pool block
+    /// ids of the longest cached prefix (possibly empty), in token order,
+    /// touching each matched node's LRU stamp. The result is capped at
+    /// [`Self::max_shareable`] blocks.
+    pub fn lookup(&mut self, adapter: &str, prompt: &[usize], block_tokens: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if !self.enabled {
+            return out;
+        }
+        self.clock += 1;
+        let max_blocks = Self::max_shareable(prompt.len(), block_tokens) / block_tokens;
+        let mut parent = ROOT;
+        let mut h = Self::seed_hash(adapter);
+        for b in 0..max_blocks {
+            let toks = &prompt[b * block_tokens..(b + 1) * block_tokens];
+            h = Self::chain_hash(h, toks);
+            match self.children.get(&(parent, h)) {
+                Some(&ni) if self.nodes[ni].as_ref().is_some_and(|n| n.tokens == toks) => {
+                    let n = self.nodes[ni].as_mut().expect("checked live");
+                    n.last_used = self.clock;
+                    out.push(n.block);
+                    parent = ni;
+                }
+                _ => break,
+            }
+        }
+        if out.is_empty() {
+            self.misses += 1;
+        } else {
+            self.hits += 1;
+            self.hit_tokens += out.len() * block_tokens;
+        }
+        out
+    }
+
+    /// Non-mutating [`Self::lookup`]: how many prompt tokens would be
+    /// served from the cache. Admission uses this to charge a request only
+    /// its unshared suffix without disturbing LRU order.
+    pub fn probe(&self, adapter: &str, prompt: &[usize], block_tokens: usize) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let max_blocks = Self::max_shareable(prompt.len(), block_tokens) / block_tokens;
+        let mut parent = ROOT;
+        let mut h = Self::seed_hash(adapter);
+        let mut matched = 0;
+        for b in 0..max_blocks {
+            let toks = &prompt[b * block_tokens..(b + 1) * block_tokens];
+            h = Self::chain_hash(h, toks);
+            match self.children.get(&(parent, h)) {
+                Some(&ni) if self.nodes[ni].as_ref().is_some_and(|n| n.tokens == toks) => {
+                    matched += 1;
+                    parent = ni;
+                }
+                _ => break,
+            }
+        }
+        matched * block_tokens
+    }
+
+    /// Register `seq`'s first `upto_block` sealed prompt blocks in the
+    /// trie (called as chunked prefill seals them). Existing nodes are
+    /// kept (LRU-touched); missing ones pin the sequence's block via
+    /// [`KvPool::retain_block`]. Stops early on a hash collision whose
+    /// stored tokens disagree or if the sequence's block is unavailable.
+    pub fn publish(
+        &mut self,
+        adapter: &str,
+        prompt: &[usize],
+        block_tokens: usize,
+        upto_block: usize,
+        pool: &mut KvPool,
+        seq: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.clock += 1;
+        let mut parent = ROOT;
+        let mut h = Self::seed_hash(adapter);
+        for b in 0..upto_block.min(prompt.len() / block_tokens) {
+            let toks = &prompt[b * block_tokens..(b + 1) * block_tokens];
+            h = Self::chain_hash(h, toks);
+            parent = match self.children.get(&(parent, h)) {
+                Some(&ni) => {
+                    let Some(n) = self.nodes[ni].as_mut() else { return };
+                    if n.tokens != toks {
+                        return; // hash collision: leave the trie alone
+                    }
+                    n.last_used = self.clock;
+                    ni
+                }
+                None => {
+                    let Some(block) = pool.block_id_at(seq, b * block_tokens) else { return };
+                    if !pool.retain_block(block) {
+                        return;
+                    }
+                    let node = Node {
+                        parent,
+                        hash: h,
+                        tokens: toks.to_vec(),
+                        block,
+                        children: 0,
+                        last_used: self.clock,
+                    };
+                    let ni = match self.free_nodes.pop() {
+                        Some(i) => {
+                            self.nodes[i] = Some(node);
+                            i
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    self.children.insert((parent, h), ni);
+                    if parent != ROOT {
+                        self.nodes[parent].as_mut().expect("live parent").children += 1;
+                    }
+                    ni
+                }
+            };
+        }
+    }
+
+    /// Blocks whose **only** remaining reference is this trie — what
+    /// admission may count as reclaimable-by-eviction.
+    pub fn evictable_blocks(&self, pool: &KvPool) -> usize {
+        self.nodes
+            .iter()
+            .flatten()
+            .filter(|n| pool.block_refcount(n.block) == 1)
+            .count()
+    }
+
+    fn remove_node(&mut self, ni: usize, pool: &mut KvPool) -> bool {
+        let n = self.nodes[ni].take().expect("live node");
+        self.children.remove(&(n.parent, n.hash));
+        if n.parent != ROOT {
+            self.nodes[n.parent].as_mut().expect("live parent").children -= 1;
+        }
+        self.free_nodes.push(ni);
+        pool.release_block(n.block)
+    }
+
+    /// Evict least-recently-used leaves (cascading up emptied branches)
+    /// until at least `want_freed` pool blocks came free or the trie is
+    /// empty. Returns the number of blocks actually freed — nodes whose
+    /// block a live sequence still shares only drop the trie's pin.
+    pub fn evict(&mut self, pool: &mut KvPool, want_freed: usize) -> usize {
+        let mut freed = 0;
+        while freed < want_freed {
+            let leaf = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, n)| n.as_ref().filter(|n| n.children == 0).map(|n| (i, n.last_used)))
+                .min_by_key(|&(_, used)| used)
+                .map(|(i, _)| i);
+            match leaf {
+                Some(ni) => {
+                    if self.remove_node(ni, pool) {
+                        freed += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        freed
+    }
+
+    /// Drop every cached block reference and empty the trie. Tests use
+    /// this to prove the server leaks nothing beyond the cache itself.
+    pub fn flush(&mut self, pool: &mut KvPool) {
+        while self.cached_blocks() > 0 {
+            self.evict(pool, usize::MAX);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvquant::{KvBits, KvQuantCfg};
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    fn pool(bt: usize, capacity: usize) -> KvPool {
+        KvPool::new(KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: bt }, 1, 8, capacity)
+    }
+
+    fn fill_seq(pool: &mut KvPool, seq: u64, len: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let k = Matrix::randn(len, 8, 0.5, &mut rng);
+        let v = Matrix::randn(len, 8, 0.5, &mut rng);
+        pool.append_rows(seq, 0, 0, &k, &v).unwrap();
+        pool.commit(seq, len);
+    }
+
+    fn prompt(n: usize, seed: u64) -> Vec<usize> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(32)).collect()
+    }
+
+    #[test]
+    fn publish_then_lookup_returns_shared_blocks_capped_below_prompt_len() {
+        let mut p = pool(4, 8);
+        let mut c = PrefixCache::new();
+        let toks = prompt(12, 1); // 3 full blocks
+        fill_seq(&mut p, 1, 12, 2);
+        c.publish("base", &toks, 4, 3, &mut p, 1);
+        assert_eq!(c.cached_blocks(), 3);
+
+        // identical prompt: share everything except the last block
+        // (12 tokens = 3 blocks, cap at (12-1)/4 = 2 blocks)
+        let hit = c.lookup("base", &toks, 4);
+        assert_eq!(hit.len(), 2);
+        assert_eq!(hit[0], p.block_id_at(1, 0).unwrap());
+        assert_eq!(c.probe("base", &toks, 4), 8);
+
+        // longer prompt with the same prefix: all 3 published blocks match
+        let mut longer = toks.clone();
+        longer.extend(prompt(8, 3));
+        assert_eq!(c.lookup("base", &longer, 4).len(), 3);
+
+        // diverging after one block: only that block matches
+        let mut div = toks.clone();
+        div[5] = div[5].wrapping_add(1) % 32;
+        assert_eq!(c.lookup("base", &div, 4).len(), 1);
+
+        // same text, different adapter: no match (different K/V)
+        assert!(c.lookup("lora0", &toks, 4).is_empty());
+        assert_eq!(c.probe("lora0", &toks, 4), 0);
+        assert!(c.hits >= 3 && c.misses == 1);
+    }
+
+    #[test]
+    fn shared_blocks_survive_publisher_and_evict_in_lru_order() {
+        let mut p = pool(4, 8);
+        let mut c = PrefixCache::new();
+        let a = prompt(12, 10);
+        let b = prompt(12, 11);
+        fill_seq(&mut p, 1, 8, 12);
+        fill_seq(&mut p, 2, 8, 13);
+        c.publish("base", &a, 4, 2, &mut p, 1);
+        c.publish("base", &b, 4, 2, &mut p, 2);
+        p.release(1);
+        p.release(2);
+        assert_eq!(p.used_blocks(), 4, "cache pins survive the publishers");
+        assert_eq!(c.evictable_blocks(&p), 4);
+
+        // touch both of `a`'s nodes so `b`'s chain is least recently used
+        assert_eq!(c.lookup("base", &a, 4).len(), 2);
+        let freed = c.evict(&mut p, 2);
+        assert_eq!(freed, 2);
+        assert_eq!(c.lookup("base", &b, 4).len(), 0, "b evicted");
+        assert_eq!(c.lookup("base", &a, 4).len(), 2, "a survives");
+
+        c.flush(&mut p);
+        assert_eq!(c.cached_blocks(), 0);
+        assert_eq!(p.used_blocks(), 0, "flush releases every pin");
+    }
+
+    #[test]
+    fn disabled_cache_never_matches_or_pins() {
+        let mut p = pool(4, 4);
+        let mut c = PrefixCache::disabled();
+        let toks = prompt(8, 20);
+        fill_seq(&mut p, 1, 8, 21);
+        c.publish("base", &toks, 4, 2, &mut p, 1);
+        assert_eq!(c.cached_blocks(), 0);
+        assert!(c.lookup("base", &toks, 4).is_empty());
+        p.release(1);
+        assert_eq!(p.used_blocks(), 0);
+    }
+}

@@ -27,14 +27,14 @@
 //! | [`optim`] | AdamW / SGD / LR schedules |
 //! | [`quant`] | **the paper**: codebooks, block-wise quant, LoRDS (Alg. 1), STE, mixed precision, GPTQ/AWQ/LoftQ/QPiSSA/QLoRA baselines, error metrics |
 //! | [`kernels`] | bit-packed code storage + tiled fused dequant-matmul kernels (the zero-overhead inference claim, Figure 2) |
-//! | [`kvquant`] | quantized paged KV-cache: block-pooled 4/8-bit K/V codes with rank-r low-rank scale factors per block + fused packed attention (the LoRDS idea applied to serving memory) |
+//! | [`kvquant`] | quantized paged KV-cache: block-pooled 4/8-bit K/V codes with rank-r low-rank scale factors per block, fused packed attention, and a shared-prefix trie over ref-counted sealed blocks (the LoRDS idea applied to serving memory) |
 //! | [`adapters`] | multi-tenant LoRDS scale adapters: per-tenant (B′, A′) artifacts + hot-swappable ref-counted registry over one shared packed base (§3.4 at serving time) |
 //! | [`model`] | Llama-style transformer with manual backward + quantized linears |
 //! | [`data`] | synthetic corpus, calibration sampler, task suite |
 //! | [`train`] | LM pre-training, QAT, PEFT trainers |
 //! | [`eval`] | perplexity + zero-shot-style accuracy harness |
 //! | [`runtime`] | PJRT client (feature `pjrt`) or stub, artifact manifest, executable cache |
-//! | [`coordinator`] | online serving API (sessioned submit/stream/cancel + offline trace shim), dynamic batcher with KV-aware admission, **batched decode tick** (fused kernels run once per tenant-group per tick, parallel pooled attention, zero per-token allocation), open-loop arrival driver, KV-block allocator, TTFT/ITL metrics |
+//! | [`coordinator`] | online serving API (sessioned submit/stream/cancel + offline trace shim), **continuous batching** (chunked prefill interleaved with batched decode ticks; shared-prefix KV reuse at admission), dynamic batcher with KV-aware admission, fused kernels once per tenant-group per tick, open-loop arrival driver, KV-block allocator, TTFT/ITL metrics |
 //! | [`bench`] | timing harness + markdown table rendering |
 //! | [`report`] | paper-style table renderers shared by benches |
 

@@ -651,6 +651,10 @@ impl Model {
     /// blocks are quantized at append time) and attention runs fused over
     /// the packed blocks + dense tail. Errors when the pool cannot back
     /// the prompt.
+    ///
+    /// Implemented as a single whole-prompt chunk of
+    /// [`Self::prefill_chunk_pooled`] — the chunked path with `pos0 = 0`
+    /// is this path, by construction.
     pub fn prefill_pooled(
         &self,
         tokens: &[usize],
@@ -658,15 +662,65 @@ impl Model {
         seq: u64,
         adapter: Option<&AdapterFactors>,
     ) -> anyhow::Result<Vec<f32>> {
-        let h = self.cfg.n_heads;
-        let theta = 10_000.0f32;
-        let s = tokens.len();
-        anyhow::ensure!(s <= self.cfg.max_seq, "prompt {} > max_seq {}", s, self.cfg.max_seq);
         anyhow::ensure!(
             pool.seq_len(seq).unwrap_or(0) == 0,
             "prefill into non-empty KV sequence {seq}"
         );
-        let mut x = self.embed(tokens);
+        let logits = self.prefill_chunk_pooled(tokens, 0, tokens.len(), pool, seq, adapter)?;
+        Ok(logits.expect("whole-prompt chunk yields last-position logits"))
+    }
+
+    /// One chunk of a prefill resumed at absolute position `pos0`:
+    /// `chunk[i]` is prompt token `pos0 + i` of a `prompt_len`-token
+    /// prompt whose first `pos0` positions are already committed for
+    /// `seq` (either by earlier chunks or shared via
+    /// [`KvPool::fork_at_block`]). Returns `Some(last-position logits)`
+    /// when the chunk completes the prompt, `None` otherwise.
+    ///
+    /// Non-final chunks must end on a pool block boundary and `pos0` must
+    /// sit on one. That alignment is what makes chunked prefill **bitwise
+    /// token-identical** to [`Self::prefill_pooled`]: at every chunk's
+    /// attention, exactly the full blocks below it are sealed — the same
+    /// sealed/dense-tail split the whole-prompt path sees at those rows
+    /// (blocks seal the moment they fill in both) — and every per-row op
+    /// (RMSNorm, RoPE at the absolute position, the
+    /// [`prefill_packed_at`](crate::kvquant::attention::prefill_packed_at)
+    /// score/softmax/V sweeps, residuals, SwiGLU, the final-norm +
+    /// lm-head row) is independent of which rows share its chunk.
+    pub fn prefill_chunk_pooled(
+        &self,
+        chunk: &[usize],
+        pos0: usize,
+        prompt_len: usize,
+        pool: &mut KvPool,
+        seq: u64,
+        adapter: Option<&AdapterFactors>,
+    ) -> anyhow::Result<Option<Vec<f32>>> {
+        let h = self.cfg.n_heads;
+        let theta = 10_000.0f32;
+        let n = chunk.len();
+        let end = pos0 + n;
+        anyhow::ensure!(n > 0, "empty prefill chunk for seq {seq}");
+        anyhow::ensure!(
+            end <= prompt_len && prompt_len <= self.cfg.max_seq,
+            "chunk {pos0}..{end} of prompt {prompt_len} > max_seq {}",
+            self.cfg.max_seq
+        );
+        let bt = pool.block_tokens();
+        anyhow::ensure!(
+            pos0 % bt == 0,
+            "chunked prefill must resume at a block boundary (pos {pos0}, block {bt})"
+        );
+        anyhow::ensure!(
+            end == prompt_len || end % bt == 0,
+            "non-final chunk must end at a block boundary (end {end}, block {bt})"
+        );
+        anyhow::ensure!(
+            pool.seq_len(seq).unwrap_or(0) == pos0,
+            "chunk resumes at {pos0} but seq {seq} has {} tokens committed",
+            pool.seq_len(seq).unwrap_or(0)
+        );
+        let mut x = self.embed(chunk);
         for (li, layer) in self.layers.iter().enumerate() {
             let lf = adapter.map(|f| &f.layers[li]);
             let ov = |slot: usize| lf.and_then(|l| l.linears[slot].as_ref());
@@ -674,10 +728,11 @@ impl Model {
             let mut q = fwd(&layer.wq, &h1, ov(0));
             let mut k = fwd(&layer.wk, &h1, ov(1));
             let v = fwd(&layer.wv, &h1, ov(2));
-            rope_fwd(&mut q, h, 0, theta);
-            rope_fwd(&mut k, h, 0, theta);
-            pool.append_rows(seq, li, 0, &k, &v)?;
-            let att = crate::kvquant::attention::prefill_packed(&q, &pool.view(seq, li, s), h);
+            rope_fwd(&mut q, h, pos0, theta);
+            rope_fwd(&mut k, h, pos0, theta);
+            pool.append_rows(seq, li, pos0, &k, &v)?;
+            let att =
+                crate::kvquant::attention::prefill_packed_at(&q, &pool.view(seq, li, end), h, pos0);
             let o = fwd(&layer.wo, &att, ov(3));
             x.add_assign(&o);
             let (h2, _) = rmsnorm_fwd(&x, &layer.mlp_norm);
@@ -686,10 +741,16 @@ impl Model {
             let down = fwd(&layer.w_down, &swiglu(&gate_pre, &up), ov(6));
             x.add_assign(&down);
         }
-        pool.commit(seq, s);
-        let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
+        pool.commit(seq, end);
+        if end < prompt_len {
+            return Ok(None);
+        }
+        // final norm + lm head on the last row only — both are row-wise,
+        // so this equals the whole-prompt path's row `prompt_len - 1`
+        let last = x.slice(n - 1, n, 0, x.cols);
+        let (xf, _) = rmsnorm_fwd(&last, &self.final_norm);
         let logits = crate::tensor::matmul_transb(&xf, &self.lm_head);
-        Ok(logits.row(s - 1).to_vec())
+        Ok(Some(logits.row(0).to_vec()))
     }
 
     /// One decode step over the block-pooled KV store (packed-KV

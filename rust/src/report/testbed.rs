@@ -28,9 +28,26 @@ pub struct Testbed {
 
 /// Scaled-down stand-ins for the paper's three model families. Same
 /// architecture family, different capacity — enough to show per-model
-/// trends without hours of CPU pre-training.
+/// trends without hours of CPU pre-training. Under [`smoke_mode`] the zoo
+/// collapses to a single micro config so every bench binary finishes in
+/// seconds on a CI runner.
 pub fn model_zoo() -> Vec<(&'static str, ModelCfg)> {
     let base = ModelCfg::default();
+    if smoke_mode() {
+        return vec![(
+            "smoke-micro",
+            ModelCfg {
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 4,
+                d_ff: 128,
+                max_seq: 128,
+                block: 32,
+                qlora_rank: 8,
+                ..base
+            },
+        )];
+    }
     vec![
         ("llama3-mini", ModelCfg { d_model: 256, n_layers: 4, d_ff: 512, ..base.clone() }),
         ("qwen3-mini", ModelCfg { d_model: 192, n_layers: 4, d_ff: 448, ..base.clone() }),
@@ -40,8 +57,10 @@ pub fn model_zoo() -> Vec<(&'static str, ModelCfg)> {
 
 impl Testbed {
     /// Build (or load from `artifacts/testbeds/{name}.bin`) the pre-trained
-    /// testbed. `steps = 0` skips pre-training (unit-test speed).
+    /// testbed. `steps = 0` skips pre-training (unit-test speed); under
+    /// [`smoke_mode`] pre-training is capped so CI smoke runs stay fast.
     pub fn build(name: &str, cfg: &ModelCfg, steps: usize, seed: u64) -> Testbed {
+        let steps = if smoke_mode() { steps.min(20) } else { steps };
         let wiki = Corpus::generate(CorpusKind::Wiki, cfg.vocab, 200_000, 20_000, seed);
         let ptb = Corpus::generate(CorpusKind::Ptb, cfg.vocab, 50_000, 20_000, seed + 1);
         let suite = TaskSuite::generate(&wiki, 40, seed + 2);
@@ -103,8 +122,18 @@ pub fn eval_model(model: &Model, tb: &Testbed, ppl_windows: usize, per_task: usi
 
 /// Bench scale switch: `FULL=1 cargo bench ...` runs the paper-size sweep;
 /// the default is a reduced sweep that finishes in minutes on CPU.
+/// [`smoke_mode`] overrides it — a smoke run is never a full run.
 pub fn full_mode() -> bool {
-    std::env::var("FULL").map(|v| v == "1").unwrap_or(false)
+    !smoke_mode() && std::env::var("FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// CI bench-smoke switch: `LORDS_BENCH_SMOKE=1 cargo bench ...` shrinks
+/// the model zoo to one micro config, caps testbed pre-training, and caps
+/// the timing harness' warmup/measure windows, so every bench binary runs
+/// end to end in seconds while still *measuring* real numbers (the JSON
+/// it writes keeps `measured: true` — tiny, but not fabricated).
+pub fn smoke_mode() -> bool {
+    std::env::var("LORDS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
 }
 
 /// One module shape from Appendix A (Table 7), scaled by `scale` (the

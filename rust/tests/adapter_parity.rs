@@ -95,6 +95,7 @@ fn serve_cfg() -> ServeCfg {
         kv_bits: 32,
         kv_budget_mib: 0.0,
         rate_rps: 0.0,
+        prefill_chunk_tokens: 0,
     }
 }
 

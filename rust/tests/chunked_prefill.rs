@@ -1,0 +1,335 @@
+//! Continuous-batching gate: chunked prefill must be **bitwise
+//! token-identical** to whole-prompt prefill — at the model level across
+//! {f32, int8, int4} KV under random block-aligned chunk schedules, and at
+//! the serving level where the chunked schedule (and the shared-prefix
+//! fork path it enables) must reproduce the lockstep servers' token
+//! streams exactly. Plus the latency property the whole feature exists
+//! for: a short request streams its first token while a long prompt is
+//! still prefilling, and a second session over a shared prompt is served
+//! its prefix from cache without recomputing or re-storing it.
+
+use lords::config::{ModelCfg, ServeCfg};
+use lords::coordinator::{Engine, Event, NativeEngine, Request, Server};
+use lords::kvquant::{KvBits, KvPool, KvQuantCfg};
+use lords::model::Model;
+use lords::quant::lords::RefineCfg;
+use lords::quant::Codebook;
+use lords::util::prop::prop_check;
+use lords::util::Rng;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 48,
+        block: 8,
+        codebook: "nf4".into(),
+        qlora_rank: 4,
+    }
+}
+
+fn quantized_model(cfg: &ModelCfg, seed: u64) -> Model {
+    let mut model = Model::init(cfg, seed);
+    model.quantize_lords(
+        cfg.block,
+        &Codebook::normal_float(4),
+        RefineCfg { steps: 2, ..Default::default() },
+        false,
+    );
+    model
+}
+
+fn serve_cfg(prefill_chunk_tokens: usize) -> ServeCfg {
+    ServeCfg {
+        decode_buckets: vec![1, 2, 4],
+        prefill_buckets: vec![1, 2, 4],
+        batch_window_us: 0,
+        max_queue: 64,
+        max_new_tokens: 8,
+        workers: 1,
+        kv_bits: 32,
+        kv_budget_mib: 0.0,
+        rate_rps: 0.0,
+        prefill_chunk_tokens,
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+/// The identity gate: a prompt prefilled in random block-aligned chunks
+/// must leave *exactly* the state of a whole-prompt prefill — final
+/// logits bitwise, every layer's stored K/V bitwise, and the decode tail
+/// that continues from it bitwise — for every KV format.
+#[test]
+fn chunked_prefill_is_bitwise_identical_to_whole_prefill() {
+    let cfg = tiny_cfg();
+    let model = quantized_model(&cfg, 7);
+    prop_check(12, |g| {
+        let bits = *g.pick(&[KvBits::F32, KvBits::Int8, KvBits::Int4]);
+        let bt = *g.pick(&[4usize, 8]);
+        let kv = KvQuantCfg { bits, rank: 1, block_tokens: bt };
+        let plen = g.usize(5..=40);
+        let mut rng = g.rng().fork(5);
+        let prompt: Vec<usize> = (0..plen).map(|_| rng.below(cfg.vocab)).collect();
+
+        let mut whole = KvPool::new(kv, cfg.n_layers, cfg.d_model, 64);
+        let mut chunked = KvPool::new(kv, cfg.n_layers, cfg.d_model, 64);
+        let want = model.prefill_pooled(&prompt, &mut whole, 1, None).unwrap();
+        // random schedule: 1..=3 blocks per chunk, final chunk may be ragged
+        let mut pos = 0usize;
+        let mut got = None;
+        while pos < plen {
+            let end = (pos + g.usize(1..=3) * bt).min(plen);
+            got = model
+                .prefill_chunk_pooled(&prompt[pos..end], pos, plen, &mut chunked, 1, None)
+                .map_err(|e| format!("{bits:?} bt={bt} chunk {pos}..{end}: {e}"))?;
+            if (end < plen) != got.is_none() {
+                return Err(format!(
+                    "{bits:?} bt={bt}: logits must appear exactly on the final chunk"
+                ));
+            }
+            pos = end;
+        }
+        let got = got.expect("loop ends on the final chunk");
+        if got != want {
+            return Err(format!(
+                "{bits:?} bt={bt} plen={plen}: chunked logits diverge from whole prefill"
+            ));
+        }
+        // the stored KV is the same, bit for bit, in every layer
+        for layer in 0..cfg.n_layers {
+            let (wk, wv) = whole.dense_kv(1, layer, plen);
+            let (ck, cv) = chunked.dense_kv(1, layer, plen);
+            if wk.data != ck.data || wv.data != cv.data {
+                return Err(format!(
+                    "{bits:?} bt={bt} plen={plen} layer {layer}: stored K/V differ"
+                ));
+            }
+        }
+        // and a greedy decode tail continues identically from both states
+        let (mut tw, mut tc) = (argmax(&want), argmax(&got));
+        for step in 0..2 {
+            let lw = model.decode_pooled(tw, &mut whole, 1, None).unwrap();
+            let lc = model.decode_pooled(tc, &mut chunked, 1, None).unwrap();
+            if lw != lc {
+                return Err(format!(
+                    "{bits:?} bt={bt} plen={plen}: decode step {step} diverged"
+                ));
+            }
+            tw = argmax(&lw);
+            tc = argmax(&lc);
+        }
+        Ok(())
+    });
+}
+
+/// Serving-level identity: the continuous-batching schedule (small
+/// per-tick chunk budget), the lockstep-equivalent schedule (budget 0),
+/// and a no-prefix-sharing baseline all emit exactly the same token
+/// streams — scheduling and KV sharing change *when* work happens, never
+/// *what* is generated. The trace includes duplicate prompts so the
+/// prefix fork + private-suffix path is exercised, and the shared servers
+/// must actually report cache hits.
+#[test]
+fn chunked_schedule_and_prefix_sharing_preserve_token_streams() {
+    let cfg = tiny_cfg();
+    let model = quantized_model(&cfg, 17);
+    let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
+    let requests = || -> Vec<Request> {
+        let mut rng = Rng::new(23);
+        let shared: Vec<usize> = (0..20).map(|_| rng.below(cfg.vocab)).collect();
+        (0..6u64)
+            .map(|id| {
+                let prompt = if id % 4 == 0 {
+                    shared.clone()
+                } else {
+                    (0..10 + id as usize).map(|_| rng.below(cfg.vocab)).collect()
+                };
+                Request::new(id, prompt, 6)
+            })
+            .collect()
+    };
+    let run = |chunk: usize, sharing: bool| {
+        let mut engine = NativeEngine::with_kv(model.clone(), "sched", kv);
+        engine.set_prefix_sharing(sharing);
+        let mut srv = Server::new(engine, serve_cfg(chunk));
+        let report = srv.run_trace(requests()).unwrap();
+        assert_eq!(report.metrics.completed, 6);
+        report
+    };
+    let lockstep = run(0, true);
+    let chunked = run(8, true);
+    let unshared = run(8, false);
+    for (want, (a, b)) in lockstep
+        .responses
+        .iter()
+        .zip(chunked.responses.iter().zip(&unshared.responses))
+    {
+        assert_eq!(
+            want.tokens, a.tokens,
+            "req {}: chunked schedule changed the token stream",
+            want.id
+        );
+        assert_eq!(
+            want.tokens, b.tokens,
+            "req {}: prefix sharing changed the token stream",
+            want.id
+        );
+    }
+    // requests 0 and 4 share a 20-token prompt (16 block-aligned tokens
+    // shareable at block_tokens = 8): both shared servers must have served
+    // request 4's prefix from cache, the baseline must not have
+    assert_eq!(lockstep.metrics.prefix_hit_tokens, 16);
+    assert_eq!(chunked.metrics.prefix_hit_tokens, 16);
+    assert_eq!(unshared.metrics.prefix_hit_tokens, 0);
+    // cache hits mean fewer prompt tokens were actually computed
+    assert_eq!(
+        chunked.metrics.prefill_tokens + 16,
+        unshared.metrics.prefill_tokens
+    );
+    // the chunked schedule really ran in several chunks per long prompt
+    assert!(
+        chunked.metrics.prefill_chunks > lockstep.metrics.prefill_chunks,
+        "chunked {} vs lockstep {} prefill chunks",
+        chunked.metrics.prefill_chunks,
+        lockstep.metrics.prefill_chunks
+    );
+}
+
+/// The latency property continuous batching buys: with a per-tick chunk
+/// budget, a short request admitted alongside a long prompt streams its
+/// first token while the long prompt is *still prefilling* — instead of
+/// stalling behind the whole prompt as the lockstep schedule did.
+#[test]
+fn short_request_streams_while_long_prompt_still_prefilling() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 29);
+    let kv = KvQuantCfg { bits: KvBits::F32, rank: 1, block_tokens: 8 };
+    let engine = NativeEngine::with_kv(model, "interleave", kv);
+    let mut srv = Server::new(engine, serve_cfg(8));
+
+    let mut rng = Rng::new(31);
+    let long: Vec<usize> = (0..40).map(|_| rng.below(cfg.vocab)).collect();
+    let short: Vec<usize> = (0..8).map(|_| rng.below(cfg.vocab)).collect();
+    srv.submit(Request::new(0, long, 4)).unwrap();
+    srv.submit(Request::new(1, short, 4)).unwrap();
+
+    let mut interleaved = false;
+    let mut done = 0;
+    let mut guard = 0;
+    while !srv.is_idle() {
+        let events = srv.step().unwrap();
+        for ev in events {
+            match ev {
+                Event::Token { id: 1, .. } if srv.num_prefilling() > 0 => interleaved = true,
+                Event::Done { .. } => done += 1,
+                _ => {}
+            }
+        }
+        guard += 1;
+        assert!(guard < 100, "server failed to drain");
+    }
+    assert_eq!(done, 2, "both requests complete");
+    assert!(
+        interleaved,
+        "the short request must stream tokens while the long prompt prefills"
+    );
+    // the 40-token prompt was spread across 8-token ticks, not one call
+    assert!(srv.metrics.prefill_chunks >= 6);
+    assert_eq!(srv.metrics.prefill_tokens, 48);
+}
+
+/// Shared-prefix reuse end to end: after one session over a prompt, later
+/// sessions over the same prompt are admitted with the block-aligned
+/// prefix attached (not recomputed, not re-stored) — concurrent sharers
+/// hold the prefix blocks once, and flushing the cache after the last
+/// session drains the pool completely.
+#[test]
+fn second_session_reuses_shared_prefix_blocks() {
+    let cfg = tiny_cfg();
+    let model = Model::init(&cfg, 37);
+    let kv = KvQuantCfg { bits: KvBits::F32, rank: 1, block_tokens: 8 };
+    let engine = NativeEngine::with_kv(model, "prefix", kv);
+    let mut srv = Server::new(engine, serve_cfg(0));
+
+    let mut rng = Rng::new(41);
+    let prompt: Vec<usize> = (0..20).map(|_| rng.below(cfg.vocab)).collect();
+    let drain = |srv: &mut Server<NativeEngine>| -> Vec<Vec<usize>> {
+        let mut streams = Vec::new();
+        while !srv.is_idle() {
+            for ev in srv.step().unwrap() {
+                if let Event::Done { response } = ev {
+                    streams.push((response.id, response.tokens));
+                }
+            }
+        }
+        streams.sort_by_key(|(id, _)| *id);
+        streams.into_iter().map(|(_, t)| t).collect()
+    };
+
+    // first session: full prefill, then its sealed prompt blocks stay cached
+    srv.submit(Request::new(0, prompt.clone(), 4)).unwrap();
+    let first = drain(&mut srv);
+    assert_eq!(srv.metrics.prefill_tokens, 20);
+    assert_eq!(srv.metrics.prefix_hit_tokens, 0);
+    // 20 tokens at block_tokens = 8 seal two full blocks; both are cached
+    assert_eq!(srv.engine.prefix_cache().cached_blocks(), 2);
+    assert_eq!(srv.engine.kv_pool().used_blocks(), 2);
+    assert_eq!(srv.engine.prefix_hit_tokens("base", &prompt), 16);
+
+    // two concurrent sessions over the same prompt: the 16 shared tokens
+    // are attached at admission, each computes only its 4-token suffix
+    srv.submit(Request::new(1, prompt.clone(), 4)).unwrap();
+    srv.submit(Request::new(2, prompt.clone(), 4)).unwrap();
+    let mut peak_used = 0usize;
+    let mut later: Vec<Vec<usize>> = Vec::new();
+    while !srv.is_idle() {
+        for ev in srv.step().unwrap() {
+            if let Event::Done { response } = ev {
+                later.push(response.tokens);
+            }
+        }
+        peak_used = peak_used.max(srv.engine.kv_pool().used_blocks());
+    }
+    assert_eq!(srv.metrics.prefix_hit_tokens, 2 * 16);
+    assert_eq!(srv.metrics.prefill_tokens, 20 + 2 * 4);
+    // each session needs 3 blocks (20 prompt + 4 new); sharing holds the
+    // 2 prefix blocks once: 2 shared + 2 private tails, not 2 x 3
+    assert!(
+        peak_used <= 4,
+        "{peak_used} blocks used concurrently — the prefix was duplicated"
+    );
+    // every session over the shared prompt generated the same tokens,
+    // and they match a fresh server that never had a cache to hit
+    assert_eq!(later.len(), 2);
+    for (i, stream) in later.iter().enumerate() {
+        assert_eq!(
+            *stream, first[0],
+            "shared session {i} diverged from the uncached first session"
+        );
+    }
+    let mut check = Server::new(
+        NativeEngine::with_kv(Model::init(&cfg, 37), "solo", kv),
+        serve_cfg(0),
+    );
+    check.submit(Request::new(0, prompt.clone(), 4)).unwrap();
+    let solo = drain(&mut check);
+    assert_eq!(first, solo, "cached-prefix serving changed the stream");
+
+    // after the last session only the cached prefix remains; flushing it
+    // returns the pool to empty
+    assert_eq!(srv.engine.kv_pool().active_sequences(), 0);
+    assert_eq!(srv.engine.kv_pool().used_blocks(), 2);
+    srv.engine.flush_prefix_cache();
+    assert_eq!(srv.engine.prefix_cache().cached_blocks(), 0);
+    assert_eq!(srv.engine.kv_pool().used_blocks(), 0);
+}
