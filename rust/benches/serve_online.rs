@@ -33,6 +33,24 @@ struct Point {
     itl_p99_ms: f64,
     queue_p50_ms: f64,
     queue_p99_ms: f64,
+    span_admit_ms: f64,
+    span_prefill_ms: f64,
+    span_decode_ms: f64,
+}
+
+/// Total time spent inside each server tick phase, from the tracing
+/// spans recorded during one open-loop run (milliseconds).
+fn tick_phase_ms(spans: &[lords::obs::SpanEvent]) -> (f64, f64, f64) {
+    let (mut admit, mut prefill, mut decode) = (0u64, 0u64, 0u64);
+    for s in spans {
+        match s.name {
+            "server.admit" => admit += s.dur_ns,
+            "server.prefill" => prefill += s.dur_ns,
+            "server.decode" => decode += s.dur_ns,
+            _ => {}
+        }
+    }
+    (admit as f64 / 1e6, prefill as f64 / 1e6, decode as f64 / 1e6)
 }
 
 fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
@@ -77,6 +95,7 @@ fn main() {
         "TTFT p50/p99 ms",
         "ITL p50/p99 ms",
         "Queue p50/p99 ms",
+        "Spans adm/pre/dec ms",
     ]);
 
     let mut points: Vec<Point> = Vec::new();
@@ -94,6 +113,11 @@ fn main() {
 
         for rate_frac in [0.5, 0.9] {
             let rate_rps = (peak_rps * rate_frac).max(1.0);
+            // record tracing spans for this run only: clear the drain
+            // cursor first, then disable before draining so the totals
+            // cover exactly the open-loop window
+            lords::obs::trace::drain();
+            lords::obs::trace::set_enabled(true);
             let report = run_open_loop(
                 &mut server,
                 requests(n_requests, prompt_len, max_new, cfg.vocab),
@@ -101,6 +125,9 @@ fn main() {
                 11,
             )
             .unwrap();
+            lords::obs::trace::set_enabled(false);
+            let spans = lords::obs::trace::drain();
+            let (span_admit_ms, span_prefill_ms, span_decode_ms) = tick_phase_ms(&spans);
             let m = &report.metrics;
             let p = Point {
                 kv_bits: bits.as_u32(),
@@ -114,6 +141,9 @@ fn main() {
                 itl_p99_ms: m.itl.p99() * 1e3,
                 queue_p50_ms: m.queue_wait.p50() * 1e3,
                 queue_p99_ms: m.queue_wait.p99() * 1e3,
+                span_admit_ms,
+                span_prefill_ms,
+                span_decode_ms,
             };
             eprintln!(
                 "[serve_online] {} @ {:.0}% load: ttft p99 {:.2} ms, itl p99 {:.2} ms",
@@ -131,6 +161,10 @@ fn main() {
                 format!("{:.2}/{:.2}", p.ttft_p50_ms, p.ttft_p99_ms),
                 format!("{:.2}/{:.2}", p.itl_p50_ms, p.itl_p99_ms),
                 format!("{:.2}/{:.2}", p.queue_p50_ms, p.queue_p99_ms),
+                format!(
+                    "{:.1}/{:.1}/{:.1}",
+                    p.span_admit_ms, p.span_prefill_ms, p.span_decode_ms
+                ),
             ]);
             points.push(p);
         }
@@ -160,7 +194,9 @@ fn write_json(points: &[Point], full: bool) {
             "    {{\"kv_bits\": {}, \"rate_frac\": {:.2}, \"rate_rps\": {:.2}, \
              \"completed\": {}, \"total_tps\": {:.2}, \"ttft_p50_ms\": {:.3}, \
              \"ttft_p99_ms\": {:.3}, \"itl_p50_ms\": {:.3}, \"itl_p99_ms\": {:.3}, \
-             \"queue_p50_ms\": {:.3}, \"queue_p99_ms\": {:.3}}}{}\n",
+             \"queue_p50_ms\": {:.3}, \"queue_p99_ms\": {:.3}, \
+             \"span_admit_ms\": {:.3}, \"span_prefill_ms\": {:.3}, \
+             \"span_decode_ms\": {:.3}}}{}\n",
             p.kv_bits,
             p.rate_frac,
             p.rate_rps,
@@ -172,6 +208,9 @@ fn write_json(points: &[Point], full: bool) {
             p.itl_p99_ms,
             p.queue_p50_ms,
             p.queue_p99_ms,
+            p.span_admit_ms,
+            p.span_prefill_ms,
+            p.span_decode_ms,
             if i + 1 == points.len() { "" } else { "," }
         ));
     }

@@ -7,6 +7,11 @@
 //! ```bash
 //! cargo run --release --example serve_streaming
 //! ```
+//!
+//! Set `LORDS_TRACE_OUT=trace.json` to record tracing spans and write
+//! them as Chrome-trace JSON on exit, and `LORDS_METRICS_OUT=m.prom`
+//! to dump the server's cumulative registry in Prometheus text format
+//! (this is what CI's examples-smoke job validates).
 
 use lords::config::ServeCfg;
 use lords::coordinator::{
@@ -20,6 +25,11 @@ use lords::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     lords::util::logging::init();
+    let trace_out = std::env::var("LORDS_TRACE_OUT").ok();
+    let metrics_out = std::env::var("LORDS_METRICS_OUT").ok();
+    if trace_out.is_some() {
+        lords::obs::trace::set_enabled(true);
+    }
     let (name, cfg) = model_zoo().remove(0);
     let tb = Testbed::build(name, &cfg, 80, 0);
     let mut model = tb.model.clone();
@@ -106,5 +116,16 @@ fn main() -> anyhow::Result<()> {
         "(expected: every request resolves; TTFT grows with queue depth at this rate, \
          ITL tracks the decode step)"
     );
+
+    if let Some(path) = trace_out {
+        lords::obs::trace::set_enabled(false);
+        let spans = lords::obs::trace::drain();
+        lords::obs::trace::write_chrome(&path, &spans)?;
+        println!("trace: {} spans -> {path}", spans.len());
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(&path, server.obs.registry.render_prometheus())?;
+        println!("metrics: prometheus text -> {path}");
+    }
     Ok(())
 }

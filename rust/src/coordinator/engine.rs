@@ -6,6 +6,7 @@ use super::request::{sample, Request, SamplingParams};
 use crate::adapters::{AdapterFactors, AdapterRegistry, BASE_ADAPTER};
 use crate::kvquant::{KvPool, KvQuantCfg, PrefixCache};
 use crate::model::{DecodeRow, DecodeScratch, Model};
+use crate::obs::{self, Counter, Gauge, Histogram, Registry};
 use crate::runtime::{ExecutorHandle, HostTensor, Manifest};
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -164,6 +165,14 @@ pub trait Engine {
     fn supports_adapter(&self, adapter: &str) -> bool {
         adapter == BASE_ADAPTER
     }
+
+    /// Export engine-owned occupancy gauges (KV pool, prefix cache,
+    /// adapter registry, ...) into the server's metrics registry. Called
+    /// once per [`Server::step`](super::Server::step); engines cache their
+    /// handles on the first call. Default: nothing to report.
+    fn observe(&mut self, reg: &Registry) {
+        let _ = reg;
+    }
 }
 
 // ---------------------------------------------------------------- native
@@ -212,6 +221,50 @@ pub struct NativeEngine {
     /// shared-prefix trie over sealed prompt blocks (see
     /// [`kvquant::prefix`](crate::kvquant::prefix)).
     prefix: PrefixCache,
+    /// metric handles cached by the first [`Engine::observe`] call.
+    obs: Option<EngineObs>,
+}
+
+/// Registry handles for the engine-owned gauges, resolved once (the
+/// registry lookup locks; the handles are plain atomics).
+struct EngineObs {
+    kv_blocks_used: Gauge,
+    kv_blocks_capacity: Gauge,
+    kv_staging_bytes: Gauge,
+    kv_used_bytes: Gauge,
+    kv_peak_bytes: Gauge,
+    kv_active_sequences: Gauge,
+    prefix_cached_blocks: Gauge,
+    adapter_resident_bytes: Gauge,
+    adapter_residents: Gauge,
+    adapter_evictions: Counter,
+    /// registry evictions already exported (the stat is cumulative).
+    evictions_seen: u64,
+    /// tenant-groups per batched decode tick (weight streams per tick).
+    decode_tenant_groups: Histogram,
+}
+
+impl EngineObs {
+    fn new(reg: &Registry) -> EngineObs {
+        EngineObs {
+            kv_blocks_used: reg.gauge("lords_kv_blocks_used", &[]),
+            kv_blocks_capacity: reg.gauge("lords_kv_blocks_capacity", &[]),
+            kv_staging_bytes: reg.gauge("lords_kv_staging_bytes", &[]),
+            kv_used_bytes: reg.gauge("lords_kv_used_bytes", &[]),
+            kv_peak_bytes: reg.gauge("lords_kv_peak_bytes", &[]),
+            kv_active_sequences: reg.gauge("lords_kv_active_sequences", &[]),
+            prefix_cached_blocks: reg.gauge("lords_prefix_cached_blocks", &[]),
+            adapter_resident_bytes: reg.gauge("lords_adapter_resident_bytes", &[]),
+            adapter_residents: reg.gauge("lords_adapter_residents", &[]),
+            adapter_evictions: reg.counter("lords_adapter_evictions_total", &[]),
+            evictions_seen: 0,
+            decode_tenant_groups: reg.histogram(
+                "lords_decode_tenant_groups",
+                &[],
+                &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+            ),
+        }
+    }
 }
 
 impl NativeEngine {
@@ -257,6 +310,7 @@ impl NativeEngine {
             scratch: DecodeScratch::new(),
             last_decode_groups: 0,
             prefix: PrefixCache::new(),
+            obs: None,
         }
     }
 
@@ -501,6 +555,7 @@ impl Engine for NativeEngine {
         } else {
             ((budget / bt).max(1) * bt).min(remaining)
         };
+        let _span = obs::span!("engine.prefill_chunk", take);
         let end = pos0 + take;
         let factors = self.registry.get(&s.adapter);
         let logits = self.model.prefill_chunk_pooled(
@@ -553,6 +608,7 @@ impl Engine for NativeEngine {
         if seqs.is_empty() {
             return Ok(());
         }
+        let _span = obs::span!("engine.decode", seqs.len());
         let mut order: Vec<usize> = (0..seqs.len()).collect();
         order.sort_by(|&i, &j| seqs[i].adapter.cmp(&seqs[j].adapter)); // stable
         let rows: Vec<DecodeRow<'_>> = order
@@ -572,6 +628,9 @@ impl Engine for NativeEngine {
         // identity), the ground truth for weight streams this tick
         self.last_decode_groups =
             self.model.decode_batch_pooled(&rows, &mut self.pool, &mut self.scratch)?;
+        if let Some(o) = &self.obs {
+            o.decode_tenant_groups.observe(self.last_decode_groups as f64);
+        }
         for (r, &i) in order.iter().enumerate() {
             let s = &mut seqs[i];
             s.last_logits.clear();
@@ -589,6 +648,28 @@ impl Engine for NativeEngine {
 
     fn name(&self) -> String {
         format!("native/{}", self.label)
+    }
+
+    /// Refresh the engine-owned gauges: KV pool occupancy (blocks, bytes,
+    /// staging tails), prefix-cache size, and adapter-registry residency.
+    /// Eviction counts export as the delta against the registry's
+    /// cumulative stat.
+    fn observe(&mut self, reg: &Registry) {
+        let o = self.obs.get_or_insert_with(|| EngineObs::new(reg));
+        o.kv_blocks_used.set(self.pool.used_blocks() as i64);
+        o.kv_blocks_capacity.set(self.pool.capacity_blocks() as i64);
+        o.kv_staging_bytes
+            .set((self.pool.active_sequences() * self.pool.staging_bytes()) as i64);
+        o.kv_used_bytes.set(self.pool.used_bytes() as i64);
+        o.kv_peak_bytes.set(self.pool.peak_bytes() as i64);
+        o.kv_active_sequences.set(self.pool.active_sequences() as i64);
+        o.prefix_cached_blocks.set(self.prefix.cached_blocks() as i64);
+        let stats = self.registry.stats();
+        o.adapter_resident_bytes.set(stats.used_bytes as i64);
+        o.adapter_residents.set(stats.residents as i64);
+        let evictions = stats.evictions as u64;
+        o.adapter_evictions.add(evictions.saturating_sub(o.evictions_seen));
+        o.evictions_seen = evictions;
     }
 }
 

@@ -81,6 +81,17 @@ impl ServeMetrics {
         self.per_adapter.entry(id.to_string()).or_default()
     }
 
+    /// Fraction of admitted prompt tokens served from the shared-prefix
+    /// cache instead of being prefilled (0.0 when nothing was admitted).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefill_tokens + self.prefix_hit_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / total as f64
+        }
+    }
+
     /// Per-tenant breakdown, sorted by adapter id.
     pub fn print_adapters(&self) {
         let mut ids: Vec<&String> = self.per_adapter.keys().collect();
@@ -88,18 +99,19 @@ impl ServeMetrics {
         for id in ids {
             let c = &self.per_adapter[id];
             println!(
-                "    tenant {id:<16} req {:>4} | prefill {:>8} tok | decode {:>8} tok | done {:>4}",
-                c.requests, c.prefill_tokens, c.decode_tokens, c.completed,
+                "    tenant {id:<16} req {:>4} | prefill {:>8} tok | decode {:>8} tok | done {:>4} | can {:>3}",
+                c.requests, c.prefill_tokens, c.decode_tokens, c.completed, c.cancelled,
             );
         }
     }
 
     pub fn print(&self, label: &str) {
         println!(
-            "  {label:<16} prefill {:>9.1} tok/s | decode {:>8.1} tok/s | total {:>8.1} tok/s | p50 {:.1}ms p99 {:.1}ms | done {} rej {} can {}",
+            "  {label:<16} prefill {:>9.1} tok/s | decode {:>8.1} tok/s | total {:>8.1} tok/s | prefix hit {:>5.1}% | p50 {:.1}ms p99 {:.1}ms | done {} rej {} can {}",
             self.prefill_tps(),
             self.decode_tps(),
             self.total_tps(),
+            self.prefix_hit_rate() * 100.0,
             self.latency.p50() * 1e3,
             self.latency.p99() * 1e3,
             self.completed,
@@ -144,6 +156,15 @@ mod tests {
     fn zero_division_safe() {
         let m = ServeMetrics::default();
         assert!(m.prefill_tps().is_finite());
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn prefix_hit_rate_over_total_prompt_volume() {
+        let mut m = ServeMetrics::default();
+        m.prefill_tokens = 75;
+        m.prefix_hit_tokens = 25;
+        assert!((m.prefix_hit_rate() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -152,6 +152,51 @@
 //! ([`NativeEngine::decode_reference`](engine::NativeEngine::decode_reference),
 //! gated by `tests/decode_batch.rs`). `ServeMetrics::avg_decode_batch`
 //! reports how many sequences each tick amortized over.
+//!
+//! # Observability (spans, metrics registry, flight recorder)
+//!
+//! Every server owns a [`ServerObs`](server::ServerObs): a cumulative
+//! [`Registry`](crate::obs::Registry) of Prometheus-style counters /
+//! gauges / histograms (never reset — [`ServeMetrics`](metrics::ServeMetrics)
+//! stays the windowed report) plus a bounded
+//! [`FlightRecorder`](crate::obs::FlightRecorder) of per-request lifecycle
+//! events. Instrumentation must never perturb serving: with tracing off
+//! the span macro is one relaxed atomic load, and token streams are
+//! bitwise identical either way (gated by `tests/obs.rs`).
+//!
+//! **Span points** (emitted via [`obs::span!`](macro@crate::span) when
+//! [`obs::trace::set_enabled`](crate::obs::trace::set_enabled) is on, drained
+//! with [`obs::trace::drain`](crate::obs::trace::drain) and exported as
+//! Chrome-trace JSON by `serve --trace-out`):
+//!
+//! ```text
+//! server.tick                 one step(): admit + prefill + decode
+//! ├─ server.admit             KV-aware admission of one batch
+//! ├─ server.prefill           chunked-prefill phase of the tick
+//! │  └─ engine.prefill_chunk  one sequence advancing ≤ chunk tokens
+//! │     └─ kernel.*           fused packed-weight matmuls
+//! └─ server.decode            batched decode phase of the tick
+//!    └─ engine.decode         one engine call for the running set
+//!       └─ model.decode_batch tenant-grouped batched forward
+//!          ├─ kernel.lords_matmul / kernel.blockwise_matmul
+//!          ├─ attn.pooled     paged attention over packed KV
+//!          └─ kv.seal         block seal + quantize (arg = tile rows)
+//! ```
+//!
+//! **Flight-recorder event schema** (one bounded ring, oldest evicted
+//! first; dumped as JSON on demand or on a rejection storm / stall
+//! anomaly — see [`FlightKind`](crate::obs::FlightKind)):
+//!
+//! | event | payload | emitted when |
+//! |---|---|---|
+//! | `submitted` | — | `submit` accepts the request |
+//! | `rejected` | `reason` | admission or submit refuses it |
+//! | `admitted` | `prefix_hit_tokens`, `reserved_tokens` | KV reserved, prefix claimed |
+//! | `prefill_chunk` | `tokens` | one chunk of its prompt prefilled |
+//! | `first_token` | — | the tick its first token streams |
+//! | `done` | `generated` | completion (`Event::Done`) |
+//! | `cancelled` | — | client cancel (queued or live) |
+//! | `released` | — | KV blocks + adapter pin freed |
 
 pub mod batcher;
 pub mod driver;
@@ -164,4 +209,4 @@ pub mod server;
 pub use driver::{poisson_arrivals, run_open_loop};
 pub use engine::{Engine, NativeEngine, PjrtEngine};
 pub use request::{Request, Response, SamplingParams};
-pub use server::{Event, RejectReason, SeqId, ServeReport, Server};
+pub use server::{Event, RejectReason, SeqId, ServeReport, Server, ServerObs};

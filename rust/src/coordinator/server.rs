@@ -29,6 +29,7 @@ use super::engine::{Engine, SeqState};
 use super::metrics::ServeMetrics;
 use super::request::{Request, Response};
 use crate::config::ServeCfg;
+use crate::obs::{self, Counter, FlightKind, FlightRecorder, Gauge, Histogram, Registry};
 use std::collections::{HashSet, VecDeque};
 use std::time::{Duration, Instant};
 
@@ -51,6 +52,21 @@ pub enum RejectReason {
     /// The request's KV footprint (prompt + max_new) exceeds what the
     /// pool can ever hold, even with nothing else in flight.
     KvBudgetExceeded,
+}
+
+impl RejectReason {
+    /// Stable snake_case key — the `reason` label on
+    /// `lords_rejected_total` and the flight-recorder event payload.
+    pub fn key(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::DuplicateId => "duplicate_id",
+            RejectReason::UnknownAdapter => "unknown_adapter",
+            RejectReason::PromptTooLong => "prompt_too_long",
+            RejectReason::EmptyPrompt => "empty_prompt",
+            RejectReason::KvBudgetExceeded => "kv_budget_exceeded",
+        }
+    }
 }
 
 impl std::fmt::Display for RejectReason {
@@ -83,11 +99,83 @@ pub enum Event {
     Cancelled { id: SeqId },
 }
 
+/// Cumulative observability state owned by the server: the metrics
+/// registry behind the Prometheus / JSON expositions, the per-request
+/// flight recorder, and the hot-path metric handles (resolved once here;
+/// recording is plain atomic ops). Unlike [`ServeMetrics`] — the
+/// windowed report that [`Server::reset_metrics`] takes — the registry
+/// only accumulates for the life of the server.
+pub struct ServerObs {
+    /// Cumulative metric store (the `lords_*` families); render with
+    /// [`Registry::render_prometheus`] / [`Registry::render_json`].
+    pub registry: Registry,
+    /// Bounded ring of per-request lifecycle events with anomaly
+    /// tripwires (rejection storm, stall) — see
+    /// [`FlightRecorder::take_anomaly`].
+    pub flight: FlightRecorder,
+    completed: Counter,
+    cancelled: Counter,
+    prefill_tokens: Counter,
+    prefix_hit_tokens: Counter,
+    prefill_chunks: Counter,
+    decode_tokens: Counter,
+    decode_ticks: Counter,
+    queue_depth: Gauge,
+    running: Gauge,
+    prefilling: Gauge,
+    decode_batch_size: Histogram,
+    prefill_chunk_utilization: Histogram,
+    ttft_seconds: Histogram,
+    itl_seconds: Histogram,
+}
+
+impl ServerObs {
+    fn new() -> ServerObs {
+        let registry = Registry::new();
+        let latency = &[0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0];
+        ServerObs {
+            completed: registry.counter("lords_completed_total", &[]),
+            cancelled: registry.counter("lords_cancelled_total", &[]),
+            prefill_tokens: registry.counter("lords_prefill_tokens_total", &[]),
+            prefix_hit_tokens: registry.counter("lords_prefix_hit_tokens_total", &[]),
+            prefill_chunks: registry.counter("lords_prefill_chunks_total", &[]),
+            decode_tokens: registry.counter("lords_decode_tokens_total", &[]),
+            decode_ticks: registry.counter("lords_decode_ticks_total", &[]),
+            queue_depth: registry.gauge("lords_queue_depth", &[]),
+            running: registry.gauge("lords_running_sequences", &[]),
+            prefilling: registry.gauge("lords_prefilling_sequences", &[]),
+            decode_batch_size: registry.histogram(
+                "lords_decode_batch_size",
+                &[],
+                &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0],
+            ),
+            prefill_chunk_utilization: registry.histogram(
+                "lords_prefill_chunk_utilization",
+                &[],
+                &[0.25, 0.5, 0.75, 0.9, 1.0],
+            ),
+            ttft_seconds: registry.histogram("lords_ttft_seconds", &[], latency),
+            itl_seconds: registry.histogram("lords_itl_seconds", &[], latency),
+            registry,
+            flight: FlightRecorder::default(),
+        }
+    }
+
+    /// One rejection: bump the reason-labelled counter and record the
+    /// flight event (which also feeds the rejection-storm tripwire).
+    fn reject(&mut self, id: u64, reason: RejectReason) {
+        self.registry.counter("lords_rejected_total", &[("reason", reason.key())]).inc();
+        self.flight.push(id, FlightKind::Rejected { reason: reason.key() });
+    }
+}
+
 pub struct Server<E: Engine> {
     pub engine: E,
     /// Accumulated serving metrics; reset by [`Server::reset_metrics`]
     /// (and at the start of every [`Server::run_trace`]).
     pub metrics: ServeMetrics,
+    /// Cumulative metrics registry + flight recorder (never reset).
+    pub obs: ServerObs,
     batcher: Batcher,
     cfg: ServeCfg,
     /// In-flight sequences. Kept as a plain `Vec<SeqState>` (with
@@ -137,6 +225,7 @@ impl<E: Engine> Server<E> {
         Server {
             engine,
             metrics: ServeMetrics::default(),
+            obs: ServerObs::new(),
             batcher: Batcher::new(
                 cfg.prefill_buckets.clone(),
                 Duration::from_micros(cfg.batch_window_us),
@@ -199,14 +288,17 @@ impl<E: Engine> Server<E> {
         };
         if let Some(reason) = reason {
             self.metrics.rejected += 1;
+            self.obs.reject(req.id, reason);
             return Err(reason);
         }
         let id = req.id;
         if !self.batcher.push(req) {
             self.metrics.rejected += 1;
+            self.obs.reject(id, RejectReason::QueueFull);
             return Err(RejectReason::QueueFull);
         }
         self.live.insert(id);
+        self.obs.flight.push(id, FlightKind::Submitted);
         Ok(id)
     }
 
@@ -223,6 +315,8 @@ impl<E: Engine> Server<E> {
             // tenant's `requests` counter never saw this one)
             self.live.remove(&id);
             self.metrics.cancelled += 1;
+            self.obs.cancelled.inc();
+            self.obs.flight.push(id, FlightKind::Cancelled);
             self.pending_events.push(Event::Cancelled { id });
             return true;
         }
@@ -233,6 +327,9 @@ impl<E: Engine> Server<E> {
             self.live.remove(&id);
             self.metrics.cancelled += 1;
             self.metrics.adapter(&s.adapter).cancelled += 1;
+            self.obs.cancelled.inc();
+            self.obs.flight.push(id, FlightKind::Cancelled);
+            self.obs.flight.push(id, FlightKind::Released);
             self.pending_events.push(Event::Cancelled { id });
             return true;
         }
@@ -243,6 +340,9 @@ impl<E: Engine> Server<E> {
             self.live.remove(&id);
             self.metrics.cancelled += 1;
             self.metrics.adapter(&s.adapter).cancelled += 1;
+            self.obs.cancelled.inc();
+            self.obs.flight.push(id, FlightKind::Cancelled);
+            self.obs.flight.push(id, FlightKind::Released);
             self.pending_events.push(Event::Cancelled { id });
             return true;
         }
@@ -257,10 +357,30 @@ impl<E: Engine> Server<E> {
     ///
     /// Returns an empty vector when the server is idle.
     pub fn step(&mut self) -> anyhow::Result<Vec<Event>> {
+        let _tick = obs::span!("server.tick");
+        // `busy` feeds the flight recorder's stall tripwire: work was in
+        // flight when the tick started, so *something* should progress.
+        let busy = !self.batcher.is_empty()
+            || !self.running.is_empty()
+            || !self.prefilling.is_empty();
         let mut events = std::mem::take(&mut self.pending_events);
-        self.admit(&mut events)?;
-        self.prefill_tick()?;
-        self.decode_tick(&mut events)?;
+        {
+            let _s = obs::span!("server.admit");
+            self.admit(&mut events)?;
+        }
+        {
+            let _s = obs::span!("server.prefill");
+            self.prefill_tick()?;
+        }
+        {
+            let _s = obs::span!("server.decode");
+            self.decode_tick(&mut events)?;
+        }
+        self.engine.observe(&self.obs.registry);
+        self.obs.queue_depth.set(self.batcher.len() as i64);
+        self.obs.running.set(self.running.len() as i64);
+        self.obs.prefilling.set(self.prefilling.len() as i64);
+        self.obs.flight.note_tick(busy);
         Ok(events)
     }
 
@@ -307,6 +427,7 @@ impl<E: Engine> Server<E> {
                 let req = self.batcher.remove(id).expect("peeked above");
                 self.live.remove(&req.id);
                 self.metrics.rejected += 1;
+                self.obs.reject(req.id, RejectReason::KvBudgetExceeded);
                 events.push(Event::Rejected {
                     id: req.id,
                     reason: RejectReason::KvBudgetExceeded,
@@ -326,6 +447,7 @@ impl<E: Engine> Server<E> {
             if !self.engine.supports_adapter(&req.adapter) {
                 self.live.remove(&req.id);
                 self.metrics.rejected += 1;
+                self.obs.reject(req.id, RejectReason::UnknownAdapter);
                 events.push(Event::Rejected {
                     id: req.id,
                     reason: RejectReason::UnknownAdapter,
@@ -334,6 +456,10 @@ impl<E: Engine> Server<E> {
             }
             let queue_s = req.arrival.elapsed().as_secs_f64();
             self.metrics.adapter(&req.adapter).requests += 1;
+            self.obs
+                .registry
+                .counter("lords_requests_total", &[("adapter", req.adapter.as_str())])
+                .inc();
             timings.push(ReqTiming {
                 arrival: req.arrival,
                 queue_s,
@@ -354,6 +480,14 @@ impl<E: Engine> Server<E> {
             self.engine.admit_seqs(&mut seqs)?;
             for s in seqs.iter() {
                 self.metrics.prefix_hit_tokens += s.prefilled;
+                self.obs.prefix_hit_tokens.add(s.prefilled as u64);
+                self.obs.flight.push(
+                    s.id,
+                    FlightKind::Admitted {
+                        prefix_hit_tokens: s.prefilled,
+                        reserved_tokens: (s.prompt_len + s.max_new).min(max_seq),
+                    },
+                );
             }
             self.prefilling.extend(seqs);
             self.prefilling_timings.extend(timings);
@@ -369,6 +503,14 @@ impl<E: Engine> Server<E> {
             s.prefilled = s.prompt_len;
             self.metrics.prefill_tokens += s.prompt_len;
             self.metrics.adapter(&s.adapter).prefill_tokens += s.prompt_len;
+            self.obs.prefill_tokens.add(s.prompt_len as u64);
+            self.obs.flight.push(
+                s.id,
+                FlightKind::Admitted {
+                    prefix_hit_tokens: 0,
+                    reserved_tokens: (s.prompt_len + s.max_new).min(max_seq),
+                },
+            );
             t.prefill_s = per_prefill;
         }
         self.running.extend(seqs);
@@ -385,10 +527,11 @@ impl<E: Engine> Server<E> {
         if self.prefilling.is_empty() {
             return Ok(());
         }
-        let mut remaining = match self.cfg.prefill_chunk_tokens {
+        let budget0 = match self.cfg.prefill_chunk_tokens {
             0 => usize::MAX,
             n => n,
         };
+        let mut remaining = budget0;
         let n = self.prefilling.len();
         let t0 = Instant::now();
         let mut advanced: Vec<usize> = Vec::new();
@@ -406,6 +549,9 @@ impl<E: Engine> Server<E> {
             self.metrics.prefill_chunks += 1;
             self.metrics.prefill_tokens += took;
             self.metrics.adapter(&s.adapter).prefill_tokens += took;
+            self.obs.prefill_chunks.inc();
+            self.obs.prefill_tokens.add(took as u64);
+            self.obs.flight.push(s.id, FlightKind::PrefillChunk { tokens: took });
             // a chunk is block-aligned: it may round a tiny budget up to
             // one full block, so saturate rather than underflow
             remaining = remaining.saturating_sub(took);
@@ -418,6 +564,12 @@ impl<E: Engine> Server<E> {
             for &i in &advanced {
                 self.prefilling_timings[i].prefill_s += per;
             }
+        }
+        // budget utilization this tick (bounded budgets only): block
+        // rounding may overshoot, so a saturated `remaining` reads as 1.0
+        if budget0 != usize::MAX {
+            let spent = budget0 - remaining;
+            self.obs.prefill_chunk_utilization.observe(spent as f64 / budget0 as f64);
         }
         // completed prompts graduate to the decode loop in admission order
         let seqs = std::mem::take(&mut self.prefilling);
@@ -460,9 +612,13 @@ impl<E: Engine> Server<E> {
                 None => {
                     t.ttft_s = now.duration_since(t.arrival).as_secs_f64();
                     self.metrics.ttft.add(t.ttft_s);
+                    self.obs.ttft_seconds.observe(t.ttft_s);
+                    self.obs.flight.push(s.id, FlightKind::FirstToken);
                 }
                 Some(prev) => {
-                    self.metrics.itl.add(now.duration_since(prev).as_secs_f64());
+                    let gap = now.duration_since(prev).as_secs_f64();
+                    self.metrics.itl.add(gap);
+                    self.obs.itl_seconds.observe(gap);
                 }
             }
             t.last_token = Some(now);
@@ -480,6 +636,9 @@ impl<E: Engine> Server<E> {
                 self.metrics.adapter(&s.adapter).completed += 1;
                 self.metrics.latency.add(t.queue_s + t.prefill_s + t.decode_s);
                 self.metrics.queue_wait.add(t.queue_s);
+                self.obs.completed.inc();
+                self.obs.flight.push(s.id, FlightKind::Done { generated: s.generated() });
+                self.obs.flight.push(s.id, FlightKind::Released);
                 events.push(Event::Done {
                     response: Response {
                         id: s.id,
@@ -504,6 +663,9 @@ impl<E: Engine> Server<E> {
             self.metrics.decode_secs += dt;
             self.metrics.decode_ticks += 1;
             self.metrics.decode_tokens += self.running.len();
+            self.obs.decode_ticks.inc();
+            self.obs.decode_tokens.add(self.running.len() as u64);
+            self.obs.decode_batch_size.observe(self.running.len() as f64);
             for s in self.running.iter() {
                 self.metrics.adapter(&s.adapter).decode_tokens += 1;
             }

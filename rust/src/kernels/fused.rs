@@ -7,6 +7,7 @@
 //! The full `Ŵ` is never materialized.
 
 use super::packed::PackedCodes;
+use crate::obs;
 use crate::tensor::Matrix;
 use crate::util::{SharedMut, ThreadPool};
 
@@ -121,6 +122,7 @@ pub fn lords_matmul_transb_into(
     a: &Matrix,
     y: &mut Matrix,
 ) {
+    let _span = obs::span!("kernel.lords_matmul", x.rows);
     let (n, m) = (codes.rows(), codes.cols());
     assert_eq!(x.cols, m, "x width {} vs codes {}", x.cols, m);
     assert_eq!(b.rows, n, "B rows");
@@ -279,6 +281,7 @@ pub fn blockwise_matmul_transb_into(
     block: usize,
     y: &mut Matrix,
 ) {
+    let _span = obs::span!("kernel.blockwise_matmul", x.rows);
     let (n, m) = (codes.rows(), codes.cols());
     assert_eq!(x.cols, m, "x width {} vs codes {}", x.cols, m);
     assert!(block > 0 && m % block == 0, "block {block} !| cols {m}");

@@ -124,6 +124,7 @@ thread_local! {
 /// [`AttnScratch`]. Row-for-row identical to calling [`decode_packed`]
 /// per sequence.
 pub fn decode_packed_batch(q: &Matrix, views: &[KvSeqView], n_heads: usize, out: &mut Matrix) {
+    let _span = crate::obs::span!("attn.pooled", views.len());
     let b = views.len();
     let d = q.cols;
     assert_eq!(q.rows, b, "query rows {} vs sequences {b}", q.rows);

@@ -432,6 +432,7 @@ impl KvPool {
     }
 
     fn seal_tile(&self, tail: &Matrix) -> Tile {
+        let _span = crate::obs::span!("kv.seal", tail.rows);
         match &self.codebook {
             None => Tile::Dense(tail.clone()),
             Some(cb) => Tile::Packed(PackedTile::quantize(tail, self.cfg.rank, cb)),

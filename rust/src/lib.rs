@@ -30,6 +30,7 @@
 //! | [`kvquant`] | quantized paged KV-cache: block-pooled 4/8-bit K/V codes with rank-r low-rank scale factors per block, fused packed attention, and a shared-prefix trie over ref-counted sealed blocks (the LoRDS idea applied to serving memory) |
 //! | [`adapters`] | multi-tenant LoRDS scale adapters: per-tenant (B′, A′) artifacts + hot-swappable ref-counted registry over one shared packed base (§3.4 at serving time) |
 //! | [`model`] | Llama-style transformer with manual backward + quantized linears |
+//! | [`obs`] | observability: atomic metrics registry (Prometheus text + JSON snapshot), lock-free tracing spans with Chrome-trace export (`obs::span!`), per-request flight recorder with anomaly dumps, zero-dep JSON |
 //! | [`data`] | synthetic corpus, calibration sampler, task suite |
 //! | [`train`] | LM pre-training, QAT, PEFT trainers |
 //! | [`eval`] | perplexity + zero-shot-style accuracy harness |
@@ -54,6 +55,7 @@ pub mod kernels;
 pub mod kvquant;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod quant;
 pub mod report;

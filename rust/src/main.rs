@@ -20,7 +20,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "quantize", about: "PTQ-quantize the testbed with --method and report PPL/acc" },
     Command { name: "qat", about: "quantization-aware training (LoRDS STE or INT4 baseline)" },
     Command { name: "peft", about: "PEFT fine-tune scaling factors (LoRDS) vs QLoRA adapters" },
-    Command { name: "serve", about: "serve requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4, --rate RPS for open-loop streaming, --temperature/--top-k/--sample-seed)" },
+    Command { name: "serve", about: "serve requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4, --rate RPS for open-loop streaming, --temperature/--top-k/--sample-seed, --trace-out FILE for Chrome-trace spans, --metrics-out FILE for Prometheus text)" },
     Command { name: "eval", about: "evaluate a checkpoint: perplexity + 7-task zero-shot suite" },
     Command { name: "rank-table", about: "print Appendix-A Table 7 (parity ranks, exact paper shapes)" },
     Command { name: "info", about: "environment + artifact manifest summary" },
@@ -185,6 +185,31 @@ fn drive_serve<E: lords::coordinator::Engine>(
     Ok(())
 }
 
+/// Export the run's observability artifacts: drained tracing spans as
+/// Chrome-trace JSON (`--trace-out`, load in `chrome://tracing` or
+/// Perfetto) and the server's cumulative registry in Prometheus text
+/// exposition format (`--metrics-out`).
+fn export_obs(
+    registry: &lords::obs::Registry,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
+) -> anyhow::Result<()> {
+    if let Some(path) = trace_out {
+        lords::obs::trace::set_enabled(false);
+        let spans = lords::obs::trace::drain();
+        lords::obs::trace::write_chrome(path, &spans)?;
+        println!("  trace: {} spans -> {path}", spans.len());
+        for (name, count, total_ns) in lords::obs::trace::phase_totals(&spans) {
+            println!("    span {name:<22} x{count:<6} total {:>9.3} ms", total_ns as f64 / 1e6);
+        }
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, registry.render_prometheus())?;
+        println!("  metrics: prometheus text -> {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = model_cfg(args);
     let serve_cfg = ServeCfg {
@@ -208,6 +233,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         seed: args.get_u64("sample-seed", 0),
     };
     let rate = serve_cfg.rate_rps;
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
+    if trace_out.is_some() {
+        lords::obs::trace::set_enabled(true);
+    }
 
     if engine_kind == "pjrt" {
         anyhow::ensure!(
@@ -243,6 +273,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .collect();
         let mut server = Server::new(engine, serve_cfg);
         drive_serve(&mut server, reqs, rate, seed)?;
+        export_obs(&server.obs.registry, trace_out.as_deref(), metrics_out.as_deref())?;
     } else {
         let tb = Testbed::build("llama3-mini", &cfg, args.get_usize("pretrain-steps", 300), 0);
         let mut model = tb.model.clone();
@@ -276,6 +307,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             kv_bits.name(),
             server.engine.kv_pool().peak_bytes() as f64 / (1024.0 * 1024.0)
         );
+        export_obs(&server.obs.registry, trace_out.as_deref(), metrics_out.as_deref())?;
     }
     Ok(())
 }

@@ -829,6 +829,7 @@ impl Model {
         pool: &mut KvPool,
         scratch: &mut DecodeScratch,
     ) -> anyhow::Result<usize> {
+        let _span = crate::obs::span!("model.decode_batch", rows.len());
         let mut pos = Vec::with_capacity(rows.len());
         let mut seen = std::collections::HashSet::with_capacity(rows.len());
         for r in rows {

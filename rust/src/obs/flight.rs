@@ -1,0 +1,278 @@
+//! Flight recorder: a bounded ring buffer of per-request lifecycle
+//! events, kept cheap enough to leave on in production and dumped for
+//! postmortems — on demand, or automatically when the recorder detects
+//! an anomaly.
+//!
+//! The recorder is owned by the serving loop and written from that one
+//! thread, so it needs no synchronization; events are timestamped on the
+//! shared observability clock ([`super::trace::now_ns`]) so a dump lines
+//! up with a Chrome trace of the same run.
+//!
+//! Event schema (one entry per state transition of a request):
+//!
+//! | kind | payload | meaning |
+//! |---|---|---|
+//! | `submitted` | — | request entered the admission queue |
+//! | `rejected` | `reason` | refused (queue full, over KV budget, ...) |
+//! | `admitted` | `prefix_hit_tokens`, `reserved_tokens` | granted KV (worst-case token reservation), prefill started |
+//! | `prefill_chunk` | `tokens` | one chunk of the prompt processed |
+//! | `first_token` | — | TTFT point |
+//! | `done` | `generated` | completed normally |
+//! | `cancelled` | — | cancelled by the client |
+//! | `released` | — | KV blocks and adapter pin returned |
+//!
+//! Anomaly tripwires (both dump the ring into [`FlightRecorder::take_anomaly`]
+//! and log a warning, then re-arm):
+//!
+//! * **Rejection storm** — ≥ [`STORM_REJECTIONS`] rejections inside a
+//!   one-second window, the signature of an admission-control death
+//!   spiral.
+//! * **Stall** — [`STALL_TICKS`] consecutive server steps with work in
+//!   flight but no progress event (no chunk, token, completion, or
+//!   admission), the livelock-adjacent shape.
+
+use super::json::Json;
+use super::trace::now_ns;
+use std::collections::VecDeque;
+
+/// Rejections within one second that count as a storm.
+pub const STORM_REJECTIONS: usize = 8;
+/// Consecutive busy-but-progress-free steps that count as a stall.
+pub const STALL_TICKS: usize = 512;
+
+const DEFAULT_CAP: usize = 4096;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum FlightKind {
+    Submitted,
+    Rejected { reason: &'static str },
+    Admitted { prefix_hit_tokens: usize, reserved_tokens: usize },
+    PrefillChunk { tokens: usize },
+    FirstToken,
+    Done { generated: usize },
+    Cancelled,
+    Released,
+}
+
+#[derive(Clone, Debug)]
+pub struct FlightEvent {
+    pub t_ns: u64,
+    /// Request id (the server's session id).
+    pub seq: u64,
+    pub kind: FlightKind,
+}
+
+#[derive(Debug)]
+pub struct FlightRecorder {
+    ring: VecDeque<FlightEvent>,
+    cap: usize,
+    /// Events displaced from the ring since creation.
+    evicted: u64,
+    /// Timestamps of recent rejections (storm window).
+    reject_times: VecDeque<u64>,
+    /// Consecutive busy steps without a progress event.
+    stall_streak: usize,
+    progressed_since_tick: bool,
+    last_anomaly: Option<Anomaly>,
+}
+
+/// An automatic dump: why it fired plus the ring contents at that moment.
+#[derive(Clone, Debug)]
+pub struct Anomaly {
+    pub reason: String,
+    pub dump: String,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> FlightRecorder {
+        FlightRecorder::new(DEFAULT_CAP)
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            ring: VecDeque::with_capacity(cap.min(DEFAULT_CAP)),
+            cap: cap.max(1),
+            evicted: 0,
+            reject_times: VecDeque::new(),
+            stall_streak: 0,
+            progressed_since_tick: false,
+            last_anomaly: None,
+        }
+    }
+
+    /// Append one lifecycle event (oldest event falls off past capacity).
+    pub fn push(&mut self, seq: u64, kind: FlightKind) {
+        let progress = !matches!(kind, FlightKind::Submitted | FlightKind::Rejected { .. });
+        if progress {
+            self.progressed_since_tick = true;
+        }
+        let t_ns = now_ns();
+        if let FlightKind::Rejected { .. } = kind {
+            self.note_rejection(t_ns);
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.evicted += 1;
+        }
+        self.ring.push_back(FlightEvent { t_ns, seq, kind });
+    }
+
+    fn note_rejection(&mut self, t_ns: u64) {
+        self.reject_times.push_back(t_ns);
+        let window_ns = 1_000_000_000;
+        while self.reject_times.front().is_some_and(|&t| t + window_ns < t_ns) {
+            self.reject_times.pop_front();
+        }
+        if self.reject_times.len() >= STORM_REJECTIONS {
+            let n = self.reject_times.len();
+            self.trip(format!("rejection storm: {n} rejections within 1s"));
+            self.reject_times.clear();
+        }
+    }
+
+    /// Called once per server step. `busy` means work was in flight
+    /// (queued, prefilling, or running); progress is tracked from the
+    /// events pushed since the previous call.
+    pub fn note_tick(&mut self, busy: bool) {
+        if !busy || self.progressed_since_tick {
+            self.stall_streak = 0;
+        } else {
+            self.stall_streak += 1;
+            if self.stall_streak >= STALL_TICKS {
+                let n = self.stall_streak;
+                self.trip(format!("stall: {n} consecutive busy steps without progress"));
+                self.stall_streak = 0;
+            }
+        }
+        self.progressed_since_tick = false;
+    }
+
+    fn trip(&mut self, reason: String) {
+        crate::warn_log!("flight-recorder anomaly: {reason}");
+        self.last_anomaly = Some(Anomaly { reason, dump: self.dump() });
+    }
+
+    /// The most recent automatic dump, if a tripwire fired (clears it).
+    pub fn take_anomaly(&mut self) -> Option<Anomaly> {
+        self.last_anomaly.take()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &FlightEvent> {
+        self.ring.iter()
+    }
+
+    /// Serialize the ring as a JSON document (oldest event first).
+    pub fn dump(&self) -> String {
+        let events: Vec<Json> = self
+            .ring
+            .iter()
+            .map(|e| {
+                let mut kv = vec![
+                    ("t_ns".into(), Json::Num(e.t_ns as f64)),
+                    ("seq".into(), Json::Num(e.seq as f64)),
+                    ("kind".into(), Json::Str(kind_name(&e.kind).into())),
+                ];
+                match &e.kind {
+                    FlightKind::Rejected { reason } => {
+                        kv.push(("reason".into(), Json::Str(reason.to_string())));
+                    }
+                    FlightKind::Admitted { prefix_hit_tokens, reserved_tokens } => {
+                        kv.push((
+                            "prefix_hit_tokens".into(),
+                            Json::Num(*prefix_hit_tokens as f64),
+                        ));
+                        kv.push(("reserved_tokens".into(), Json::Num(*reserved_tokens as f64)));
+                    }
+                    FlightKind::PrefillChunk { tokens } => {
+                        kv.push(("tokens".into(), Json::Num(*tokens as f64)));
+                    }
+                    FlightKind::Done { generated } => {
+                        kv.push(("generated".into(), Json::Num(*generated as f64)));
+                    }
+                    _ => {}
+                }
+                Json::Obj(kv)
+            })
+            .collect();
+        Json::Obj(vec![
+            ("events".into(), Json::Arr(events)),
+            ("evicted".into(), Json::Num(self.evicted as f64)),
+        ])
+        .render()
+    }
+}
+
+fn kind_name(k: &FlightKind) -> &'static str {
+    match k {
+        FlightKind::Submitted => "submitted",
+        FlightKind::Rejected { .. } => "rejected",
+        FlightKind::Admitted { .. } => "admitted",
+        FlightKind::PrefillChunk { .. } => "prefill_chunk",
+        FlightKind::FirstToken => "first_token",
+        FlightKind::Done { .. } => "done",
+        FlightKind::Cancelled => "cancelled",
+        FlightKind::Released => "released",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_dump_parses() {
+        let mut fr = FlightRecorder::new(4);
+        for seq in 0..6 {
+            fr.push(seq, FlightKind::Submitted);
+        }
+        assert_eq!(fr.len(), 4);
+        let doc = Json::parse(&fr.dump()).unwrap();
+        let events = doc.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        // oldest two fell off
+        assert_eq!(events[0].get("seq").unwrap().as_num(), Some(2.0));
+        assert_eq!(doc.get("evicted").unwrap().as_num(), Some(2.0));
+    }
+
+    #[test]
+    fn rejection_storm_trips() {
+        let mut fr = FlightRecorder::default();
+        for seq in 0..STORM_REJECTIONS as u64 {
+            fr.push(seq, FlightKind::Rejected { reason: "queue_full" });
+        }
+        let anomaly = fr.take_anomaly().expect("storm should trip");
+        assert!(anomaly.reason.contains("rejection storm"));
+        assert!(Json::parse(&anomaly.dump).is_ok());
+        // tripwire re-arms: no anomaly pending afterwards
+        assert!(fr.take_anomaly().is_none());
+    }
+
+    #[test]
+    fn stall_trips_only_when_busy_without_progress() {
+        let mut fr = FlightRecorder::default();
+        for _ in 0..STALL_TICKS {
+            fr.note_tick(false); // idle: never a stall
+        }
+        assert!(fr.take_anomaly().is_none());
+        for _ in 0..STALL_TICKS {
+            fr.push(1, FlightKind::PrefillChunk { tokens: 8 });
+            fr.note_tick(true); // busy but progressing
+        }
+        assert!(fr.take_anomaly().is_none());
+        for _ in 0..STALL_TICKS {
+            fr.note_tick(true); // busy, no progress
+        }
+        let anomaly = fr.take_anomaly().expect("stall should trip");
+        assert!(anomaly.reason.contains("stall"));
+    }
+}

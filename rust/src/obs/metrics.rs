@@ -1,0 +1,531 @@
+//! Metrics registry — counters, gauges, and fixed-bucket histograms
+//! behind cheap clonable handles.
+//!
+//! The registry is the slow path: registration (and get-or-register
+//! lookup) takes a mutex over a sorted map. The handles it returns are
+//! `Arc`-shared plain atomics — incrementing a [`Counter`], setting a
+//! [`Gauge`], or observing into a [`Histogram`] is a handful of atomic
+//! ops with no lock, safe from any thread. Hot paths cache handles at
+//! construction time and never touch the registry again.
+//!
+//! Two exposition formats, both with deterministic ordering (metrics
+//! sorted by name, then by label set):
+//!
+//! * [`Registry::render_prometheus`] — the Prometheus text format
+//!   (`# TYPE` line per family, `_bucket`/`_sum`/`_count` expansion for
+//!   histograms, label values escaped per the spec).
+//! * [`Registry::snapshot`] → [`Snapshot::to_json`] — a JSON document
+//!   that [`Snapshot::from_json`] parses back losslessly (round-trip
+//!   gated by `tests/obs.rs`).
+
+use super::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonically increasing event count.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time level (occupancy, bytes resident, queue depth).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct HistInner {
+    /// Upper bounds of the finite buckets (strictly increasing). An
+    /// implicit `+Inf` bucket always follows.
+    bounds: Vec<f64>,
+    /// One slot per finite bound plus the `+Inf` overflow slot.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum of observed values, stored as f64 bits (CAS-add).
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram with Prometheus cumulative-`le` semantics: an
+/// observation lands in the first bucket whose bound is `>= v`.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one finite bucket");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must strictly increase: {bounds:?}"
+        );
+        Histogram(Arc::new(HistInner {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+        }))
+    }
+
+    pub fn observe(&self, v: f64) {
+        let h = &self.0;
+        let idx = h.bounds.iter().position(|&b| v <= b).unwrap_or(h.bounds.len());
+        h.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = h.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match h.sum_bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket counts (finite buckets in bound order, then `+Inf`).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.0.bounds
+    }
+}
+
+/// Sorted label pairs — the identity of a metric within its family.
+type Labels = Vec<(String, String)>;
+
+fn labels_of(pairs: &[(&str, &str)]) -> Labels {
+    let mut ls: Labels =
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    ls.sort();
+    ls
+}
+
+#[derive(Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+#[derive(Debug, Default)]
+struct RegInner {
+    /// family name → label set → metric. BTreeMaps give the exposition
+    /// its stable ordering for free.
+    families: BTreeMap<String, BTreeMap<Labels, Metric>>,
+}
+
+/// Process-wide metric store (see the module doc).
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<RegInner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register a counter. Repeated calls with the same name and
+    /// labels return handles to the same underlying value.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let ls = labels_of(labels);
+        let mut reg = self.inner.lock().unwrap();
+        let fam = reg.families.entry(name.to_string()).or_default();
+        match fam.entry(ls).or_insert_with(|| Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c.clone(),
+            other => panic!("metric '{name}' already registered as {}", kind_name(other)),
+        }
+    }
+
+    /// Get-or-register a gauge.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let ls = labels_of(labels);
+        let mut reg = self.inner.lock().unwrap();
+        let fam = reg.families.entry(name.to_string()).or_default();
+        match fam.entry(ls).or_insert_with(|| Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g.clone(),
+            other => panic!("metric '{name}' already registered as {}", kind_name(other)),
+        }
+    }
+
+    /// Get-or-register a histogram. The first registration fixes the
+    /// bucket bounds; later calls return the existing histogram (their
+    /// `bounds` argument is ignored).
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)], bounds: &[f64]) -> Histogram {
+        let ls = labels_of(labels);
+        let mut reg = self.inner.lock().unwrap();
+        let fam = reg.families.entry(name.to_string()).or_default();
+        match fam.entry(ls).or_insert_with(|| Metric::Histogram(Histogram::new(bounds))) {
+            Metric::Histogram(h) => h.clone(),
+            other => panic!("metric '{name}' already registered as {}", kind_name(other)),
+        }
+    }
+
+    /// Prometheus text exposition (version 0.0.4): one `# TYPE` line per
+    /// family, metrics sorted by name then label set, label values
+    /// escaped (`\\`, `\"`, `\n`).
+    pub fn render_prometheus(&self) -> String {
+        let reg = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in &reg.families {
+            let kind = fam.values().next().map(kind_name).unwrap_or("gauge");
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for (labels, metric) in fam {
+                match metric {
+                    Metric::Counter(c) => {
+                        out.push_str(&format!(
+                            "{name}{} {}\n",
+                            prom_labels(labels, None),
+                            c.get()
+                        ));
+                    }
+                    Metric::Gauge(g) => {
+                        out.push_str(&format!(
+                            "{name}{} {}\n",
+                            prom_labels(labels, None),
+                            g.get()
+                        ));
+                    }
+                    Metric::Histogram(h) => {
+                        let counts = h.bucket_counts();
+                        let mut cum = 0u64;
+                        for (i, b) in h.bounds().iter().enumerate() {
+                            cum += counts[i];
+                            out.push_str(&format!(
+                                "{name}_bucket{} {cum}\n",
+                                prom_labels(labels, Some(&fmt_bound(*b)))
+                            ));
+                        }
+                        cum += counts[h.bounds().len()];
+                        out.push_str(&format!(
+                            "{name}_bucket{} {cum}\n",
+                            prom_labels(labels, Some("+Inf"))
+                        ));
+                        out.push_str(&format!(
+                            "{name}_sum{} {}\n",
+                            prom_labels(labels, None),
+                            fmt_value(h.sum())
+                        ));
+                        out.push_str(&format!(
+                            "{name}_count{} {}\n",
+                            prom_labels(labels, None),
+                            h.count()
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let reg = self.inner.lock().unwrap();
+        let mut snap = Snapshot::default();
+        for (name, fam) in &reg.families {
+            for (labels, metric) in fam {
+                match metric {
+                    Metric::Counter(c) => snap.counters.push(CounterSample {
+                        name: name.clone(),
+                        labels: labels.clone(),
+                        value: c.get(),
+                    }),
+                    Metric::Gauge(g) => snap.gauges.push(GaugeSample {
+                        name: name.clone(),
+                        labels: labels.clone(),
+                        value: g.get(),
+                    }),
+                    Metric::Histogram(h) => snap.histograms.push(HistogramSample {
+                        name: name.clone(),
+                        labels: labels.clone(),
+                        bounds: h.bounds().to_vec(),
+                        buckets: h.bucket_counts(),
+                        sum: h.sum(),
+                        count: h.count(),
+                    }),
+                }
+            }
+        }
+        snap
+    }
+
+    /// JSON snapshot (see [`Snapshot::to_json`]).
+    pub fn render_json(&self) -> String {
+        self.snapshot().to_json()
+    }
+}
+
+fn kind_name(m: &Metric) -> &'static str {
+    match m {
+        Metric::Counter(_) => "counter",
+        Metric::Gauge(_) => "gauge",
+        Metric::Histogram(_) => "histogram",
+    }
+}
+
+/// `{a="x",le="1"}` with spec escaping; empty string for no labels.
+fn prom_labels(labels: &Labels, le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", prom_escape(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn prom_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Bucket bound formatting: integers bare, floats shortest-round-trip —
+/// both stable across runs.
+fn fmt_bound(b: f64) -> String {
+    fmt_value(b)
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:?}")
+    }
+}
+
+// ------------------------------------------------------------- snapshot
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<CounterSample>,
+    pub gauges: Vec<GaugeSample>,
+    pub histograms: Vec<HistogramSample>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterSample {
+    pub name: String,
+    pub labels: Labels,
+    pub value: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct GaugeSample {
+    pub name: String,
+    pub labels: Labels,
+    pub value: i64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSample {
+    pub name: String,
+    pub labels: Labels,
+    /// Finite bucket bounds; `buckets` has one extra `+Inf` slot.
+    pub bounds: Vec<f64>,
+    pub buckets: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+fn labels_json(labels: &Labels) -> Json {
+    Json::Obj(labels.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect())
+}
+
+fn labels_from_json(v: &Json) -> Result<Labels, String> {
+    match v {
+        Json::Obj(kv) => kv
+            .iter()
+            .map(|(k, v)| {
+                v.as_str()
+                    .map(|s| (k.clone(), s.to_string()))
+                    .ok_or_else(|| format!("label '{k}' is not a string"))
+            })
+            .collect(),
+        _ => Err("labels must be an object".into()),
+    }
+}
+
+impl Snapshot {
+    /// Deterministic JSON document; [`Snapshot::from_json`] inverts it.
+    pub fn to_json(&self) -> String {
+        let counters = Json::Arr(
+            self.counters
+                .iter()
+                .map(|c| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(c.name.clone())),
+                        ("labels".into(), labels_json(&c.labels)),
+                        ("value".into(), Json::Num(c.value as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let gauges = Json::Arr(
+            self.gauges
+                .iter()
+                .map(|g| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(g.name.clone())),
+                        ("labels".into(), labels_json(&g.labels)),
+                        ("value".into(), Json::Num(g.value as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let histograms = Json::Arr(
+            self.histograms
+                .iter()
+                .map(|h| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(h.name.clone())),
+                        ("labels".into(), labels_json(&h.labels)),
+                        (
+                            "bounds".into(),
+                            Json::Arr(h.bounds.iter().map(|&b| Json::Num(b)).collect()),
+                        ),
+                        (
+                            "buckets".into(),
+                            Json::Arr(h.buckets.iter().map(|&c| Json::Num(c as f64)).collect()),
+                        ),
+                        ("sum".into(), Json::Num(h.sum)),
+                        ("count".into(), Json::Num(h.count as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("counters".into(), counters),
+            ("gauges".into(), gauges),
+            ("histograms".into(), histograms),
+        ])
+        .render()
+    }
+
+    /// Parse a document produced by [`Snapshot::to_json`].
+    pub fn from_json(text: &str) -> Result<Snapshot, String> {
+        let doc = Json::parse(text)?;
+        let mut snap = Snapshot::default();
+        for c in doc.get("counters").and_then(Json::as_arr).ok_or("missing counters")? {
+            snap.counters.push(CounterSample {
+                name: c.get("name").and_then(Json::as_str).ok_or("counter name")?.to_string(),
+                labels: labels_from_json(c.get("labels").ok_or("counter labels")?)?,
+                value: c.get("value").and_then(Json::as_num).ok_or("counter value")? as u64,
+            });
+        }
+        for g in doc.get("gauges").and_then(Json::as_arr).ok_or("missing gauges")? {
+            snap.gauges.push(GaugeSample {
+                name: g.get("name").and_then(Json::as_str).ok_or("gauge name")?.to_string(),
+                labels: labels_from_json(g.get("labels").ok_or("gauge labels")?)?,
+                value: g.get("value").and_then(Json::as_num).ok_or("gauge value")? as i64,
+            });
+        }
+        for h in doc.get("histograms").and_then(Json::as_arr).ok_or("missing histograms")? {
+            let nums = |key: &str| -> Result<Vec<f64>, String> {
+                h.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("histogram {key}"))?
+                    .iter()
+                    .map(|v| v.as_num().ok_or_else(|| format!("{key} entry")))
+                    .collect()
+            };
+            snap.histograms.push(HistogramSample {
+                name: h.get("name").and_then(Json::as_str).ok_or("histogram name")?.to_string(),
+                labels: labels_from_json(h.get("labels").ok_or("histogram labels")?)?,
+                bounds: nums("bounds")?,
+                buckets: nums("buckets")?.into_iter().map(|v| v as u64).collect(),
+                sum: h.get("sum").and_then(Json::as_num).ok_or("histogram sum")?,
+                count: h.get("count").and_then(Json::as_num).ok_or("histogram count")? as u64,
+            });
+        }
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_handles_share_state() {
+        let reg = Registry::new();
+        let a = reg.counter("ticks", &[]);
+        let b = reg.counter("ticks", &[]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = reg.gauge("depth", &[]);
+        g.set(7);
+        g.add(-2);
+        assert_eq!(reg.gauge("depth", &[]).get(), 5);
+    }
+
+    #[test]
+    fn labels_distinguish_series() {
+        let reg = Registry::new();
+        reg.counter("req", &[("adapter", "t0")]).inc();
+        reg.counter("req", &[("adapter", "t1")]).add(2);
+        assert_eq!(reg.counter("req", &[("adapter", "t0")]).get(), 1);
+        assert_eq!(reg.counter("req", &[("adapter", "t1")]).get(), 2);
+        // label order is not identity
+        reg.counter("x", &[("a", "1"), ("b", "2")]).inc();
+        assert_eq!(reg.counter("x", &[("b", "2"), ("a", "1")]).get(), 1);
+    }
+
+    #[test]
+    fn histogram_le_semantics() {
+        let reg = Registry::new();
+        let h = reg.histogram("lat", &[], &[1.0, 2.0, 4.0]);
+        h.observe(1.0); // lands in le=1 (inclusive)
+        h.observe(2.5); // le=4
+        h.observe(9.0); // +Inf
+        assert_eq!(h.bucket_counts(), vec![1, 0, 1, 1]);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        reg.counter("m", &[]);
+        reg.gauge("m", &[]);
+    }
+}

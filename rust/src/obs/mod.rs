@@ -1,0 +1,37 @@
+//! # Observability: metrics registry, tracing spans, flight recorder
+//!
+//! Zero-dependency instrumentation for the serving stack, built so that
+//! *off is near-free* (one relaxed atomic load per would-be span; metric
+//! handles are plain atomics with no branches) and *on does not perturb
+//! results* (served token streams are bitwise identical with tracing
+//! enabled — enforced by `tests/obs.rs`).
+//!
+//! Three pillars:
+//!
+//! * [`metrics`] — a [`metrics::Registry`] of counters, gauges, and
+//!   fixed-bucket histograms behind cheap `Arc`'d handles, rendered as
+//!   Prometheus text exposition or a JSON snapshot that round-trips.
+//!   The serving loop keeps a cumulative registry (`lords_*` families)
+//!   next to the windowed `ServeMetrics` report.
+//! * [`trace`] — structured spans via the [`crate::span!`] macro
+//!   (re-exported here, so call sites write `obs::span!`), recorded into
+//!   lock-free per-thread buffers and exported as Chrome
+//!   `chrome://tracing` JSON (`serve --trace-out trace.json`).
+//! * [`flight`] — a bounded ring of per-request lifecycle events
+//!   (submitted → admitted → prefill chunks → first token →
+//!   done/cancelled/rejected), dumpable on demand and automatically on
+//!   anomalies (rejection storm, stall).
+//!
+//! [`json`] underpins the export paths: a minimal JSON value model,
+//! parser, and deterministic printer (the vendored dependency set has no
+//! `serde`).
+
+pub mod flight;
+pub mod json;
+pub mod metrics;
+pub mod trace;
+
+pub use crate::span;
+pub use flight::{FlightEvent, FlightKind, FlightRecorder};
+pub use metrics::{Counter, Gauge, Histogram, Registry, Snapshot};
+pub use trace::{SpanEvent, SpanGuard};
