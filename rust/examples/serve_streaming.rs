@@ -11,7 +11,11 @@
 //! Set `LORDS_TRACE_OUT=trace.json` to record tracing spans and write
 //! them as Chrome-trace JSON on exit, and `LORDS_METRICS_OUT=m.prom`
 //! to dump the server's cumulative registry in Prometheus text format
-//! (this is what CI's examples-smoke job validates).
+//! (this is what CI's examples-smoke job validates). Set
+//! `LORDS_ADMIN_ADDR=127.0.0.1:8841` to serve `/metrics`, `/quality`,
+//! `/trace`, `/flight`, and `/healthz` live while the demo runs
+//! (`LORDS_ADMIN_LINGER_MS` keeps the endpoint up after the run so an
+//! external scraper can catch it — CI curls it from a parallel shell).
 
 use lords::config::ServeCfg;
 use lords::coordinator::{
@@ -40,10 +44,29 @@ fn main() -> anyhow::Result<()> {
         false,
     );
 
-    // int8 paged KV under the default byte budget
+    // int8 paged KV under the default byte budget; logit-drift sentinel
+    // on a slow cadence so the quality families populate live
     let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 16 };
     let engine = NativeEngine::with_kv(model, "stream", kv);
-    let mut server = Server::new(engine, ServeCfg::default());
+    let serve = ServeCfg { sentinel_every_n_ticks: 4, ..ServeCfg::default() };
+    let mut server = Server::new(engine, serve);
+    // base weight quant error vs the pre-quantization reference weights
+    lords::obs::quality::record_weight_errors(
+        &server.obs.registry,
+        "base",
+        &tb.model,
+        &server.engine.model,
+    );
+    let admin = if let Ok(addr) = std::env::var("LORDS_ADMIN_ADDR") {
+        let a = lords::obs::AdminServer::bind(
+            &addr,
+            std::sync::Arc::clone(&server.obs.registry),
+        )?;
+        println!("admin endpoint listening on http://{}", a.local_addr());
+        Some(a)
+    } else {
+        None
+    };
 
     // four sessions: two greedy, two sampled (seeded — reruns replay)
     let mut rng = Rng::new(1);
@@ -126,6 +149,19 @@ fn main() -> anyhow::Result<()> {
     if let Some(path) = metrics_out {
         std::fs::write(&path, server.obs.registry.render_prometheus())?;
         println!("metrics: prometheus text -> {path}");
+    }
+    if let Some(a) = &admin {
+        a.publish_flight(server.obs.flight.dump());
+        // keep the endpoint up so an external scraper (CI) can fetch the
+        // final exposition after the run completes
+        let linger: u64 = std::env::var("LORDS_ADMIN_LINGER_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        if linger > 0 {
+            println!("admin endpoint lingering {linger} ms for scrapers");
+            std::thread::sleep(std::time::Duration::from_millis(linger));
+        }
     }
     Ok(())
 }

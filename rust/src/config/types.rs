@@ -219,6 +219,25 @@ pub struct ServeCfg {
     /// 0 = unlimited (whole remaining prompt per tick, the lockstep
     /// schedule). Ignored by engines without chunked-prefill support.
     pub prefill_chunk_tokens: usize,
+    /// Run the logit-drift sentinel every N decode ticks (0 = off): one
+    /// running sequence's last decode step is replayed through the
+    /// engine's reference path on a shadow KV sequence and compared
+    /// against the batched logits. Observe-only — the served streams are
+    /// bitwise unperturbed (`tests/obs.rs` enforces this).
+    pub sentinel_every_n_ticks: usize,
+    /// Flight-recorder rejection-storm threshold: this many rejections
+    /// inside `storm_window_ms` trip an anomaly dump. 0 disables.
+    pub storm_rejections: usize,
+    /// Rejection-storm window in milliseconds.
+    pub storm_window_ms: u64,
+    /// Flight-recorder stall threshold: consecutive busy-but-progress-free
+    /// server steps that trip an anomaly dump. 0 disables.
+    pub stall_ticks: usize,
+    /// Relative Frobenius seal error above which a packed KV tile counts
+    /// as a breach (bumping `lords_kv_seal_err_breaches_total` and
+    /// tripping a flight-recorder anomaly). 0 disables breach detection;
+    /// the seal-error histogram itself always records.
+    pub seal_err_threshold: f64,
 }
 
 impl Default for ServeCfg {
@@ -234,6 +253,11 @@ impl Default for ServeCfg {
             kv_budget_mib: 0.0,
             rate_rps: 0.0,
             prefill_chunk_tokens: 256,
+            sentinel_every_n_ticks: 0,
+            storm_rejections: 8,
+            storm_window_ms: 1_000,
+            stall_ticks: 512,
+            seal_err_threshold: 0.5,
         }
     }
 }
@@ -255,6 +279,20 @@ impl ServeCfg {
                 "prefill_chunk_tokens",
                 d.prefill_chunk_tokens,
             ),
+            sentinel_every_n_ticks: doc.usize_or(
+                "serve",
+                "sentinel_every_n_ticks",
+                d.sentinel_every_n_ticks,
+            ),
+            storm_rejections: doc.usize_or("serve", "storm_rejections", d.storm_rejections),
+            storm_window_ms: doc.usize_or("serve", "storm_window_ms", d.storm_window_ms as usize)
+                as u64,
+            stall_ticks: doc.usize_or("serve", "stall_ticks", d.stall_ticks),
+            seal_err_threshold: doc.f32_or(
+                "serve",
+                "seal_err_threshold",
+                d.seal_err_threshold as f32,
+            ) as f64,
             ..d
         }
     }
@@ -275,7 +313,7 @@ mod tests {
     #[test]
     fn configs_from_doc() {
         let doc = TomlDoc::parse(
-            "[quant]\nmethod = gptq\nblock = 256\n[model]\nd_model = 128\n[serve]\nmax_queue = 9\n[qat]\nsteps = 77\n",
+            "[quant]\nmethod = gptq\nblock = 256\n[model]\nd_model = 128\n[serve]\nmax_queue = 9\nstall_ticks = 64\n[qat]\nsteps = 77\n",
         )
         .unwrap();
         let q = QuantCfg::from_doc(&doc);
@@ -289,6 +327,11 @@ mod tests {
         assert_eq!(s.kv_bits, 32);
         assert_eq!(s.kv_budget_mib, 0.0);
         assert_eq!(s.rate_rps, 0.0);
+        assert_eq!(s.sentinel_every_n_ticks, 0);
+        assert_eq!(s.storm_rejections, 8);
+        assert_eq!(s.storm_window_ms, 1_000);
+        assert_eq!(s.stall_ticks, 64);
+        assert_eq!(s.seal_err_threshold, 0.5);
         let t = TrainCfg::from_doc(&doc, "qat");
         assert_eq!(t.steps, 77);
     }

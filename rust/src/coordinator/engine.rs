@@ -2,14 +2,17 @@
 //! PJRT artifact path (bucketed prefill/decode executables, per-sequence
 //! host-side KV slabs packed into batch tensors per step).
 
-use super::request::{sample, Request, SamplingParams};
+use super::request::{greedy, sample, Request, SamplingParams};
 use crate::adapters::{AdapterFactors, AdapterRegistry, BASE_ADAPTER};
-use crate::kvquant::{KvPool, KvQuantCfg, PrefixCache};
+use crate::kvquant::{KvBits, KvPool, KvQuantCfg, PrefixCache};
 use crate::model::{DecodeRow, DecodeScratch, Model};
+use crate::obs::quality::{self, KvSealObs};
 use crate::obs::{self, Counter, Gauge, Histogram, Registry};
 use crate::runtime::{ExecutorHandle, HostTensor, Manifest};
+use crate::tensor::Matrix;
 use crate::util::Rng;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// In-flight sequence state owned by the server.
 #[derive(Clone, Debug)]
@@ -173,6 +176,29 @@ pub trait Engine {
     fn observe(&mut self, reg: &Registry) {
         let _ = reg;
     }
+
+    /// Install quantization-quality telemetry into `reg`: per-layer weight
+    /// quant-error gauges, per-tier KV seal-error histograms (the int4
+    /// tier arms the flight recorder above `seal_err_threshold`), and
+    /// block-heat export. Strictly observe-only — served token streams
+    /// must stay bitwise identical with telemetry installed. Called once
+    /// by `Server::new` after [`Self::kv_init`]. Default: the engine has
+    /// nothing to report.
+    fn install_quality(&mut self, reg: &Arc<Registry>, seal_err_threshold: f64) {
+        let _ = (reg, seal_err_threshold);
+    }
+
+    /// Logit-drift sentinel: re-run sequence `s`'s most recent decode step
+    /// through the engine's reference path (against a bit-exact shadow
+    /// copy of its KV state) and compare with the logits actually served.
+    /// Returns `(top1_agree, max_abs_drift)`, or `None` when the engine
+    /// has no reference path or the probe could not run (e.g. the pool
+    /// cannot back the shadow). Must not perturb the sequence, its KV
+    /// state, or its sampling stream.
+    fn sentinel_probe(&mut self, s: &SeqState) -> Option<(bool, f64)> {
+        let _ = s;
+        None
+    }
 }
 
 // ---------------------------------------------------------------- native
@@ -223,6 +249,20 @@ pub struct NativeEngine {
     prefix: PrefixCache,
     /// metric handles cached by the first [`Engine::observe`] call.
     obs: Option<EngineObs>,
+    /// quality-telemetry state installed by [`Engine::install_quality`].
+    quality: Option<QualityState>,
+}
+
+/// Reserved sequence id for the logit-drift sentinel's shadow decode.
+/// Never collides with served sequences (request ids count up from 0) and
+/// is released before [`Engine::sentinel_probe`] returns.
+const SENTINEL_SEQ: u64 = u64::MAX;
+
+/// State behind [`Engine::install_quality`]: the shared metrics registry
+/// plus the int4 seal-error threshold that arms the flight recorder.
+struct QualityState {
+    reg: Arc<Registry>,
+    seal_err_threshold: f64,
 }
 
 /// Registry handles for the engine-owned gauges, resolved once (the
@@ -242,12 +282,18 @@ struct EngineObs {
     evictions_seen: u64,
     /// tenant-groups per batched decode tick (weight streams per tick).
     decode_tenant_groups: Histogram,
+    /// ticks since each referenced KV block was last read (per tick).
+    kv_block_coldness: Histogram,
 }
 
 impl EngineObs {
     fn new(reg: &Registry) -> EngineObs {
         EngineObs {
-            kv_blocks_used: reg.gauge("lords_kv_blocks_used", &[]),
+            kv_blocks_used: reg.gauge_with_help(
+                "lords_kv_blocks_used",
+                &[],
+                "Sealed KV blocks currently allocated.",
+            ),
             kv_blocks_capacity: reg.gauge("lords_kv_blocks_capacity", &[]),
             kv_staging_bytes: reg.gauge("lords_kv_staging_bytes", &[]),
             kv_used_bytes: reg.gauge("lords_kv_used_bytes", &[]),
@@ -262,6 +308,12 @@ impl EngineObs {
                 "lords_decode_tenant_groups",
                 &[],
                 &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+            ),
+            kv_block_coldness: reg.histogram_with_help(
+                quality::COLDNESS_FAMILY,
+                &[],
+                quality::COLDNESS_BOUNDS,
+                "Ticks since each referenced KV block was last read, sampled every tick.",
             ),
         }
     }
@@ -311,6 +363,7 @@ impl NativeEngine {
             last_decode_groups: 0,
             prefix: PrefixCache::new(),
             obs: None,
+            quality: None,
         }
     }
 
@@ -346,6 +399,9 @@ impl NativeEngine {
     /// hot-register them (evicting LRU adapters to fit the byte budget).
     pub fn register_adapter(&mut self, id: &str, factors: AdapterFactors) -> anyhow::Result<()> {
         factors.validate_against(&self.model)?;
+        if let Some(q) = &self.quality {
+            quality::record_adapter_weight_errors(&q.reg, id, &self.model, &factors);
+        }
         self.registry.register(id, factors)
     }
 
@@ -392,6 +448,77 @@ impl NativeEngine {
         }
         Ok(())
     }
+
+    /// (Re)install the pool's seal-error sink from the current quality
+    /// state. Packed KV tiers get a per-tier seal-error histogram; only
+    /// the int4 tier arms the flight-recorder breach threshold (int8 seal
+    /// error sits orders of magnitude below any useful alarm level).
+    fn install_seal_obs(&mut self) {
+        let Some(q) = &self.quality else { return };
+        let obs = match self.kv_cfg.bits {
+            KvBits::F32 => None,
+            bits => {
+                let threshold =
+                    if matches!(bits, KvBits::Int4) { q.seal_err_threshold } else { 0.0 };
+                Some(KvSealObs::new(&q.reg, bits.name(), threshold))
+            }
+        };
+        self.pool.set_seal_obs(obs);
+    }
+
+    /// Build the sentinel's shadow KV state for `s` — fork its sealed
+    /// blocks zero-copy, then copy the dense staging tail bit-exactly —
+    /// and run one reference decode step over it. `len` is the token
+    /// count *before* the step being replayed; `blocks` are the sealed
+    /// block ids covering `len / block_tokens` whole blocks. The caller
+    /// releases [`SENTINEL_SEQ`] whether or not this succeeds.
+    ///
+    /// The tail copy is exact for every KV tier: staging rows are dense
+    /// f32, a seal never clears them, and the decode tick wrote only slot
+    /// `len % block_tokens` — outside the copied range.
+    fn sentinel_decode(
+        &mut self,
+        s: &SeqState,
+        token: usize,
+        len: usize,
+        blocks: &[usize],
+    ) -> anyhow::Result<Vec<f32>> {
+        let bt = self.pool.block_tokens();
+        let shared = blocks.len() * bt;
+        anyhow::ensure!(
+            self.pool.fork_at_block(SENTINEL_SEQ, blocks, shared),
+            "sentinel shadow fork failed"
+        );
+        let tail = len - shared;
+        if tail > 0 {
+            let d = self.model.cfg.d_model;
+            let mut crow = vec![0u8; d];
+            for layer in 0..self.model.cfg.n_layers {
+                let mut k = Matrix::zeros(tail, d);
+                let mut v = Matrix::zeros(tail, d);
+                {
+                    let view = self.pool.view(s.id, layer, len);
+                    for r in 0..tail {
+                        view.k_row_into(shared + r, &mut crow, k.row_mut(r));
+                        view.v_row_into(shared + r, &mut crow, v.row_mut(r));
+                    }
+                }
+                self.pool.append_rows(SENTINEL_SEQ, layer, shared, &k, &v)?;
+            }
+        }
+        self.pool.commit(SENTINEL_SEQ, len);
+        // The serving decode already recorded this tick's seal errors for
+        // `s`; the shadow's re-seal must not double-count them.
+        let saved = self.pool.take_seal_obs();
+        let out = self.model.decode_pooled(
+            token,
+            &mut self.pool,
+            SENTINEL_SEQ,
+            self.registry.get(&s.adapter),
+        );
+        self.pool.set_seal_obs(saved);
+        out
+    }
 }
 
 impl Engine for NativeEngine {
@@ -423,6 +550,8 @@ impl Engine for NativeEngine {
         // the trie over against the new storage
         self.prefix =
             if self.prefix.enabled() { PrefixCache::new() } else { PrefixCache::disabled() };
+        // the old pool took its seal-error sink with it
+        self.install_seal_obs();
         crate::info!(
             "native engine[{}]: KV pool {} blocks x {} B ({} KV, {:.1} MiB budget)",
             self.label,
@@ -656,6 +785,13 @@ impl Engine for NativeEngine {
     /// cumulative stat.
     fn observe(&mut self, reg: &Registry) {
         let o = self.obs.get_or_insert_with(|| EngineObs::new(reg));
+        // advance the heat clock, then export how stale every referenced
+        // block's last read is (attention touches sealed blocks through
+        // `KvPool::view`, which stamps them)
+        self.pool.begin_heat_tick();
+        for ticks in self.pool.block_coldness() {
+            o.kv_block_coldness.observe(ticks as f64);
+        }
         o.kv_blocks_used.set(self.pool.used_blocks() as i64);
         o.kv_blocks_capacity.set(self.pool.capacity_blocks() as i64);
         o.kv_staging_bytes
@@ -670,6 +806,55 @@ impl Engine for NativeEngine {
         let evictions = stats.evictions as u64;
         o.adapter_evictions.add(evictions.saturating_sub(o.evictions_seen));
         o.evictions_seen = evictions;
+    }
+
+    /// Record weight quant-error gauges for the packed base (QAT shadows)
+    /// and every resident tenant adapter, then install the pool's
+    /// seal-error sink. Later [`NativeEngine::register_adapter`] calls
+    /// keep recording against the same registry.
+    fn install_quality(&mut self, reg: &Arc<Registry>, seal_err_threshold: f64) {
+        self.quality = Some(QualityState { reg: Arc::clone(reg), seal_err_threshold });
+        quality::record_self_weight_errors(reg, &self.model);
+        for id in self.registry.resident_ids() {
+            if let Some(factors) = self.registry.get(&id) {
+                quality::record_adapter_weight_errors(reg, &id, &self.model, factors);
+            }
+        }
+        self.install_seal_obs();
+    }
+
+    /// Replay `s`'s latest decode step through [`Model::decode_pooled`]
+    /// (the per-sequence reference path) on a bit-exact shadow of its KV
+    /// state. The sealed prefix is forked zero-copy; the staging tail is
+    /// copied dense. Because the batched tick is token-identical to the
+    /// reference path and the shadow state is bit-exact, a healthy engine
+    /// reports `(true, 0.0)` — any drift is a real quality regression.
+    fn sentinel_probe(&mut self, s: &SeqState) -> Option<(bool, f64)> {
+        if s.last_logits.is_empty() {
+            return None;
+        }
+        let token = *s.tokens.last()?;
+        // the pool holds the post-decode state; the step we replay saw
+        // one token less
+        let len = self.pool.seq_len(s.id)?.checked_sub(1)?;
+        let bt = self.pool.block_tokens();
+        let mut blocks = Vec::with_capacity(len / bt);
+        for bi in 0..len / bt {
+            blocks.push(self.pool.block_id_at(s.id, bi * bt)?);
+        }
+        let probe = self.sentinel_decode(s, token, len, &blocks);
+        self.pool.release(SENTINEL_SEQ);
+        let probe = probe.ok()?;
+        if probe.len() != s.last_logits.len() {
+            return None;
+        }
+        let agree = greedy(&probe) == greedy(&s.last_logits);
+        let drift = probe
+            .iter()
+            .zip(&s.last_logits)
+            .map(|(a, b)| (f64::from(*a) - f64::from(*b)).abs())
+            .fold(0.0, f64::max);
+        Some((agree, drift))
     }
 }
 

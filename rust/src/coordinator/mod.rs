@@ -153,16 +153,38 @@
 //! gated by `tests/decode_batch.rs`). `ServeMetrics::avg_decode_batch`
 //! reports how many sequences each tick amortized over.
 //!
-//! # Observability (spans, metrics registry, flight recorder)
+//! # Observability (spans, metrics registry, flight recorder, quality)
 //!
 //! Every server owns a [`ServerObs`](server::ServerObs): a cumulative
 //! [`Registry`](crate::obs::Registry) of Prometheus-style counters /
 //! gauges / histograms (never reset — [`ServeMetrics`](metrics::ServeMetrics)
 //! stays the windowed report) plus a bounded
 //! [`FlightRecorder`](crate::obs::FlightRecorder) of per-request lifecycle
-//! events. Instrumentation must never perturb serving: with tracing off
-//! the span macro is one relaxed atomic load, and token streams are
-//! bitwise identical either way (gated by `tests/obs.rs`).
+//! events. The registry is `Arc`-shared so the admin endpoint
+//! ([`obs::AdminServer`](crate::obs::AdminServer), `serve --admin-addr`)
+//! can render `/metrics` and `/quality` live, mid-run, without touching
+//! the serving loop. Instrumentation must never perturb serving: with
+//! tracing off the span macro is one relaxed atomic load, and token
+//! streams are bitwise identical either way (gated by `tests/obs.rs`).
+//!
+//! **Quantization-quality telemetry** rides in the same registry
+//! ([`obs::quality`](crate::obs::quality)), wired by
+//! [`Engine::install_quality`](engine::Engine::install_quality) at
+//! `Server::new`: per-layer weight quant-error gauges (base at engine
+//! build, per tenant at adapter registration), per-tier KV seal-error
+//! histograms recorded at every block seal (a 4-bit seal error above
+//! [`ServeCfg::seal_err_threshold`](crate::config::ServeCfg) arms a
+//! flight-recorder dump), per-block KV heat exported as a coldness
+//! histogram each tick, and — on the deterministic cadence
+//! [`ServeCfg::sentinel_every_n_ticks`](crate::config::ServeCfg), default
+//! off — a **logit-drift sentinel**: one running sequence's latest decode
+//! step is replayed through the per-sequence reference path on a shadow
+//! KV fork, recording top-1 agreement and max-abs logit drift. The
+//! sentinel is observe-only *by construction*: the shadow sequence shares
+//! sealed blocks copy-on-write, copies the dense tail bit-exactly, and is
+//! released before the next tick, so served token streams are bitwise
+//! identical with the sentinel on or off across every KV tier (gated by
+//! `tests/obs.rs`).
 //!
 //! **Span points** (emitted via [`obs::span!`](macro@crate::span) when
 //! [`obs::trace::set_enabled`](crate::obs::trace::set_enabled) is on, drained
@@ -184,8 +206,10 @@
 //! ```
 //!
 //! **Flight-recorder event schema** (one bounded ring, oldest evicted
-//! first; dumped as JSON on demand or on a rejection storm / stall
-//! anomaly — see [`FlightKind`](crate::obs::FlightKind)):
+//! first; dumped as JSON on demand or on an anomaly — rejection storm,
+//! stall, or KV seal-error breach, thresholds configurable via
+//! [`ServeCfg`](crate::config::ServeCfg) — see
+//! [`FlightKind`](crate::obs::FlightKind)):
 //!
 //! | event | payload | emitted when |
 //! |---|---|---|

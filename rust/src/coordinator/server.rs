@@ -29,8 +29,10 @@ use super::engine::{Engine, SeqState};
 use super::metrics::ServeMetrics;
 use super::request::{Request, Response};
 use crate::config::ServeCfg;
+use crate::obs::quality;
 use crate::obs::{self, Counter, FlightKind, FlightRecorder, Gauge, Histogram, Registry};
 use std::collections::{HashSet, VecDeque};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Handle for an accepted request (the request's own id, echoed back).
@@ -108,7 +110,10 @@ pub enum Event {
 pub struct ServerObs {
     /// Cumulative metric store (the `lords_*` families); render with
     /// [`Registry::render_prometheus`] / [`Registry::render_json`].
-    pub registry: Registry,
+    /// Shared (`Arc`) so a live admin endpoint
+    /// ([`obs::http::AdminServer`](crate::obs::http::AdminServer)) can
+    /// render it from its own thread mid-run.
+    pub registry: Arc<Registry>,
     /// Bounded ring of per-request lifecycle events with anomaly
     /// tripwires (rejection storm, stall) — see
     /// [`FlightRecorder::take_anomaly`].
@@ -127,35 +132,89 @@ pub struct ServerObs {
     prefill_chunk_utilization: Histogram,
     ttft_seconds: Histogram,
     itl_seconds: Histogram,
+    sentinel_probes: Counter,
+    sentinel_skipped: Counter,
+    sentinel_top1_agree: Histogram,
+    sentinel_logit_drift: Histogram,
+    /// `lords_kv_seal_err_breaches_total` — incremented by the engine's
+    /// seal-error sink; the server reads it to arm the flight recorder.
+    seal_breaches: Counter,
+    /// breach count already folded into the flight-recorder tripwire.
+    seal_breaches_seen: u64,
 }
 
 impl ServerObs {
     fn new() -> ServerObs {
-        let registry = Registry::new();
+        let registry = Arc::new(Registry::new());
         let latency = &[0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0];
+        // registered lazily per adapter label in `admit`; the family help
+        // is recorded up front so the exposition always carries it
+        registry.set_help("lords_requests_total", "Requests admitted, by adapter.");
         ServerObs {
-            completed: registry.counter("lords_completed_total", &[]),
+            completed: registry.counter_with_help(
+                "lords_completed_total",
+                &[],
+                "Requests served to completion.",
+            ),
             cancelled: registry.counter("lords_cancelled_total", &[]),
             prefill_tokens: registry.counter("lords_prefill_tokens_total", &[]),
             prefix_hit_tokens: registry.counter("lords_prefix_hit_tokens_total", &[]),
             prefill_chunks: registry.counter("lords_prefill_chunks_total", &[]),
-            decode_tokens: registry.counter("lords_decode_tokens_total", &[]),
+            decode_tokens: registry.counter_with_help(
+                "lords_decode_tokens_total",
+                &[],
+                "Tokens produced by decode ticks.",
+            ),
             decode_ticks: registry.counter("lords_decode_ticks_total", &[]),
             queue_depth: registry.gauge("lords_queue_depth", &[]),
             running: registry.gauge("lords_running_sequences", &[]),
             prefilling: registry.gauge("lords_prefilling_sequences", &[]),
-            decode_batch_size: registry.histogram(
+            decode_batch_size: registry.histogram_with_help(
                 "lords_decode_batch_size",
                 &[],
                 &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0],
+                "Running sequences per batched decode tick.",
             ),
             prefill_chunk_utilization: registry.histogram(
                 "lords_prefill_chunk_utilization",
                 &[],
                 &[0.25, 0.5, 0.75, 0.9, 1.0],
             ),
-            ttft_seconds: registry.histogram("lords_ttft_seconds", &[], latency),
+            ttft_seconds: registry.histogram_with_help(
+                "lords_ttft_seconds",
+                &[],
+                latency,
+                "Time to first token, seconds.",
+            ),
             itl_seconds: registry.histogram("lords_itl_seconds", &[], latency),
+            sentinel_probes: registry.counter_with_help(
+                quality::SENTINEL_PROBES_FAMILY,
+                &[],
+                "Logit-drift sentinel probes run.",
+            ),
+            sentinel_skipped: registry.counter_with_help(
+                quality::SENTINEL_SKIPPED_FAMILY,
+                &[],
+                "Sentinel probes that could not run (no reference path or shadow).",
+            ),
+            sentinel_top1_agree: registry.histogram_with_help(
+                quality::SENTINEL_AGREE_FAMILY,
+                &[],
+                &[0.5],
+                "Top-1 agreement between served and reference logits (1 = agree).",
+            ),
+            sentinel_logit_drift: registry.histogram_with_help(
+                quality::SENTINEL_DRIFT_FAMILY,
+                &[],
+                quality::DRIFT_BOUNDS,
+                "Max-abs logit drift between served and reference decode.",
+            ),
+            seal_breaches: registry.counter_with_help(
+                quality::SEAL_BREACH_FAMILY,
+                &[],
+                "KV seal relative errors above the configured threshold.",
+            ),
+            seal_breaches_seen: 0,
             registry,
             flight: FlightRecorder::default(),
         }
@@ -199,6 +258,8 @@ pub struct Server<E: Engine> {
     live: HashSet<u64>,
     /// events produced between steps (cancellations), delivered next step
     pending_events: Vec<Event>,
+    /// ticks stepped so far — the sentinel's deterministic cadence base.
+    tick: u64,
 }
 
 #[derive(Debug)]
@@ -222,10 +283,19 @@ impl<E: Engine> Server<E> {
             None
         };
         engine.kv_init(budget, max_concurrent);
+        let mut obs = ServerObs::new();
+        obs.flight.configure(
+            cfg.storm_rejections,
+            cfg.storm_window_ms.saturating_mul(1_000_000),
+            cfg.stall_ticks,
+        );
+        // after kv_init: quality's seal-error sink attaches to the pool
+        // the server will actually run on
+        engine.install_quality(&obs.registry, cfg.seal_err_threshold);
         Server {
             engine,
             metrics: ServeMetrics::default(),
-            obs: ServerObs::new(),
+            obs,
             batcher: Batcher::new(
                 cfg.prefill_buckets.clone(),
                 Duration::from_micros(cfg.batch_window_us),
@@ -239,6 +309,7 @@ impl<E: Engine> Server<E> {
             prefill_cursor: 0,
             live: HashSet::new(),
             pending_events: Vec::new(),
+            tick: 0,
         }
     }
 
@@ -380,7 +451,18 @@ impl<E: Engine> Server<E> {
         self.obs.queue_depth.set(self.batcher.len() as i64);
         self.obs.running.set(self.running.len() as i64);
         self.obs.prefilling.set(self.prefilling.len() as i64);
+        // fresh seal-error breaches (counted by the engine's sink) arm the
+        // flight recorder so the ring is dumped while context is hot
+        let breaches = self.obs.seal_breaches.get();
+        if breaches > self.obs.seal_breaches_seen {
+            let fresh = breaches - self.obs.seal_breaches_seen;
+            self.obs.seal_breaches_seen = breaches;
+            self.obs
+                .flight
+                .trip_anomaly(format!("kv seal error above threshold ({fresh} new)"));
+        }
         self.obs.flight.note_tick(busy);
+        self.tick += 1;
         Ok(events)
     }
 
@@ -673,6 +755,23 @@ impl<E: Engine> Server<E> {
             for t in self.timings.iter_mut() {
                 t.decode_s += per;
             }
+            // deterministic sentinel cadence: every n-th tick, replay one
+            // running sequence's step through the engine's reference path
+            // and record agreement/drift. Pure observation — the streams
+            // above were produced before the probe ran, and the probe's
+            // shadow state is released before the next tick.
+            let n = self.cfg.sentinel_every_n_ticks as u64;
+            if n > 0 && self.tick % n == 0 {
+                let idx = ((self.tick / n) as usize) % self.running.len();
+                match self.engine.sentinel_probe(&self.running[idx]) {
+                    Some((agree, drift)) => {
+                        self.obs.sentinel_probes.inc();
+                        self.obs.sentinel_top1_agree.observe(if agree { 1.0 } else { 0.0 });
+                        self.obs.sentinel_logit_drift.observe(drift);
+                    }
+                    None => self.obs.sentinel_skipped.inc(),
+                }
+            }
         }
         Ok(())
     }
@@ -757,6 +856,7 @@ mod tests {
             kv_budget_mib: 0.0,
             rate_rps: 0.0,
             prefill_chunk_tokens: 0,
+            ..ServeCfg::default()
         };
         Server::new(NativeEngine::new(model, "fp"), serve)
     }
@@ -963,6 +1063,7 @@ mod tests {
             kv_budget_mib: 0.0,
             rate_rps: 0.0,
             prefill_chunk_tokens: 0,
+            ..ServeCfg::default()
         };
         let mut srv = Server::new(engine, serve);
         let tenants = ["base", "t0", "t1"];
@@ -1055,6 +1156,7 @@ mod tests {
             kv_budget_mib: 0.0,
             rate_rps: 0.0,
             prefill_chunk_tokens: 0,
+            ..ServeCfg::default()
         };
         let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
         let engine = NativeEngine::with_kv(Model::init(&cfg, 0), "kv8", kv);

@@ -26,20 +26,45 @@
 //! the fused attention kernels ([`super::attention`]) walk row by row —
 //! dequantizing each row into one scratch buffer, never materializing
 //! the full K/V.
+//!
+//! Two observe-only quality hooks ride along (both off unless installed,
+//! and neither touches the data path):
+//!
+//! * **Seal error** — when a [`crate::obs::quality::KvSealObs`] sink is
+//!   installed ([`Self::set_seal_obs`]), every packed seal also dequantizes
+//!   the tile it just produced and records the round-trip error. The seal
+//!   path is the one place dense rows and packed codes coexist, so this is
+//!   the only extra dequant the telemetry ever costs.
+//! * **Block heat** — each block carries an atomic last-access tick and
+//!   access count, bumped by [`Self::view`] for the sealed blocks it
+//!   exposes. [`Self::block_coldness`] turns that into the
+//!   ticks-since-last-read signal a future precision-demotion policy (and
+//!   today's coldness histogram) consumes.
 
 use super::scales::PackedTile;
 use super::{KvBits, KvQuantCfg};
 use crate::coordinator::kvcache::KvBlockAllocator;
 use crate::kernels::PackedCodes;
+use crate::obs::quality::KvSealObs;
 use crate::quant::Codebook;
 use crate::tensor::Matrix;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// One sealed tile: dense copy (f32 mode) or packed codes + factors.
 #[derive(Clone, Debug)]
 enum Tile {
     Dense(Matrix),
     Packed(PackedTile),
+}
+
+/// Per-block access telemetry, updated from the `&self` read path.
+#[derive(Debug, Default)]
+struct HeatCell {
+    /// Heat-clock value when the block was last exposed by a view.
+    last_access: AtomicU64,
+    /// Views that exposed this block since it was (re)allocated.
+    accesses: AtomicU64,
 }
 
 /// Per-sequence state: committed length + the dense staging tail.
@@ -69,6 +94,13 @@ pub struct KvPool {
     /// admission keeps reserved blocks + staging tails within it. `None`
     /// for capacity-sized pools.
     budget_bytes: Option<usize>,
+    /// Seal-time quality sink (see the module doc); `None` = no recording.
+    seal_obs: Option<KvSealObs>,
+    /// One heat cell per block, indexed by block id.
+    heat: Vec<HeatCell>,
+    /// Logical read clock, advanced once per tick by the engine
+    /// ([`Self::begin_heat_tick`]).
+    heat_clock: AtomicU64,
 }
 
 impl KvPool {
@@ -86,6 +118,9 @@ impl KvPool {
             seqs: HashMap::new(),
             peak_bytes: 0,
             budget_bytes: None,
+            seal_obs: None,
+            heat: (0..capacity_blocks).map(|_| HeatCell::default()).collect(),
+            heat_clock: AtomicU64::new(0),
         }
     }
 
@@ -114,6 +149,46 @@ impl KvPool {
 
     pub fn cfg(&self) -> &KvQuantCfg {
         &self.cfg
+    }
+
+    /// Install (or clear) the seal-time quality sink. Recording only ever
+    /// happens on packed seals — f32 pools never pay for it.
+    pub fn set_seal_obs(&mut self, obs: Option<KvSealObs>) {
+        self.seal_obs = obs;
+    }
+
+    /// Detach the seal sink, returning it (the sentinel uses this to keep
+    /// its shadow decode from double-recording seal errors).
+    pub fn take_seal_obs(&mut self) -> Option<KvSealObs> {
+        self.seal_obs.take()
+    }
+
+    /// Advance the logical read clock — called once per decode tick, so
+    /// block coldness is measured in ticks.
+    pub fn begin_heat_tick(&self) {
+        self.heat_clock.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Ticks since each live, at-least-once-read block was last exposed by
+    /// a view (blocks never read — e.g. a sequence's open tail block —
+    /// are skipped: they have no read history to age).
+    pub fn block_coldness(&self) -> Vec<u64> {
+        let now = self.heat_clock.load(Ordering::Relaxed);
+        (0..self.heat.len())
+            .filter(|&b| self.alloc.refcount(b) > 0)
+            .filter(|&b| self.heat[b].accesses.load(Ordering::Relaxed) > 0)
+            .map(|b| now.saturating_sub(self.heat[b].last_access.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// (last-access tick, access count) for one block — the raw heat
+    /// signal a demotion policy would rank blocks by.
+    pub fn block_heat(&self, block: usize) -> Option<(u64, u64)> {
+        let cell = self.heat.get(block)?;
+        Some((
+            cell.last_access.load(Ordering::Relaxed),
+            cell.accesses.load(Ordering::Relaxed),
+        ))
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -435,7 +510,13 @@ impl KvPool {
         let _span = crate::obs::span!("kv.seal", tail.rows);
         match &self.codebook {
             None => Tile::Dense(tail.clone()),
-            Some(cb) => Tile::Packed(PackedTile::quantize(tail, self.cfg.rank, cb)),
+            Some(cb) => {
+                let tile = PackedTile::quantize(tail, self.cfg.rank, cb);
+                if let Some(obs) = &self.seal_obs {
+                    obs.record(tail, &tile, &cb.levels);
+                }
+                Tile::Packed(tile)
+            }
         }
     }
 
@@ -460,11 +541,15 @@ impl KvPool {
         );
         let mut k_tiles = Vec::with_capacity(sealed);
         let mut v_tiles = Vec::with_capacity(sealed);
+        let now = self.heat_clock.load(Ordering::Relaxed);
         for bi in 0..sealed {
             let ik = self.slot_idx(owned[bi], layer, 0);
             let iv = self.slot_idx(owned[bi], layer, 1);
             k_tiles.push(self.slots[ik].as_ref().expect("sealed block has storage"));
             v_tiles.push(self.slots[iv].as_ref().expect("sealed block has storage"));
+            let cell = &self.heat[owned[bi]];
+            cell.last_access.store(now, Ordering::Relaxed);
+            cell.accesses.fetch_add(1, Ordering::Relaxed);
         }
         KvSeqView {
             len,
@@ -500,6 +585,9 @@ impl KvPool {
             self.slots[ik] = None;
             self.slots[iv] = None;
         }
+        // Freed storage carries no read history into its next owner.
+        self.heat[block].last_access.store(0, Ordering::Relaxed);
+        self.heat[block].accesses.store(0, Ordering::Relaxed);
     }
 
     /// Free a sequence's blocks and staging. Only blocks whose last

@@ -20,7 +20,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "quantize", about: "PTQ-quantize the testbed with --method and report PPL/acc" },
     Command { name: "qat", about: "quantization-aware training (LoRDS STE or INT4 baseline)" },
     Command { name: "peft", about: "PEFT fine-tune scaling factors (LoRDS) vs QLoRA adapters" },
-    Command { name: "serve", about: "serve requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4, --rate RPS for open-loop streaming, --temperature/--top-k/--sample-seed, --trace-out FILE for Chrome-trace spans, --metrics-out FILE for Prometheus text)" },
+    Command { name: "serve", about: "serve requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4, --rate RPS for open-loop streaming, --temperature/--top-k/--sample-seed, --trace-out FILE for Chrome-trace spans, --metrics-out FILE for Prometheus text, --admin-addr HOST:PORT for the live admin endpoint, --sentinel-every N for the logit-drift sentinel)" },
     Command { name: "eval", about: "evaluate a checkpoint: perplexity + 7-task zero-shot suite" },
     Command { name: "rank-table", about: "print Appendix-A Table 7 (parity ranks, exact paper shapes)" },
     Command { name: "info", about: "environment + artifact manifest summary" },
@@ -210,12 +210,30 @@ fn export_obs(
     Ok(())
 }
 
+/// Start the live admin endpoint when `--admin-addr` (or the
+/// `LORDS_ADMIN_ADDR` environment variable) is set. The returned guard
+/// keeps the background listener alive for the duration of the run.
+fn start_admin(
+    args: &Args,
+    registry: &std::sync::Arc<lords::obs::Registry>,
+) -> anyhow::Result<Option<lords::obs::AdminServer>> {
+    let addr = args
+        .get("admin-addr")
+        .map(str::to_string)
+        .or_else(|| std::env::var("LORDS_ADMIN_ADDR").ok());
+    let Some(addr) = addr else { return Ok(None) };
+    let admin = lords::obs::AdminServer::bind(&addr, std::sync::Arc::clone(registry))?;
+    println!("  admin endpoint: http://{}", admin.local_addr());
+    Ok(Some(admin))
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = model_cfg(args);
     let serve_cfg = ServeCfg {
         kv_bits: args.get_usize("kv-bits", 32) as u32,
         kv_budget_mib: args.get_f32("kv-budget-mib", 0.0) as f64,
         rate_rps: args.get_f32("rate", 0.0) as f64,
+        sentinel_every_n_ticks: args.get_usize("sentinel-every", 0),
         ..ServeCfg::default()
     };
     let kv_bits = lords::kvquant::KvBits::parse(serve_cfg.kv_bits)
@@ -272,7 +290,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             })
             .collect();
         let mut server = Server::new(engine, serve_cfg);
+        let admin = start_admin(args, &server.obs.registry)?;
         drive_serve(&mut server, reqs, rate, seed)?;
+        if let Some(a) = &admin {
+            a.publish_flight(server.obs.flight.dump());
+        }
         export_obs(&server.obs.registry, trace_out.as_deref(), metrics_out.as_deref())?;
     } else {
         let tb = Testbed::build("llama3-mini", &cfg, args.get_usize("pretrain-steps", 300), 0);
@@ -299,7 +321,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let kv = lords::kvquant::KvQuantCfg::with_bits(kv_bits);
         let engine = NativeEngine::with_kv(model, format, kv);
         let mut server = Server::new(engine, serve_cfg);
+        // weight quant error vs the dense pre-quantization reference (the
+        // engine's own install pass only sees QAT shadows, if any)
+        lords::obs::quality::record_weight_errors(
+            &server.obs.registry,
+            "base",
+            &tb.model,
+            &server.engine.model,
+        );
+        let admin = start_admin(args, &server.obs.registry)?;
         drive_serve(&mut server, reqs, rate, seed)?;
+        if let Some(a) = &admin {
+            a.publish_flight(server.obs.flight.dump());
+        }
         println!(
             "  kv cache: {} blocks x {} B ({}; peak {:.2} MiB)",
             server.engine.kv_pool().capacity_blocks(),

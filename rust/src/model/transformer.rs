@@ -755,6 +755,12 @@ impl Model {
 
     /// One decode step over the block-pooled KV store (packed-KV
     /// counterpart of [`Self::decode_with`]).
+    ///
+    /// This is the serving stack's **reference path**: the batched tick
+    /// ([`Self::decode_batch_pooled`]) must stay bitwise identical to it
+    /// (enforced by the decode_batch parity tests), and the logit-drift
+    /// sentinel replays served steps through it to detect any divergence
+    /// in production.
     pub fn decode_pooled(
         &self,
         token: usize,

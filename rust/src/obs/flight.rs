@@ -21,7 +21,7 @@
 //! | `cancelled` | — | cancelled by the client |
 //! | `released` | — | KV blocks and adapter pin returned |
 //!
-//! Anomaly tripwires (both dump the ring into [`FlightRecorder::take_anomaly`]
+//! Anomaly tripwires (all dump the ring into [`FlightRecorder::take_anomaly`]
 //! and log a warning, then re-arm):
 //!
 //! * **Rejection storm** — ≥ [`STORM_REJECTIONS`] rejections inside a
@@ -30,14 +30,23 @@
 //! * **Stall** — [`STALL_TICKS`] consecutive server steps with work in
 //!   flight but no progress event (no chunk, token, completion, or
 //!   admission), the livelock-adjacent shape.
+//! * **External trips** — owners can arm the same dump path for signals
+//!   the recorder can't see itself via [`FlightRecorder::trip_anomaly`]
+//!   (the server uses this for KV seal-error threshold breaches).
+//!
+//! The storm/stall thresholds default to the constants above and are
+//! per-instance tunable ([`FlightRecorder::configure`]) — `ServeCfg`
+//! exposes them as `storm_rejections`/`storm_window_ms`/`stall_ticks`.
 
 use super::json::Json;
 use super::trace::now_ns;
 use std::collections::VecDeque;
 
-/// Rejections within one second that count as a storm.
+/// Default rejections within the storm window that count as a storm.
 pub const STORM_REJECTIONS: usize = 8;
-/// Consecutive busy-but-progress-free steps that count as a stall.
+/// Default storm window.
+pub const STORM_WINDOW_NS: u64 = 1_000_000_000;
+/// Default consecutive busy-but-progress-free steps that count as a stall.
 pub const STALL_TICKS: usize = 512;
 
 const DEFAULT_CAP: usize = 4096;
@@ -74,6 +83,11 @@ pub struct FlightRecorder {
     stall_streak: usize,
     progressed_since_tick: bool,
     last_anomaly: Option<Anomaly>,
+    /// Storm threshold (see [`STORM_REJECTIONS`]); 0 disables the tripwire.
+    storm_rejections: usize,
+    storm_window_ns: u64,
+    /// Stall threshold (see [`STALL_TICKS`]); 0 disables the tripwire.
+    stall_ticks: usize,
 }
 
 /// An automatic dump: why it fired plus the ring contents at that moment.
@@ -99,7 +113,18 @@ impl FlightRecorder {
             stall_streak: 0,
             progressed_since_tick: false,
             last_anomaly: None,
+            storm_rejections: STORM_REJECTIONS,
+            storm_window_ns: STORM_WINDOW_NS,
+            stall_ticks: STALL_TICKS,
         }
+    }
+
+    /// Tune the tripwire thresholds (a threshold of 0 disables that
+    /// tripwire). The server feeds these from `ServeCfg`.
+    pub fn configure(&mut self, storm_rejections: usize, storm_window_ns: u64, stall_ticks: usize) {
+        self.storm_rejections = storm_rejections;
+        self.storm_window_ns = storm_window_ns.max(1);
+        self.stall_ticks = stall_ticks;
     }
 
     /// Append one lifecycle event (oldest event falls off past capacity).
@@ -121,13 +146,14 @@ impl FlightRecorder {
 
     fn note_rejection(&mut self, t_ns: u64) {
         self.reject_times.push_back(t_ns);
-        let window_ns = 1_000_000_000;
+        let window_ns = self.storm_window_ns;
         while self.reject_times.front().is_some_and(|&t| t + window_ns < t_ns) {
             self.reject_times.pop_front();
         }
-        if self.reject_times.len() >= STORM_REJECTIONS {
+        if self.storm_rejections > 0 && self.reject_times.len() >= self.storm_rejections {
             let n = self.reject_times.len();
-            self.trip(format!("rejection storm: {n} rejections within 1s"));
+            let ms = window_ns / 1_000_000;
+            self.trip(format!("rejection storm: {n} rejections within {ms}ms"));
             self.reject_times.clear();
         }
     }
@@ -140,13 +166,19 @@ impl FlightRecorder {
             self.stall_streak = 0;
         } else {
             self.stall_streak += 1;
-            if self.stall_streak >= STALL_TICKS {
+            if self.stall_ticks > 0 && self.stall_streak >= self.stall_ticks {
                 let n = self.stall_streak;
                 self.trip(format!("stall: {n} consecutive busy steps without progress"));
                 self.stall_streak = 0;
             }
         }
         self.progressed_since_tick = false;
+    }
+
+    /// Arm the anomaly dump for a condition the recorder can't observe
+    /// itself (e.g. the server's KV seal-error threshold breaches).
+    pub fn trip_anomaly(&mut self, reason: String) {
+        self.trip(reason);
     }
 
     fn trip(&mut self, reason: String) {
@@ -274,5 +306,37 @@ mod tests {
         }
         let anomaly = fr.take_anomaly().expect("stall should trip");
         assert!(anomaly.reason.contains("stall"));
+    }
+
+    #[test]
+    fn configured_thresholds_override_defaults() {
+        let mut fr = FlightRecorder::default();
+        fr.configure(3, STORM_WINDOW_NS, 4);
+        for seq in 0..3 {
+            fr.push(seq, FlightKind::Rejected { reason: "queue_full" });
+        }
+        assert!(fr.take_anomaly().expect("lowered storm threshold trips").reason.contains("storm"));
+        for _ in 0..4 {
+            fr.note_tick(true);
+        }
+        assert!(fr.take_anomaly().expect("lowered stall threshold trips").reason.contains("stall"));
+        // 0 disables a tripwire entirely.
+        fr.configure(0, STORM_WINDOW_NS, 0);
+        for seq in 0..64 {
+            fr.push(seq, FlightKind::Rejected { reason: "queue_full" });
+            fr.note_tick(true);
+        }
+        assert!(fr.take_anomaly().is_none());
+    }
+
+    #[test]
+    fn external_trip_dumps_the_ring() {
+        let mut fr = FlightRecorder::default();
+        fr.push(9, FlightKind::FirstToken);
+        fr.trip_anomaly("kv seal error above threshold".to_string());
+        let anomaly = fr.take_anomaly().expect("external trip arms the dump");
+        assert!(anomaly.reason.contains("seal error"));
+        let doc = Json::parse(&anomaly.dump).unwrap();
+        assert_eq!(doc.get("events").unwrap().as_arr().unwrap().len(), 1);
     }
 }

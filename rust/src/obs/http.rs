@@ -1,0 +1,250 @@
+//! [`AdminServer`] — a zero-dependency live admin endpoint.
+//!
+//! PR 7's exports only land at process exit (`--metrics-out`,
+//! `--trace-out`); production scraping needs to observe a *running*
+//! server. This module serves the whole observability surface over plain
+//! `std::net` — no async runtime, no HTTP crate — from one background
+//! accept thread:
+//!
+//! | route      | payload                                                  |
+//! |------------|----------------------------------------------------------|
+//! | `/metrics` | live Prometheus render of the shared [`Registry`]        |
+//! | `/trace`   | Chrome-trace JSON (drains the global span buffer)        |
+//! | `/flight`  | last published flight-ring dump (see [`AdminServer::publish_flight`]) |
+//! | `/quality` | quality-telemetry snapshot JSON ([`quality::quality_json`]) |
+//! | `/healthz` | `ok` — liveness probe                                    |
+//!
+//! Everything served from the registry is lock-free for the serving
+//! threads (atomic metric handles); `/metrics` and `/quality` therefore
+//! render mid-run without any cooperation from the serving loop. The
+//! flight ring is single-threaded by design, so the serving loop pushes
+//! dumps in with [`AdminServer::publish_flight`] instead.
+//!
+//! Requests are handled serially on the accept thread (one bounded-size,
+//! bounded-time connection at a time — an admin endpoint, not a web
+//! server). Dropping the handle stops the thread: the drop sets a stop
+//! flag, self-connects to unblock `accept`, and joins.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::metrics::Registry;
+use super::{quality, trace};
+
+/// Cap on request head bytes read before answering 400.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Per-connection socket read/write timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+struct Shared {
+    registry: Arc<Registry>,
+    flight: Mutex<String>,
+    stop: AtomicBool,
+}
+
+/// Handle to a running admin endpoint. Dropping it shuts the listener
+/// down cleanly.
+pub struct AdminServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl AdminServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port — read the
+    /// result back with [`Self::local_addr`]) and start serving on a
+    /// background thread.
+    pub fn bind(addr: &str, registry: Arc<Registry>) -> std::io::Result<AdminServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            registry,
+            flight: Mutex::new("{\"events\":[],\"evicted\":0}".to_string()),
+            stop: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("lords-admin".to_string())
+            .spawn(move || accept_loop(&listener, &accept_shared))?;
+        Ok(AdminServer { addr: local, shared, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Publish a flight-ring dump for `/flight`. The flight recorder is
+    /// single-threaded state owned by the serving loop, so the loop calls
+    /// this whenever it has something fresh (periodically, or when an
+    /// anomaly trips).
+    pub fn publish_flight(&self, dump: String) {
+        *self.shared.flight.lock().expect("admin flight lock poisoned") = dump;
+    }
+}
+
+impl Drop for AdminServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept call. A wildcard bind (0.0.0.0) is not a
+        // connectable destination on every platform — aim at loopback.
+        let mut target = self.addr;
+        if target.ip().is_unspecified() {
+            target.set_ip(std::net::Ipv4Addr::LOCALHOST.into());
+        }
+        let _ = TcpStream::connect_timeout(&target, IO_TIMEOUT);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Shared) {
+    for conn in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = conn {
+            let _ = handle_conn(stream, shared);
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let Some((method, path)) = read_request_line(&mut stream) else {
+        return respond(&mut stream, 400, "text/plain; charset=utf-8", "bad request\n");
+    };
+    if method != "GET" {
+        return respond(&mut stream, 405, "text/plain; charset=utf-8", "GET only\n");
+    }
+    match path.as_str() {
+        "/healthz" => respond(&mut stream, 200, "text/plain; charset=utf-8", "ok\n"),
+        "/metrics" => respond(
+            &mut stream,
+            200,
+            "text/plain; version=0.0.4; charset=utf-8",
+            &shared.registry.render_prometheus(),
+        ),
+        "/trace" => {
+            respond(&mut stream, 200, "application/json", &trace::render_chrome(&trace::drain()))
+        }
+        "/flight" => {
+            let body = shared.flight.lock().expect("admin flight lock poisoned").clone();
+            respond(&mut stream, 200, "application/json", &body)
+        }
+        "/quality" => {
+            let body = quality::quality_json(&shared.registry).render();
+            respond(&mut stream, 200, "application/json", &body)
+        }
+        _ => respond(&mut stream, 404, "text/plain; charset=utf-8", "not found\n"),
+    }
+}
+
+/// Read up to the end of the request head (bounded) and parse the
+/// request line into (method, path). Query strings are dropped.
+fn read_request_line(stream: &mut TcpStream) -> Option<(String, String)> {
+    let mut buf = Vec::with_capacity(256);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk).ok()?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.len() > MAX_REQUEST_BYTES {
+            return None;
+        }
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let line = head.lines().next()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?.to_string();
+    let target = parts.next()?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    Some((method, path))
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::json::Json;
+
+    fn fetch(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).expect("connect to admin endpoint");
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        fetch(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n"))
+    }
+
+    #[test]
+    fn serves_routes_and_shuts_down_on_drop() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("demo_total", &[]).add(3);
+        let admin = AdminServer::bind("127.0.0.1:0", Arc::clone(&reg)).expect("bind port 0");
+        let addr = admin.local_addr();
+
+        let health = get(addr, "/healthz");
+        assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        let metrics = get(addr, "/metrics");
+        assert!(metrics.contains("demo_total 3"), "{metrics}");
+
+        let quality = get(addr, "/quality");
+        let body = quality.split("\r\n\r\n").nth(1).expect("body");
+        Json::parse(body).expect("quality JSON parses");
+
+        admin.publish_flight("{\"events\":[],\"evicted\":7}".to_string());
+        let flight = get(addr, "/flight");
+        assert!(flight.contains("\"evicted\":7"), "{flight}");
+
+        assert!(get(addr, "/nope").starts_with("HTTP/1.1 404"));
+        let post = fetch(addr, "POST /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
+        assert!(post.starts_with("HTTP/1.1 405"), "{post}");
+
+        drop(admin);
+        // The listener is gone: a fresh connection must fail or be refused.
+        assert!(
+            TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err(),
+            "admin listener should stop accepting after drop"
+        );
+    }
+}

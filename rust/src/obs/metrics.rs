@@ -12,8 +12,10 @@
 //! sorted by name, then by label set):
 //!
 //! * [`Registry::render_prometheus`] — the Prometheus text format
-//!   (`# TYPE` line per family, `_bucket`/`_sum`/`_count` expansion for
-//!   histograms, label values escaped per the spec).
+//!   (`# HELP`/`# TYPE` lines per family, `_bucket`/`_sum`/`_count`
+//!   expansion for histograms, label values escaped per the spec). Help
+//!   text is optional — the `*_with_help` registration variants record
+//!   it once per family, first writer wins.
 //! * [`Registry::snapshot`] → [`Snapshot::to_json`] — a JSON document
 //!   that [`Snapshot::from_json`] parses back losslessly (round-trip
 //!   gated by `tests/obs.rs`).
@@ -126,7 +128,7 @@ impl Histogram {
 }
 
 /// Sorted label pairs — the identity of a metric within its family.
-type Labels = Vec<(String, String)>;
+pub type Labels = Vec<(String, String)>;
 
 fn labels_of(pairs: &[(&str, &str)]) -> Labels {
     let mut ls: Labels =
@@ -147,6 +149,9 @@ struct RegInner {
     /// family name → label set → metric. BTreeMaps give the exposition
     /// its stable ordering for free.
     families: BTreeMap<String, BTreeMap<Labels, Metric>>,
+    /// family name → help text (`# HELP` line). Optional; first writer
+    /// wins so help stays stable across re-registration.
+    help: BTreeMap<String, String>,
 }
 
 /// Process-wide metric store (see the module doc).
@@ -196,14 +201,49 @@ impl Registry {
         }
     }
 
-    /// Prometheus text exposition (version 0.0.4): one `# TYPE` line per
-    /// family, metrics sorted by name then label set, label values
-    /// escaped (`\\`, `\"`, `\n`).
+    /// Like [`Registry::counter`], also recording the family's `# HELP`
+    /// text (first registration wins).
+    pub fn counter_with_help(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Counter {
+        self.set_help(name, help);
+        self.counter(name, labels)
+    }
+
+    /// Like [`Registry::gauge`], also recording the family's `# HELP` text.
+    pub fn gauge_with_help(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Gauge {
+        self.set_help(name, help);
+        self.gauge(name, labels)
+    }
+
+    /// Like [`Registry::histogram`], also recording the family's `# HELP`
+    /// text.
+    pub fn histogram_with_help(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+        help: &str,
+    ) -> Histogram {
+        self.set_help(name, help);
+        self.histogram(name, labels, bounds)
+    }
+
+    /// Record `# HELP` text for a family (first writer wins).
+    pub fn set_help(&self, name: &str, help: &str) {
+        let mut reg = self.inner.lock().unwrap();
+        reg.help.entry(name.to_string()).or_insert_with(|| help.to_string());
+    }
+
+    /// Prometheus text exposition (version 0.0.4): optional `# HELP` and
+    /// a `# TYPE` line per family, metrics sorted by name then label
+    /// set, label values escaped (`\\`, `\"`, `\n`).
     pub fn render_prometheus(&self) -> String {
         let reg = self.inner.lock().unwrap();
         let mut out = String::new();
         for (name, fam) in &reg.families {
             let kind = fam.values().next().map(kind_name).unwrap_or("gauge");
+            if let Some(help) = reg.help.get(name) {
+                out.push_str(&format!("# HELP {name} {}\n", help_escape(help)));
+            }
             out.push_str(&format!("# TYPE {name} {kind}\n"));
             for (labels, metric) in fam {
                 match metric {
@@ -315,6 +355,12 @@ fn prom_labels(labels: &Labels, le: Option<&str>) -> String {
 
 fn prom_escape(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// `# HELP` escaping per the exposition spec: backslash and newline only
+/// (quotes stay literal in help text).
+fn help_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
 }
 
 /// Bucket bound formatting: integers bare, floats shortest-round-trip —
@@ -527,5 +573,21 @@ mod tests {
         let reg = Registry::new();
         reg.counter("m", &[]);
         reg.gauge("m", &[]);
+    }
+
+    #[test]
+    fn help_renders_before_type_and_first_writer_wins() {
+        let reg = Registry::new();
+        reg.counter_with_help("jobs_total", &[], "Jobs\nprocessed \\ total.").inc();
+        reg.counter_with_help("jobs_total", &[], "a different help").inc();
+        reg.gauge("plain", &[]).set(1);
+        let text = reg.render_prometheus();
+        assert!(
+            text.contains("# HELP jobs_total Jobs\\nprocessed \\\\ total.\n# TYPE jobs_total counter\n"),
+            "{text}"
+        );
+        // Families registered without help get no # HELP line.
+        assert!(text.contains("# TYPE plain gauge\n"));
+        assert!(!text.contains("# HELP plain"));
     }
 }

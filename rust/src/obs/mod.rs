@@ -1,18 +1,18 @@
-//! # Observability: metrics registry, tracing spans, flight recorder
+//! # Observability: metrics, spans, flight recorder, quality, admin HTTP
 //!
 //! Zero-dependency instrumentation for the serving stack, built so that
 //! *off is near-free* (one relaxed atomic load per would-be span; metric
 //! handles are plain atomics with no branches) and *on does not perturb
-//! results* (served token streams are bitwise identical with tracing
-//! enabled — enforced by `tests/obs.rs`).
+//! results* (served token streams are bitwise identical with tracing —
+//! and quality telemetry — enabled, enforced by `tests/obs.rs`).
 //!
-//! Three pillars:
+//! Five pillars:
 //!
 //! * [`metrics`] — a [`metrics::Registry`] of counters, gauges, and
 //!   fixed-bucket histograms behind cheap `Arc`'d handles, rendered as
-//!   Prometheus text exposition or a JSON snapshot that round-trips.
-//!   The serving loop keeps a cumulative registry (`lords_*` families)
-//!   next to the windowed `ServeMetrics` report.
+//!   Prometheus text exposition (`# HELP`/`# TYPE`) or a JSON snapshot
+//!   that round-trips. The serving loop keeps a cumulative registry
+//!   (`lords_*` families) next to the windowed `ServeMetrics` report.
 //! * [`trace`] — structured spans via the [`crate::span!`] macro
 //!   (re-exported here, so call sites write `obs::span!`), recorded into
 //!   lock-free per-thread buffers and exported as Chrome
@@ -20,18 +20,30 @@
 //! * [`flight`] — a bounded ring of per-request lifecycle events
 //!   (submitted → admitted → prefill chunks → first token →
 //!   done/cancelled/rejected), dumpable on demand and automatically on
-//!   anomalies (rejection storm, stall).
+//!   anomalies (rejection storm, stall, seal-error breach — thresholds
+//!   configurable via `ServeCfg`).
+//! * [`quality`] — quantization-quality telemetry: per-layer weight
+//!   quant-error gauges, per-tier KV seal-error histograms, the
+//!   logit-drift sentinel's agreement/drift families, and KV block-heat
+//!   coldness. Observe-only by construction.
+//! * [`http`] — [`http::AdminServer`], a background-thread admin endpoint
+//!   serving `/metrics`, `/trace`, `/flight`, `/quality`, and `/healthz`
+//!   live over plain `std::net` (`serve --admin-addr HOST:PORT`).
 //!
 //! [`json`] underpins the export paths: a minimal JSON value model,
 //! parser, and deterministic printer (the vendored dependency set has no
 //! `serde`).
 
 pub mod flight;
+pub mod http;
 pub mod json;
 pub mod metrics;
+pub mod quality;
 pub mod trace;
 
 pub use crate::span;
 pub use flight::{FlightEvent, FlightKind, FlightRecorder};
+pub use http::AdminServer;
 pub use metrics::{Counter, Gauge, Histogram, Registry, Snapshot};
+pub use quality::KvSealObs;
 pub use trace::{SpanEvent, SpanGuard};

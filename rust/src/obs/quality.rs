@@ -1,0 +1,343 @@
+//! Quantization-quality telemetry — the numeric-fidelity pillar of the
+//! observability stack.
+//!
+//! The flight recorder and span tracing see *time*; this module sees
+//! *numbers*: how far the quantized weights, the packed KV tiles, and the
+//! end-to-end logits sit from their exact references, on live traffic.
+//! Three signal families, all observe-only (none of them may perturb the
+//! served token streams — `tests/obs.rs` enforces this bitwise):
+//!
+//! - **Weight error** (once at engine build and at adapter registration):
+//!   relative Frobenius error between a reference weight and its
+//!   quantized reconstruction, exported per layer/linear-slot/tenant.
+//!   The registry's gauges are integers, so the value is stored in
+//!   parts-per-million ([`ppm`]).
+//! - **KV seal error** (steady state, near-free): the moment a staging
+//!   tail seals into a packed tile is the one place the dense rows and
+//!   the packed codes are both in hand — one dequant pass over the
+//!   just-packed tile yields the true round-trip error of that block
+//!   without touching the serving read path. [`KvSealObs`], installed
+//!   into the pool by `NativeEngine::install_quality`, records one
+//!   histogram sample per sealed tile; a tile whose relative error
+//!   exceeds a configurable threshold bumps a breach counter that the
+//!   server turns into a flight-recorder anomaly dump.
+//! - **Logit-drift sentinel** (deterministic cadence, default off): the
+//!   server re-runs one sequence's decode step through the reference
+//!   path on a shadow KV sequence and records top-1 agreement plus
+//!   max-abs logit drift. The served token always comes from the batched
+//!   path — see `NativeEngine::sentinel_probe` for the non-perturbation
+//!   argument.
+//!
+//! These are exactly the signals the blocked ROADMAP directions need:
+//! per-layer error for mixed-precision bit allocation, seal error +
+//! block heat for runtime precision demotion, and the sentinel as the
+//! guardrail for zero-downtime scale refinement.
+
+use crate::adapters::AdapterFactors;
+use crate::kvquant::scales::PackedTile;
+use crate::model::{LinearWeight, Model};
+use crate::obs::json::Json;
+use crate::obs::metrics::{Counter, Gauge, Histogram, Labels, Registry};
+use crate::quant::error::quant_error_rel_frob;
+use crate::tensor::Matrix;
+
+/// Per-layer weight reconstruction error of the base model, in ppm.
+pub const WEIGHT_ERR_FAMILY: &str = "lords_weight_quant_rel_error_ppm";
+/// Per-layer effective-weight delta introduced by a tenant adapter, in ppm.
+pub const ADAPTER_ERR_FAMILY: &str = "lords_adapter_weight_rel_error_ppm";
+/// Relative Frobenius round-trip error of sealed KV tiles, per kv tier.
+pub const SEAL_ERR_FAMILY: &str = "lords_kv_seal_rel_error";
+/// Sealed tiles whose relative error exceeded the configured threshold.
+pub const SEAL_BREACH_FAMILY: &str = "lords_kv_seal_err_breaches_total";
+/// Sentinel top-1 agreement samples (1 = batched and reference agree).
+pub const SENTINEL_AGREE_FAMILY: &str = "lords_sentinel_top1_agree";
+/// Sentinel max-abs logit drift between batched and reference paths.
+pub const SENTINEL_DRIFT_FAMILY: &str = "lords_sentinel_logit_drift";
+/// Sentinel probes that ran to completion.
+pub const SENTINEL_PROBES_FAMILY: &str = "lords_sentinel_probes_total";
+/// Sentinel probes skipped (pool full, sequence released mid-probe, …).
+pub const SENTINEL_SKIPPED_FAMILY: &str = "lords_sentinel_skipped_total";
+/// Ticks since each live KV block was last read, sampled every tick.
+pub const COLDNESS_FAMILY: &str = "lords_kv_block_coldness_ticks";
+
+/// Log-spaced bounds for relative-error histograms (dimensionless).
+pub const REL_ERR_BOUNDS: &[f64] =
+    &[0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0];
+
+/// Log-spaced bounds for the sentinel's max-abs logit drift.
+pub const DRIFT_BOUNDS: &[f64] = &[1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+
+/// Bounds for block coldness in ticks (a block read during the last tick
+/// has coldness 1).
+pub const COLDNESS_BOUNDS: &[f64] =
+    &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
+
+/// The families `/quality` exposes (everything this module owns).
+const QUALITY_FAMILIES: &[&str] = &[
+    WEIGHT_ERR_FAMILY,
+    ADAPTER_ERR_FAMILY,
+    SEAL_ERR_FAMILY,
+    SEAL_BREACH_FAMILY,
+    SENTINEL_AGREE_FAMILY,
+    SENTINEL_DRIFT_FAMILY,
+    SENTINEL_PROBES_FAMILY,
+    SENTINEL_SKIPPED_FAMILY,
+    COLDNESS_FAMILY,
+];
+
+const WEIGHT_ERR_HELP: &str =
+    "Relative Frobenius weight reconstruction error, parts-per-million.";
+const ADAPTER_ERR_HELP: &str =
+    "Adapter-induced effective-weight delta over the base, parts-per-million.";
+
+/// Relative error as an integer gauge value: parts-per-million, rounded.
+pub fn ppm(rel: f32) -> i64 {
+    (f64::from(rel) * 1e6).round() as i64
+}
+
+fn weight_err_gauge(
+    reg: &Registry,
+    family: &str,
+    help: &str,
+    layer: usize,
+    linear: &str,
+    tenant: &str,
+) -> Gauge {
+    let layer = layer.to_string();
+    reg.gauge_with_help(
+        family,
+        &[("layer", layer.as_str()), ("linear", linear), ("tenant", tenant)],
+        help,
+    )
+}
+
+/// Seal-time KV quality sink, installed into a [`crate::kvquant::KvPool`].
+///
+/// Holds only atomic metric handles, so the pool can record from the
+/// `&self` seal path. `threshold <= 0` disables breach counting (the
+/// histogram always records).
+#[derive(Debug)]
+pub struct KvSealObs {
+    hist: Histogram,
+    breaches: Counter,
+    threshold: f64,
+}
+
+impl KvSealObs {
+    /// Register the seal-error histogram for one kv tier (`"int8"`,
+    /// `"int4"`) plus the shared breach counter.
+    pub fn new(reg: &Registry, tier: &str, threshold: f64) -> KvSealObs {
+        let hist = reg.histogram_with_help(
+            SEAL_ERR_FAMILY,
+            &[("kv", tier)],
+            REL_ERR_BOUNDS,
+            "Relative Frobenius round-trip error of each sealed KV tile, by kv-bits tier.",
+        );
+        let breaches = reg.counter_with_help(
+            SEAL_BREACH_FAMILY,
+            &[],
+            "Sealed KV tiles whose relative error exceeded the configured threshold.",
+        );
+        KvSealObs { hist, breaches, threshold }
+    }
+
+    /// Record the round-trip error of one freshly sealed tile. `dense` is
+    /// the staging tail the tile was packed from; `lut` is the codebook's
+    /// level table. One dequant pass over `packed` — the only extra work
+    /// quality telemetry adds to the steady-state serving path.
+    pub fn record(&self, dense: &Matrix, packed: &PackedTile, lut: &[f32]) {
+        let mut crow = vec![0u8; dense.cols];
+        let mut out = vec![0.0f32; dense.cols];
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..dense.rows {
+            packed.dequant_row_into(i, lut, &mut crow, &mut out);
+            for (&w, &w_hat) in dense.row(i).iter().zip(out.iter()) {
+                let d = f64::from(w) - f64::from(w_hat);
+                num += d * d;
+                den += f64::from(w) * f64::from(w);
+            }
+        }
+        let rel = if den > 0.0 { (num / den).sqrt() } else { 0.0 };
+        self.hist.observe(rel);
+        if self.threshold > 0.0 && rel > self.threshold {
+            self.breaches.inc();
+        }
+    }
+}
+
+/// Record per-layer weight reconstruction error of `quantized` against a
+/// dense `reference` (the pre-quantization model the CLI and examples
+/// keep around), as `lords_weight_quant_rel_error_ppm{layer,linear,tenant}`
+/// gauges. Call once after engine build — this materializes every
+/// effective weight and is not a steady-state path.
+pub fn record_weight_errors(reg: &Registry, tenant: &str, reference: &Model, quantized: &Model) {
+    for (li, (rl, ql)) in reference.layers.iter().zip(quantized.layers.iter()).enumerate() {
+        for ((name, rw), (_, qw)) in rl.linears().iter().zip(ql.linears().iter()) {
+            let rel = quant_error_rel_frob(&rw.effective(), &qw.effective());
+            weight_err_gauge(reg, WEIGHT_ERR_FAMILY, WEIGHT_ERR_HELP, li, name, tenant)
+                .set(ppm(rel));
+        }
+    }
+}
+
+/// Record what `model` can self-report without an external reference:
+/// dense slots are exactly representable (0 ppm) and QAT LoRDS slots
+/// carry their own shadow weight. Frozen-code slots are skipped — their
+/// true error needs the dense reference, via [`record_weight_errors`].
+pub fn record_self_weight_errors(reg: &Registry, model: &Model) {
+    for (li, lw) in model.layers.iter().enumerate() {
+        for (name, w) in lw.linears() {
+            let rel = match w {
+                LinearWeight::Dense(_) => 0.0,
+                LinearWeight::Lords { shadow_w: Some(shadow), .. } => {
+                    quant_error_rel_frob(shadow, &w.effective())
+                }
+                _ => continue,
+            };
+            weight_err_gauge(reg, WEIGHT_ERR_FAMILY, WEIGHT_ERR_HELP, li, name, "base")
+                .set(ppm(rel));
+        }
+    }
+}
+
+/// Record the effective-weight delta a tenant's adapter introduces over
+/// the shared frozen codes: `‖W(B',A') − W(B,A)‖_F / ‖W(B,A)‖_F` per
+/// adapted linear, as `lords_adapter_weight_rel_error_ppm` gauges. Call
+/// at adapter registration (materializes two dense weights per slot).
+pub fn record_adapter_weight_errors(
+    reg: &Registry,
+    tenant: &str,
+    model: &Model,
+    factors: &AdapterFactors,
+) {
+    for (li, (lw, lf)) in model.layers.iter().zip(factors.layers.iter()).enumerate() {
+        for (si, (name, w)) in lw.linears().iter().enumerate() {
+            let (LinearWeight::Lords { q, .. }, Some(pair)) = (w, &lf.linears[si]) else {
+                continue;
+            };
+            let base = q.dequantize();
+            let adapted = q.dequantize_with(&pair.b, &pair.a);
+            weight_err_gauge(reg, ADAPTER_ERR_FAMILY, ADAPTER_ERR_HELP, li, name, tenant)
+                .set(ppm(quant_error_rel_frob(&base, &adapted)));
+        }
+    }
+}
+
+/// The `/quality` admin payload: every quality family in the registry,
+/// rendered from a live snapshot (no serving-thread cooperation needed).
+pub fn quality_json(reg: &Registry) -> Json {
+    let snap = reg.snapshot();
+    let keep = |name: &str| QUALITY_FAMILIES.contains(&name);
+    let labels_json = |labels: &Labels| {
+        Json::Obj(labels.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect())
+    };
+    let counters = snap
+        .counters
+        .iter()
+        .filter(|c| keep(&c.name))
+        .map(|c| {
+            Json::Obj(vec![
+                ("name".to_string(), Json::Str(c.name.clone())),
+                ("labels".to_string(), labels_json(&c.labels)),
+                ("value".to_string(), Json::Num(c.value as f64)),
+            ])
+        })
+        .collect();
+    let gauges = snap
+        .gauges
+        .iter()
+        .filter(|g| keep(&g.name))
+        .map(|g| {
+            Json::Obj(vec![
+                ("name".to_string(), Json::Str(g.name.clone())),
+                ("labels".to_string(), labels_json(&g.labels)),
+                ("value".to_string(), Json::Num(g.value as f64)),
+            ])
+        })
+        .collect();
+    let histograms = snap
+        .histograms
+        .iter()
+        .filter(|h| keep(&h.name))
+        .map(|h| {
+            Json::Obj(vec![
+                ("name".to_string(), Json::Str(h.name.clone())),
+                ("labels".to_string(), labels_json(&h.labels)),
+                ("bounds".to_string(), Json::Arr(h.bounds.iter().map(|&b| Json::Num(b)).collect())),
+                (
+                    "buckets".to_string(),
+                    Json::Arr(h.buckets.iter().map(|&c| Json::Num(c as f64)).collect()),
+                ),
+                ("sum".to_string(), Json::Num(h.sum)),
+                ("count".to_string(), Json::Num(h.count as f64)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("counters".to_string(), Json::Arr(counters)),
+        ("gauges".to_string(), Json::Arr(gauges)),
+        ("histograms".to_string(), Json::Arr(histograms)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Codebook;
+    use crate::util::Rng;
+
+    #[test]
+    fn seal_obs_records_round_trip_error_and_breaches() {
+        let reg = Registry::new();
+        let obs = KvSealObs::new(&reg, "int4", 1e-9);
+        let cb = Codebook::normal_float(4);
+        let mut rng = Rng::new(7);
+        let x = Matrix::randn(8, 16, 0.5, &mut rng);
+        let tile = PackedTile::quantize(&x, 2, &cb);
+        obs.record(&x, &tile, &cb.levels);
+        let snap = reg.snapshot();
+        let h = &snap.histograms[0];
+        assert_eq!(h.name, SEAL_ERR_FAMILY);
+        assert_eq!(h.count, 1);
+        assert!(h.sum > 0.0 && h.sum < 1.0, "4-bit rel error should be small: {}", h.sum);
+        // Threshold of 1e-9 means any real error counts as a breach.
+        assert_eq!(snap.counters.iter().find(|c| c.name == SEAL_BREACH_FAMILY).unwrap().value, 1);
+    }
+
+    #[test]
+    fn zero_tile_records_zero_error() {
+        let reg = Registry::new();
+        let obs = KvSealObs::new(&reg, "int8", 0.25);
+        let cb = Codebook::normal_float(8);
+        let x = Matrix::zeros(4, 8);
+        let tile = PackedTile::quantize(&x, 1, &cb);
+        obs.record(&x, &tile, &cb.levels);
+        let snap = reg.snapshot();
+        assert_eq!(snap.histograms[0].sum, 0.0);
+        assert_eq!(snap.counters.iter().find(|c| c.name == SEAL_BREACH_FAMILY).unwrap().value, 0);
+    }
+
+    #[test]
+    fn quality_json_filters_to_quality_families_only() {
+        let reg = Registry::new();
+        reg.counter("lords_requests_total", &[]).inc();
+        weight_err_gauge(&reg, WEIGHT_ERR_FAMILY, WEIGHT_ERR_HELP, 0, "wq", "base").set(1234);
+        reg.histogram(SEAL_ERR_FAMILY, &[("kv", "int4")], REL_ERR_BOUNDS).observe(0.05);
+        let j = quality_json(&reg);
+        let rendered = j.render();
+        assert!(rendered.contains(WEIGHT_ERR_FAMILY));
+        assert!(rendered.contains(SEAL_ERR_FAMILY));
+        assert!(!rendered.contains("lords_requests_total"));
+        // Round-trips through the parser.
+        let back = Json::parse(&rendered).expect("quality JSON parses");
+        assert_eq!(back.get("gauges").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+    }
+
+    #[test]
+    fn ppm_rounds_sanely() {
+        assert_eq!(ppm(0.0), 0);
+        assert_eq!(ppm(0.05), 50_000);
+        assert_eq!(ppm(1.0), 1_000_000);
+    }
+}

@@ -20,6 +20,17 @@ pub fn quant_error_frob(w: &Matrix, w_hat: &Matrix) -> f32 {
     w.sub(w_hat).frob_norm()
 }
 
+/// ‖W − Ŵ‖_F / ‖W‖_F — scale-free variant the quality telemetry exports,
+/// comparable across layers of very different magnitude. 0 when `w` is
+/// all-zero (a zero reference reconstructed as zero is exact).
+pub fn quant_error_rel_frob(w: &Matrix, w_hat: &Matrix) -> f32 {
+    let denom = w.frob_norm();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    quant_error_frob(w, w_hat) / denom
+}
+
 /// Appendix B reduction ratio vs. the NF4 block-wise baseline, in percent.
 pub fn reduction_ratio_pct(w: &Matrix, w_hat: &Matrix, block: usize) -> f32 {
     let nf4 = BlockwiseQuant::quantize(w, block, &Codebook::normal_float(4));
@@ -50,6 +61,21 @@ mod tests {
         let w = Matrix::randn(12, 12, 1.0, &mut rng);
         assert!(quant_error_nuclear(&w, &w) < 1e-4);
         assert!(quant_error_frob(&w, &w) < 1e-6);
+        assert!(quant_error_rel_frob(&w, &w) < 1e-6);
+    }
+
+    #[test]
+    fn rel_frob_is_scale_free() {
+        let mut rng = Rng::new(5);
+        let w = Matrix::randn(16, 16, 1.0, &mut rng);
+        let w_hat = w.scale(0.9);
+        let r1 = quant_error_rel_frob(&w, &w_hat);
+        let r2 = quant_error_rel_frob(&w.scale(100.0), &w_hat.scale(100.0));
+        assert!((r1 - r2).abs() < 1e-5, "{r1} vs {r2}");
+        assert!((r1 - 0.1).abs() < 1e-4, "‖W−0.9W‖/‖W‖ = 0.1, got {r1}");
+        // All-zero reference: defined as exact, not NaN.
+        let z = Matrix::zeros(4, 4);
+        assert_eq!(quant_error_rel_frob(&z, &z), 0.0);
     }
 
     #[test]

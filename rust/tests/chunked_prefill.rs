@@ -54,6 +54,7 @@ fn serve_cfg(prefill_chunk_tokens: usize) -> ServeCfg {
         kv_budget_mib: 0.0,
         rate_rps: 0.0,
         prefill_chunk_tokens,
+        ..ServeCfg::default()
     }
 }
 

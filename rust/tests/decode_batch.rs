@@ -233,6 +233,7 @@ fn mixed_tenant_quantized_serve_matches_single_stream_goldens() {
         kv_budget_mib: 0.0,
         rate_rps: 0.0,
         prefill_chunk_tokens: 0,
+        ..ServeCfg::default()
     };
     let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
     let model = quantized_model(&cfg, 31);

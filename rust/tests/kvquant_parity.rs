@@ -39,6 +39,7 @@ fn serve_cfg(kv_bits: u32) -> ServeCfg {
         kv_budget_mib: 0.0,
         rate_rps: 0.0,
         prefill_chunk_tokens: 0,
+        ..ServeCfg::default()
     }
 }
 

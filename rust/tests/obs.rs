@@ -10,9 +10,10 @@
 
 use lords::config::{ModelCfg, ServeCfg};
 use lords::coordinator::{Event, NativeEngine, RejectReason, Request, SamplingParams, Server};
+use lords::kvquant::{KvBits, KvQuantCfg};
 use lords::model::Model;
 use lords::obs::json::Json;
-use lords::obs::{trace, FlightKind, Registry, Snapshot};
+use lords::obs::{trace, AdminServer, FlightKind, Registry, Snapshot};
 use lords::util::Rng;
 
 fn tiny_cfg() -> ModelCfg {
@@ -41,6 +42,7 @@ fn serve_cfg() -> ServeCfg {
         kv_budget_mib: 0.0,
         rate_rps: 0.0,
         prefill_chunk_tokens: 8,
+        ..ServeCfg::default()
     }
 }
 
@@ -123,6 +125,7 @@ fn tracing_on_is_bitwise_identical_and_exports_chrome_trace() {
 fn prometheus_exposition_golden() {
     let reg = Registry::new();
     reg.gauge("demo_depth", &[]).set(-2);
+    reg.counter_with_help("demo_jobs_total", &[], "Jobs processed.").add(1);
     reg.histogram("demo_empty", &[], &[1.0]);
     let h = reg.histogram("demo_lat", &[], &[0.5, 1.0, 2.5]);
     h.observe(0.5); // boundary lands in le="0.5" (inclusive)
@@ -138,6 +141,9 @@ fn prometheus_exposition_golden() {
         "demo_empty_bucket{le=\"+Inf\"} 0\n",
         "demo_empty_sum 0\n",
         "demo_empty_count 0\n",
+        "# HELP demo_jobs_total Jobs processed.\n",
+        "# TYPE demo_jobs_total counter\n",
+        "demo_jobs_total 1\n",
         "# TYPE demo_lat histogram\n",
         "demo_lat_bucket{le=\"0.5\"} 1\n",
         "demo_lat_bucket{le=\"1\"} 1\n",
@@ -304,4 +310,150 @@ fn cancellation_is_observable() {
     assert!(kinds.contains(&&FlightKind::Cancelled));
     assert_eq!(kinds.last(), Some(&&FlightKind::Released), "cancel released its KV");
     assert_eq!(srv.metrics.cancelled, 1);
+}
+
+/// Quality telemetry's non-perturbation contract: running the logit-drift
+/// sentinel every tick must not change a single served token, for every
+/// KV tier. And because the batched decode tick is bitwise identical to
+/// the reference path it replays, the sentinel must report perfect top-1
+/// agreement with exactly zero drift — any other reading is a real bug.
+#[test]
+fn sentinel_on_is_bitwise_identical_across_kv_tiers() {
+    for kv_bits in [32u32, 8, 4] {
+        let cfg = tiny_cfg();
+        let kv = KvQuantCfg::with_bits(KvBits::parse(kv_bits).unwrap());
+        let server_with = |sentinel: usize| {
+            let engine = NativeEngine::with_kv(Model::init(&cfg, 11), "sentinel", kv);
+            let serve =
+                ServeCfg { kv_bits, sentinel_every_n_ticks: sentinel, ..serve_cfg() };
+            Server::new(engine, serve)
+        };
+        let off = server_with(0).run_trace(requests(6, 12, 6)).unwrap();
+        let mut srv = server_with(1);
+        let on = srv.run_trace(requests(6, 12, 6)).unwrap();
+        assert_eq!(off.responses.len(), on.responses.len());
+        for (a, b) in off.responses.iter().zip(&on.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "kv{kv_bits} req {}: sentinel perturbed the token stream",
+                a.id
+            );
+        }
+        let snap = srv.obs.registry.snapshot();
+        let probes = snap
+            .counters
+            .iter()
+            .find(|c| c.name == "lords_sentinel_probes_total")
+            .expect("probe counter registered")
+            .value;
+        assert!(probes > 0, "kv{kv_bits}: the sentinel never ran");
+        let agree = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == "lords_sentinel_top1_agree")
+            .expect("agreement histogram registered");
+        assert_eq!(agree.count, probes, "kv{kv_bits}: every probe records agreement");
+        assert_eq!(
+            agree.sum, probes as f64,
+            "kv{kv_bits}: served and reference logits must agree on top-1"
+        );
+        let drift = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == "lords_sentinel_logit_drift")
+            .expect("drift histogram registered");
+        assert_eq!(drift.count, probes);
+        assert_eq!(drift.sum, 0.0, "kv{kv_bits}: the reference replay must be exact");
+        // the shadow sequence never leaks KV state past a probe
+        assert_eq!(srv.engine.kv_pool().active_sequences(), 0);
+    }
+}
+
+/// The live admin endpoint, end to end over real TCP: bind an ephemeral
+/// port on a serving stack with int8 KV and the sentinel armed, fetch
+/// `/metrics` and `/quality` **mid-run** (while sequences are decoding),
+/// and validate the exposition: Prometheus grammar, the quality families,
+/// and live (non-zero) decode counters.
+#[test]
+fn admin_endpoint_serves_live_metrics_mid_run() {
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    let cfg = tiny_cfg();
+    let kv = KvQuantCfg::with_bits(KvBits::Int8);
+    let engine = NativeEngine::with_kv(Model::init(&cfg, 3), "admin", kv);
+    let serve = ServeCfg { kv_bits: 8, sentinel_every_n_ticks: 2, ..serve_cfg() };
+    let mut srv = Server::new(engine, serve);
+    let admin =
+        AdminServer::bind("127.0.0.1:0", Arc::clone(&srv.obs.registry)).expect("bind port 0");
+    let addr = admin.local_addr();
+    let get = |path: &str| -> String {
+        let mut s = TcpStream::connect(addr).expect("connect to admin endpoint");
+        write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+
+    let health = get("/healthz");
+    assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+    assert!(health.ends_with("ok\n"), "{health}");
+
+    for r in requests(5, 18, 6) {
+        srv.submit(r).unwrap();
+    }
+    // prompts of 18 tokens seal at least one int8 block each (block = 16)
+    let mut mid_run: Option<(String, String)> = None;
+    while !srv.is_idle() {
+        srv.step().unwrap();
+        if mid_run.is_none()
+            && srv.num_running() > 0
+            && srv.obs.registry.counter("lords_decode_tokens_total", &[]).get() > 0
+        {
+            mid_run = Some((get("/metrics"), get("/quality")));
+        }
+    }
+    let (metrics, quality) = mid_run.expect("never caught the server mid-decode");
+
+    assert!(metrics.starts_with("HTTP/1.1 200"), "{metrics}");
+    let body = metrics.split("\r\n\r\n").nth(1).expect("metrics body");
+    // Prometheus text grammar: comments are HELP/TYPE, samples are
+    // `series value` with a parseable float value
+    for line in body.lines() {
+        if let Some(comment) = line.strip_prefix('#') {
+            let ok = comment.starts_with(" TYPE ") || comment.starts_with(" HELP ");
+            assert!(ok, "unexpected comment line: {line}");
+        } else {
+            let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("{line}"));
+            assert!(!series.is_empty(), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "bad sample value: {line}");
+        }
+    }
+    // live serving counters, captured while sequences were still running
+    let decoded: f64 = body
+        .lines()
+        .find_map(|l| l.strip_prefix("lords_decode_tokens_total "))
+        .expect("decode tokens sample present")
+        .parse()
+        .unwrap();
+    assert!(decoded > 0.0, "mid-run exposition must show live decode progress");
+    // the quality families rode along: seal error (int8 tier), sentinel
+    // agreement, and the per-layer weight-error gauges
+    assert!(body.contains("# TYPE lords_kv_seal_rel_error histogram"), "{body}");
+    assert!(body.contains("lords_kv_seal_rel_error_bucket{kv=\"int8\",le="), "{body}");
+    assert!(body.contains("# TYPE lords_sentinel_top1_agree histogram"), "{body}");
+    assert!(body.contains("lords_weight_quant_rel_error_ppm{layer="), "{body}");
+    assert!(body.contains("# HELP lords_decode_tokens_total "), "{body}");
+
+    let qbody = quality.split("\r\n\r\n").nth(1).expect("quality body");
+    let qdoc = Json::parse(qbody).expect("quality JSON parses");
+    let hists = qdoc.get("histograms").unwrap().as_arr().unwrap();
+    assert!(
+        hists
+            .iter()
+            .any(|h| h.get("name").unwrap().as_str() == Some("lords_kv_seal_rel_error")),
+        "quality snapshot carries the seal-error family"
+    );
 }
