@@ -91,5 +91,11 @@ fn main() {
         t.row(row);
     }
     t.print();
+    lords::bench::baseline::write_tables(
+        "fig3_rank_spectrum",
+        "BENCH_fig3_rank_spectrum.json",
+        full,
+        &[t],
+    );
     println!("\n(shape check: QLoRA σ collapses ~0 right after σ{rank}; LoRDS keeps a long tail)");
 }

@@ -38,6 +38,7 @@ fn main() {
     // so the method ordering becomes visible. See EXPERIMENTS.md §T1.
     let codebooks: Vec<&str> = if full { vec!["nf4", "nf3"] } else { vec!["nf3"] };
 
+    let mut tables = Vec::new();
     for (name, cfg) in &models {
         let tb = Testbed::build(name, cfg, pretrain, 0);
         let fp = eval_model(&tb.model, &tb, ppl_windows, per_task);
@@ -81,8 +82,10 @@ fn main() {
                 ]);
             }
             t.print();
+            tables.push(t);
             }
         }
     }
+    lords::bench::baseline::write_tables("table1_ptq", "BENCH_table1_ptq.json", full, &tables);
     println!("\n(shape check: LoRDS should lead Avg at parity budget; see EXPERIMENTS.md)");
 }

@@ -71,5 +71,6 @@ fn main() {
         }
     }
     t.print();
+    lords::bench::baseline::write_tables("table2_refine", "BENCH_table2_refine.json", full, &[t]);
     println!("\n(shape check: 'yes' rows must beat '-' rows on all three metrics)");
 }

@@ -74,5 +74,6 @@ fn main() {
         }
     }
     t.print();
+    lords::bench::baseline::write_tables("table3_lowbit", "BENCH_table3_lowbit.json", full, &[t]);
     println!("\n(shape check: NF collapses, LoRDS stays usable at every bit width)");
 }

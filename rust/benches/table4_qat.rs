@@ -25,6 +25,7 @@ fn main() {
     let qat_steps = if full { 120 } else { 40 };
     let block = 64;
 
+    let mut tables = Vec::new();
     for (name, cfg) in &models {
         let tb = Testbed::build(name, cfg, pretrain, 0);
         let fp = eval_model(&tb.model, &tb, 8, 16);
@@ -78,6 +79,8 @@ fn main() {
         t.row(vec!["LoRDS-QAT (nf3)".into(), e.wiki.display(), e.ptb.display(), f2(e.avg)]);
 
         t.print();
+        tables.push(t);
     }
+    lords::bench::baseline::write_tables("table4_qat", "BENCH_table4_qat.json", full, &tables);
     println!("\n(shape check: *-QAT > PTQ, LoRDS-QAT > INT4-QAT)");
 }

@@ -147,6 +147,12 @@ fn main() {
     row(&mut t, "QLoRA one engine per tenant", n_tenants, bytes_qlora, &agg);
 
     t.print();
+    lords::bench::baseline::write_tables(
+        "table5_multitenant",
+        "BENCH_table5_multitenant.json",
+        full,
+        &[t],
+    );
     println!(
         "\n(shape check: LoRDS multi-tenant ≈ LoRDS single-tenant throughput, \
          ≈ 1/{n_tenants} the QLoRA deployment's weight bytes — base counted once)"

@@ -28,6 +28,7 @@ fn main() {
     let block = 64;
     let rank = 16; // adapters' rank (paper: 32 at 8B scale)
 
+    let mut tables = Vec::new();
     for (name, cfg) in &models {
         let tb = Testbed::build(name, cfg, pretrain, 0);
         // target distribution + its task suite
@@ -93,6 +94,8 @@ fn main() {
             ]);
         }
         t.print();
+        tables.push(t);
     }
+    lords::bench::baseline::write_tables("table5_peft", "BENCH_table5_peft.json", full, &tables);
     println!("\n(shape check: LoRDS wins Avg with ~half the #Float of the adapter methods)");
 }

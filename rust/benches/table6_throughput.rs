@@ -75,6 +75,7 @@ fn main() {
         ]);
     }
     t.print();
+    let mut tables = vec![t];
 
     // PJRT operating point (uses the AOT artifacts if present)
     match Executor::spawn("artifacts") {
@@ -119,9 +120,16 @@ fn main() {
                 }
             }
             t2.print();
+            tables.push(t2);
         }
         Err(e) => eprintln!("[table6] PJRT engine skipped ({e})  — run `make artifacts`"),
     }
+    lords::bench::baseline::write_tables(
+        "table6_throughput",
+        "BENCH_table6_throughput.json",
+        full,
+        &tables,
+    );
     println!("\n(shape check: LoRDS ≈ NF4 > QLoRA on decode and total)");
 }
 

@@ -28,6 +28,7 @@ fn main() {
     let suite = module_suite(scale, 0);
     let cb = Codebook::normal_float(4);
 
+    let mut tables = Vec::new();
     for &block in &blocks {
         let mut t = TableBuilder::new(&format!(
             "Table 8 — reduction ratio %, Llama-like modules at 1/{scale} scale, block {block}"
@@ -71,6 +72,13 @@ fn main() {
             t.row(row);
         }
         t.print();
+        tables.push(t);
     }
+    lords::bench::baseline::write_tables(
+        "table8_error_ratio",
+        "BENCH_table8_error_ratio.json",
+        full,
+        &tables,
+    );
     println!("\n(shape check: LoRDS > LoftQ/QPiSSA at smaller #Float; LoRDS† > all)");
 }

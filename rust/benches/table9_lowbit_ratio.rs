@@ -28,6 +28,7 @@ fn main() {
     // mirroring the paper's layer-prefix rule.
     let bits_list: Vec<f32> = if full { vec![3.0, 2.5, 2.25, 2.0] } else { vec![3.0, 2.0] };
 
+    let mut tables = Vec::new();
     for &bits in &bits_list {
         let nf4_frac = ((bits - 2.0) / 2.0).clamp(0.0, 1.0);
         let n_nf4 = (nf4_frac * suite.len() as f32).round() as usize;
@@ -71,6 +72,13 @@ fn main() {
             t.row(row);
         }
         t.print();
+        tables.push(t);
     }
+    lords::bench::baseline::write_tables(
+        "table9_lowbit_ratio",
+        "BENCH_table9_lowbit_ratio.json",
+        full,
+        &tables,
+    );
     println!("\n(shape check: LoRDS ratio ≈ 3× the adapter methods and grows as bits shrink)");
 }

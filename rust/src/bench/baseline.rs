@@ -1,0 +1,87 @@
+//! Machine-readable baseline export for the paper-table benches.
+//!
+//! The figure/serving benches (`fig2`, `decode_batch`, `kvcache`, the serve
+//! pair) hand-roll `BENCH_*.json` writers around their own structured
+//! measurement points. The table benches all end in one or more
+//! [`TableBuilder`]s instead, so [`write_tables`] serializes those tables
+//! verbatim — title, headers, rows — and CI can diff any table bench run
+//! without each bench growing a bespoke writer.
+//!
+//! The output path is `LORDS_BENCH_JSON` when set, otherwise `file` placed
+//! in the workspace root next to the other baselines. Failures to write are
+//! reported on stderr but never fail the bench — a read-only checkout still
+//! measures.
+
+use super::TableBuilder;
+use crate::obs::json::escaped;
+
+fn render_table(t: &TableBuilder, indent: &str) -> String {
+    let cells = |row: &[String]| -> String {
+        let quoted: Vec<String> = row.iter().map(|c| escaped(c)).collect();
+        format!("[{}]", quoted.join(", "))
+    };
+    let mut s = String::new();
+    s.push_str(&format!("{indent}{{\n"));
+    s.push_str(&format!("{indent}  \"title\": {},\n", escaped(&t.title)));
+    s.push_str(&format!("{indent}  \"headers\": {},\n", cells(&t.headers)));
+    s.push_str(&format!("{indent}  \"rows\": [\n"));
+    for (i, row) in t.rows.iter().enumerate() {
+        let comma = if i + 1 == t.rows.len() { "" } else { "," };
+        s.push_str(&format!("{indent}    {}{comma}\n", cells(row)));
+    }
+    s.push_str(&format!("{indent}  ]\n"));
+    s.push_str(&format!("{indent}}}"));
+    s
+}
+
+/// Serialize `tables` to the baseline file for `bench`. `file` is the
+/// bare baseline name (e.g. `"BENCH_table1_ptq.json"`); callers pass it as
+/// a literal so the mapping from bench to artifact is greppable.
+pub fn write_tables(bench: &str, file: &str, full_mode: bool, tables: &[TableBuilder]) {
+    let path = std::env::var("LORDS_BENCH_JSON")
+        .unwrap_or_else(|_| format!("{}/../{file}", env!("CARGO_MANIFEST_DIR")));
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"bench\": {},\n", escaped(bench)));
+    s.push_str("  \"unit\": \"table\",\n");
+    s.push_str(&format!("  \"full_mode\": {full_mode},\n"));
+    s.push_str(&format!("  \"threads\": {},\n", crate::util::ThreadPool::global().size()));
+    s.push_str("  \"measured\": true,\n");
+    s.push_str("  \"tables\": [\n");
+    for (i, t) in tables.iter().enumerate() {
+        s.push_str(&render_table(t, "    "));
+        s.push_str(if i + 1 == tables.len() { "\n" } else { ",\n" });
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, &s) {
+        Ok(()) => eprintln!("[{bench}] wrote baseline {path}"),
+        Err(e) => eprintln!("[{bench}] could not write {path}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::json::Json;
+
+    fn sample() -> TableBuilder {
+        let mut t = TableBuilder::new("Table \"X\"").headers(&["Method", "Wiki ↓"]);
+        t.row(vec!["NF4".into(), "7.90".into()]);
+        t.row(vec!["Lo\\RDS".into(), "7.77".into()]);
+        t
+    }
+
+    #[test]
+    fn rendered_baseline_parses_as_json() {
+        let mut body = String::from("{\n  \"measured\": true,\n  \"tables\": [\n");
+        body.push_str(&render_table(&sample(), "    "));
+        body.push_str("\n  ]\n}\n");
+        let j = Json::parse(&body).expect("baseline JSON parses");
+        let tables = j.get("tables").and_then(|t| t.as_arr()).expect("tables array");
+        assert_eq!(tables.len(), 1);
+        let t0 = &tables[0];
+        assert_eq!(t0.get("title").and_then(|v| v.as_str()), Some("Table \"X\""));
+        let rows = t0.get("rows").and_then(|r| r.as_arr()).expect("rows");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].as_arr().and_then(|r| r[0].as_str()), Some("Lo\\RDS"));
+    }
+}

@@ -2,6 +2,7 @@
 //! mean/p50/p99 reporting, plus the markdown table renderer the paper-table
 //! benches share.
 
+pub mod baseline;
 pub mod harness;
 pub mod table;
 

@@ -76,6 +76,8 @@ impl Batcher {
     }
 
     pub fn max_bucket(&self) -> usize {
+        // PANIC-OK: the constructor asserts `buckets` is non-empty and it is
+        // never mutated afterwards.
         *self.buckets.last().unwrap()
     }
 
@@ -87,7 +89,7 @@ impl Batcher {
         }
         let avail = self.queue.len().min(capacity);
         let full = self.max_bucket();
-        let oldest_wait = now.duration_since(self.queue.front().unwrap().arrival);
+        let oldest_wait = now.duration_since(self.queue.front()?.arrival);
         let target = if avail >= full {
             full
         } else if oldest_wait >= self.window {

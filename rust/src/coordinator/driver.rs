@@ -55,8 +55,9 @@ pub fn run_open_loop<E: Engine>(
         // *scheduled* arrival — a submission delayed by a long prefill or
         // decode tick still charges that delay to queue-wait/TTFT (exactly
         // the congestion the open-loop regime exists to measure)
-        while pending.peek().is_some_and(|(_, at)| wall0.elapsed().as_secs_f64() >= *at) {
-            let (mut req, at) = pending.next().unwrap();
+        while let Some((mut req, at)) =
+            pending.next_if(|(_, at)| wall0.elapsed().as_secs_f64() >= *at)
+        {
             req.arrival = wall0 + std::time::Duration::from_secs_f64(at);
             let _ = server.submit(req); // rejections already counted
         }

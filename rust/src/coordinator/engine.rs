@@ -294,20 +294,57 @@ impl EngineObs {
                 &[],
                 "Sealed KV blocks currently allocated.",
             ),
-            kv_blocks_capacity: reg.gauge("lords_kv_blocks_capacity", &[]),
-            kv_staging_bytes: reg.gauge("lords_kv_staging_bytes", &[]),
-            kv_used_bytes: reg.gauge("lords_kv_used_bytes", &[]),
-            kv_peak_bytes: reg.gauge("lords_kv_peak_bytes", &[]),
-            kv_active_sequences: reg.gauge("lords_kv_active_sequences", &[]),
-            prefix_cached_blocks: reg.gauge("lords_prefix_cached_blocks", &[]),
-            adapter_resident_bytes: reg.gauge("lords_adapter_resident_bytes", &[]),
-            adapter_residents: reg.gauge("lords_adapter_residents", &[]),
-            adapter_evictions: reg.counter("lords_adapter_evictions_total", &[]),
+            kv_blocks_capacity: reg.gauge_with_help(
+                "lords_kv_blocks_capacity",
+                &[],
+                "Total KV blocks the pool can hold.",
+            ),
+            kv_staging_bytes: reg.gauge_with_help(
+                "lords_kv_staging_bytes",
+                &[],
+                "Dense f32 staging-tail bytes held by active sequences.",
+            ),
+            kv_used_bytes: reg.gauge_with_help(
+                "lords_kv_used_bytes",
+                &[],
+                "Bytes of sealed KV storage currently in use.",
+            ),
+            kv_peak_bytes: reg.gauge_with_help(
+                "lords_kv_peak_bytes",
+                &[],
+                "High-water mark of sealed KV bytes since pool creation.",
+            ),
+            kv_active_sequences: reg.gauge_with_help(
+                "lords_kv_active_sequences",
+                &[],
+                "Sequences holding KV reservations.",
+            ),
+            prefix_cached_blocks: reg.gauge_with_help(
+                "lords_prefix_cached_blocks",
+                &[],
+                "Sealed blocks pinned by the shared-prefix cache.",
+            ),
+            adapter_resident_bytes: reg.gauge_with_help(
+                "lords_adapter_resident_bytes",
+                &[],
+                "Bytes of resident adapter factors.",
+            ),
+            adapter_residents: reg.gauge_with_help(
+                "lords_adapter_residents",
+                &[],
+                "Adapters currently resident in the registry.",
+            ),
+            adapter_evictions: reg.counter_with_help(
+                "lords_adapter_evictions_total",
+                &[],
+                "Adapters evicted from the registry to fit the budget.",
+            ),
             evictions_seen: 0,
-            decode_tenant_groups: reg.histogram(
+            decode_tenant_groups: reg.histogram_with_help(
                 "lords_decode_tenant_groups",
                 &[],
                 &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+                "Tenant groups formed per batched decode tick.",
             ),
             kv_block_coldness: reg.histogram_with_help(
                 quality::COLDNESS_FAMILY,
@@ -442,7 +479,10 @@ impl NativeEngine {
     /// decode_batch bench); the serving loop uses [`Engine::decode`].
     pub fn decode_reference(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
         for s in seqs.iter_mut() {
-            let tok = *s.tokens.last().unwrap();
+            let tok = *s
+                .tokens
+                .last()
+                .ok_or_else(|| anyhow::anyhow!("sequence {} has no tokens to decode", s.id))?;
             let factors = self.registry.get(&s.adapter);
             s.last_logits = self.model.decode_pooled(tok, &mut self.pool, s.id, factors)?;
         }
@@ -746,6 +786,8 @@ impl Engine for NativeEngine {
                 let s = &seqs[i];
                 DecodeRow {
                     seq: s.id,
+                    // PANIC-OK: a running sequence always holds ≥1 token —
+                    // admission rejects empty prompts and decode only appends.
                     token: *s.tokens.last().unwrap(),
                     // pinned at prefill ⇒ still resident even if eviction
                     // is pending
@@ -905,7 +947,11 @@ impl PjrtEngine {
         for (name, art) in &manifest.artifacts {
             if let Some(b) = name.strip_prefix(&format!("{mode}_prefill_b")) {
                 prefill_buckets.push(b.parse()?);
-                prefill_seq = art.inputs.last().unwrap().dims[1];
+                prefill_seq = art
+                    .inputs
+                    .last()
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name} declares no inputs"))?
+                    .dims[1];
             } else if let Some(b) = name.strip_prefix(&format!("{mode}_decode_b")) {
                 decode_buckets.push(b.parse()?);
             }
@@ -934,7 +980,9 @@ impl PjrtEngine {
     }
 
     fn bucket_geq(buckets: &[usize], n: usize) -> usize {
-        buckets.iter().copied().find(|&b| b >= n).unwrap_or(*buckets.last().unwrap())
+        // an empty bucket list falls back to n itself; the artifact lookup
+        // then fails with a clean "no such artifact" error instead of a panic
+        buckets.iter().copied().find(|&b| b >= n).or_else(|| buckets.last().copied()).unwrap_or(n)
     }
 
     fn slab_elems(&self) -> usize {
@@ -964,6 +1012,8 @@ impl PjrtEngine {
         let per_pos = self.n_heads * self.head_dim;
         let per_layer_seq = self.max_seq * per_pos;
         for (bi, id) in ids.iter().enumerate() {
+            // PANIC-OK: prefill inserts a slab for every id before unpack
+            // runs; decode only passes resident ids.
             let slab = self.slabs.get_mut(id).unwrap();
             for l in 0..self.n_layers {
                 let dst = l * per_layer_seq;
@@ -986,9 +1036,12 @@ impl Engine for PjrtEngine {
     }
 
     fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        let Some(&max_prefill) = self.prefill_buckets.last() else {
+            anyhow::bail!("no {}_prefill_b* artifacts", self.mode);
+        };
         let mut idx = 0;
         while idx < seqs.len() {
-            let n = (seqs.len() - idx).min(*self.prefill_buckets.last().unwrap());
+            let n = (seqs.len() - idx).min(max_prefill);
             let b = Self::bucket_geq(&self.prefill_buckets, n);
             let chunk = &mut seqs[idx..(idx + n)];
             // tokens [b, prefill_seq] (pad rows by repeating the last seq)
@@ -1036,7 +1089,9 @@ impl Engine for PjrtEngine {
     }
 
     fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
-        let max_bucket = *self.decode_buckets.last().unwrap();
+        let Some(&max_bucket) = self.decode_buckets.last() else {
+            anyhow::bail!("no {}_decode_b* artifacts", self.mode);
+        };
         // continuous batching admits sequences at different times, so the
         // running set can be ragged in cache position; each decode artifact
         // takes a single `cur`, so group same-position sequences per call.
@@ -1059,8 +1114,10 @@ impl Engine for PjrtEngine {
             let ids: Vec<u64> = chunk.iter().map(|&i| seqs[i].id).collect();
             let cur = cur0;
             anyhow::ensure!(cur < self.max_seq, "KV slab full");
-            let mut toks: Vec<i32> =
-                chunk.iter().map(|&i| *seqs[i].tokens.last().unwrap() as i32).collect();
+            // PANIC-OK: a running sequence always holds ≥1 token —
+            // admission rejects empty prompts and decode only appends.
+            let last_tok = |i: &usize| *seqs[*i].tokens.last().unwrap() as i32;
+            let mut toks: Vec<i32> = chunk.iter().map(last_tok).collect();
             // pad ids by repeating the first sequence (results discarded)
             let mut padded_ids = ids.clone();
             while padded_ids.len() < b {

@@ -86,6 +86,8 @@ impl KvBlockAllocator {
         }
         let list = self.owned.entry(seq).or_default();
         for _ in 0..extra {
+            // PANIC-OK: `extra <= free.len()` was checked just above and
+            // nothing pushes to `owned` in between.
             let b = self.free.pop().unwrap();
             debug_assert_eq!(self.refs[b], 0);
             self.refs[b] = 1;
@@ -154,9 +156,12 @@ impl KvBlockAllocator {
         if index >= have || self.free.is_empty() {
             return None;
         }
+        // PANIC-OK: `free` was checked non-empty and `seq` was checked to
+        // own > `index` blocks just above.
         let fresh = self.free.pop().unwrap();
         debug_assert_eq!(self.refs[fresh], 0);
         self.refs[fresh] = 1;
+        // PANIC-OK: `have > index` above proves `seq` is a resident key.
         let old = std::mem::replace(&mut self.owned.get_mut(&seq).unwrap()[index], fresh);
         let was_last = self.release_ref(old);
         debug_assert!(!was_last, "cow_swap on an unshared block {old} (callers should write in place)");
@@ -191,6 +196,8 @@ impl KvBlockAllocator {
     /// [`Self::try_release`]).
     pub fn release(&mut self, seq: u64) {
         if self.try_release(seq).is_none() {
+            // PANIC-OK: the strict variant exists to turn double-frees into
+            // loud bookkeeping bugs; serve paths call `try_release`.
             panic!("double free of seq {seq}");
         }
     }

@@ -150,35 +150,69 @@ impl ServerObs {
         // registered lazily per adapter label in `admit`; the family help
         // is recorded up front so the exposition always carries it
         registry.set_help("lords_requests_total", "Requests admitted, by adapter.");
+        registry.set_help("lords_rejected_total", "Requests rejected, by reason.");
         ServerObs {
             completed: registry.counter_with_help(
                 "lords_completed_total",
                 &[],
                 "Requests served to completion.",
             ),
-            cancelled: registry.counter("lords_cancelled_total", &[]),
-            prefill_tokens: registry.counter("lords_prefill_tokens_total", &[]),
-            prefix_hit_tokens: registry.counter("lords_prefix_hit_tokens_total", &[]),
-            prefill_chunks: registry.counter("lords_prefill_chunks_total", &[]),
+            cancelled: registry.counter_with_help(
+                "lords_cancelled_total",
+                &[],
+                "Requests cancelled by the client before completion.",
+            ),
+            prefill_tokens: registry.counter_with_help(
+                "lords_prefill_tokens_total",
+                &[],
+                "Prompt tokens prefilled (computed, not prefix-cache hits).",
+            ),
+            prefix_hit_tokens: registry.counter_with_help(
+                "lords_prefix_hit_tokens_total",
+                &[],
+                "Prompt tokens served from the shared-prefix cache.",
+            ),
+            prefill_chunks: registry.counter_with_help(
+                "lords_prefill_chunks_total",
+                &[],
+                "Prefill chunks executed across all sequences.",
+            ),
             decode_tokens: registry.counter_with_help(
                 "lords_decode_tokens_total",
                 &[],
                 "Tokens produced by decode ticks.",
             ),
-            decode_ticks: registry.counter("lords_decode_ticks_total", &[]),
-            queue_depth: registry.gauge("lords_queue_depth", &[]),
-            running: registry.gauge("lords_running_sequences", &[]),
-            prefilling: registry.gauge("lords_prefilling_sequences", &[]),
+            decode_ticks: registry.counter_with_help(
+                "lords_decode_ticks_total",
+                &[],
+                "Batched decode ticks stepped.",
+            ),
+            queue_depth: registry.gauge_with_help(
+                "lords_queue_depth",
+                &[],
+                "Requests waiting in the admission queue.",
+            ),
+            running: registry.gauge_with_help(
+                "lords_running_sequences",
+                &[],
+                "Sequences currently decoding.",
+            ),
+            prefilling: registry.gauge_with_help(
+                "lords_prefilling_sequences",
+                &[],
+                "Admitted sequences still prefilling their prompts.",
+            ),
             decode_batch_size: registry.histogram_with_help(
                 "lords_decode_batch_size",
                 &[],
                 &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0],
                 "Running sequences per batched decode tick.",
             ),
-            prefill_chunk_utilization: registry.histogram(
+            prefill_chunk_utilization: registry.histogram_with_help(
                 "lords_prefill_chunk_utilization",
                 &[],
                 &[0.25, 0.5, 0.75, 0.9, 1.0],
+                "Fraction of each prefill chunk budget actually used.",
             ),
             ttft_seconds: registry.histogram_with_help(
                 "lords_ttft_seconds",
@@ -186,7 +220,12 @@ impl ServerObs {
                 latency,
                 "Time to first token, seconds.",
             ),
-            itl_seconds: registry.histogram("lords_itl_seconds", &[], latency),
+            itl_seconds: registry.histogram_with_help(
+                "lords_itl_seconds",
+                &[],
+                latency,
+                "Inter-token latency, seconds.",
+            ),
             sentinel_probes: registry.counter_with_help(
                 quality::SENTINEL_PROBES_FAMILY,
                 &[],
@@ -237,6 +276,9 @@ pub struct Server<E: Engine> {
     pub obs: ServerObs,
     batcher: Batcher,
     cfg: ServeCfg,
+    /// Largest decode bucket — the concurrency ceiling. Computed once at
+    /// construction so serving paths never re-derive it from the config.
+    max_concurrent: usize,
     /// In-flight sequences. Kept as a plain `Vec<SeqState>` (with
     /// `timings` index-aligned beside it) so the engine's batched decode
     /// tick borrows the whole running set as one `&mut [SeqState]` —
@@ -276,7 +318,9 @@ impl<E: Engine> Server<E> {
         // default) exactly what `max_concurrent` dense f32 worst-case
         // sequences would need — quantized KV formats then fit more blocks
         // (and so more sequences) in the same bytes.
-        let max_concurrent = *cfg.decode_buckets.last().unwrap();
+        // PANIC-OK: construction-time config validation — an empty
+        // decode_buckets list is a programming error, not a runtime input.
+        let max_concurrent = *cfg.decode_buckets.last().expect("decode_buckets must be non-empty");
         let budget = if cfg.kv_budget_mib > 0.0 {
             Some((cfg.kv_budget_mib * 1024.0 * 1024.0) as usize)
         } else {
@@ -302,6 +346,7 @@ impl<E: Engine> Server<E> {
                 cfg.max_queue,
             ),
             cfg,
+            max_concurrent,
             running: Vec::new(),
             timings: Vec::new(),
             prefilling: Vec::new(),
@@ -471,9 +516,8 @@ impl<E: Engine> Server<E> {
     /// only) and hand the sequences to [`Self::prefill_tick`]; legacy
     /// engines keep the old whole-batch prefill at admission.
     fn admit(&mut self, events: &mut Vec<Event>) -> anyhow::Result<()> {
-        let max_concurrent = *self.cfg.decode_buckets.last().unwrap();
         let in_flight = self.running.len() + self.prefilling.len();
-        let slots_left = max_concurrent.saturating_sub(in_flight);
+        let slots_left = self.max_concurrent.saturating_sub(in_flight);
         if slots_left == 0 || self.batcher.is_empty() {
             return Ok(());
         }
@@ -505,15 +549,16 @@ impl<E: Engine> Server<E> {
                 // step() try its successors. Unreachable for the stock
                 // engines — pool sizing always fits one worst-case
                 // sequence — but a misconfigured pool must not livelock.
-                let id = self.batcher.peek(1).next().expect("queue non-empty").id;
-                let req = self.batcher.remove(id).expect("peeked above");
-                self.live.remove(&req.id);
-                self.metrics.rejected += 1;
-                self.obs.reject(req.id, RejectReason::KvBudgetExceeded);
-                events.push(Event::Rejected {
-                    id: req.id,
-                    reason: RejectReason::KvBudgetExceeded,
-                });
+                let front = self.batcher.peek(1).next().map(|r| r.id);
+                if let Some(req) = front.and_then(|id| self.batcher.remove(id)) {
+                    self.live.remove(&req.id);
+                    self.metrics.rejected += 1;
+                    self.obs.reject(req.id, RejectReason::KvBudgetExceeded);
+                    events.push(Event::Rejected {
+                        id: req.id,
+                        reason: RejectReason::KvBudgetExceeded,
+                    });
+                }
             }
             return Ok(()); // otherwise blocks free up as running sequences finish
         }

@@ -133,9 +133,9 @@ pub fn lords_matmul_transb_into(
     let yp = SharedMut(y.data.as_mut_ptr());
     let ypr = &yp;
     ThreadPool::global().parallel_for(n, move |lo, hi| {
-        let mut srow = vec![0.0f32; m];
-        let mut crow = vec![0u8; m];
-        let mut wtile = vec![0.0f32; ROW_TILE * m];
+        let mut srow = vec![0.0f32; m]; // ALLOC-OK: per-worker-chunk scratch, not per token/row
+        let mut crow = vec![0u8; m]; // ALLOC-OK: per-worker-chunk scratch, not per token/row
+        let mut wtile = vec![0.0f32; ROW_TILE * m]; // ALLOC-OK: per-worker-chunk scratch
         let mut j0 = lo;
         while j0 < hi {
             let j1 = (j0 + ROW_TILE).min(hi);
@@ -150,9 +150,12 @@ pub fn lords_matmul_transb_into(
             // is loaded once per tile, not once per weight row)
             for xi in 0..t {
                 let xrow = x.row(xi);
-                let ybase = xi * n + j0; // rows [lo, hi) of Ŵ ⇒ disjoint y columns
+                let ybase = xi * n + j0;
                 for ti in 0..tr {
                     let acc = dot(xrow, &wtile[ti * m..(ti + 1) * m]);
+                    // SAFETY: this worker owns Ŵ rows [lo, hi) ⇒ y columns
+                    // [lo, hi) of every output row — disjoint across workers;
+                    // y outlives the parallel_for join.
                     unsafe { *ypr.0.add(ybase + ti) = acc };
                 }
             }
@@ -198,9 +201,11 @@ pub fn lords_matmul(
                 if gv == 0.0 {
                     continue;
                 }
-                // columns [c0, c1) of every y row are owned by this worker
-                let out =
-                    unsafe { std::slice::from_raw_parts_mut(ypr.0.add(gi * m + c0), width) };
+                let base = gi * m + c0;
+                // SAFETY: columns [c0, c1) of every y row are owned by this
+                // worker (chunks partition the columns); y outlives the
+                // parallel_for join.
+                let out = unsafe { std::slice::from_raw_parts_mut(ypr.0.add(base), width) };
                 for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
                     *o += gv * wv;
                 }
@@ -292,8 +297,8 @@ pub fn blockwise_matmul_transb_into(
     let yp = SharedMut(y.data.as_mut_ptr());
     let ypr = &yp;
     ThreadPool::global().parallel_for(n, move |lo, hi| {
-        let mut crow = vec![0u8; m];
-        let mut wtile = vec![0.0f32; ROW_TILE * m];
+        let mut crow = vec![0u8; m]; // ALLOC-OK: per-worker-chunk scratch, not per token/row
+        let mut wtile = vec![0.0f32; ROW_TILE * m]; // ALLOC-OK: per-worker-chunk scratch
         let mut j0 = lo;
         while j0 < hi {
             let j1 = (j0 + ROW_TILE).min(hi);
@@ -307,6 +312,9 @@ pub fn blockwise_matmul_transb_into(
                 let ybase = xi * n + j0;
                 for ti in 0..tr {
                     let acc = dot(xrow, &wtile[ti * m..(ti + 1) * m]);
+                    // SAFETY: this worker owns Ŵ rows [lo, hi) ⇒ y columns
+                    // [lo, hi) of every output row — disjoint across workers;
+                    // y outlives the parallel_for join.
                     unsafe { *ypr.0.add(ybase + ti) = acc };
                 }
             }
@@ -346,8 +354,11 @@ pub fn blockwise_matmul(
                 if gv == 0.0 {
                     continue;
                 }
-                let out =
-                    unsafe { std::slice::from_raw_parts_mut(ypr.0.add(gi * m + c0), width) };
+                let base = gi * m + c0;
+                // SAFETY: columns [c0, c1) of every y row are owned by this
+                // worker (chunks partition the columns); y outlives the
+                // parallel_for join.
+                let out = unsafe { std::slice::from_raw_parts_mut(ypr.0.add(base), width) };
                 for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
                     *o += gv * wv;
                 }

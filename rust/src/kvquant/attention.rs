@@ -135,7 +135,9 @@ pub fn decode_packed_batch(q: &Matrix, views: &[KvSeqView], n_heads: usize, out:
         ATTN_SCRATCH.with(|s| {
             let scratch = &mut s.borrow_mut();
             for i in lo..hi {
-                // rows [lo, hi) of `out` are owned by this worker — disjoint
+                // SAFETY: rows [lo, hi) of `out` are owned by this worker —
+                // chunks partition the batch, so row `i` is carved exactly
+                // once; `out` outlives the parallel_for join.
                 let orow = unsafe { std::slice::from_raw_parts_mut(opr.0.add(i * d), d) };
                 decode_packed_into(q.row(i), &views[i], n_heads, scratch, orow);
             }

@@ -200,11 +200,10 @@ impl KvPool {
     /// Pure arithmetic — mirrors the `PackedCodes` word-aligned row layout.
     pub fn block_bytes(&self) -> usize {
         let (bt, d) = (self.cfg.block_tokens, self.d_model);
-        let per_tile = match self.cfg.bits {
-            KvBits::F32 => 4 * bt * d,
-            bits => {
-                let cb_len = bits.codebook().expect("packed format").len();
-                let cpw = PackedCodes::codes_per_word(PackedCodes::bits_needed(cb_len));
+        let per_tile = match self.cfg.bits.codebook() {
+            None => 4 * bt * d,
+            Some(cb) => {
+                let cpw = PackedCodes::codes_per_word(PackedCodes::bits_needed(cb.len()));
                 4 * bt * d.div_ceil(cpw) + 4 * (bt * self.cfg.rank + self.cfg.rank * d)
             }
         };
@@ -373,19 +372,18 @@ impl KvPool {
         if !self.alloc.attach(seq, shared) {
             return false;
         }
-        self.ensure_seq(seq);
-        self.seqs.get_mut(&seq).expect("just ensured").len = tokens;
+        self.ensure_seq(seq).len = tokens;
         self.touch_peak();
         true
     }
 
-    fn ensure_seq(&mut self, seq: u64) {
+    fn ensure_seq(&mut self, seq: u64) -> &mut SeqKv {
         let (bt, d, l) = (self.cfg.block_tokens, self.d_model, self.n_layers);
         self.seqs.entry(seq).or_insert_with(|| SeqKv {
             len: 0,
             tail_k: (0..l).map(|_| Matrix::zeros(bt, d)).collect(),
             tail_v: (0..l).map(|_| Matrix::zeros(bt, d)).collect(),
-        });
+        })
     }
 
     /// Reserve blocks so the sequence can grow to `tokens` total tokens
@@ -477,7 +475,10 @@ impl KvPool {
         let bt = self.cfg.block_tokens;
         let ti = pos % bt;
         {
-            let sk = self.seqs.get_mut(&seq).expect("ensured by callers");
+            let sk = self
+                .seqs
+                .get_mut(&seq)
+                .ok_or_else(|| anyhow::anyhow!("KV staging write for unknown sequence {seq}"))?;
             sk.tail_k[layer].row_mut(ti).copy_from_slice(k_row);
             sk.tail_v[layer].row_mut(ti).copy_from_slice(v_row);
         }
@@ -492,7 +493,10 @@ impl KvPool {
                 })?;
             }
             let (tile_k, tile_v) = {
-                let sk = self.seqs.get(&seq).expect("ensured by callers");
+                let sk = self
+                    .seqs
+                    .get(&seq)
+                    .ok_or_else(|| anyhow::anyhow!("KV seal for unknown sequence {seq}"))?;
                 (
                     self.seal_tile(&sk.tail_k[layer]),
                     self.seal_tile(&sk.tail_v[layer]),
@@ -530,6 +534,9 @@ impl KvPool {
     /// Read window over one (sequence, layer): sealed tiles + the staging
     /// tail, covering positions `0..len`.
     pub fn view(&self, seq: u64, layer: usize, len: usize) -> KvSeqView<'_> {
+        // PANIC-OK: caller contract — views are only taken over sequences
+        // the caller itself appended (the engine's decode path); the asserts
+        // below guard the same contract for lengths.
         let sk = self.seqs.get(&seq).unwrap_or_else(|| panic!("unknown KV sequence {seq}"));
         let bt = self.cfg.block_tokens;
         let sealed = len / bt;
@@ -545,8 +552,8 @@ impl KvPool {
         for bi in 0..sealed {
             let ik = self.slot_idx(owned[bi], layer, 0);
             let iv = self.slot_idx(owned[bi], layer, 1);
-            k_tiles.push(self.slots[ik].as_ref().expect("sealed block has storage"));
-            v_tiles.push(self.slots[iv].as_ref().expect("sealed block has storage"));
+            k_tiles.push(self.slots[ik].as_ref().expect("sealed block has storage")); // PANIC-OK: blocks 0..sealed were sealed by stage_row
+            v_tiles.push(self.slots[iv].as_ref().expect("sealed block has storage")); // PANIC-OK: seal writes both K and V tiles together
             let cell = &self.heat[owned[bi]];
             cell.last_access.store(now, Ordering::Relaxed);
             cell.accesses.fetch_add(1, Ordering::Relaxed);

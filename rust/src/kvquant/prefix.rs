@@ -124,6 +124,8 @@ impl PrefixCache {
             h = Self::chain_hash(h, toks);
             match self.children.get(&(parent, h)) {
                 Some(&ni) if self.nodes[ni].as_ref().is_some_and(|n| n.tokens == toks) => {
+                    // PANIC-OK: the guard above just proved `nodes[ni]` is
+                    // Some and nothing between can take it.
                     let n = self.nodes[ni].as_mut().expect("checked live");
                     n.last_used = self.clock;
                     out.push(n.block);
@@ -223,6 +225,9 @@ impl PrefixCache {
                     };
                     self.children.insert((parent, h), ni);
                     if parent != ROOT {
+                        // PANIC-OK: trie invariant — a child edge only ever
+                        // points at a live parent (remove_node unlinks edges
+                        // before freeing the node).
                         self.nodes[parent].as_mut().expect("live parent").children += 1;
                     }
                     ni
@@ -242,9 +247,13 @@ impl PrefixCache {
     }
 
     fn remove_node(&mut self, ni: usize, pool: &mut KvPool) -> bool {
+        // PANIC-OK: callers (evict's leaf scan) only pass live node indices;
+        // freed slots are parked in `free_nodes`, never revisited.
         let n = self.nodes[ni].take().expect("live node");
         self.children.remove(&(n.parent, n.hash));
         if n.parent != ROOT {
+            // PANIC-OK: trie invariant — children are removed before (and
+            // cascade into) their parents, so the parent is still live.
             self.nodes[n.parent].as_mut().expect("live parent").children -= 1;
         }
         self.free_nodes.push(ni);

@@ -38,6 +38,12 @@
 //! | [`coordinator`] | online serving API (sessioned submit/stream/cancel + offline trace shim), **continuous batching** (chunked prefill interleaved with batched decode ticks; shared-prefix KV reuse at admission), dynamic batcher with KV-aware admission, fused kernels once per tenant-group per tick, open-loop arrival driver, KV-block allocator, TTFT/ITL metrics |
 //! | [`bench`] | timing harness + markdown table rendering |
 //! | [`report`] | paper-style table renderers shared by benches |
+//!
+//! The tree's working invariants — `unsafe` discipline, panic-free
+//! serving paths, allocation-free decode hot loops, documented metrics,
+//! this very module map, and bench baseline output — are statically
+//! enforced by the `repolint` workspace tool (`rust/tools/repolint`,
+//! a hard CI gate); see the README's "Static analysis" section.
 
 // Style lints this codebase deliberately trades away: index-heavy numeric
 // kernels read better with explicit loops, and the quantizer entry points

@@ -84,7 +84,9 @@ impl AdminServer {
     /// this whenever it has something fresh (periodically, or when an
     /// anomaly trips).
     pub fn publish_flight(&self, dump: String) {
-        *self.shared.flight.lock().expect("admin flight lock poisoned") = dump;
+        // the guarded value is a plain String, valid even if a reader
+        // panicked mid-clone — recover from poisoning instead of unwinding
+        *self.shared.flight.lock().unwrap_or_else(|e| e.into_inner()) = dump;
     }
 }
 
@@ -136,7 +138,7 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
             respond(&mut stream, 200, "application/json", &trace::render_chrome(&trace::drain()))
         }
         "/flight" => {
-            let body = shared.flight.lock().expect("admin flight lock poisoned").clone();
+            let body = shared.flight.lock().unwrap_or_else(|e| e.into_inner()).clone();
             respond(&mut stream, 200, "application/json", &body)
         }
         "/quality" => {

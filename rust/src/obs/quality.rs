@@ -104,6 +104,9 @@ fn weight_err_gauge(
     tenant: &str,
 ) -> Gauge {
     let layer = layer.to_string();
+    // METRIC-OK: `family` is one of the WEIGHT/ADAPTER_ERR_FAMILY consts,
+    // forwarded by the registration helpers below; both rows are in the
+    // README metrics table.
     reg.gauge_with_help(
         family,
         &[("layer", layer.as_str()), ("linear", linear), ("tenant", tenant)],

@@ -50,11 +50,16 @@ impl BlockwiseQuant {
                     if s == 0.0 {
                         s = 1.0;
                     }
+                    // SAFETY: scale row `i` belongs to this worker's chunk
+                    // alone; the scale matrix outlives the parallel_for join.
                     unsafe { *sp.0.add(i * nb + b) = s };
                     for (k, &v) in blk.iter().enumerate() {
                         rowbuf[b * block + k] = codebook.quantize_one(v, s) as u8;
                     }
                 }
+                // SAFETY: packed rows are word-aligned, so row `i`'s word
+                // slice is disjoint across workers; the code store outlives
+                // the parallel_for join.
                 let out = unsafe { std::slice::from_raw_parts_mut(cp.0.add(i * wpr), wpr) };
                 PackedCodes::pack_row(bits, &rowbuf, out);
             }

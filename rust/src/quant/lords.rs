@@ -121,6 +121,9 @@ impl LordsQuant {
                 for j in 0..cols {
                     rowbuf[j] = cb.quantize_one(wrow[j], srow[j]) as u8;
                 }
+                // SAFETY: packed rows are word-aligned (`words_per_row`
+                // words each), so row `i`'s word slice is disjoint across
+                // workers; the code store outlives the parallel_for join.
                 let out = unsafe { std::slice::from_raw_parts_mut(wp.0.add(i * wpr), wpr) };
                 PackedCodes::pack_row(bits, &rowbuf, out);
             }

@@ -21,6 +21,9 @@ use crate::util::ThreadPool;
 const PAR_FLOP_THRESHOLD: usize = 64 * 64 * 64;
 
 struct SendPtr(*mut f32);
+// SAFETY: a private `util::pool::SharedMut` twin — workers receive strictly
+// disjoint row ranges of C (see `dispatch_rows`), and `parallel_for` joins
+// them before the owning matrix is used again.
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
@@ -134,7 +137,9 @@ where
     let ptr = SendPtr(c.data.as_mut_ptr());
     let ptr_ref = &ptr;
     ThreadPool::global().parallel_for(m, move |lo, hi| {
-        // each chunk owns rows [lo, hi) of C — disjoint slices
+        // SAFETY: chunks partition [0, m), so rows [lo, hi) of C — and the
+        // carved slice — belong to exactly one worker; C's buffer outlives
+        // the join in `parallel_for`.
         let slice = unsafe { std::slice::from_raw_parts_mut(ptr_ref.0.add(lo * n), (hi - lo) * n) };
         run(lo, hi, slice);
     });

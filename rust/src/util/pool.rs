@@ -82,6 +82,10 @@ impl ThreadPool {
             let end = ((c + 1) * chunk).min(n);
             let counter = Arc::clone(&counter);
             let job: Job = Box::new(move || {
+                // SAFETY: `f` lives on the caller's frame, and the caller
+                // blocks on the completion counter below until every job has
+                // run — the borrow is alive for every dereference, and `F:
+                // Sync` makes the shared `&F` sound across workers.
                 let f = unsafe { &*(f_ptr as *const F) };
                 if start < end {
                     f(start, end);
@@ -114,6 +118,9 @@ impl ThreadPool {
             let out_ref = &out_ptr;
             self.parallel_for(n, move |lo, hi| {
                 for i in lo..hi {
+                    // SAFETY: chunks partition [0, n) disjointly, so index
+                    // `i` is written by exactly one worker; `out` is not
+                    // touched again until parallel_for joins all workers.
                     unsafe { *out_ref.0.add(i) = f(i) };
                 }
             });
@@ -133,6 +140,9 @@ impl ThreadPool {
 /// `parallel_for` joins all workers before the owning buffer is touched
 /// again — both upheld by construction at each call site.
 pub struct SharedMut<T>(pub *mut T);
+// SAFETY: per the contract above — workers write strictly disjoint ranges
+// through the pointer, and `parallel_for` joins them before the owning
+// buffer is read or dropped, so sharing/sending it cannot race.
 unsafe impl<T> Sync for SharedMut<T> {}
 unsafe impl<T> Send for SharedMut<T> {}
 

@@ -1,0 +1,1251 @@
+//! `repolint` — source-level invariant checker for this repository.
+//!
+//! The serving core leans on hand-rolled `unsafe` (the raw-pointer
+//! `parallel_for` fan-out in `util::pool`, lock-free trace segments in
+//! `obs::trace`, packed-code kernels) and on contracts rustc cannot see:
+//! the serving path must not panic, the per-token hot path must not
+//! allocate, every exported metric must be documented. This tool turns
+//! those reviewer-enforced contracts into a hard CI gate
+//! (`cargo run -p repolint`, exit 0 means clean).
+//!
+//! Diagnostics name the rule ID, its slug, and the site:
+//!
+//! ```text
+//! repolint: E0003 [panic-free-serving] rust/src/coordinator/server.rs:412 — `.unwrap()` ...
+//! ```
+//!
+//! | rule  | slug               | invariant                                              | escape hatch            |
+//! |-------|--------------------|--------------------------------------------------------|-------------------------|
+//! | E0001 | safety-comment     | every `unsafe` is immediately preceded by `// SAFETY:` | `// SAFETY: <why>`      |
+//! | E0002 | unsafe-allowlist   | `unsafe` only in the audited module allow-list         | `// UNSAFE-OK: <why>`   |
+//! | E0003 | panic-free-serving | no unwrap/expect/panic!/unreachable! on serving paths  | `// PANIC-OK: <why>`    |
+//! | E0004 | hot-path-alloc     | no `Vec::new`/`vec![`/`.to_vec()`/`.clone()` in the    | `// ALLOC-OK: <why>`    |
+//! |       |                    | `_into` forwards and per-token decode functions        |                         |
+//! | E0005 | metrics-discipline | every registered metric has help text + a README row   | `// METRIC-OK: <why>`   |
+//! | E0006 | module-map         | every top-level `pub mod` has a `lib.rs` map row       | `// MODMAP-OK: <why>`   |
+//! | E0007 | bench-discipline   | every `[[bench]]` is smoke-aware and writes a          | `// BENCH-OK: <why>`    |
+//! |       |                    | `BENCH_*.json` baseline                                |                         |
+//!
+//! `// REPOLINT-OK: <why>` suppresses any rule at a site. Annotations
+//! count when they sit on the flagged line, or in the comment block (and
+//! attribute lines) immediately above it — a blank line breaks the block.
+//!
+//! The scanner is a hand-rolled line/token pass in the house style of
+//! `obs::json`: comments and string contents are blanked (preserving
+//! column alignment) before token searches, `#[cfg(test)]` regions are
+//! tracked by brace depth and exempted from E0003/E0005, and E0004
+//! extracts the configured hot-function bodies by brace matching.
+//! Deliberately NOT covered: `assert!`/`debug_assert!` (invariant checks
+//! are encouraged), and allocation in cold setup paths.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Modules where `unsafe` is permitted (E0002). Everything here was
+/// audited for this list; new entries need the same audit.
+const UNSAFE_ALLOWED: &[&str] = &[
+    "rust/src/kernels/fused.rs",
+    "rust/src/tensor/gemm.rs",
+    "rust/src/util/pool.rs",
+    "rust/src/obs/trace.rs",
+    "rust/src/kvquant/attention.rs",
+    "rust/src/quant/lords.rs",
+    "rust/src/quant/blockwise.rs",
+];
+
+/// Serving-path scope for E0003 (panic-free-serving).
+const SERVING_PREFIXES: &[&str] = &["rust/src/coordinator/", "rust/src/kvquant/"];
+const SERVING_FILES: &[&str] = &["rust/src/obs/http.rs"];
+
+/// Hot functions for E0004: the `_into` forwards and per-token decode
+/// functions the decode path runs per tick, de-allocated in the batching
+/// PR. A configured name that no longer resolves is itself a violation,
+/// so renames keep this list honest.
+const HOT_FUNCTIONS: &[(&str, &[&str])] = &[
+    ("rust/src/tensor/gemm.rs", &["matmul_transb_into"]),
+    (
+        "rust/src/kernels/fused.rs",
+        &["lords_matmul_transb_into", "lords_matmul_transb_adapter_into", "blockwise_matmul_transb_into"],
+    ),
+    ("rust/src/quant/lords.rs", &["matmul_transb_opt_into"]),
+    ("rust/src/quant/blockwise.rs", &["matmul_transb_into"]),
+    ("rust/src/model/linear.rs", &["forward_into", "forward_adapted_into"]),
+    ("rust/src/model/norm.rs", &["rmsnorm_fwd_into"]),
+    ("rust/src/model/transformer.rs", &["decode_batch_pooled"]),
+    ("rust/src/kvquant/attention.rs", &["decode_packed_into", "decode_packed_batch"]),
+    ("rust/src/kvquant/pool.rs", &["append_row", "k_row_into", "v_row_into"]),
+];
+
+const ALLOC_TOKENS: &[&str] = &["Vec::new", "vec![", ".to_vec()", ".clone()"];
+
+const PANIC_TOKENS: &[(&str, &str)] = &[
+    (".unwrap()", "`.unwrap()`"),
+    (".expect(", "`.expect(..)`"),
+    ("panic!", "`panic!`"),
+    ("unreachable!", "`unreachable!`"),
+    ("todo!", "`todo!`"),
+    ("unimplemented!", "`unimplemented!`"),
+];
+
+struct Violation {
+    rule: &'static str,
+    slug: &'static str,
+    file: String,
+    line: usize,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "repolint: {} [{}] {}:{} — {}", self.rule, self.slug, self.file, self.line, self.msg)
+    }
+}
+
+/// A scanned source file: original lines, code with comments and string
+/// contents blanked (1:1 by char index — quotes kept), the comment text
+/// per line, and the `#[cfg(test)]`-region mask.
+struct Scan {
+    raw: Vec<String>,
+    code: Vec<String>,
+    comments: Vec<String>,
+    in_test: Vec<bool>,
+}
+
+fn scan_source(text: &str) -> Scan {
+    #[derive(PartialEq, Clone, Copy)]
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(u8),
+    }
+    let chars: Vec<char> = text.chars().collect();
+    let mut raw_lines = Vec::new();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let (mut raw, mut code, mut comment) = (String::new(), String::new(), String::new());
+    let mut st = St::Code;
+    let mut last_code: Option<char> = None;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::Line {
+                st = St::Code;
+            }
+            raw_lines.push(std::mem::take(&mut raw));
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+            i += 1;
+            continue;
+        }
+        raw.push(c);
+        match st {
+            St::Line => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::Block(depth) => {
+                comment.push(c);
+                code.push(' ');
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    raw.push('*');
+                    comment.push('*');
+                    code.push(' ');
+                    st = St::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    raw.push('/');
+                    comment.push('/');
+                    code.push(' ');
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                    raw.push(chars[i + 1]);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                let closes = c == '"'
+                    && (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'));
+                if closes {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        raw.push('#');
+                        code.push('#');
+                    }
+                    st = St::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Code => {
+                let ident_prev = last_code.is_some_and(|p| p.is_alphanumeric() || p == '_');
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    raw.push('/');
+                    comment.push_str("//");
+                    code.push_str("  ");
+                    st = St::Line;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    raw.push('*');
+                    comment.push_str("/*");
+                    code.push_str("  ");
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !ident_prev && raw_string_at(&chars, i) {
+                    // consume the full r#..." / br#..." prefix as code
+                    let mut j = i;
+                    if c == 'b' {
+                        code.push('b');
+                        j += 1;
+                        if chars[j] == 'r' {
+                            raw.push('r');
+                            code.push('r');
+                            j += 1;
+                        }
+                    } else {
+                        code.push('r');
+                        j += 1;
+                    }
+                    let mut hashes = 0u8;
+                    while chars.get(j) == Some(&'#') {
+                        raw.push('#');
+                        code.push('#');
+                        hashes += 1;
+                        j += 1;
+                    }
+                    raw.push('"');
+                    code.push('"');
+                    st = if hashes == 0 && c == 'b' && chars[i + 1] == '"' {
+                        St::Str // b"..." has escapes like a normal string
+                    } else {
+                        St::RawStr(hashes)
+                    };
+                    i = j + 1;
+                } else if c == '\'' {
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // escaped char literal: blank to the closing quote
+                        code.push('\'');
+                        i += 1;
+                        while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                            raw.push(chars[i]);
+                            code.push(' ');
+                            i += 1;
+                        }
+                        if chars.get(i) == Some(&'\'') {
+                            raw.push('\'');
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                        raw.push(chars[i + 1]);
+                        raw.push('\'');
+                        code.push('\'');
+                        code.push(' ');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        // lifetime — plain code
+                        code.push('\'');
+                        last_code = Some('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    last_code = Some(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    raw_lines.push(raw);
+    code_lines.push(code);
+    comment_lines.push(comment);
+    let in_test = mark_tests(&code_lines);
+    Scan { raw: raw_lines, code: code_lines, comments: comment_lines, in_test }
+}
+
+/// True when `chars[i]` starts a raw/byte string literal (`r"`, `r#"`,
+/// `br"`, `b"`, ...). The caller already ruled out an identifier prefix.
+fn raw_string_at(chars: &[char], i: usize) -> bool {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if chars.get(j) == Some(&'"') {
+            return true;
+        }
+    }
+    if chars.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// Mark lines inside `#[cfg(test)]` / `#[test]` items by brace depth.
+fn mark_tests(code: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; code.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut regions: Vec<i64> = Vec::new();
+    for (ln, line) in code.iter().enumerate() {
+        if line.contains("#[cfg(test)]")
+            || line.contains("#[cfg(all(test")
+            || line.trim() == "#[test]"
+        {
+            pending = true;
+        }
+        let mut test_here = pending || !regions.is_empty();
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    if pending {
+                        regions.push(depth);
+                        pending = false;
+                        test_here = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if regions.last() == Some(&depth) {
+                        regions.pop();
+                        test_here = true;
+                    }
+                }
+                ';' => {
+                    if pending && regions.is_empty() {
+                        pending = false; // attribute on a declaration line
+                    }
+                }
+                _ => {}
+            }
+        }
+        in_test[ln] = test_here || !regions.is_empty();
+    }
+    in_test
+}
+
+/// True when line `ln` carries `tag` (or the blanket `REPOLINT-OK`) in its
+/// own comment, or in the comment block (skipping attribute lines)
+/// immediately above. A blank line terminates the block.
+fn annotated(scan: &Scan, ln: usize, tag: &str) -> bool {
+    let hit = |s: &str| s.contains(tag) || s.contains("REPOLINT-OK");
+    if hit(&scan.comments[ln]) {
+        return true;
+    }
+    let mut i = ln;
+    while i > 0 {
+        i -= 1;
+        let code = scan.code[i].trim();
+        let com = scan.comments[i].trim();
+        if !code.is_empty() {
+            if code.starts_with("#[") || code.starts_with("#!") {
+                if hit(com) {
+                    return true;
+                }
+                continue;
+            }
+            return false;
+        }
+        if com.is_empty() {
+            return false;
+        }
+        if hit(com) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Word-bounded token search over blanked code.
+fn find_word(code: &str, word: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let p = from + p;
+        let e = p + word.len();
+        let before = p == 0 || {
+            let c = bytes[p - 1] as char;
+            !(c.is_ascii_alphanumeric() || c == '_')
+        };
+        let after = e >= code.len() || {
+            let c = bytes[e] as char;
+            !(c.is_ascii_alphanumeric() || c == '_')
+        };
+        if before && after {
+            return Some(p);
+        }
+        from = e;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// E0001 / E0002 — unsafe discipline
+// ---------------------------------------------------------------------------
+
+fn check_unsafe(scan: &Scan, rel: &str, out: &mut Vec<Violation>) {
+    let allowed = UNSAFE_ALLOWED.contains(&rel);
+    let mut passed = vec![false; scan.code.len()];
+    for ln in 0..scan.code.len() {
+        if find_word(&scan.code[ln], "unsafe").is_none() {
+            continue;
+        }
+        let mut ok = annotated(scan, ln, "SAFETY:");
+        if !ok {
+            // A run of consecutive unsafe lines (e.g. the paired
+            // `unsafe impl Send`/`Sync`) shares one SAFETY block.
+            let mut i = ln;
+            while i > 0 {
+                i -= 1;
+                let code = scan.code[i].trim();
+                if code.is_empty() {
+                    break;
+                }
+                if code.starts_with("#[") {
+                    continue;
+                }
+                if find_word(&scan.code[i], "unsafe").is_some() && passed[i] {
+                    ok = true;
+                }
+                break;
+            }
+        }
+        passed[ln] = ok;
+        if !ok {
+            out.push(Violation {
+                rule: "E0001",
+                slug: "safety-comment",
+                file: rel.to_string(),
+                line: ln + 1,
+                msg: "`unsafe` without an immediately preceding `// SAFETY:` comment \
+                      stating the invariant that makes it sound"
+                    .to_string(),
+            });
+        }
+        if !allowed && !annotated(scan, ln, "UNSAFE-OK:") {
+            out.push(Violation {
+                rule: "E0002",
+                slug: "unsafe-allowlist",
+                file: rel.to_string(),
+                line: ln + 1,
+                msg: "`unsafe` outside the audited module allow-list — move the code into \
+                      an audited module or annotate `// UNSAFE-OK: <reason>`"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E0003 — panic-free serving path
+// ---------------------------------------------------------------------------
+
+fn serving_path(rel: &str) -> bool {
+    SERVING_PREFIXES.iter().any(|p| rel.starts_with(p)) || SERVING_FILES.contains(&rel)
+}
+
+fn check_panics(scan: &Scan, rel: &str, out: &mut Vec<Violation>) {
+    if !serving_path(rel) {
+        return;
+    }
+    for ln in 0..scan.code.len() {
+        if scan.in_test[ln] {
+            continue;
+        }
+        for (tok, label) in PANIC_TOKENS {
+            if scan.code[ln].contains(tok) && !annotated(scan, ln, "PANIC-OK:") {
+                out.push(Violation {
+                    rule: "E0003",
+                    slug: "panic-free-serving",
+                    file: rel.to_string(),
+                    line: ln + 1,
+                    msg: format!(
+                        "{label} on the serving path — return an error / RejectReason, \
+                         or annotate `// PANIC-OK: <reason>` if it provably cannot fire"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E0004 — hot-path allocation freedom
+// ---------------------------------------------------------------------------
+
+/// Body spans `(open_line, close_line)` of every `fn name` in the file.
+fn fn_bodies(scan: &Scan, name: &str) -> Vec<(usize, usize)> {
+    let pat = format!("fn {name}");
+    let mut out = Vec::new();
+    let mut ln = 0;
+    while ln < scan.code.len() {
+        let code = &scan.code[ln];
+        let pos = match code.find(&pat) {
+            Some(p) => p,
+            None => {
+                ln += 1;
+                continue;
+            }
+        };
+        let after = pos + pat.len();
+        let bounded = code[after..]
+            .chars()
+            .next()
+            .is_none_or(|c| !(c.is_ascii_alphanumeric() || c == '_'));
+        let led = pos == 0 || {
+            let c = code.as_bytes()[pos - 1] as char;
+            c == ' ' || c == '(' || c == '\t'
+        };
+        if !(bounded && led) {
+            ln += 1;
+            continue;
+        }
+        // find the body's opening '{'; a ';' first means a declaration
+        let mut open = None;
+        let (mut l, mut c) = (ln, after);
+        'search: while l < scan.code.len() && l <= ln + 12 {
+            let bytes = scan.code[l].as_bytes();
+            while c < bytes.len() {
+                match bytes[c] as char {
+                    '{' => {
+                        open = Some((l, c));
+                        break 'search;
+                    }
+                    ';' => break 'search,
+                    _ => {}
+                }
+                c += 1;
+            }
+            l += 1;
+            c = 0;
+        }
+        let Some((bl, bc)) = open else {
+            ln += 1;
+            continue;
+        };
+        // brace-match to the end of the body
+        let mut depth: i64 = 0;
+        let (mut l2, mut c2) = (bl, bc);
+        let mut end = None;
+        'outer: while l2 < scan.code.len() {
+            let bytes = scan.code[l2].as_bytes();
+            while c2 < bytes.len() {
+                match bytes[c2] as char {
+                    '{' => depth += 1,
+                    '}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = Some(l2);
+                            break 'outer;
+                        }
+                    }
+                    _ => {}
+                }
+                c2 += 1;
+            }
+            l2 += 1;
+            c2 = 0;
+        }
+        match end {
+            Some(e) => {
+                out.push((bl, e));
+                ln = e + 1;
+            }
+            None => ln += 1,
+        }
+    }
+    out
+}
+
+fn check_hot_allocs(scan: &Scan, rel: &str, out: &mut Vec<Violation>) {
+    let Some((_, fns)) = HOT_FUNCTIONS.iter().find(|(f, _)| *f == rel) else {
+        return;
+    };
+    for name in *fns {
+        let bodies = fn_bodies(scan, name);
+        if bodies.is_empty() {
+            out.push(Violation {
+                rule: "E0004",
+                slug: "hot-path-alloc",
+                file: rel.to_string(),
+                line: 1,
+                msg: format!(
+                    "configured hot function `{name}` not found — update the repolint \
+                     HOT_FUNCTIONS list to match the rename"
+                ),
+            });
+            continue;
+        }
+        for (lo, hi) in bodies {
+            for ln in lo..=hi {
+                for tok in ALLOC_TOKENS {
+                    if scan.code[ln].contains(tok) && !annotated(scan, ln, "ALLOC-OK:") {
+                        out.push(Violation {
+                            rule: "E0004",
+                            slug: "hot-path-alloc",
+                            file: rel.to_string(),
+                            line: ln + 1,
+                            msg: format!(
+                                "`{tok}` inside hot function `{name}` — reuse caller \
+                                 scratch, or annotate `// ALLOC-OK: <reason>`"
+                            ),
+                        });
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E0005 — metrics discipline
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum RegKind {
+    Bare,
+    WithHelp,
+    SetHelp,
+}
+
+enum Arg {
+    Lit(String),
+    Ident(String),
+    Opaque,
+}
+
+struct MetricCall {
+    file: String,
+    line: usize,
+    arg: Arg,
+    kind: RegKind,
+    escaped: bool,
+}
+
+const METRIC_TOKENS: &[(&str, RegKind)] = &[
+    (".counter_with_help(", RegKind::WithHelp),
+    (".gauge_with_help(", RegKind::WithHelp),
+    (".histogram_with_help(", RegKind::WithHelp),
+    (".set_help(", RegKind::SetHelp),
+    (".counter(", RegKind::Bare),
+    (".gauge(", RegKind::Bare),
+    (".histogram(", RegKind::Bare),
+];
+
+/// First argument of a call whose `(` sits at `(ln, col)` in blanked code:
+/// a string literal (content recovered from the raw line), an identifier
+/// (resolved against const strings later), or something opaque.
+fn first_arg(scan: &Scan, ln: usize, col: usize) -> Arg {
+    let (mut l, mut c) = (ln, col);
+    while l < scan.code.len() && l <= ln + 8 {
+        let code = &scan.code[l];
+        let bytes = code.as_bytes();
+        while c < bytes.len() && (bytes[c] as char).is_whitespace() {
+            c += 1;
+        }
+        if c >= bytes.len() {
+            l += 1;
+            c = 0;
+            continue;
+        }
+        let ch = bytes[c] as char;
+        if ch == '"' {
+            if let Some(off) = code[c + 1..].find('"') {
+                let raw: Vec<char> = scan.raw[l].chars().collect();
+                return Arg::Lit(raw[c + 1..c + 1 + off].iter().collect());
+            }
+            return Arg::Opaque;
+        }
+        if ch.is_ascii_alphabetic() || ch == '_' {
+            let mut e = c;
+            while e < bytes.len() {
+                let k = bytes[e] as char;
+                if k.is_ascii_alphanumeric() || k == '_' || k == ':' {
+                    e += 1;
+                } else {
+                    break;
+                }
+            }
+            let ident = code[c..e].trim_end_matches(':');
+            let seg = ident.rsplit("::").next().unwrap_or(ident);
+            return Arg::Ident(seg.to_string());
+        }
+        return Arg::Opaque;
+    }
+    Arg::Opaque
+}
+
+/// `const NAME: &str = "value";` definitions (metric-family constants).
+fn collect_consts(scan: &Scan, consts: &mut HashMap<String, String>) {
+    for (i, code) in scan.code.iter().enumerate() {
+        let Some(p) = code.find("const ") else { continue };
+        if !code.contains("str") {
+            continue;
+        }
+        let rest = &code[p + 6..];
+        let Some(colon) = rest.find(':') else { continue };
+        let name = rest[..colon].trim();
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            continue;
+        }
+        let Some(q0) = code.find('"') else { continue };
+        let Some(off) = code[q0 + 1..].find('"') else { continue };
+        let raw: Vec<char> = scan.raw[i].chars().collect();
+        consts.insert(name.to_string(), raw[q0 + 1..q0 + 1 + off].iter().collect());
+    }
+}
+
+fn collect_metric_calls(scan: &Scan, rel: &str, regs: &mut Vec<MetricCall>) {
+    for ln in 0..scan.code.len() {
+        if scan.in_test[ln] {
+            continue;
+        }
+        for (tok, kind) in METRIC_TOKENS {
+            let mut from = 0;
+            while let Some(p) = scan.code[ln][from..].find(tok) {
+                let p = from + p;
+                regs.push(MetricCall {
+                    file: rel.to_string(),
+                    line: ln + 1,
+                    arg: first_arg(scan, ln, p + tok.len()),
+                    kind: *kind,
+                    escaped: annotated(scan, ln, "METRIC-OK:"),
+                });
+                from = p + tok.len();
+            }
+        }
+    }
+}
+
+fn check_metrics(
+    regs: &[MetricCall],
+    consts: &HashMap<String, String>,
+    readme: &str,
+    out: &mut Vec<Violation>,
+) {
+    let resolve = |arg: &Arg| -> Option<String> {
+        match arg {
+            Arg::Lit(s) => Some(s.clone()),
+            Arg::Ident(id) => consts.get(id).cloned(),
+            Arg::Opaque => None,
+        }
+    };
+    let helped: HashSet<String> = regs
+        .iter()
+        .filter(|r| r.kind != RegKind::Bare)
+        .filter_map(|r| resolve(&r.arg))
+        .collect();
+    for r in regs {
+        if r.escaped {
+            continue;
+        }
+        let Some(name) = resolve(&r.arg) else {
+            out.push(Violation {
+                rule: "E0005",
+                slug: "metrics-discipline",
+                file: r.file.clone(),
+                line: r.line,
+                msg: "metric name is not a string literal or a known `const ...: &str` — \
+                      use one, or annotate `// METRIC-OK: <reason>`"
+                    .to_string(),
+            });
+            continue;
+        };
+        if r.kind == RegKind::SetHelp {
+            continue;
+        }
+        if r.kind == RegKind::Bare && !helped.contains(&name) {
+            out.push(Violation {
+                rule: "E0005",
+                slug: "metrics-discipline",
+                file: r.file.clone(),
+                line: r.line,
+                msg: format!(
+                    "metric `{name}` registered without help text — use the `_with_help` \
+                     variant or a `set_help` call"
+                ),
+            });
+        }
+        if !readme.contains(&format!("`{name}`")) {
+            out.push(Violation {
+                rule: "E0005",
+                slug: "metrics-discipline",
+                file: r.file.clone(),
+                line: r.line,
+                msg: format!("metric `{name}` has no row in the README metrics table"),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E0006 — lib.rs module map
+// ---------------------------------------------------------------------------
+
+fn check_module_map(scan: &Scan, rel: &str, out: &mut Vec<Violation>) {
+    let doc = scan.comments.join("\n");
+    for (i, code) in scan.code.iter().enumerate() {
+        let t = code.trim();
+        let Some(rest) = t.strip_prefix("pub mod ") else { continue };
+        let Some(name) = rest.strip_suffix(';') else { continue };
+        let name = name.trim();
+        if annotated(scan, i, "MODMAP-OK:") {
+            continue;
+        }
+        if !doc.contains(&format!("[`{name}`]")) {
+            out.push(Violation {
+                rule: "E0006",
+                slug: "module-map",
+                file: rel.to_string(),
+                line: i + 1,
+                msg: format!(
+                    "top-level module `{name}` has no row in the lib.rs module map — \
+                     add `| [`{name}`] | ... |`, or annotate `// MODMAP-OK: <reason>`"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E0007 — bench discipline
+// ---------------------------------------------------------------------------
+
+/// `(name, line-of-[[bench]])` entries from a Cargo.toml text.
+fn bench_entries(manifest: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut bench_line = None;
+    for (i, line) in manifest.lines().enumerate() {
+        let t = line.trim();
+        if t == "[[bench]]" {
+            bench_line = Some(i + 1);
+            continue;
+        }
+        if t.starts_with('[') {
+            bench_line = None;
+            continue;
+        }
+        if let Some(bl) = bench_line {
+            if let Some(rest) = t.strip_prefix("name") {
+                let rest = rest.trim_start();
+                if let Some(v) = rest.strip_prefix('=') {
+                    out.push((v.trim().trim_matches('"').to_string(), bl));
+                    bench_line = None;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Smoke-aware symbols: `smoke_mode()` and the harness/zoo entry points
+/// that consult it internally (`full_mode` is false under smoke,
+/// `model_zoo` shrinks, `bench_fn` caps its windows).
+const SMOKE_TOKENS: &[&str] =
+    &["smoke_mode", "LORDS_BENCH_SMOKE", "full_mode", "model_zoo", "bench_fn"];
+
+fn check_bench_source(name: &str, line: usize, src: &str, out: &mut Vec<Violation>) {
+    if src.contains("BENCH-OK") || src.contains("REPOLINT-OK") {
+        return;
+    }
+    if !SMOKE_TOKENS.iter().any(|t| src.contains(t)) {
+        out.push(Violation {
+            rule: "E0007",
+            slug: "bench-discipline",
+            file: "rust/Cargo.toml".to_string(),
+            line,
+            msg: format!(
+                "bench `{name}` never consults the smoke switch (`smoke_mode` / \
+                 `LORDS_BENCH_SMOKE` / smoke-aware harness entry points) — CI runs every \
+                 bench and needs it to shrink"
+            ),
+        });
+    }
+    if !src.contains("BENCH_") {
+        out.push(Violation {
+            rule: "E0007",
+            slug: "bench-discipline",
+            file: "rust/Cargo.toml".to_string(),
+            line,
+            msg: format!(
+                "bench `{name}` writes no `BENCH_*.json` baseline — emit one (see \
+                 `bench::baseline`), or annotate the bench source `// BENCH-OK: <reason>`"
+            ),
+        });
+    }
+}
+
+fn check_benches(root: &Path, out: &mut Vec<Violation>) {
+    let manifest = match fs::read_to_string(root.join("rust/Cargo.toml")) {
+        Ok(t) => t,
+        Err(e) => {
+            out.push(Violation {
+                rule: "E0007",
+                slug: "bench-discipline",
+                file: "rust/Cargo.toml".to_string(),
+                line: 1,
+                msg: format!("cannot read manifest: {e}"),
+            });
+            return;
+        }
+    };
+    for (name, line) in bench_entries(&manifest) {
+        match fs::read_to_string(root.join("rust/benches").join(format!("{name}.rs"))) {
+            Ok(src) => check_bench_source(&name, line, &src, out),
+            Err(e) => out.push(Violation {
+                rule: "E0007",
+                slug: "bench-discipline",
+                file: "rust/Cargo.toml".to_string(),
+                line,
+                msg: format!("bench `{name}` has no source at rust/benches/{name}.rs: {e}"),
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------------
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            walk_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn find_root() -> Option<PathBuf> {
+    if let Some(arg) = std::env::args().nth(1) {
+        let p = PathBuf::from(arg);
+        return if p.join("rust/src").is_dir() { Some(p) } else { None };
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() {
+    let Some(root) = find_root() else {
+        eprintln!("repolint: cannot locate the repo root (looked for rust/src upward from cwd)");
+        std::process::exit(2);
+    };
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/tests", "rust/benches"] {
+        walk_rs(&root.join(dir), &mut files);
+    }
+    files.sort();
+
+    let readme = fs::read_to_string(root.join("README.md")).unwrap_or_default();
+    let mut violations = Vec::new();
+    let mut consts = HashMap::new();
+    let mut scans: Vec<(String, Scan)> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(text) = fs::read_to_string(path) else {
+            eprintln!("repolint: skipping unreadable {rel}");
+            continue;
+        };
+        let scan = scan_source(&text);
+        collect_consts(&scan, &mut consts);
+        scans.push((rel, scan));
+    }
+    let mut regs = Vec::new();
+    for (rel, scan) in &scans {
+        check_unsafe(scan, rel, &mut violations);
+        check_panics(scan, rel, &mut violations);
+        check_hot_allocs(scan, rel, &mut violations);
+        if rel == "rust/src/lib.rs" {
+            check_module_map(scan, rel, &mut violations);
+        }
+        // the registry implementation itself forwards `name` parameters;
+        // every real registration goes through its public methods
+        if rel.starts_with("rust/src/") && rel != "rust/src/obs/metrics.rs" {
+            collect_metric_calls(scan, rel, &mut regs);
+        }
+    }
+    check_metrics(&regs, &consts, &readme, &mut violations);
+    check_benches(&root, &mut violations);
+
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("repolint: ok — {} files, 7 rules, 0 violations", scans.len());
+    } else {
+        eprintln!("repolint: {} violation(s)", violations.len());
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(text: &str) -> Scan {
+        scan_source(text)
+    }
+
+    // -- scanner ----------------------------------------------------------
+
+    #[test]
+    fn strips_comments_and_strings_preserving_columns() {
+        let s = scan("let x = \"unsafe .unwrap()\"; // panic! here\n");
+        assert_eq!(s.code[0].len(), s.raw[0].chars().count());
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(!s.code[0].contains("panic!"));
+        assert!(s.comments[0].contains("panic! here"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let s = scan("let a = r#\"vec![oops]\"#; let b = '\"'; let c: &'static str = \"x\";\n");
+        assert!(!s.code[0].contains("vec!["));
+        assert!(s.code[0].contains("&'static str"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let s = scan("/* outer /* unsafe */ still comment */ let x = 1;\nlet y = 2;\n");
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(s.code[0].contains("let x = 1;"));
+        assert!(s.code[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn cfg_test_regions_marked() {
+        let text = "fn live() { a.unwrap(); }\n\
+                    #[cfg(test)]\n\
+                    mod tests {\n    fn t() { b.unwrap(); }\n}\n\
+                    fn live2() {}\n";
+        let s = scan(text);
+        assert!(!s.in_test[0]);
+        assert!(s.in_test[2] && s.in_test[3] && s.in_test[4]);
+        assert!(!s.in_test[5]);
+    }
+
+    // -- E0001 / E0002 ----------------------------------------------------
+
+    #[test]
+    fn safety_comment_accepted_and_chained() {
+        let text = "// SAFETY: disjoint rows, workers joined before return.\n\
+                    unsafe impl<T> Sync for S<T> {}\n\
+                    unsafe impl<T> Send for S<T> {}\n";
+        let mut v = Vec::new();
+        check_unsafe(&scan(text), "rust/src/util/pool.rs", &mut v);
+        assert!(v.is_empty(), "{:?}", v.iter().map(|x| x.to_string()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn missing_safety_comment_flagged() {
+        let mut v = Vec::new();
+        check_unsafe(&scan("let p = unsafe { &mut *q };\n"), "rust/src/util/pool.rs", &mut v);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "E0001");
+    }
+
+    #[test]
+    fn unsafe_outside_allowlist_flagged_and_escapable() {
+        let bad = "// SAFETY: fine.\nunsafe { x() };\n";
+        let mut v = Vec::new();
+        check_unsafe(&scan(bad), "rust/src/model/linear.rs", &mut v);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "E0002");
+        let ok = "// SAFETY: fine.\n// UNSAFE-OK: test-only exercise of the pool contract.\nunsafe { x() };\n";
+        v.clear();
+        check_unsafe(&scan(ok), "rust/src/model/linear.rs", &mut v);
+        assert!(v.is_empty());
+    }
+
+    // -- E0003 ------------------------------------------------------------
+
+    #[test]
+    fn serving_panic_flagged_not_in_tests_or_elsewhere() {
+        let text = "fn f() { x.unwrap(); }\n\
+                    #[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n";
+        let mut v = Vec::new();
+        check_panics(&scan(text), "rust/src/coordinator/server.rs", &mut v);
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].rule, v[0].line), ("E0003", 1));
+        v.clear();
+        check_panics(&scan(text), "rust/src/quant/lords.rs", &mut v);
+        assert!(v.is_empty(), "non-serving files are out of scope");
+    }
+
+    #[test]
+    fn panic_ok_annotation_accepted() {
+        let text = "// PANIC-OK: sealed blocks always have storage (seal_tile invariant).\n\
+                    let s = b.storage.expect(\"sealed\");\n\
+                    let t = c.unwrap_or_default();\n";
+        let mut v = Vec::new();
+        check_panics(&scan(text), "rust/src/kvquant/pool.rs", &mut v);
+        assert!(v.is_empty(), "unwrap_or_default must not match `.unwrap()`");
+    }
+
+    // -- E0004 ------------------------------------------------------------
+
+    #[test]
+    fn hot_fn_alloc_flagged_and_escapable() {
+        let text = "pub fn rmsnorm_fwd_into(x: &M, y: &mut M) {\n\
+                    \x20   let tmp = x.data.to_vec();\n\
+                    }\n";
+        let mut v = Vec::new();
+        check_hot_allocs(&scan(text), "rust/src/model/norm.rs", &mut v);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "E0004");
+        let ok = "pub fn rmsnorm_fwd_into(x: &M, y: &mut M) {\n\
+                  \x20   // ALLOC-OK: one-time warm-up, amortised across calls.\n\
+                  \x20   let tmp = x.data.to_vec();\n\
+                  }\n";
+        v.clear();
+        check_hot_allocs(&scan(ok), "rust/src/model/norm.rs", &mut v);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn renamed_hot_fn_is_a_violation() {
+        let mut v = Vec::new();
+        check_hot_allocs(&scan("pub fn other() {}\n"), "rust/src/model/norm.rs", &mut v);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("not found"));
+    }
+
+    #[test]
+    fn fn_body_extraction_brace_matches() {
+        let text = "pub fn forward_into(a: usize) {\n    if a > 0 { b(); }\n}\n\
+                    pub fn unrelated() { let v = vec![0; 4]; }\n";
+        let bodies = fn_bodies(&scan(text), "forward_into");
+        assert_eq!(bodies, vec![(0, 2)]);
+    }
+
+    // -- E0005 ------------------------------------------------------------
+
+    #[test]
+    fn bare_metric_without_help_or_readme_flagged() {
+        let text = "fn obs(reg: &Registry) {\n\
+                    \x20   reg.counter(\"lords_x_total\", &[]);\n\
+                    }\n";
+        let mut regs = Vec::new();
+        collect_metric_calls(&scan(text), "rust/src/coordinator/server.rs", &mut regs);
+        let mut v = Vec::new();
+        check_metrics(&regs, &HashMap::new(), "no table here", &mut v);
+        assert_eq!(v.len(), 2, "missing help + missing README row");
+        assert!(v.iter().all(|x| x.rule == "E0005"));
+    }
+
+    #[test]
+    fn const_resolution_and_set_help_satisfy_the_rule() {
+        let text = "pub const X_FAMILY: &str = \"lords_x_total\";\n\
+                    fn obs(reg: &Registry) {\n\
+                    \x20   reg.set_help(X_FAMILY, \"Help.\");\n\
+                    \x20   reg.counter(quality::X_FAMILY, &[(\"k\", \"v\")]);\n\
+                    }\n";
+        let s = scan(text);
+        let mut consts = HashMap::new();
+        collect_consts(&s, &mut consts);
+        assert_eq!(consts.get("X_FAMILY").map(String::as_str), Some("lords_x_total"));
+        let mut regs = Vec::new();
+        collect_metric_calls(&s, "rust/src/obs/quality.rs", &mut regs);
+        let mut v = Vec::new();
+        check_metrics(&regs, &consts, "| `lords_x_total` | counter | ... |", &mut v);
+        assert!(v.is_empty(), "{:?}", v.iter().map(|x| x.to_string()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn opaque_metric_name_needs_annotation() {
+        let text = "fn obs(reg: &Registry, fam: &str) {\n\
+                    \x20   // METRIC-OK: family picked by callers; both spellings are consts.\n\
+                    \x20   reg.gauge(&fam[..], &[]);\n\
+                    }\n";
+        let mut regs = Vec::new();
+        collect_metric_calls(&scan(text), "rust/src/obs/quality.rs", &mut regs);
+        let mut v = Vec::new();
+        check_metrics(&regs, &HashMap::new(), "", &mut v);
+        assert!(v.is_empty());
+    }
+
+    // -- E0006 ------------------------------------------------------------
+
+    #[test]
+    fn module_map_row_required() {
+        let text = "//! | [`util`] | helpers |\npub mod util;\npub mod stray;\n";
+        let mut v = Vec::new();
+        check_module_map(&scan(text), "rust/src/lib.rs", &mut v);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("`stray`"));
+    }
+
+    // -- E0007 ------------------------------------------------------------
+
+    #[test]
+    fn bench_entries_parsed_from_manifest() {
+        let manifest = "[package]\nname = \"lords\"\n\n[[bench]]\nname = \"fig2\"\nharness = false\n\n[[bench]]\nname = \"t1\"\n";
+        let entries = bench_entries(manifest);
+        assert_eq!(entries, vec![("fig2".to_string(), 4), ("t1".to_string(), 8)]);
+    }
+
+    #[test]
+    fn bench_rules_flag_missing_smoke_and_baseline() {
+        let mut v = Vec::new();
+        check_bench_source("t1", 4, "fn main() { run_forever(); }", &mut v);
+        assert_eq!(v.len(), 2);
+        v.clear();
+        check_bench_source(
+            "t1",
+            4,
+            "use lords::report::testbed::full_mode;\nfn main() { write(\"BENCH_t1.json\"); }",
+            &mut v,
+        );
+        assert!(v.is_empty());
+        v.clear();
+        check_bench_source("t1", 4, "// BENCH-OK: profiling-only driver.\nfn main() {}", &mut v);
+        assert!(v.is_empty());
+    }
+}
