@@ -87,7 +87,7 @@ fn main() {
         let kv = KvQuantCfg::with_bits(bits);
         let engine = NativeEngine::with_kv(model.clone(), bits.name(), kv);
         let serve = ServeCfg { kv_bits: bits.as_u32(), ..Default::default() };
-        let mut server = Server::new(engine, serve);
+        let mut server = Server::new(engine, serve).unwrap();
         let report = server.run_trace(requests(n_requests, prompt_len, max_new, cfg.vocab)).unwrap();
         let m = &report.metrics;
         let pool = server.engine.kv_pool();

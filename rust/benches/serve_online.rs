@@ -53,6 +53,33 @@ fn tick_phase_ms(spans: &[lords::obs::SpanEvent]) -> (f64, f64, f64) {
     (admit as f64 / 1e6, prefill as f64 / 1e6, decode as f64 / 1e6)
 }
 
+/// Acceptance microcheck: with the fault plane disabled (the production
+/// default), a `fault::point!` site must cost one relaxed atomic load —
+/// single-digit nanoseconds, never a lock or a hash lookup — and must
+/// never fire. Runs before the bench proper so a regression fails fast,
+/// in CI's bench-smoke lane.
+fn fault_plane_disabled_microcheck() {
+    lords::fault::reset();
+    assert!(!lords::fault::enabled(), "fault plane must start disabled");
+    const N: u64 = 10_000_000;
+    let mut fired = 0u64;
+    let start = std::time::Instant::now();
+    for i in 0..N {
+        let hit = lords::fault::point!("bench.noop");
+        if std::hint::black_box(hit).is_some() {
+            fired += 1;
+        }
+        std::hint::black_box(i);
+    }
+    let ns_per_call = start.elapsed().as_nanos() as f64 / N as f64;
+    assert_eq!(fired, 0, "disabled plane must never fire");
+    assert!(
+        ns_per_call < 50.0,
+        "disabled fault site costs {ns_per_call:.2} ns/call — that is not one relaxed load"
+    );
+    eprintln!("[serve_online] disabled fault site: {ns_per_call:.3} ns/call over {N} calls");
+}
+
 fn requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
     let mut rng = Rng::new(7);
     (0..n)
@@ -68,6 +95,7 @@ fn main() {
         "Serve online",
         "open-loop streaming latency (TTFT/ITL/queue percentiles) through submit/step",
     );
+    fault_plane_disabled_microcheck();
 
     let full = full_mode();
     let (name, cfg) = model_zoo().remove(0);
@@ -104,7 +132,7 @@ fn main() {
         let kv = KvQuantCfg::with_bits(bits);
         let serve = ServeCfg { kv_bits: bits.as_u32(), ..Default::default() };
         let mut server =
-            Server::new(NativeEngine::with_kv(model.clone(), bits.name(), kv), serve);
+            Server::new(NativeEngine::with_kv(model.clone(), bits.name(), kv), serve).unwrap();
         let closed = server
             .run_trace(requests(n_requests, prompt_len, max_new, cfg.vocab))
             .unwrap();

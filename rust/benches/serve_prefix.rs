@@ -90,7 +90,7 @@ fn main() {
             let mut server = Server::new(
                 NativeEngine::with_kv(model.clone(), "ttft", kv),
                 serve(chunk),
-            );
+            ).unwrap();
             // every 5th request is a long prompt; ids < 1000 are short
             let mut rng = Rng::new(7);
             let reqs: Vec<Request> = (0..n_short + n_long)
@@ -145,7 +145,7 @@ fn main() {
         for sharing in [true, false] {
             let mut engine = NativeEngine::with_kv(model.clone(), "prefix", kv);
             engine.set_prefix_sharing(sharing);
-            let mut server = Server::new(engine, serve(bt));
+            let mut server = Server::new(engine, serve(bt)).unwrap();
             let mut rng = Rng::new(13);
             let prefix: Vec<usize> = (0..prefix_len).map(|_| rng.below(cfg.vocab)).collect();
             let session = |id: u64, rng: &mut Rng| {

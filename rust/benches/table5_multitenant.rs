@@ -85,7 +85,7 @@ fn main() {
     for (i, r) in reqs.iter_mut().enumerate() {
         r.adapter = tenant_ids[i % n_tenants].clone();
     }
-    let mut server = Server::new(engine, ServeCfg::default());
+    let mut server = Server::new(engine, ServeCfg::default()).unwrap();
     let report = server.run_trace(reqs).unwrap();
     eprintln!(
         "[table5b] lords 1-base-{n_tenants}-adapters: total {:.1} tok/s ({:.2} MiB)",
@@ -101,7 +101,7 @@ fn main() {
     base_model.quantize_lords(cfg.block, &cb, refine, false);
     let engine_base = NativeEngine::new(base_model, "single");
     let bytes_base = engine_base.weight_bytes();
-    let mut server_base = Server::new(engine_base, ServeCfg::default());
+    let mut server_base = Server::new(engine_base, ServeCfg::default()).unwrap();
     let report_base =
         server_base.run_trace(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
     row(&mut t, "LoRDS single tenant (base)", 1, bytes_base, &report_base.metrics);
@@ -123,7 +123,7 @@ fn main() {
         }
         let engine = NativeEngine::new(qmodel, &format!("qlora-{ti}"));
         bytes_qlora += engine.weight_bytes(); // per-tenant base replica
-        let mut server = Server::new(engine, ServeCfg::default());
+        let mut server = Server::new(engine, ServeCfg::default()).unwrap();
         // this tenant's share of the same trace
         let share: Vec<Request> = requests(n_requests, prompt_len, max_new, cfg.vocab, 1)
             .into_iter()

@@ -61,7 +61,7 @@ fn main() {
         }
         let engine = NativeEngine::new(model, format);
         let mib = engine.weight_bytes() as f64 / (1024.0 * 1024.0);
-        let mut server = Server::new(engine, ServeCfg::default());
+        let mut server = Server::new(engine, ServeCfg::default()).unwrap();
         let report = server.run_trace(requests(n_requests, prompt_len, max_new, cfg.vocab, 1)).unwrap();
         let m = &report.metrics;
         eprintln!("[table6] native/{format}: total {:.1} tok/s ({mib:.2} MiB weights)", m.total_tps());
@@ -102,7 +102,7 @@ fn main() {
                 let params = lords::runtime::bridge::collect_params(&model, &art.inputs);
                 let engine = PjrtEngine::new(exec.handle(), &manifest, format, params).unwrap();
                 let plen = engine.prefill_seq;
-                let mut server = Server::new(engine, ServeCfg::default());
+                let mut server = Server::new(engine, ServeCfg::default()).unwrap();
                 let reqs = requests(n_requests.min(8), plen, max_new, mcfg.vocab, 2);
                 match server.run_trace(reqs) {
                     Ok(report) => {

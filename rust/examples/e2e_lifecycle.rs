@@ -149,7 +149,7 @@ fn main() -> anyhow::Result<()> {
     let reqs: Vec<Request> = (0..12)
         .map(|i| Request::new(i as u64, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), 24))
         .collect();
-    let mut server = Server::new(NativeEngine::new(m_peft, "lords-peft"), ServeCfg::default());
+    let mut server = Server::new(NativeEngine::new(m_peft, "lords-peft"), ServeCfg::default()).unwrap();
     let report = server.run_trace(reqs)?;
     report.metrics.print(&report.engine);
 

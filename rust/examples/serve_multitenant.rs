@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
                 .with_adapter(tenants[i % tenants.len()])
         })
         .collect();
-    let mut server = Server::new(engine, ServeCfg::default());
+    let mut server = Server::new(engine, ServeCfg::default()).unwrap();
     let report = server.run_trace(reqs)?;
     report.metrics.print(&report.engine);
     report.metrics.print_adapters();

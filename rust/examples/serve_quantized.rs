@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             let reqs: Vec<Request> = (0..n_requests)
                 .map(|i| Request::new(i as u64, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), max_new))
                 .collect();
-            let mut server = Server::new(engine, ServeCfg::default());
+            let mut server = Server::new(engine, ServeCfg::default()).unwrap();
             let report = server.run_trace(reqs)?;
             report.metrics.print(&report.engine);
             println!("first completion: {:?}", &report.responses[0].tokens[..8.min(report.responses[0].tokens.len())]);
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
             let reqs: Vec<Request> = (0..n_requests)
                 .map(|i| Request::new(i as u64, (0..plen).map(|_| rng.below(cfg.vocab)).collect(), max_new))
                 .collect();
-            let mut server = Server::new(NativeEngine::new(model, "lords"), ServeCfg::default());
+            let mut server = Server::new(NativeEngine::new(model, "lords"), ServeCfg::default()).unwrap();
             let report = server.run_trace(reqs)?;
             report.metrics.print(&report.engine);
         }

@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 16 };
     let engine = NativeEngine::with_kv(model, "stream", kv);
     let serve = ServeCfg { sentinel_every_n_ticks: 4, ..ServeCfg::default() };
-    let mut server = Server::new(engine, serve);
+    let mut server = Server::new(engine, serve).unwrap();
     // base weight quant error vs the pre-quantization reference weights
     lords::obs::quality::record_weight_errors(
         &server.obs.registry,

@@ -183,6 +183,22 @@ impl AdapterRegistry {
         self.entries.get(id).map(|e| &e.factors)
     }
 
+    /// Serving-path artifact resolve: [`Self::get`] behind the
+    /// `adapter.resolve` fault site. An injected fault models a corrupt
+    /// or unreadable adapter artifact — the id fails to resolve even
+    /// though it is resident. The engine's guarded paths call this at
+    /// validation points and surface a per-sequence error; the decode
+    /// row-building loop keeps using plain `get` so a fault can never
+    /// silently swap a tenant onto base weights mid-stream.
+    pub fn resolve(&self, id: &str) -> Option<&AdapterFactors> {
+        if let Some(kind) = crate::fault::point!("adapter.resolve") {
+            if crate::fault::degrades(kind) {
+                return None;
+            }
+        }
+        self.get(id)
+    }
+
     /// Pin an adapter for one in-flight sequence (touches the LRU clock).
     /// Returns false for ids that are unknown or awaiting eviction; the
     /// base tenant always succeeds.

@@ -238,6 +238,31 @@ pub struct ServeCfg {
     /// tripping a flight-recorder anomaly). 0 disables breach detection;
     /// the seal-error histogram itself always records.
     pub seal_err_threshold: f64,
+    /// Fault-injection plane configuration (`fault::parse_specs`
+    /// grammar, e.g. `"site=kv.seal,p=0.01,kind=err,seed=7"`). Empty =
+    /// plane disabled; every `fault::point!` site then costs one
+    /// relaxed atomic load. `Server::new` installs a non-empty spec as
+    /// the process-global plane.
+    pub fault_spec: String,
+    /// Max retry-by-re-prefill attempts per request after a retryable
+    /// failure (engine error). 0 = fail immediately. Retries regenerate
+    /// from the prompt, which is exact because decode is deterministic
+    /// per (params, id).
+    pub retry_budget: usize,
+    /// Server ticks a failed request waits before its retry re-enters
+    /// the admission queue.
+    pub retry_backoff_ticks: usize,
+    /// Tick budget `Server::drain` spends finishing in-flight work
+    /// before force-failing whatever remains.
+    pub drain_timeout_ticks: usize,
+    /// Readiness probe: after this many consecutive ticks in
+    /// `QueueFull` backpressure, `Server::is_ready` reports false
+    /// (and `/readyz` turns 503). 0 disables the backpressure signal;
+    /// draining always reports not-ready.
+    pub readyz_backpressure_ticks: usize,
+    /// Requests carrying a deadline below this many milliseconds are
+    /// rejected at submit as infeasible. 0 accepts any deadline.
+    pub min_deadline_ms: u64,
 }
 
 impl Default for ServeCfg {
@@ -258,6 +283,12 @@ impl Default for ServeCfg {
             storm_window_ms: 1_000,
             stall_ticks: 512,
             seal_err_threshold: 0.5,
+            fault_spec: String::new(),
+            retry_budget: 2,
+            retry_backoff_ticks: 2,
+            drain_timeout_ticks: 1_024,
+            readyz_backpressure_ticks: 16,
+            min_deadline_ms: 0,
         }
     }
 }
@@ -293,8 +324,81 @@ impl ServeCfg {
                 "seal_err_threshold",
                 d.seal_err_threshold as f32,
             ) as f64,
+            fault_spec: doc.str_or("serve", "fault_spec", &d.fault_spec),
+            retry_budget: doc.usize_or("serve", "retry_budget", d.retry_budget),
+            retry_backoff_ticks: doc.usize_or(
+                "serve",
+                "retry_backoff_ticks",
+                d.retry_backoff_ticks,
+            ),
+            drain_timeout_ticks: doc.usize_or(
+                "serve",
+                "drain_timeout_ticks",
+                d.drain_timeout_ticks,
+            ),
+            readyz_backpressure_ticks: doc.usize_or(
+                "serve",
+                "readyz_backpressure_ticks",
+                d.readyz_backpressure_ticks,
+            ),
+            min_deadline_ms: doc.usize_or("serve", "min_deadline_ms", d.min_deadline_ms as usize)
+                as u64,
             ..d
         }
+    }
+
+    /// Recoverable construction-time validation, run by `Server::new`
+    /// before any engine state is touched. Covers the batching shape
+    /// (bucket lists), KV precision, chunk sizing, and the
+    /// fault/deadline/retry knobs.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.decode_buckets.is_empty(),
+            "serve config: decode_buckets must be non-empty"
+        );
+        anyhow::ensure!(
+            self.decode_buckets.windows(2).all(|w| w[0] < w[1]) && self.decode_buckets[0] > 0,
+            "serve config: decode_buckets must be positive and strictly increasing, got {:?}",
+            self.decode_buckets
+        );
+        anyhow::ensure!(
+            !self.prefill_buckets.is_empty(),
+            "serve config: prefill_buckets must be non-empty"
+        );
+        anyhow::ensure!(
+            self.prefill_buckets.windows(2).all(|w| w[0] < w[1]) && self.prefill_buckets[0] > 0,
+            "serve config: prefill_buckets must be positive and strictly increasing, got {:?}",
+            self.prefill_buckets
+        );
+        anyhow::ensure!(
+            self.max_queue > 0,
+            "serve config: max_queue must be at least 1"
+        );
+        anyhow::ensure!(
+            self.max_new_tokens > 0,
+            "serve config: max_new_tokens must be at least 1"
+        );
+        anyhow::ensure!(
+            matches!(self.kv_bits, 32 | 8 | 4),
+            "serve config: kv_bits must be 32, 8, or 4, got {}",
+            self.kv_bits
+        );
+        anyhow::ensure!(
+            self.kv_budget_mib >= 0.0 && self.kv_budget_mib.is_finite(),
+            "serve config: kv_budget_mib must be finite and non-negative"
+        );
+        crate::fault::parse_specs(&self.fault_spec)
+            .map_err(|e| e.context("serve config: fault_spec"))?;
+        anyhow::ensure!(
+            self.retry_budget <= 64,
+            "serve config: retry_budget {} is unreasonably large (max 64)",
+            self.retry_budget
+        );
+        anyhow::ensure!(
+            self.drain_timeout_ticks > 0,
+            "serve config: drain_timeout_ticks must be at least 1"
+        );
+        Ok(())
     }
 }
 
@@ -332,6 +436,12 @@ mod tests {
         assert_eq!(s.storm_window_ms, 1_000);
         assert_eq!(s.stall_ticks, 64);
         assert_eq!(s.seal_err_threshold, 0.5);
+        assert_eq!(s.fault_spec, "");
+        assert_eq!(s.retry_budget, 2);
+        assert_eq!(s.retry_backoff_ticks, 2);
+        assert_eq!(s.drain_timeout_ticks, 1_024);
+        assert_eq!(s.readyz_backpressure_ticks, 16);
+        assert_eq!(s.min_deadline_ms, 0);
         let t = TrainCfg::from_doc(&doc, "qat");
         assert_eq!(t.steps, 77);
     }
@@ -342,5 +452,44 @@ mod tests {
         assert_eq!(m.d_model % m.n_heads, 0);
         let s = ServeCfg::default();
         assert!(s.decode_buckets.windows(2).all(|w| w[0] < w[1]));
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_validation_rejects_bad_shapes() {
+        let ok = ServeCfg::default();
+        ok.validate().unwrap();
+
+        let mut bad = ok.clone();
+        bad.decode_buckets = vec![];
+        assert!(bad.validate().is_err());
+
+        let mut bad = ok.clone();
+        bad.decode_buckets = vec![4, 2];
+        assert!(bad.validate().is_err());
+
+        let mut bad = ok.clone();
+        bad.prefill_buckets = vec![0, 1];
+        assert!(bad.validate().is_err());
+
+        let mut bad = ok.clone();
+        bad.kv_bits = 16;
+        assert!(bad.validate().is_err());
+
+        let mut bad = ok.clone();
+        bad.max_queue = 0;
+        assert!(bad.validate().is_err());
+
+        let mut bad = ok.clone();
+        bad.fault_spec = "site=kv.seal,p=2.0".into();
+        assert!(bad.validate().is_err());
+
+        let mut good = ok.clone();
+        good.fault_spec = "site=kv.seal,p=0.01,kind=err,seed=7".into();
+        good.validate().unwrap();
+
+        let mut bad = ok.clone();
+        bad.drain_timeout_ticks = 0;
+        assert!(bad.validate().is_err());
     }
 }

@@ -36,6 +36,10 @@ pub struct SeqState {
     /// prompt tokens whose KV is committed (shared-prefix forks start > 0;
     /// chunked prefill advances it; == `prompt_len` once decodable)
     pub prefilled: usize,
+    /// completion deadline relative to the request's arrival, in
+    /// milliseconds (0 = none); the server fails the sequence when it
+    /// expires in flight
+    pub deadline_ms: u64,
 }
 
 impl SeqState {
@@ -54,6 +58,7 @@ impl SeqState {
             rng: req.params.rng_for(req.id),
             stopped: false,
             prefilled: 0,
+            deadline_ms: req.deadline_ms,
         }
     }
 
@@ -199,6 +204,12 @@ pub trait Engine {
         let _ = s;
         None
     }
+
+    /// Release engine-owned caches that outlive sequences (e.g. the
+    /// shared-prefix trie's pinned KV blocks). `Server::drain` calls
+    /// this after in-flight work finishes or fails, so a drained server
+    /// leaves the pool and registry empty. Default: nothing cached.
+    fn flush_caches(&mut self) {}
 }
 
 // ---------------------------------------------------------------- native
@@ -622,6 +633,9 @@ impl Engine for NativeEngine {
     }
 
     fn admit_seqs(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        if let Some(kind) = crate::fault::point!("engine.admit") {
+            crate::fault::apply_fallible("engine.admit", kind)?;
+        }
         // Validate the whole batch before taking any pin or KV storage: a
         // bad tenant id or an over-committed pool must fail the batch
         // cleanly, not leak pins and blocks for the sequences processed
@@ -716,6 +730,9 @@ impl Engine for NativeEngine {
             "prefill_chunk on completed sequence {}",
             s.id
         );
+        if let Some(kind) = crate::fault::point!("engine.prefill") {
+            crate::fault::apply_fallible("engine.prefill", kind)?;
+        }
         let bt = self.pool.block_tokens();
         let pos0 = s.prefilled;
         let remaining = s.prompt_len - pos0;
@@ -726,7 +743,16 @@ impl Engine for NativeEngine {
         };
         let _span = obs::span!("engine.prefill_chunk", take);
         let end = pos0 + take;
-        let factors = self.registry.get(&s.adapter);
+        // `resolve` is the fault plane's adapter-corruption site: a fired
+        // fault surfaces here as a contained per-sequence error instead
+        // of silently computing base-weight logits for a tenant.
+        let factors = self.registry.resolve(&s.adapter);
+        anyhow::ensure!(
+            s.adapter == BASE_ADAPTER || factors.is_some(),
+            "adapter artifact for '{}' failed to resolve (seq {})",
+            s.adapter,
+            s.id
+        );
         let logits = self.model.prefill_chunk_pooled(
             &s.tokens[pos0..end],
             pos0,
@@ -777,7 +803,22 @@ impl Engine for NativeEngine {
         if seqs.is_empty() {
             return Ok(());
         }
+        if let Some(kind) = crate::fault::point!("engine.decode") {
+            crate::fault::apply_fallible("engine.decode", kind)?;
+        }
         let _span = obs::span!("engine.decode", seqs.len());
+        // Adapter artifacts must resolve for every tenant row before any
+        // KV is written: a corrupt artifact (the `adapter.resolve` fault
+        // site) fails the tick as an error the server can contain, never
+        // a silent fall-through to base weights.
+        for s in seqs.iter() {
+            anyhow::ensure!(
+                s.adapter == BASE_ADAPTER || self.registry.resolve(&s.adapter).is_some(),
+                "adapter artifact for '{}' failed to resolve (seq {})",
+                s.adapter,
+                s.id
+            );
+        }
         let mut order: Vec<usize> = (0..seqs.len()).collect();
         order.sort_by(|&i, &j| seqs[i].adapter.cmp(&seqs[j].adapter)); // stable
         let rows: Vec<DecodeRow<'_>> = order
@@ -806,6 +847,17 @@ impl Engine for NativeEngine {
             let s = &mut seqs[i];
             s.last_logits.clear();
             s.last_logits.extend_from_slice(self.scratch.logits().row(r));
+            if let Some(kind) = crate::fault::point!("engine.logits") {
+                match kind {
+                    // Non-finite numeric excursion: the server's sentinel
+                    // must quarantine this sequence before sampling.
+                    crate::fault::FaultKind::CorruptLogits if !s.last_logits.is_empty() => {
+                        s.last_logits[0] = f32::NAN;
+                    }
+                    crate::fault::FaultKind::Latency => crate::fault::latency_spin(),
+                    _ => {}
+                }
+            }
         }
         Ok(())
     }
@@ -815,6 +867,10 @@ impl Engine for NativeEngine {
         if let Some(adapter) = self.seq_adapter.remove(&id) {
             self.registry.release(&adapter);
         }
+    }
+
+    fn flush_caches(&mut self) {
+        self.flush_prefix_cache();
     }
 
     fn name(&self) -> String {

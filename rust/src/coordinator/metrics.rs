@@ -46,6 +46,14 @@ pub struct ServeMetrics {
     pub rejected: usize,
     /// requests cancelled by the client (queued or mid-decode)
     pub cancelled: usize,
+    /// in-flight failures (engine error, expired deadline, quarantine,
+    /// drain timeout) — includes failures later recovered by retry
+    pub failed: usize,
+    /// retry-by-re-prefill attempts scheduled after retryable failures
+    pub retries: usize,
+    /// sequences quarantined for non-finite logits (terminal; a subset
+    /// of `failed`)
+    pub quarantined: usize,
     pub latency: Summary,
     pub queue_wait: Summary,
     /// time to first token: request arrival → first streamed token
@@ -118,6 +126,12 @@ impl ServeMetrics {
             self.rejected,
             self.cancelled,
         );
+        if self.failed > 0 || self.retries > 0 {
+            println!(
+                "    failed {} (quarantined {}) | retries {}",
+                self.failed, self.quarantined, self.retries,
+            );
+        }
     }
 
     /// Streaming-latency percentiles (the online serving bench's columns).

@@ -220,7 +220,61 @@
 //! | `first_token` | — | the tick its first token streams |
 //! | `done` | `generated` | completion (`Event::Done`) |
 //! | `cancelled` | — | client cancel (queued or live) |
+//! | `failed` | `reason`, `retryable` | an in-flight failure (see below) |
+//! | `quarantined` | — | non-finite logits caught before sampling |
+//! | `retried` | — | a retryable failure re-entered admission |
 //! | `released` | — | KV blocks + adapter pin freed |
+//!
+//! # Failure model (containment, retry, quarantine, deadlines, drain)
+//!
+//! Failures are **contained per sequence, never per server** — a broken
+//! request must not take down its batch-mates, leak KV, or wedge the
+//! tick loop ([`Event::Failed`](server::Event) carries a stable `reason`
+//! plus whether the server will retry):
+//!
+//! * **Engine errors.** A [`prefill_chunk`](engine::Engine::prefill_chunk)
+//!   error fails only that sequence; an
+//!   [`admit_seqs`](engine::Engine::admit_seqs) or
+//!   [`decode`](engine::Engine::decode) error fails the cohort that call
+//!   covered (reason `engine_error`, retryable). Every fail path calls
+//!   [`Engine::release`](engine::Engine::release), which tolerates
+//!   unknown or partially-admitted ids — KV blocks and adapter pins are
+//!   freed exactly once no matter where the failure landed.
+//! * **Retry-by-re-prefill.** A retryably failed request is rebuilt from
+//!   its prompt (original arrival kept, so deadlines stay end-to-end)
+//!   and re-queued after [`ServeCfg::retry_backoff_ticks`], up to
+//!   [`ServeCfg::retry_budget`] attempts; its id stays live, so a
+//!   duplicate client resubmission is still rejected while the retry is
+//!   pending. Decode is deterministic per request, so a successful retry
+//!   reproduces the clean run's tokens bitwise (gated by
+//!   `tests/chaos.rs`).
+//! * **Quarantine.** Each decode tick scans `last_logits` for non-finite
+//!   values *before sampling* (greedy argmax would rank NaN first). A
+//!   poisoned sequence fails terminally (reason `nonfinite_logits`,
+//!   never retried — the same decode would poison it again), counts in
+//!   `lords_quarantined_total`, and trips a flight-recorder anomaly dump.
+//! * **Deadlines.** [`Request::with_deadline_ms`](request::Request)
+//!   bounds a request end-to-end from arrival: infeasible deadlines are
+//!   rejected at submit, expired ones at admission (before KV is
+//!   spent), and in-flight expiry fails the sequence terminally (reason
+//!   `deadline`).
+//! * **Drain.** [`Server::drain`](server::Server::drain) stops admission
+//!   (queue and retries fail with reason `draining`), steps until
+//!   in-flight work finishes or `timeout_ticks` elapses (leftovers fail
+//!   with `drain_timeout`), then flushes engine caches — a drained
+//!   server holds zero KV blocks, staging bytes, or adapter pins.
+//!   [`Server::is_ready`](server::Server::is_ready) feeds the `/readyz`
+//!   probe: false while draining or under sustained backpressure
+//!   ([`ServeCfg::readyz_backpressure_ticks`]).
+//!
+//! The named fault-injection sites that make these paths testable
+//! (`engine.*`, `kv.*`, `prefix.*`, `adapter.resolve`, `http.conn`) live
+//! in [`crate::fault`]; see the README fault-site table and
+//! `tests/chaos.rs` for the seeded chaos invariants.
+//!
+//! [`ServeCfg::retry_backoff_ticks`]: crate::config::ServeCfg::retry_backoff_ticks
+//! [`ServeCfg::retry_budget`]: crate::config::ServeCfg::retry_budget
+//! [`ServeCfg::readyz_backpressure_ticks`]: crate::config::ServeCfg::readyz_backpressure_ticks
 
 pub mod batcher;
 pub mod driver;

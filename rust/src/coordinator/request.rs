@@ -50,6 +50,15 @@ pub struct Request {
     /// Generation ends early when a sampled token is in this set (the stop
     /// token is included in the output).
     pub stop_tokens: Vec<usize>,
+    /// Completion deadline in milliseconds **relative to `arrival`**
+    /// (0 = none). Enforced at admission — a request whose deadline is
+    /// below `ServeCfg::min_deadline_ms` or already expired is rejected
+    /// with [`RejectReason::DeadlineInfeasible`] — and in flight, where
+    /// expiry produces a terminal `Event::Failed { reason: "deadline" }`.
+    ///
+    /// [`RejectReason::DeadlineInfeasible`]:
+    ///     super::server::RejectReason::DeadlineInfeasible
+    pub deadline_ms: u64,
 }
 
 impl Request {
@@ -62,6 +71,7 @@ impl Request {
             adapter: BASE_ADAPTER.to_string(),
             params: SamplingParams::default(),
             stop_tokens: Vec::new(),
+            deadline_ms: 0,
         }
     }
 
@@ -80,6 +90,15 @@ impl Request {
     /// Set the stop-token set (builder style).
     pub fn with_stop_tokens(mut self, stop: Vec<usize>) -> Request {
         self.stop_tokens = stop;
+        self
+    }
+
+    /// Set a completion deadline, in milliseconds from arrival (builder
+    /// style; 0 disables). The deadline survives retry-by-re-prefill:
+    /// retries keep the original arrival instant, so the budget is
+    /// end-to-end, not per-attempt.
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Request {
+        self.deadline_ms = deadline_ms;
         self
     }
 

@@ -15,6 +15,9 @@
 //!   extra inter-token latency instead of stalling for the whole prompt.
 //! * [`Server::cancel`] — drops a queued or in-flight request, releasing
 //!   its KV blocks and adapter pin immediately.
+//! * [`Server::drain`] — graceful shutdown: admission stops, in-flight
+//!   work finishes (or is failed at the tick budget), and engine caches
+//!   are flushed so the KV pool and adapter registry end empty.
 //! * [`Server::run_trace`] — the old offline behavior as a thin shim over
 //!   `submit` + `step`: plays a request trace to completion and returns a
 //!   [`ServeReport`], token-identical to the pre-redesign `run()`.
@@ -23,6 +26,13 @@
 //! queue wait percentiles in [`ServeMetrics`]); see
 //! [`driver`](super::driver) for the open-loop Poisson arrival harness
 //! that exercises them.
+//!
+//! Engine errors never poison a tick: each becomes a per-sequence
+//! [`Event::Failed`] with bounded retry-by-re-prefill, a non-finite-logit
+//! sentinel quarantines numeric excursions before sampling, and
+//! per-request deadlines are enforced at admission and in flight — see
+//! the failure-model notes in [`coordinator`](super) and the
+//! fault-injection plane in [`crate::fault`].
 
 use super::batcher::Batcher;
 use super::engine::{Engine, SeqState};
@@ -31,7 +41,7 @@ use super::request::{Request, Response};
 use crate::config::ServeCfg;
 use crate::obs::quality;
 use crate::obs::{self, Counter, FlightKind, FlightRecorder, Gauge, Histogram, Registry};
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -54,6 +64,11 @@ pub enum RejectReason {
     /// The request's KV footprint (prompt + max_new) exceeds what the
     /// pool can ever hold, even with nothing else in flight.
     KvBudgetExceeded,
+    /// The request's deadline is below `min_deadline_ms`, or it already
+    /// expired (at submit, or while the request waited in the queue).
+    DeadlineInfeasible,
+    /// The server is draining: admission is permanently stopped.
+    Draining,
 }
 
 impl RejectReason {
@@ -67,6 +82,8 @@ impl RejectReason {
             RejectReason::PromptTooLong => "prompt_too_long",
             RejectReason::EmptyPrompt => "empty_prompt",
             RejectReason::KvBudgetExceeded => "kv_budget_exceeded",
+            RejectReason::DeadlineInfeasible => "deadline_infeasible",
+            RejectReason::Draining => "draining",
         }
     }
 }
@@ -80,6 +97,8 @@ impl std::fmt::Display for RejectReason {
             RejectReason::PromptTooLong => "prompt too long",
             RejectReason::EmptyPrompt => "empty prompt",
             RejectReason::KvBudgetExceeded => "request exceeds the KV pool budget",
+            RejectReason::DeadlineInfeasible => "deadline infeasible",
+            RejectReason::Draining => "server is draining",
         };
         f.write_str(s)
     }
@@ -99,6 +118,13 @@ pub enum Event {
     Rejected { id: SeqId, reason: RejectReason },
     /// A queued or running request was cancelled by the client.
     Cancelled { id: SeqId },
+    /// A sequence failed: engine error, expired deadline, quarantine, or
+    /// drain timeout. `reason` is the stable key also used as the
+    /// `reason` label on `lords_failed_total`. When `retryable`, the
+    /// server has scheduled a retry-by-re-prefill: the stream restarts
+    /// from index 0 and — decode being deterministic per request —
+    /// replays the same tokens.
+    Failed { id: SeqId, reason: &'static str, retryable: bool },
 }
 
 /// Cumulative observability state owned by the server: the metrics
@@ -120,6 +146,8 @@ pub struct ServerObs {
     pub flight: FlightRecorder,
     completed: Counter,
     cancelled: Counter,
+    /// `lords_retries_total` — retry-by-re-prefill attempts scheduled.
+    retries: Counter,
     prefill_tokens: Counter,
     prefix_hit_tokens: Counter,
     prefill_chunks: Counter,
@@ -151,6 +179,11 @@ impl ServerObs {
         // is recorded up front so the exposition always carries it
         registry.set_help("lords_requests_total", "Requests admitted, by adapter.");
         registry.set_help("lords_rejected_total", "Requests rejected, by reason.");
+        registry.set_help("lords_failed_total", "Requests failed in flight, by reason.");
+        registry.set_help(
+            "lords_quarantined_total",
+            "Sequences quarantined (non-finite logits), by reason.",
+        );
         ServerObs {
             completed: registry.counter_with_help(
                 "lords_completed_total",
@@ -161,6 +194,11 @@ impl ServerObs {
                 "lords_cancelled_total",
                 &[],
                 "Requests cancelled by the client before completion.",
+            ),
+            retries: registry.counter_with_help(
+                "lords_retries_total",
+                &[],
+                "Retry-by-re-prefill attempts scheduled after retryable failures.",
             ),
             prefill_tokens: registry.counter_with_help(
                 "lords_prefill_tokens_total",
@@ -265,6 +303,22 @@ impl ServerObs {
         self.registry.counter("lords_rejected_total", &[("reason", reason.key())]).inc();
         self.flight.push(id, FlightKind::Rejected { reason: reason.key() });
     }
+
+    /// One failure: bump the reason-labelled counter and record the
+    /// flight event (failures count as progress for the stall tripwire —
+    /// the server *did* resolve that sequence's state this tick).
+    fn fail(&mut self, id: u64, reason: &'static str, retryable: bool) {
+        self.registry.counter("lords_failed_total", &[("reason", reason)]).inc();
+        self.flight.push(id, FlightKind::Failed { reason, retryable });
+    }
+
+    /// One quarantine: bump the reason-labelled counter and record the
+    /// flight event (callers additionally arm the ring via
+    /// [`FlightRecorder::trip_anomaly`]).
+    fn quarantine(&mut self, id: u64, reason: &'static str) {
+        self.registry.counter("lords_quarantined_total", &[("reason", reason)]).inc();
+        self.flight.push(id, FlightKind::Quarantined);
+    }
 }
 
 pub struct Server<E: Engine> {
@@ -302,6 +356,29 @@ pub struct Server<E: Engine> {
     pending_events: Vec<Event>,
     /// ticks stepped so far — the sentinel's deterministic cadence base.
     tick: u64,
+    /// Failed-but-retryable requests waiting out their tick backoff before
+    /// re-entering the admission queue (retry-by-re-prefill). Ids here
+    /// stay in `live` — the client's handle is still valid.
+    retry_queue: VecDeque<RetryEntry>,
+    /// Failure attempts per live id; entries are dropped on any terminal
+    /// outcome (done / cancelled / terminal failure).
+    attempts: HashMap<u64, usize>,
+    /// Set by [`Server::drain`]: admission is permanently stopped.
+    draining: bool,
+    /// A submission hit `QueueFull` since the last tick (feeds the
+    /// readiness probe's backpressure streak).
+    saw_queue_full: bool,
+    /// Consecutive ticks that saw `QueueFull` backpressure; readiness
+    /// ([`Server::is_ready`]) goes false at
+    /// `ServeCfg::readyz_backpressure_ticks`.
+    backpressure_streak: usize,
+}
+
+/// A failed request waiting out its retry backoff.
+struct RetryEntry {
+    req: Request,
+    /// first tick at which the retry may re-enter the admission queue
+    ready_tick: u64,
 }
 
 #[derive(Debug)]
@@ -312,15 +389,26 @@ pub struct ServeReport {
 }
 
 impl<E: Engine> Server<E> {
-    pub fn new(engine: E, cfg: ServeCfg) -> Server<E> {
+    /// Build a server over a validated config. Fails (rather than
+    /// panicking) on config shapes that cannot serve: empty or unsorted
+    /// bucket lists, a zero queue, a malformed `fault_spec`, … — see
+    /// [`ServeCfg::validate`]. A non-empty `fault_spec` is installed into
+    /// the process-global fault plane here.
+    pub fn new(engine: E, cfg: ServeCfg) -> anyhow::Result<Server<E>> {
+        cfg.validate()?;
+        if !cfg.fault_spec.trim().is_empty() {
+            let n = crate::fault::configure(&cfg.fault_spec)?;
+            crate::warn_log!("fault plane armed: {n} spec(s) from serve config");
+        }
         let mut engine = engine;
         // KV budget in real bytes: an explicit `kv_budget_mib`, or (by
         // default) exactly what `max_concurrent` dense f32 worst-case
         // sequences would need — quantized KV formats then fit more blocks
         // (and so more sequences) in the same bytes.
-        // PANIC-OK: construction-time config validation — an empty
-        // decode_buckets list is a programming error, not a runtime input.
-        let max_concurrent = *cfg.decode_buckets.last().expect("decode_buckets must be non-empty");
+        let max_concurrent = *cfg
+            .decode_buckets
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("serve config: decode_buckets must be non-empty"))?;
         let budget = if cfg.kv_budget_mib > 0.0 {
             Some((cfg.kv_budget_mib * 1024.0 * 1024.0) as usize)
         } else {
@@ -336,7 +424,7 @@ impl<E: Engine> Server<E> {
         // after kv_init: quality's seal-error sink attaches to the pool
         // the server will actually run on
         engine.install_quality(&obs.registry, cfg.seal_err_threshold);
-        Server {
+        Ok(Server {
             engine,
             metrics: ServeMetrics::default(),
             obs,
@@ -355,15 +443,39 @@ impl<E: Engine> Server<E> {
             live: HashSet::new(),
             pending_events: Vec::new(),
             tick: 0,
-        }
+            retry_queue: VecDeque::new(),
+            attempts: HashMap::new(),
+            draining: false,
+            saw_queue_full: false,
+            backpressure_streak: 0,
+        })
     }
 
-    /// Nothing queued, prefilling, running, or waiting to be reported.
+    /// Nothing queued, prefilling, running, retrying, or waiting to be
+    /// reported.
     pub fn is_idle(&self) -> bool {
         self.batcher.is_empty()
             && self.running.is_empty()
             && self.prefilling.is_empty()
             && self.pending_events.is_empty()
+            && self.retry_queue.is_empty()
+    }
+
+    /// Liveness vs readiness: the server is *ready* to accept new work
+    /// unless it is draining or `readyz_backpressure_ticks` consecutive
+    /// ticks saw queue-full backpressure (0 disables the streak check).
+    /// The admin `/readyz` probe reports this.
+    pub fn is_ready(&self) -> bool {
+        if self.draining {
+            return false;
+        }
+        let n = self.cfg.readyz_backpressure_ticks;
+        n == 0 || self.backpressure_streak < n
+    }
+
+    /// True once [`Server::drain`] has started (admission stopped).
+    pub fn is_draining(&self) -> bool {
+        self.draining
     }
 
     /// Number of sequences currently in the decode loop.
@@ -391,7 +503,9 @@ impl<E: Engine> Server<E> {
     /// its id is echoed back as the [`SeqId`] handle. On rejection nothing
     /// is retained and the caller owns the backpressure decision.
     pub fn submit(&mut self, req: Request) -> Result<SeqId, RejectReason> {
-        let reason = if self.live.contains(&req.id) {
+        let reason = if self.draining {
+            Some(RejectReason::Draining)
+        } else if self.live.contains(&req.id) {
             Some(RejectReason::DuplicateId)
         } else if req.prompt.is_empty() {
             Some(RejectReason::EmptyPrompt)
@@ -399,6 +513,13 @@ impl<E: Engine> Server<E> {
             Some(RejectReason::PromptTooLong)
         } else if !self.engine.supports_adapter(&req.adapter) {
             Some(RejectReason::UnknownAdapter)
+        } else if req.deadline_ms > 0
+            && (req.deadline_ms < self.cfg.min_deadline_ms
+                || req.arrival.elapsed().as_millis() as u64 >= req.deadline_ms)
+        {
+            // infeasible at the door: below the configured floor, or the
+            // caller's clock already spent the budget before submit
+            Some(RejectReason::DeadlineInfeasible)
         } else {
             None
         };
@@ -409,6 +530,7 @@ impl<E: Engine> Server<E> {
         }
         let id = req.id;
         if !self.batcher.push(req) {
+            self.saw_queue_full = true;
             self.metrics.rejected += 1;
             self.obs.reject(id, RejectReason::QueueFull);
             return Err(RejectReason::QueueFull);
@@ -430,6 +552,19 @@ impl<E: Engine> Server<E> {
             // per-adapter count: those track admitted work only (the
             // tenant's `requests` counter never saw this one)
             self.live.remove(&id);
+            self.attempts.remove(&id);
+            self.metrics.cancelled += 1;
+            self.obs.cancelled.inc();
+            self.obs.flight.push(id, FlightKind::Cancelled);
+            self.pending_events.push(Event::Cancelled { id });
+            return true;
+        }
+        if let Some(pos) = self.retry_queue.iter().position(|e| e.req.id == id) {
+            // failed and waiting out its retry backoff — nothing held in
+            // the engine (fail_seq released everything)
+            self.retry_queue.remove(pos);
+            self.live.remove(&id);
+            self.attempts.remove(&id);
             self.metrics.cancelled += 1;
             self.obs.cancelled.inc();
             self.obs.flight.push(id, FlightKind::Cancelled);
@@ -441,6 +576,7 @@ impl<E: Engine> Server<E> {
             self.prefilling_timings.remove(pos);
             self.engine.release(s.id);
             self.live.remove(&id);
+            self.attempts.remove(&id);
             self.metrics.cancelled += 1;
             self.metrics.adapter(&s.adapter).cancelled += 1;
             self.obs.cancelled.inc();
@@ -454,6 +590,7 @@ impl<E: Engine> Server<E> {
             self.timings.remove(pos);
             self.engine.release(s.id);
             self.live.remove(&id);
+            self.attempts.remove(&id);
             self.metrics.cancelled += 1;
             self.metrics.adapter(&s.adapter).cancelled += 1;
             self.obs.cancelled.inc();
@@ -478,15 +615,20 @@ impl<E: Engine> Server<E> {
         // flight when the tick started, so *something* should progress.
         let busy = !self.batcher.is_empty()
             || !self.running.is_empty()
-            || !self.prefilling.is_empty();
+            || !self.prefilling.is_empty()
+            || !self.retry_queue.is_empty();
         let mut events = std::mem::take(&mut self.pending_events);
+        // failure plumbing first: backoff-expired retries re-enter the
+        // queue, then expired deadlines fail before any compute is spent
+        self.requeue_retries(&mut events);
+        self.expire_deadlines(&mut events);
         {
             let _s = obs::span!("server.admit");
             self.admit(&mut events)?;
         }
         {
             let _s = obs::span!("server.prefill");
-            self.prefill_tick()?;
+            self.prefill_tick(&mut events)?;
         }
         {
             let _s = obs::span!("server.decode");
@@ -507,6 +649,13 @@ impl<E: Engine> Server<E> {
                 .trip_anomaly(format!("kv seal error above threshold ({fresh} new)"));
         }
         self.obs.flight.note_tick(busy);
+        // readiness: consecutive ticks that observed queue-full rejections
+        if self.saw_queue_full {
+            self.backpressure_streak += 1;
+        } else {
+            self.backpressure_streak = 0;
+        }
+        self.saw_queue_full = false;
         self.tick += 1;
         Ok(events)
     }
@@ -516,6 +665,9 @@ impl<E: Engine> Server<E> {
     /// only) and hand the sequences to [`Self::prefill_tick`]; legacy
     /// engines keep the old whole-batch prefill at admission.
     fn admit(&mut self, events: &mut Vec<Event>) -> anyhow::Result<()> {
+        if self.draining {
+            return Ok(()); // drain() already rejected the queue
+        }
         let in_flight = self.running.len() + self.prefilling.len();
         let slots_left = self.max_concurrent.saturating_sub(in_flight);
         if slots_left == 0 || self.batcher.is_empty() {
@@ -573,11 +725,27 @@ impl<E: Engine> Server<E> {
             // of failing the whole batch
             if !self.engine.supports_adapter(&req.adapter) {
                 self.live.remove(&req.id);
+                self.attempts.remove(&req.id);
                 self.metrics.rejected += 1;
                 self.obs.reject(req.id, RejectReason::UnknownAdapter);
                 events.push(Event::Rejected {
                     id: req.id,
                     reason: RejectReason::UnknownAdapter,
+                });
+                continue;
+            }
+            // a deadline that expired while the request waited in the
+            // queue is rejected here — no KV or compute is ever spent on it
+            if req.deadline_ms > 0
+                && req.arrival.elapsed().as_millis() as u64 >= req.deadline_ms
+            {
+                self.live.remove(&req.id);
+                self.attempts.remove(&req.id);
+                self.metrics.rejected += 1;
+                self.obs.reject(req.id, RejectReason::DeadlineInfeasible);
+                events.push(Event::Rejected {
+                    id: req.id,
+                    reason: RejectReason::DeadlineInfeasible,
                 });
                 continue;
             }
@@ -603,8 +771,16 @@ impl<E: Engine> Server<E> {
         if self.engine.supports_chunked_prefill() {
             // Continuous batching: reserve KV + attach any shared prefix
             // now (no compute), then let prefill_tick spread the prompt
-            // math across decode ticks.
-            self.engine.admit_seqs(&mut seqs)?;
+            // math across decode ticks. An engine error here fails the
+            // batch's sequences individually (retryably) instead of
+            // poisoning the tick — nothing else in flight is touched.
+            if let Err(e) = self.engine.admit_seqs(&mut seqs) {
+                crate::warn_log!("admit_seqs failed, failing batch: {e:#}");
+                for (s, t) in seqs.into_iter().zip(timings) {
+                    self.fail_seq(s, &t, "engine_error", true, events);
+                }
+                return Ok(());
+            }
             for s in seqs.iter() {
                 self.metrics.prefix_hit_tokens += s.prefilled;
                 self.obs.prefix_hit_tokens.add(s.prefilled as u64);
@@ -622,7 +798,13 @@ impl<E: Engine> Server<E> {
         }
         // Legacy lockstep schedule: one whole-batch prefill at admission.
         let t0 = Instant::now();
-        self.engine.prefill(&mut seqs)?;
+        if let Err(e) = self.engine.prefill(&mut seqs) {
+            crate::warn_log!("prefill failed, failing batch: {e:#}");
+            for (s, t) in seqs.into_iter().zip(timings) {
+                self.fail_seq(s, &t, "engine_error", true, events);
+            }
+            return Ok(());
+        }
         let dt = t0.elapsed().as_secs_f64();
         self.metrics.prefill_secs += dt;
         let per_prefill = dt / seqs.len() as f64;
@@ -649,8 +831,9 @@ impl<E: Engine> Server<E> {
     /// [`ServeCfg::prefill_chunk_tokens`] prompt tokens (0 = unlimited)
     /// across the in-flight prompts, rotating the starting sequence each
     /// tick so no prompt starves. Completed prompts move to the decode
-    /// set in admission order.
-    fn prefill_tick(&mut self) -> anyhow::Result<()> {
+    /// set in admission order. A chunk that errors fails only its own
+    /// sequence (retryably); batchmates keep prefilling.
+    fn prefill_tick(&mut self, events: &mut Vec<Event>) -> anyhow::Result<()> {
         if self.prefilling.is_empty() {
             return Ok(());
         }
@@ -662,16 +845,24 @@ impl<E: Engine> Server<E> {
         let n = self.prefilling.len();
         let t0 = Instant::now();
         let mut advanced: Vec<usize> = Vec::new();
+        let mut failed: Vec<usize> = Vec::new();
         for k in 0..n {
             if remaining == 0 {
                 break;
             }
             let i = (self.prefill_cursor + k) % n;
             let s = &mut self.prefilling[i];
-            if s.prefill_done() {
+            if s.prefill_done() || failed.contains(&i) {
                 continue; // admitted this tick after the cursor wrapped
             }
-            let took = self.engine.prefill_chunk(s, remaining)?;
+            let took = match self.engine.prefill_chunk(s, remaining) {
+                Ok(took) => took,
+                Err(e) => {
+                    crate::warn_log!("prefill_chunk failed for seq {}: {e:#}", s.id);
+                    failed.push(i);
+                    continue;
+                }
+            };
             let s = &self.prefilling[i];
             self.metrics.prefill_chunks += 1;
             self.metrics.prefill_tokens += took;
@@ -698,11 +889,14 @@ impl<E: Engine> Server<E> {
             let spent = budget0 - remaining;
             self.obs.prefill_chunk_utilization.observe(spent as f64 / budget0 as f64);
         }
-        // completed prompts graduate to the decode loop in admission order
+        // completed prompts graduate to the decode loop in admission
+        // order; errored ones leave the prefill set through fail_seq
         let seqs = std::mem::take(&mut self.prefilling);
         let timings = std::mem::take(&mut self.prefilling_timings);
-        for (s, t) in seqs.into_iter().zip(timings) {
-            if s.prefill_done() {
+        for (i, (s, t)) in seqs.into_iter().zip(timings).enumerate() {
+            if failed.contains(&i) {
+                self.fail_seq(s, &t, "engine_error", true, events);
+            } else if s.prefill_done() {
                 self.running.push(s);
                 self.timings.push(t);
             } else {
@@ -726,6 +920,30 @@ impl<E: Engine> Server<E> {
             return Ok(());
         }
         let max_seq = self.engine.max_seq();
+        // Non-finite-logit quarantine sentinel: scan BEFORE sampling —
+        // greedy argmax ranks NaN highest under `total_cmp`, so a
+        // corrupted logit row must never reach `next_token()`. Quarantine
+        // is terminal (no retry): decode is deterministic per request, so
+        // replaying the same inputs would reproduce the excursion.
+        let any_nonfinite = self
+            .running
+            .iter()
+            .any(|s| s.last_logits.iter().any(|v| !v.is_finite()));
+        if any_nonfinite {
+            let seqs = std::mem::take(&mut self.running);
+            let timings = std::mem::take(&mut self.timings);
+            for (s, t) in seqs.into_iter().zip(timings) {
+                if s.last_logits.iter().any(|v| !v.is_finite()) {
+                    self.quarantine_seq(s, &t, events);
+                } else {
+                    self.running.push(s);
+                    self.timings.push(t);
+                }
+            }
+            if self.running.is_empty() {
+                return Ok(());
+            }
+        }
         // sample + append + stream the next token for every sequence
         let now = Instant::now();
         for (s, t) in self.running.iter_mut().zip(self.timings.iter_mut()) {
@@ -759,6 +977,7 @@ impl<E: Engine> Server<E> {
             if s.finished(max_seq) {
                 self.engine.release(s.id);
                 self.live.remove(&s.id);
+                self.attempts.remove(&s.id);
                 self.metrics.completed += 1;
                 self.metrics.adapter(&s.adapter).completed += 1;
                 self.metrics.latency.add(t.queue_s + t.prefill_s + t.decode_s);
@@ -785,7 +1004,20 @@ impl<E: Engine> Server<E> {
         }
         if !self.running.is_empty() {
             let t0 = Instant::now();
-            self.engine.decode(&mut self.running)?;
+            if let Err(e) = self.engine.decode(&mut self.running) {
+                // a failed batched decode tick loses the whole batch's
+                // computed state — fail every running sequence retryably
+                // rather than poisoning the server. Tokens streamed this
+                // tick stay valid: a retry replays them identically from
+                // a fresh prefill (decode is deterministic per request).
+                crate::warn_log!("decode failed, failing running set: {e:#}");
+                let seqs = std::mem::take(&mut self.running);
+                let timings = std::mem::take(&mut self.timings);
+                for (s, t) in seqs.into_iter().zip(timings) {
+                    self.fail_seq(s, &t, "engine_error", true, events);
+                }
+                return Ok(());
+            }
             let dt = t0.elapsed().as_secs_f64();
             self.metrics.decode_secs += dt;
             self.metrics.decode_ticks += 1;
@@ -819,6 +1051,193 @@ impl<E: Engine> Server<E> {
             }
         }
         Ok(())
+    }
+
+    /// Fail one in-flight sequence: release its engine state, record the
+    /// failure, and either schedule a retry-by-re-prefill (when
+    /// `retry_wanted`, the server is not draining, and the retry budget
+    /// allows) or terminate the stream. Either way the caller gets an
+    /// [`Event::Failed`]; a retried id stays in `live` (the client's
+    /// handle remains valid and its stream restarts from index 0).
+    fn fail_seq(
+        &mut self,
+        s: SeqState,
+        t: &ReqTiming,
+        reason: &'static str,
+        retry_wanted: bool,
+        events: &mut Vec<Event>,
+    ) {
+        // engine release is tolerant of partially-admitted sequences, so
+        // this never leaks KV blocks or adapter pins whatever path failed
+        self.engine.release(s.id);
+        let made = *self.attempts.get(&s.id).unwrap_or(&0);
+        let retryable = retry_wanted && !self.draining && made < self.cfg.retry_budget;
+        self.metrics.failed += 1;
+        self.obs.fail(s.id, reason, retryable);
+        self.obs.flight.push(s.id, FlightKind::Released);
+        if retryable {
+            self.attempts.insert(s.id, made + 1);
+            self.metrics.retries += 1;
+            self.obs.retries.inc();
+            // exact regeneration: rebuild the original request from the
+            // sequence's own state (its prompt is `tokens[..prompt_len]`,
+            // untouched by generation) and keep the original arrival so
+            // the deadline budget stays end-to-end across attempts
+            let req = Request {
+                id: s.id,
+                prompt: s.tokens[..s.prompt_len].to_vec(),
+                max_new_tokens: s.max_new,
+                arrival: t.arrival,
+                adapter: s.adapter,
+                params: s.params,
+                stop_tokens: s.stop_tokens,
+                deadline_ms: s.deadline_ms,
+            };
+            let ready_tick = self.tick + self.cfg.retry_backoff_ticks as u64;
+            self.retry_queue.push_back(RetryEntry { req, ready_tick });
+        } else {
+            self.live.remove(&s.id);
+            self.attempts.remove(&s.id);
+        }
+        events.push(Event::Failed { id: s.id, reason, retryable });
+    }
+
+    /// Quarantine a sequence whose logits went non-finite: a terminal
+    /// failure plus an anomaly trip, so the flight ring dumps while the
+    /// context is hot.
+    fn quarantine_seq(&mut self, s: SeqState, t: &ReqTiming, events: &mut Vec<Event>) {
+        self.metrics.quarantined += 1;
+        self.obs.quarantine(s.id, "nonfinite_logits");
+        self.obs
+            .flight
+            .trip_anomaly(format!("non-finite logits quarantined seq {}", s.id));
+        self.fail_seq(s, t, "nonfinite_logits", false, events);
+    }
+
+    /// Move backoff-expired retries back into the admission queue. A
+    /// retry whose deadline lapsed during backoff fails terminally here;
+    /// one that meets a full queue just waits another tick (its backoff
+    /// is already spent, so no new failure is recorded).
+    fn requeue_retries(&mut self, events: &mut Vec<Event>) {
+        if self.retry_queue.is_empty() {
+            return;
+        }
+        let mut later: VecDeque<RetryEntry> = VecDeque::new();
+        while let Some(e) = self.retry_queue.pop_front() {
+            if e.ready_tick > self.tick {
+                later.push_back(e);
+                continue;
+            }
+            let id = e.req.id;
+            if e.req.deadline_ms > 0
+                && e.req.arrival.elapsed().as_millis() as u64 >= e.req.deadline_ms
+            {
+                self.live.remove(&id);
+                self.attempts.remove(&id);
+                self.metrics.failed += 1;
+                self.obs.fail(id, "deadline", false);
+                events.push(Event::Failed { id, reason: "deadline", retryable: false });
+                continue;
+            }
+            // `push` consumes (and on a full queue drops) its argument,
+            // so hand it a clone and keep the original for the requeue
+            if self.batcher.push(e.req.clone()) {
+                self.obs.flight.push(id, FlightKind::Retried);
+            } else {
+                later.push_back(RetryEntry { req: e.req, ready_tick: self.tick + 1 });
+            }
+        }
+        self.retry_queue = later;
+    }
+
+    /// Fail any prefilling or running sequence whose deadline expired.
+    /// Terminal, never retried: decode is deterministic per request, so a
+    /// request that blew its budget once would blow it again from a fresh
+    /// prefill.
+    fn expire_deadlines(&mut self, events: &mut Vec<Event>) {
+        let expired = |s: &SeqState, t: &ReqTiming| {
+            s.deadline_ms > 0 && t.arrival.elapsed().as_millis() as u64 >= s.deadline_ms
+        };
+        if self.prefilling.iter().zip(&self.prefilling_timings).any(|(s, t)| expired(s, t)) {
+            let seqs = std::mem::take(&mut self.prefilling);
+            let timings = std::mem::take(&mut self.prefilling_timings);
+            for (s, t) in seqs.into_iter().zip(timings) {
+                if expired(&s, &t) {
+                    self.fail_seq(s, &t, "deadline", false, events);
+                } else {
+                    self.prefilling.push(s);
+                    self.prefilling_timings.push(t);
+                }
+            }
+        }
+        if self.running.iter().zip(&self.timings).any(|(s, t)| expired(s, t)) {
+            let seqs = std::mem::take(&mut self.running);
+            let timings = std::mem::take(&mut self.timings);
+            for (s, t) in seqs.into_iter().zip(timings) {
+                if expired(&s, &t) {
+                    self.fail_seq(s, &t, "deadline", false, events);
+                } else {
+                    self.running.push(s);
+                    self.timings.push(t);
+                }
+            }
+        }
+    }
+
+    /// Graceful shutdown: stop admission permanently, reject everything
+    /// still queued, final-fail retries waiting out backoff, then keep
+    /// stepping until in-flight work completes — or fail the leftovers
+    /// terminally once `timeout_ticks` is spent. On return the server is
+    /// empty and the engine's caches are flushed, so the KV pool holds
+    /// zero blocks and the adapter registry zero pins (the chaos suite
+    /// asserts exactly this). Returns every event produced while
+    /// draining: completions for sequences that finished in time,
+    /// `Event::Failed` with reason `"drain_timeout"` for those that
+    /// did not, and `Event::Rejected` (reason [`RejectReason::Draining`])
+    /// for requests that never left the queue.
+    pub fn drain(&mut self, timeout_ticks: usize) -> anyhow::Result<Vec<Event>> {
+        self.draining = true;
+        let mut events = std::mem::take(&mut self.pending_events);
+        for req in self.batcher.drain() {
+            self.live.remove(&req.id);
+            self.attempts.remove(&req.id);
+            self.metrics.rejected += 1;
+            self.obs.reject(req.id, RejectReason::Draining);
+            events.push(Event::Rejected { id: req.id, reason: RejectReason::Draining });
+        }
+        while let Some(e) = self.retry_queue.pop_front() {
+            let id = e.req.id;
+            self.live.remove(&id);
+            self.attempts.remove(&id);
+            self.metrics.failed += 1;
+            self.obs.fail(id, "draining", false);
+            events.push(Event::Failed { id, reason: "draining", retryable: false });
+        }
+        let mut spent = 0usize;
+        while !(self.running.is_empty() && self.prefilling.is_empty()) && spent < timeout_ticks
+        {
+            events.extend(self.step()?);
+            spent += 1;
+        }
+        let seqs = std::mem::take(&mut self.running);
+        let timings = std::mem::take(&mut self.timings);
+        for (s, t) in seqs.into_iter().zip(timings) {
+            self.fail_seq(s, &t, "drain_timeout", false, &mut events);
+        }
+        let seqs = std::mem::take(&mut self.prefilling);
+        let timings = std::mem::take(&mut self.prefilling_timings);
+        for (s, t) in seqs.into_iter().zip(timings) {
+            self.fail_seq(s, &t, "drain_timeout", false, &mut events);
+        }
+        events.append(&mut self.pending_events);
+        // leave nothing cached behind: shared-prefix blocks pinned by the
+        // cache are returned to the pool here
+        self.engine.flush_caches();
+        self.engine.observe(&self.obs.registry);
+        self.obs.queue_depth.set(0);
+        self.obs.running.set(0);
+        self.obs.prefilling.set(0);
+        Ok(events)
     }
 
     /// Compatibility shim: play a request trace to completion through
@@ -903,7 +1322,7 @@ mod tests {
             prefill_chunk_tokens: 0,
             ..ServeCfg::default()
         };
-        Server::new(NativeEngine::new(model, "fp"), serve)
+        Server::new(NativeEngine::new(model, "fp"), serve).unwrap()
     }
 
     fn reqs(n: usize, prompt_len: usize, max_new: usize) -> Vec<Request> {
@@ -1110,7 +1529,7 @@ mod tests {
             prefill_chunk_tokens: 0,
             ..ServeCfg::default()
         };
-        let mut srv = Server::new(engine, serve);
+        let mut srv = Server::new(engine, serve).unwrap();
         let tenants = ["base", "t0", "t1"];
         let mut requests = reqs(6, 8, 4);
         for (i, r) in requests.iter_mut().enumerate() {
@@ -1205,7 +1624,7 @@ mod tests {
         };
         let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
         let engine = NativeEngine::with_kv(Model::init(&cfg, 0), "kv8", kv);
-        let mut srv = Server::new(engine, serve);
+        let mut srv = Server::new(engine, serve).unwrap();
         let report = srv.run_trace(reqs(6, 12, 6)).unwrap();
         assert_eq!(report.metrics.completed, 6);
         for r in &report.responses {
@@ -1224,6 +1643,92 @@ mod tests {
         }
         // flushing the prefix cache drains the pool completely
         srv.engine.flush_prefix_cache();
+        assert_eq!(srv.engine.kv_pool().used_blocks(), 0);
+    }
+
+    #[test]
+    fn construction_rejects_invalid_configs() {
+        let cfg = ModelCfg {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 48,
+            block: 8,
+            codebook: "nf4".into(),
+            qlora_rank: 4,
+        };
+        let bad = ServeCfg { decode_buckets: vec![], ..ServeCfg::default() };
+        let model = Model::init(&cfg, 0);
+        assert!(Server::new(NativeEngine::new(model, "fp"), bad).is_err());
+        let bad_fault = ServeCfg {
+            fault_spec: "p=0.5".into(), // no site= field
+            ..ServeCfg::default()
+        };
+        let model = Model::init(&cfg, 0);
+        assert!(Server::new(NativeEngine::new(model, "fp"), bad_fault).is_err());
+    }
+
+    #[test]
+    fn infeasible_deadlines_are_rejected_at_submit() {
+        let mut srv = tiny_server();
+        srv.cfg.min_deadline_ms = 100;
+        let r = Request::new(0, vec![1, 2, 3], 4).with_deadline_ms(10);
+        assert_eq!(srv.submit(r), Err(RejectReason::DeadlineInfeasible));
+        // at or above the floor: admitted
+        let r = Request::new(1, vec![1, 2, 3], 4).with_deadline_ms(60_000);
+        assert_eq!(srv.submit(r), Ok(1));
+        // no deadline at all bypasses the floor
+        let r = Request::new(2, vec![1, 2, 3], 4);
+        assert_eq!(srv.submit(r), Ok(2));
+    }
+
+    #[test]
+    fn drain_finishes_in_flight_work_and_empties_the_server() {
+        let mut srv = tiny_server();
+        for r in reqs(4, 12, 6) {
+            srv.submit(r).unwrap();
+        }
+        srv.step().unwrap(); // admit + begin prefill
+        let events = srv.drain(10_000).unwrap();
+        let done = events
+            .iter()
+            .filter(|e| matches!(e, Event::Done { .. }))
+            .count();
+        assert_eq!(done, 4, "in-flight work finishes during drain");
+        assert!(srv.is_idle());
+        assert!(srv.is_draining());
+        assert!(!srv.is_ready());
+        assert_eq!(srv.engine.kv_pool().active_sequences(), 0);
+        assert_eq!(srv.engine.kv_pool().used_blocks(), 0, "drain flushes caches");
+        // admission is permanently stopped
+        let r = Request::new(99, vec![1, 2, 3], 4);
+        assert_eq!(srv.submit(r), Err(RejectReason::Draining));
+    }
+
+    #[test]
+    fn drain_timeout_fails_leftovers_terminally() {
+        let mut srv = tiny_server();
+        for r in reqs(2, 12, 6) {
+            srv.submit(r).unwrap();
+        }
+        srv.step().unwrap();
+        // zero extra ticks: whatever is still in flight fails immediately
+        let events = srv.drain(0).unwrap();
+        let failed: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Failed { id, reason, retryable } => Some((*id, *reason, *retryable)),
+                _ => None,
+            })
+            .collect();
+        assert!(!failed.is_empty(), "leftovers must fail at the budget");
+        for (_, reason, retryable) in &failed {
+            assert_eq!(*reason, "drain_timeout");
+            assert!(!retryable, "drain failures are terminal");
+        }
+        assert!(srv.is_idle());
         assert_eq!(srv.engine.kv_pool().used_blocks(), 0);
     }
 }

@@ -1,0 +1,552 @@
+//! Deterministic fault-injection plane.
+//!
+//! Serving code plants **named injection sites** with
+//! [`fault::point!`](crate::fault_point) — the fault-plane sibling of
+//! `obs::span!`. When the plane is disabled (the default) a site costs a
+//! single relaxed atomic load; `benches/serve_online.rs` asserts that
+//! bound as part of bench smoke. When enabled, each site consults the
+//! installed fault specs and either fires a fault or falls through.
+//!
+//! ## Spec grammar
+//!
+//! A plane configuration is a `;`-separated list of specs, each a
+//! `,`-separated list of `key=value` fields:
+//!
+//! ```text
+//! site=kv.seal,p=0.01,kind=err,seed=7;site=engine.*,p=0.001,kind=latency,seed=7
+//! ```
+//!
+//! | key | meaning | default |
+//! |-----|---------|---------|
+//! | `site` | site name, exact or trailing-`*` prefix pattern | (required) |
+//! | `p` | firing probability per visit, in `[0, 1]` | `1.0` |
+//! | `kind` | `err`, `latency`, `logit`, `alloc`, `adapter` | `err` |
+//! | `seed` | RNG seed for this spec's deterministic draws | `0` |
+//!
+//! ## Determinism
+//!
+//! Every spec keeps an independent visit counter **per site it
+//! matches**; the draw at visit *n* is a pure function of
+//! `(seed, site, n)`. Replaying the same workload against the same spec
+//! therefore fires the same faults at the same visits, which is what
+//! lets `tests/chaos.rs` assert bit-identical event streams for a
+//! repeated seed. Counters on one site never perturb draws on another.
+//!
+//! ## Fault kinds and how sites honor them
+//!
+//! | kind | behavior at a site that honors it |
+//! |------|-----------------------------------|
+//! | `err` | the operation returns an injected `anyhow` error |
+//! | `latency` | the site spins a fixed bounded loop, then proceeds normally |
+//! | `logit` | a decode-output logit is overwritten with a non-finite value |
+//! | `alloc` | treated like `err` at allocation/budget sites (pool-exhausted shape) |
+//! | `adapter` | adapter-artifact resolve fails (corrupt / unreadable artifact) |
+//!
+//! A kind a given site cannot express is a **no-op** at that site (the
+//! draw still advances, keeping replay deterministic). Infallible sites
+//! degrade instead of erroring: the prefix cache treats a fired fault as
+//! a miss on claim and drops the publish; `KvPool::release` honors only
+//! `latency`, because releasing storage must never fail.
+//!
+//! The serving site catalog lives in the README section *"Failure model
+//! & fault injection"*; repolint rule `E0008` enforces that every
+//! `fault::point!` literal in `rust/src` is documented there.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::obs::json::Json;
+
+/// Global enable flag — the only state a disabled site touches.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the fault plane enabled? One relaxed atomic load; this is the
+/// entire disabled-path cost of a `fault::point!` site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A named fault-injection site. Expands to a relaxed atomic load when
+/// the plane is disabled; when enabled, evaluates the installed specs
+/// and returns `Some(kind)` if a fault fires at this visit.
+///
+/// ```ignore
+/// if let Some(kind) = crate::fault::point!("kv.seal") {
+///     crate::fault::apply_fallible("kv.seal", kind)?;
+/// }
+/// ```
+#[macro_export]
+macro_rules! fault_point {
+    ($site:expr) => {
+        if $crate::fault::enabled() {
+            $crate::fault::trigger($site)
+        } else {
+            ::core::option::Option::None
+        }
+    };
+}
+
+pub use crate::fault_point as point;
+
+/// What an injected fault does at the site where it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The operation returns an injected error.
+    Err,
+    /// The site spins a fixed bounded loop, then proceeds.
+    Latency,
+    /// A decode-output logit is overwritten with a non-finite value.
+    CorruptLogits,
+    /// Allocation/budget failure (pool-exhausted shape).
+    Alloc,
+    /// Adapter-artifact resolve fails (corrupt / unreadable artifact).
+    CorruptAdapter,
+}
+
+impl FaultKind {
+    /// Grammar name, as accepted by `kind=` in a spec.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Err => "err",
+            FaultKind::Latency => "latency",
+            FaultKind::CorruptLogits => "logit",
+            FaultKind::Alloc => "alloc",
+            FaultKind::CorruptAdapter => "adapter",
+        }
+    }
+
+    fn parse(s: &str) -> anyhow::Result<FaultKind> {
+        match s {
+            "err" => Ok(FaultKind::Err),
+            "latency" => Ok(FaultKind::Latency),
+            "logit" => Ok(FaultKind::CorruptLogits),
+            "alloc" => Ok(FaultKind::Alloc),
+            "adapter" => Ok(FaultKind::CorruptAdapter),
+            other => anyhow::bail!(
+                "unknown fault kind '{other}' (expected err|latency|logit|alloc|adapter)"
+            ),
+        }
+    }
+}
+
+/// One parsed `site=…,p=…,kind=…,seed=…` spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Site name, exact or trailing-`*` prefix pattern.
+    pub site: String,
+    /// Firing probability per visit, in `[0, 1]`.
+    pub p: f64,
+    /// What the fault does where it fires.
+    pub kind: FaultKind,
+    /// Seed for this spec's deterministic draws.
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    fn matches(&self, site: &str) -> bool {
+        if self.site == "*" {
+            return true;
+        }
+        if let Some(prefix) = self.site.strip_suffix('*') {
+            return site.starts_with(prefix);
+        }
+        self.site == site
+    }
+}
+
+/// Parse a `;`-separated spec list. Empty input parses to no specs.
+pub fn parse_specs(input: &str) -> anyhow::Result<Vec<FaultSpec>> {
+    let mut specs = Vec::new();
+    for raw in input.split(';') {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            continue;
+        }
+        let mut site = None;
+        let mut p = 1.0f64;
+        let mut kind = FaultKind::Err;
+        let mut seed = 0u64;
+        for field in raw.split(',') {
+            let field = field.trim();
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec field '{field}' is not key=value"))?;
+            match key.trim() {
+                "site" => site = Some(value.trim().to_string()),
+                "p" => {
+                    p = value
+                        .trim()
+                        .parse::<f64>()
+                        .map_err(|e| anyhow::anyhow!("fault spec p '{value}': {e}"))?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "fault spec p must be in [0, 1], got {p}"
+                    );
+                }
+                "kind" => kind = FaultKind::parse(value.trim())?,
+                "seed" => {
+                    seed = value
+                        .trim()
+                        .parse::<u64>()
+                        .map_err(|e| anyhow::anyhow!("fault spec seed '{value}': {e}"))?;
+                }
+                other => anyhow::bail!(
+                    "unknown fault spec key '{other}' (expected site|p|kind|seed)"
+                ),
+            }
+        }
+        let site = site.ok_or_else(|| anyhow::anyhow!("fault spec '{raw}' is missing site="))?;
+        anyhow::ensure!(!site.is_empty(), "fault spec site must be non-empty");
+        specs.push(FaultSpec { site, p, kind, seed });
+    }
+    Ok(specs)
+}
+
+struct Plane {
+    specs: Vec<FaultSpec>,
+    /// Per-(spec index, site hash) visit counters driving the draws.
+    counters: HashMap<(usize, u64), u64>,
+    /// Per-site fired tally, for the admin read-out.
+    fired: HashMap<String, u64>,
+    checks: u64,
+    fired_total: u64,
+}
+
+impl Plane {
+    fn clear(&mut self) {
+        self.specs.clear();
+        self.counters.clear();
+        self.fired.clear();
+        self.checks = 0;
+        self.fired_total = 0;
+    }
+}
+
+fn plane() -> &'static Mutex<Plane> {
+    static PLANE: OnceLock<Mutex<Plane>> = OnceLock::new();
+    PLANE.get_or_init(|| {
+        Mutex::new(Plane {
+            specs: Vec::new(),
+            counters: HashMap::new(),
+            fired: HashMap::new(),
+            checks: 0,
+            fired_total: 0,
+        })
+    })
+}
+
+fn lock_plane() -> std::sync::MutexGuard<'static, Plane> {
+    // Poisoning is recoverable here: the plane holds plain counters.
+    plane().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Parse `input` and install it as the process-global fault
+/// configuration, replacing whatever was installed before and resetting
+/// all visit counters. An empty input disables the plane. Returns the
+/// number of installed specs.
+pub fn configure(input: &str) -> anyhow::Result<usize> {
+    let specs = parse_specs(input)?;
+    let n = specs.len();
+    let mut plane = lock_plane();
+    plane.clear();
+    plane.specs = specs;
+    drop(plane);
+    ENABLED.store(n > 0, Ordering::Relaxed);
+    Ok(n)
+}
+
+/// Disable the plane and clear all specs and counters.
+pub fn reset() {
+    ENABLED.store(false, Ordering::Relaxed);
+    lock_plane().clear();
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Enabled-path body of [`point!`]: evaluate the installed specs at
+/// `site`. The first spec (in install order) whose deterministic draw
+/// fires wins; every matching spec's counter advances regardless, so
+/// the draw stream at each site is independent of the others.
+pub fn trigger(site: &str) -> Option<FaultKind> {
+    let site_hash = fnv1a(site);
+    let mut plane = lock_plane();
+    plane.checks += 1;
+    let mut hit = None;
+    for i in 0..plane.specs.len() {
+        if !plane.specs[i].matches(site) {
+            continue;
+        }
+        let n = {
+            let c = plane.counters.entry((i, site_hash)).or_insert(0);
+            let n = *c;
+            *c += 1;
+            n
+        };
+        let spec = &plane.specs[i];
+        let draw = splitmix64(spec.seed ^ site_hash ^ n.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        // Top 53 bits → uniform in [0, 1).
+        let u = (draw >> 11) as f64 / (1u64 << 53) as f64;
+        if hit.is_none() && u < spec.p {
+            hit = Some(spec.kind);
+        }
+    }
+    if let Some(kind) = hit {
+        plane.fired_total += 1;
+        *plane.fired.entry(site.to_string()).or_insert(0) += 1;
+        crate::warn_log!(
+            "fault: injected kind={} at site={site}",
+            kind.name()
+        );
+    }
+    hit
+}
+
+/// Bounded deterministic spin used by the `latency` kind. No clocks —
+/// the iteration count is fixed so replays stay deterministic.
+pub fn latency_spin() {
+    for i in 0u64..20_000 {
+        std::hint::black_box(i);
+        std::hint::spin_loop();
+    }
+}
+
+/// Standard handling for fallible sites: `err`/`alloc` return an
+/// injected error, `latency` spins then proceeds, and kinds the site
+/// cannot express are no-ops.
+pub fn apply_fallible(site: &str, kind: FaultKind) -> anyhow::Result<()> {
+    match kind {
+        FaultKind::Err | FaultKind::Alloc => Err(injected(site, kind)),
+        FaultKind::Latency => {
+            latency_spin();
+            Ok(())
+        }
+        FaultKind::CorruptLogits | FaultKind::CorruptAdapter => Ok(()),
+    }
+}
+
+/// Standard handling for infallible sites that degrade gracefully
+/// (e.g. prefix-cache claim → miss). Returns `true` when the site
+/// should take its degraded path; `latency` spins and returns `false`.
+pub fn degrades(kind: FaultKind) -> bool {
+    match kind {
+        FaultKind::Latency => {
+            latency_spin();
+            false
+        }
+        _ => true,
+    }
+}
+
+/// The error an injected `err`/`alloc` fault surfaces as.
+pub fn injected(site: &str, kind: FaultKind) -> anyhow::Error {
+    anyhow::anyhow!("injected fault at site {site} (kind {})", kind.name())
+}
+
+/// JSON snapshot for the admin `/fault` route: installed specs plus
+/// visit/fire tallies. Read-only; the admin endpoint stays POST-free.
+pub fn status_json() -> String {
+    let plane = lock_plane();
+    let specs = plane
+        .specs
+        .iter()
+        .map(|s| {
+            Json::Obj(vec![
+                ("site".into(), Json::Str(s.site.clone())),
+                ("p".into(), Json::Num(s.p)),
+                ("kind".into(), Json::Str(s.kind.name().into())),
+                ("seed".into(), Json::Num(s.seed as f64)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    let mut fired = plane
+        .fired
+        .iter()
+        .map(|(site, n)| (site.clone(), *n))
+        .collect::<Vec<_>>();
+    fired.sort();
+    let fired = fired
+        .into_iter()
+        .map(|(site, n)| (site, Json::Num(n as f64)))
+        .collect::<Vec<_>>();
+    Json::Obj(vec![
+        ("enabled".into(), Json::Bool(enabled())),
+        ("specs".into(), Json::Arr(specs)),
+        ("checks".into(), Json::Num(plane.checks as f64)),
+        ("fired_total".into(), Json::Num(plane.fired_total as f64)),
+        ("fired_by_site".into(), Json::Obj(fired)),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The plane is process-global and these tests mutate it, so they
+    // serialize on one lock and use `testonly.*` site names that no
+    // serving-path site matches — concurrently running server tests in
+    // this binary stay unperturbed.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    struct PlaneGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+    impl<'a> PlaneGuard<'a> {
+        fn new() -> Self {
+            let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+            reset();
+            PlaneGuard(g)
+        }
+    }
+
+    impl Drop for PlaneGuard<'_> {
+        fn drop(&mut self) {
+            reset();
+        }
+    }
+
+    #[test]
+    fn grammar_parses_full_and_defaulted_specs() {
+        let specs =
+            parse_specs("site=kv.seal,p=0.01,kind=err,seed=7; site=testonly.*,kind=latency")
+                .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].site, "kv.seal");
+        assert!((specs[0].p - 0.01).abs() < 1e-12);
+        assert_eq!(specs[0].kind, FaultKind::Err);
+        assert_eq!(specs[0].seed, 7);
+        assert_eq!(specs[1].site, "testonly.*");
+        assert_eq!(specs[1].p, 1.0);
+        assert_eq!(specs[1].kind, FaultKind::Latency);
+        assert_eq!(specs[1].seed, 0);
+        assert!(parse_specs("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_specs() {
+        assert!(parse_specs("p=0.5").is_err()); // missing site
+        assert!(parse_specs("site=a,p=1.5").is_err()); // p out of range
+        assert!(parse_specs("site=a,kind=explode").is_err()); // unknown kind
+        assert!(parse_specs("site=a,seed=x").is_err()); // bad seed
+        assert!(parse_specs("site=a,wat=1").is_err()); // unknown key
+        assert!(parse_specs("site=a p=1").is_err()); // not key=value
+    }
+
+    #[test]
+    fn disabled_plane_never_fires() {
+        let _g = PlaneGuard::new();
+        assert!(!enabled());
+        for _ in 0..100 {
+            assert_eq!(crate::fault::point!("testonly.off"), None);
+        }
+    }
+
+    #[test]
+    fn p_one_always_fires_and_p_zero_never_does() {
+        let _g = PlaneGuard::new();
+        configure("site=testonly.hot,p=1,kind=alloc;site=testonly.cold,p=0").unwrap();
+        assert!(enabled());
+        for _ in 0..10 {
+            assert_eq!(crate::fault::point!("testonly.hot"), Some(FaultKind::Alloc));
+            assert_eq!(crate::fault::point!("testonly.cold"), None);
+        }
+    }
+
+    #[test]
+    fn wildcard_patterns_match_prefixes() {
+        let _g = PlaneGuard::new();
+        configure("site=testonly.*,p=1,kind=err").unwrap();
+        assert_eq!(trigger("testonly.a"), Some(FaultKind::Err));
+        assert_eq!(trigger("testonly.b.c"), Some(FaultKind::Err));
+        assert_eq!(trigger("other.site"), None);
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_firing_pattern() {
+        let _g = PlaneGuard::new();
+        let run = || {
+            configure("site=testonly.rep,p=0.3,kind=err,seed=42").unwrap();
+            (0..200)
+                .map(|_| trigger("testonly.rep").is_some())
+                .collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(a.iter().any(|f| *f), "p=0.3 over 200 visits should fire");
+        assert!(!a.iter().all(|f| *f), "p=0.3 should not always fire");
+
+        // A different seed gives a different schedule.
+        configure("site=testonly.rep,p=0.3,kind=err,seed=43").unwrap();
+        let c = (0..200)
+            .map(|_| trigger("testonly.rep").is_some())
+            .collect::<Vec<_>>();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn per_site_counters_are_independent() {
+        let _g = PlaneGuard::new();
+        // Visits to one site must not shift another site's draw stream.
+        configure("site=testonly.*,p=0.5,kind=err,seed=9").unwrap();
+        let a1 = (0..50)
+            .map(|_| trigger("testonly.x").is_some())
+            .collect::<Vec<_>>();
+        configure("site=testonly.*,p=0.5,kind=err,seed=9").unwrap();
+        for _ in 0..17 {
+            trigger("testonly.noise");
+        }
+        let a2 = (0..50)
+            .map(|_| trigger("testonly.x").is_some())
+            .collect::<Vec<_>>();
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn status_json_reports_specs_and_tallies() {
+        let _g = PlaneGuard::new();
+        configure("site=testonly.stat,p=1,kind=latency,seed=3").unwrap();
+        trigger("testonly.stat");
+        let parsed = Json::parse(&status_json()).unwrap();
+        assert_eq!(parsed.get("enabled"), Some(&Json::Bool(true)));
+        assert_eq!(
+            parsed.get("specs").unwrap().as_arr().unwrap()[0].get("kind"),
+            Some(&Json::Str("latency".into()))
+        );
+        assert_eq!(
+            parsed.get("fired_by_site").unwrap().get("testonly.stat"),
+            Some(&Json::Num(1.0))
+        );
+        reset();
+        let parsed = Json::parse(&status_json()).unwrap();
+        assert_eq!(parsed.get("enabled"), Some(&Json::Bool(false)));
+        assert_eq!(parsed.get("checks"), Some(&Json::Num(0.0)));
+    }
+
+    #[test]
+    fn helper_semantics_match_their_docs() {
+        assert!(apply_fallible("testonly.h", FaultKind::Err).is_err());
+        assert!(apply_fallible("testonly.h", FaultKind::Alloc).is_err());
+        assert!(apply_fallible("testonly.h", FaultKind::Latency).is_ok());
+        assert!(apply_fallible("testonly.h", FaultKind::CorruptLogits).is_ok());
+        assert!(degrades(FaultKind::Err));
+        assert!(degrades(FaultKind::CorruptAdapter));
+        assert!(!degrades(FaultKind::Latency));
+    }
+}

@@ -419,6 +419,9 @@ impl KvPool {
         assert_eq!(k.cols, d, "row width {} != d_model {d}", k.cols);
         assert!(layer < self.n_layers, "layer {layer} out of range");
         self.ensure_seq(seq);
+        if let Some(kind) = crate::fault::point!("kv.alloc") {
+            crate::fault::apply_fallible("kv.alloc", kind)?;
+        }
         anyhow::ensure!(
             self.alloc.reserve(seq, pos0 + k.rows),
             "KV pool exhausted: seq {seq} needs {} blocks, {} free",
@@ -448,6 +451,9 @@ impl KvPool {
         assert_eq!(v_row.len(), d, "V row width {} != d_model {d}", v_row.len());
         assert!(layer < self.n_layers, "layer {layer} out of range");
         self.ensure_seq(seq);
+        if let Some(kind) = crate::fault::point!("kv.alloc") {
+            crate::fault::apply_fallible("kv.alloc", kind)?;
+        }
         anyhow::ensure!(
             self.alloc.reserve(seq, pos + 1),
             "KV pool exhausted: seq {seq} needs {} blocks, {} free",
@@ -483,6 +489,9 @@ impl KvPool {
             sk.tail_v[layer].row_mut(ti).copy_from_slice(v_row);
         }
         if ti + 1 == bt {
+            if let Some(kind) = crate::fault::point!("kv.seal") {
+                crate::fault::apply_fallible("kv.seal", kind)?;
+            }
             let bi = pos / bt;
             let mut block_id = self.alloc.owned_blocks(seq)[bi];
             if self.alloc.refcount(block_id) > 1 {
@@ -603,6 +612,13 @@ impl KvPool {
     /// false for unknown sequences (recoverable — the server path must
     /// never panic on a stray release).
     pub fn release(&mut self, seq: u64) -> bool {
+        if let Some(kind) = crate::fault::point!("kv.release") {
+            // Releasing storage must never fail (that would leak the
+            // blocks) — only the added-latency kind is honored here.
+            if kind == crate::fault::FaultKind::Latency {
+                crate::fault::latency_spin();
+            }
+        }
         let known = self.seqs.remove(&seq).is_some();
         if let Some(freed) = self.alloc.try_release(seq) {
             for b in freed {

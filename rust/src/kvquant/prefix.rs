@@ -115,6 +115,14 @@ impl PrefixCache {
         if !self.enabled {
             return out;
         }
+        if let Some(kind) = crate::fault::point!("prefix.claim") {
+            // Claim is infallible by contract: an injected fault degrades
+            // to a cache miss (counted), never an error.
+            if crate::fault::degrades(kind) {
+                self.misses += 1;
+                return out;
+            }
+        }
         self.clock += 1;
         let max_blocks = Self::max_shareable(prompt.len(), block_tokens) / block_tokens;
         let mut parent = ROOT;
@@ -184,6 +192,13 @@ impl PrefixCache {
     ) {
         if !self.enabled {
             return;
+        }
+        if let Some(kind) = crate::fault::point!("prefix.publish") {
+            // Publish is best-effort by contract: an injected fault drops
+            // this publish (future prompts just re-prefill those blocks).
+            if crate::fault::degrades(kind) {
+                return;
+            }
         }
         self.clock += 1;
         let mut parent = ROOT;

@@ -34,6 +34,7 @@
 //! | [`data`] | synthetic corpus, calibration sampler, task suite |
 //! | [`train`] | LM pre-training, QAT, PEFT trainers |
 //! | [`eval`] | perplexity + zero-shot-style accuracy harness |
+//! | [`fault`] | deterministic fault-injection plane: seeded site-pattern × probability specs behind `fault::point!` sites (one relaxed atomic load when disabled), driving the chaos suite and self-healing serving paths |
 //! | [`runtime`] | PJRT client (feature `pjrt`) or stub, artifact manifest, executable cache |
 //! | [`coordinator`] | online serving API (sessioned submit/stream/cancel + offline trace shim), **continuous batching** (chunked prefill interleaved with batched decode ticks; shared-prefix KV reuse at admission), dynamic batcher with KV-aware admission, fused kernels once per tenant-group per tick, open-loop arrival driver, KV-block allocator, TTFT/ITL metrics |
 //! | [`bench`] | timing harness + markdown table rendering |
@@ -57,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod fault;
 pub mod kernels;
 pub mod kvquant;
 pub mod linalg;

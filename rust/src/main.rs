@@ -20,7 +20,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "quantize", about: "PTQ-quantize the testbed with --method and report PPL/acc" },
     Command { name: "qat", about: "quantization-aware training (LoRDS STE or INT4 baseline)" },
     Command { name: "peft", about: "PEFT fine-tune scaling factors (LoRDS) vs QLoRA adapters" },
-    Command { name: "serve", about: "serve requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4, --rate RPS for open-loop streaming, --temperature/--top-k/--sample-seed, --trace-out FILE for Chrome-trace spans, --metrics-out FILE for Prometheus text, --admin-addr HOST:PORT for the live admin endpoint, --sentinel-every N for the logit-drift sentinel)" },
+    Command { name: "serve", about: "serve requests (--engine native|pjrt, --format lords|nf4|qlora, --kv-bits 32|8|4, --rate RPS for open-loop streaming, --temperature/--top-k/--sample-seed, --trace-out FILE for Chrome-trace spans, --metrics-out FILE for Prometheus text, --admin-addr HOST:PORT for the live admin endpoint with /healthz+/readyz probes, --sentinel-every N for the logit-drift sentinel, --fault 'site=kv.seal,p=0.01,kind=err,seed=7' to arm the fault-injection plane, --drain-ticks N for the graceful-drain budget)" },
     Command { name: "eval", about: "evaluate a checkpoint: perplexity + 7-task zero-shot suite" },
     Command { name: "rank-table", about: "print Appendix-A Table 7 (parity ranks, exact paper shapes)" },
     Command { name: "info", about: "environment + artifact manifest summary" },
@@ -234,8 +234,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         kv_budget_mib: args.get_f32("kv-budget-mib", 0.0) as f64,
         rate_rps: args.get_f32("rate", 0.0) as f64,
         sentinel_every_n_ticks: args.get_usize("sentinel-every", 0),
+        fault_spec: args.get_or("fault", "").to_string(),
+        drain_timeout_ticks: args.get_usize("drain-ticks", ServeCfg::default().drain_timeout_ticks),
         ..ServeCfg::default()
     };
+    let drain_ticks = serve_cfg.drain_timeout_ticks;
     let kv_bits = lords::kvquant::KvBits::parse(serve_cfg.kv_bits)
         .ok_or_else(|| anyhow::anyhow!("--kv-bits must be 32, 8, or 4"))?;
     let n_requests = args.get_usize("requests", 16);
@@ -289,9 +292,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     .with_sampling(sampling.clone())
             })
             .collect();
-        let mut server = Server::new(engine, serve_cfg);
+        let mut server = Server::new(engine, serve_cfg)?;
         let admin = start_admin(args, &server.obs.registry)?;
         drive_serve(&mut server, reqs, rate, seed)?;
+        // graceful shutdown: readiness goes false first (load balancers
+        // stop sending), then the drain finishes in-flight work
+        if let Some(a) = &admin {
+            a.set_ready(false, "draining");
+        }
+        server.drain(drain_ticks)?;
         if let Some(a) = &admin {
             a.publish_flight(server.obs.flight.dump());
         }
@@ -320,7 +329,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .collect();
         let kv = lords::kvquant::KvQuantCfg::with_bits(kv_bits);
         let engine = NativeEngine::with_kv(model, format, kv);
-        let mut server = Server::new(engine, serve_cfg);
+        let mut server = Server::new(engine, serve_cfg)?;
         // weight quant error vs the dense pre-quantization reference (the
         // engine's own install pass only sees QAT shadows, if any)
         lords::obs::quality::record_weight_errors(
@@ -331,6 +340,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         );
         let admin = start_admin(args, &server.obs.registry)?;
         drive_serve(&mut server, reqs, rate, seed)?;
+        // graceful shutdown: readiness goes false first (load balancers
+        // stop sending), then the drain finishes in-flight work and
+        // leaves the KV pool and adapter registry empty
+        if let Some(a) = &admin {
+            a.set_ready(false, "draining");
+        }
+        server.drain(drain_ticks)?;
         if let Some(a) = &admin {
             a.publish_flight(server.obs.flight.dump());
         }

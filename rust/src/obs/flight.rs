@@ -20,6 +20,9 @@
 //! | `done` | `generated` | completed normally |
 //! | `cancelled` | — | cancelled by the client |
 //! | `released` | — | KV blocks and adapter pin returned |
+//! | `failed` | `reason`, `retryable` | failed in flight (engine error, deadline, quarantine, drain) |
+//! | `quarantined` | — | non-finite logits detected; terminal (paired with an anomaly trip) |
+//! | `retried` | — | retry-by-re-prefill re-entered the admission queue |
 //!
 //! Anomaly tripwires (all dump the ring into [`FlightRecorder::take_anomaly`]
 //! and log a warning, then re-arm):
@@ -61,6 +64,16 @@ pub enum FlightKind {
     Done { generated: usize },
     Cancelled,
     Released,
+    /// The sequence failed in flight. `reason` is the stable key shared
+    /// with the `lords_failed_total` label; `retryable` means a
+    /// retry-by-re-prefill was scheduled.
+    Failed { reason: &'static str, retryable: bool },
+    /// The sequence was quarantined (non-finite logits) — terminal, and
+    /// always paired with an anomaly trip.
+    Quarantined,
+    /// A failed sequence re-entered the admission queue after its retry
+    /// backoff.
+    Retried,
 }
 
 #[derive(Clone, Debug)]
@@ -231,6 +244,10 @@ impl FlightRecorder {
                     FlightKind::Done { generated } => {
                         kv.push(("generated".into(), Json::Num(*generated as f64)));
                     }
+                    FlightKind::Failed { reason, retryable } => {
+                        kv.push(("reason".into(), Json::Str(reason.to_string())));
+                        kv.push(("retryable".into(), Json::Bool(*retryable)));
+                    }
                     _ => {}
                 }
                 Json::Obj(kv)
@@ -254,6 +271,9 @@ fn kind_name(k: &FlightKind) -> &'static str {
         FlightKind::Done { .. } => "done",
         FlightKind::Cancelled => "cancelled",
         FlightKind::Released => "released",
+        FlightKind::Failed { .. } => "failed",
+        FlightKind::Quarantined => "quarantined",
+        FlightKind::Retried => "retried",
     }
 }
 

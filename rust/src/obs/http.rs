@@ -12,7 +12,9 @@
 //! | `/trace`   | Chrome-trace JSON (drains the global span buffer)        |
 //! | `/flight`  | last published flight-ring dump (see [`AdminServer::publish_flight`]) |
 //! | `/quality` | quality-telemetry snapshot JSON ([`quality::quality_json`]) |
-//! | `/healthz` | `ok` — liveness probe                                    |
+//! | `/fault`   | fault-plane status JSON ([`crate::fault::status_json`]: specs, checks, fires by site) |
+//! | `/healthz` | `ok` — liveness probe (answers as long as the process runs) |
+//! | `/readyz`  | readiness probe: `ok` (200), or `draining`/`backpressure` (503) once [`AdminServer::set_ready`] turns it off — drains and sustained queue-full streaks flip it |
 //!
 //! Everything served from the registry is lock-free for the serving
 //! threads (atomic metric handles); `/metrics` and `/quality` therefore
@@ -45,6 +47,11 @@ struct Shared {
     registry: Arc<Registry>,
     flight: Mutex<String>,
     stop: AtomicBool,
+    /// `/readyz` state: true (default) serves 200, false serves 503 with
+    /// the published reason.
+    ready: AtomicBool,
+    /// why `/readyz` is false ("draining", "backpressure", ...).
+    not_ready_reason: Mutex<String>,
 }
 
 /// Handle to a running admin endpoint. Dropping it shuts the listener
@@ -66,6 +73,8 @@ impl AdminServer {
             registry,
             flight: Mutex::new("{\"events\":[],\"evicted\":0}".to_string()),
             stop: AtomicBool::new(false),
+            ready: AtomicBool::new(true),
+            not_ready_reason: Mutex::new("not ready".to_string()),
         });
         let accept_shared = Arc::clone(&shared);
         let handle = std::thread::Builder::new()
@@ -87,6 +96,22 @@ impl AdminServer {
         // the guarded value is a plain String, valid even if a reader
         // panicked mid-clone — recover from poisoning instead of unwinding
         *self.shared.flight.lock().unwrap_or_else(|e| e.into_inner()) = dump;
+    }
+
+    /// Flip the `/readyz` probe. The serving loop publishes its
+    /// `Server::is_ready` state here (readiness is distinct from
+    /// `/healthz` liveness: a draining or backpressured server is alive
+    /// but should stop receiving new traffic). `reason` is served in the
+    /// 503 body while not ready.
+    pub fn set_ready(&self, ready: bool, reason: &str) {
+        if !ready {
+            *self
+                .shared
+                .not_ready_reason
+                .lock()
+                .unwrap_or_else(|e| e.into_inner()) = reason.to_string();
+        }
+        self.shared.ready.store(ready, Ordering::SeqCst);
     }
 }
 
@@ -118,6 +143,18 @@ fn accept_loop(listener: &TcpListener, shared: &Shared) {
 }
 
 fn handle_conn(mut stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
+    if let Some(kind) = crate::fault::point!("http.conn") {
+        // the admin plane degrades visibly, never silently: latency holds
+        // the connection, every other kind answers 503
+        if crate::fault::degrades(kind) {
+            return respond(
+                &mut stream,
+                503,
+                "text/plain; charset=utf-8",
+                "injected fault\n",
+            );
+        }
+    }
     stream.set_read_timeout(Some(IO_TIMEOUT))?;
     stream.set_write_timeout(Some(IO_TIMEOUT))?;
     let Some((method, path)) = read_request_line(&mut stream) else {
@@ -128,6 +165,18 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
     }
     match path.as_str() {
         "/healthz" => respond(&mut stream, 200, "text/plain; charset=utf-8", "ok\n"),
+        "/readyz" => {
+            if shared.ready.load(Ordering::SeqCst) {
+                respond(&mut stream, 200, "text/plain; charset=utf-8", "ok\n")
+            } else {
+                let reason =
+                    shared.not_ready_reason.lock().unwrap_or_else(|e| e.into_inner()).clone();
+                respond(&mut stream, 503, "text/plain; charset=utf-8", &format!("{reason}\n"))
+            }
+        }
+        "/fault" => {
+            respond(&mut stream, 200, "application/json", &crate::fault::status_json())
+        }
         "/metrics" => respond(
             &mut stream,
             200,
@@ -187,6 +236,7 @@ fn respond(
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        503 => "Service Unavailable",
         _ => "Error",
     };
     let head = format!(
@@ -226,6 +276,24 @@ mod tests {
         let health = get(addr, "/healthz");
         assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
         assert!(health.ends_with("ok\n"), "{health}");
+
+        // readiness defaults to ok, flips to 503 with the published
+        // reason, and flips back — liveness stays 200 throughout
+        let ready = get(addr, "/readyz");
+        assert!(ready.starts_with("HTTP/1.1 200 OK\r\n"), "{ready}");
+        admin.set_ready(false, "draining");
+        let ready = get(addr, "/readyz");
+        assert!(ready.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{ready}");
+        assert!(ready.ends_with("draining\n"), "{ready}");
+        assert!(get(addr, "/healthz").starts_with("HTTP/1.1 200"), "liveness unaffected");
+        admin.set_ready(true, "");
+        assert!(get(addr, "/readyz").starts_with("HTTP/1.1 200"));
+
+        let fault = get(addr, "/fault");
+        assert!(fault.starts_with("HTTP/1.1 200 OK\r\n"), "{fault}");
+        let fault_body = fault.split("\r\n\r\n").nth(1).expect("fault body");
+        Json::parse(fault_body).expect("fault JSON parses");
+        assert!(fault_body.contains("\"enabled\""), "{fault_body}");
 
         let metrics = get(addr, "/metrics");
         assert!(metrics.contains("demo_total 3"), "{metrics}");

@@ -27,7 +27,8 @@
 //!   logit-drift sentinel's agreement/drift families, and KV block-heat
 //!   coldness. Observe-only by construction.
 //! * [`http`] — [`http::AdminServer`], a background-thread admin endpoint
-//!   serving `/metrics`, `/trace`, `/flight`, `/quality`, and `/healthz`
+//!   serving `/metrics`, `/trace`, `/flight`, `/quality`, `/fault`,
+//!   `/healthz` (liveness), and `/readyz` (readiness)
 //!   live over plain `std::net` (`serve --admin-addr HOST:PORT`).
 //!
 //! [`json`] underpins the export paths: a minimal JSON value model,

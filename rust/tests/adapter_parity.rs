@@ -132,7 +132,7 @@ fn served_mixed_batch_matches_per_tenant_dense_references() {
     for (i, r) in reqs.iter_mut().enumerate() {
         r.adapter = cycle[i % cycle.len()].to_string();
     }
-    let mut server = Server::new(engine, serve_cfg());
+    let mut server = Server::new(engine, serve_cfg()).unwrap();
     let mixed = server.run_trace(reqs).unwrap();
     assert_eq!(mixed.metrics.completed, 8);
     assert!(
@@ -148,7 +148,7 @@ fn served_mixed_batch_matches_per_tenant_dense_references() {
         if *tenant != BASE_ADAPTER {
             factors[ti - 1].apply_to(&mut merged).unwrap();
         }
-        let mut single = Server::new(NativeEngine::new(merged, tenant), serve_cfg());
+        let mut single = Server::new(NativeEngine::new(merged, tenant), serve_cfg()).unwrap();
         let solo_reqs: Vec<Request> = requests(8, 10, 5, cfg.vocab)
             .into_iter()
             .enumerate()

@@ -1,0 +1,445 @@
+//! Seeded chaos suite: randomized fault schedules driven through the
+//! process-global fault plane ([`lords::fault`]), asserting the
+//! self-healing serving invariants end to end:
+//!
+//! * **No leaks** — after a drain, the KV pool holds zero blocks, zero
+//!   staging bytes, and zero active sequences, and every adapter's pin
+//!   count is zero, whatever faults fired.
+//! * **No panics** — every fault becomes a per-sequence `Event::Failed`
+//!   (or a degraded cache path), never a tick-poisoning error.
+//! * **Isolation** — sequences the schedule never touched produce
+//!   bitwise-identical token streams to a fault-free run; retried
+//!   sequences that complete reproduce the fault-free tokens exactly
+//!   (retry-by-re-prefill regenerates, greedy decode is deterministic).
+//! * **Replay** — the same spec + seed fires the same schedule, so two
+//!   runs produce bit-identical (normalized) event streams.
+//!
+//! The base seed comes from `LORDS_CHAOS_SEED` (default 1); CI pins a
+//! few fixed seeds so failures reproduce with
+//! `LORDS_CHAOS_SEED=<seed> cargo test --test chaos`.
+//!
+//! The fault plane is process-global, so every test serializes on one
+//! mutex and resets the plane on exit (panic included) via an RAII guard.
+
+use lords::adapters::AdapterFactors;
+use lords::config::{ModelCfg, ServeCfg};
+use lords::coordinator::{Event, NativeEngine, Request, Server};
+use lords::fault;
+use lords::kvquant::{KvBits, KvQuantCfg};
+use lords::model::Model;
+use lords::util::Rng;
+use std::sync::Mutex;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Hold the serialization lock and reset the global fault plane on drop,
+/// so a panicking test never bleeds its schedule into the next one.
+struct PlaneGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl<'a> PlaneGuard<'a> {
+    fn lock() -> PlaneGuard<'a> {
+        let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        fault::reset();
+        PlaneGuard(g)
+    }
+}
+
+impl Drop for PlaneGuard<'_> {
+    fn drop(&mut self) {
+        fault::reset();
+    }
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("LORDS_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 48,
+        block: 8,
+        codebook: "nf4".into(),
+        qlora_rank: 4,
+    }
+}
+
+fn serve_cfg() -> ServeCfg {
+    ServeCfg {
+        decode_buckets: vec![1, 2, 4],
+        prefill_buckets: vec![1, 2, 4],
+        batch_window_us: 0,
+        max_queue: 64,
+        max_new_tokens: 8,
+        workers: 1,
+        kv_bits: 32,
+        kv_budget_mib: 0.0,
+        rate_rps: 0.0,
+        prefill_chunk_tokens: 8,
+        retry_backoff_ticks: 1,
+        ..ServeCfg::default()
+    }
+}
+
+fn engine(model_seed: u64) -> NativeEngine {
+    let kv = KvQuantCfg { bits: KvBits::F32, rank: 1, block_tokens: 8 };
+    NativeEngine::with_kv(Model::init(&tiny_cfg(), model_seed), "chaos", kv)
+}
+
+fn requests(n: usize, prompt_len: usize, max_new: usize) -> Vec<Request> {
+    let mut rng = Rng::new(5);
+    (0..n)
+        .map(|i| {
+            Request::new(i as u64, (0..prompt_len).map(|_| rng.below(32)).collect(), max_new)
+        })
+        .collect()
+}
+
+/// Drive submitted work to quiescence (bounded), then drain. Returns
+/// every event in order. Panics if the server fails to converge — the
+/// livelock form of a leak.
+fn run_to_drain(srv: &mut Server<NativeEngine>, reqs: Vec<Request>) -> Vec<Event> {
+    let mut events = Vec::new();
+    let mut pending: std::collections::VecDeque<Request> = reqs.into();
+    let mut ticks = 0usize;
+    while !pending.is_empty() || !srv.is_idle() {
+        while let Some(r) = pending.pop_front() {
+            if srv.submit(r).is_err() {
+                break;
+            }
+        }
+        events.extend(srv.step().expect("faults must never poison a tick"));
+        ticks += 1;
+        assert!(ticks < 10_000, "server failed to quiesce under faults");
+    }
+    events.extend(srv.drain(10_000).expect("drain must never error"));
+    events
+}
+
+/// Leak audit: a drained server holds nothing, whatever the schedule did.
+fn assert_no_leaks(srv: &Server<NativeEngine>, adapters: &[&str]) {
+    let pool = srv.engine.kv_pool();
+    assert_eq!(pool.active_sequences(), 0, "leaked KV sequences");
+    assert_eq!(pool.used_blocks(), 0, "leaked KV blocks");
+    assert_eq!(pool.staging_bytes(), 0, "leaked staging bytes");
+    for id in adapters {
+        assert_eq!(srv.engine.registry().pins(id), 0, "leaked pin on adapter '{id}'");
+    }
+}
+
+/// Normalize an event stream to its replay-comparable projection
+/// (timings carried by `Done` responses are wall-clock and excluded;
+/// everything that identifies the schedule is kept, tokens included).
+fn sig(events: &[Event]) -> Vec<String> {
+    events
+        .iter()
+        .map(|e| match e {
+            Event::Token { id, token, index } => format!("tok {id} {token} {index}"),
+            Event::Done { response } => {
+                format!("done {} {:?}", response.id, response.tokens)
+            }
+            Event::Rejected { id, reason } => format!("rej {id} {}", reason.key()),
+            Event::Cancelled { id } => format!("can {id}"),
+            Event::Failed { id, reason, retryable } => {
+                format!("fail {id} {reason} {retryable}")
+            }
+        })
+        .collect()
+}
+
+/// Completed responses keyed by id -> token stream.
+fn completions(events: &[Event]) -> std::collections::HashMap<u64, Vec<usize>> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Done { response } => Some((response.id, response.tokens.clone())),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Every id that entered the server resolves to exactly one terminal
+/// event (done / terminal failure / cancellation / rejection).
+fn assert_single_terminal(events: &[Event], ids: impl Iterator<Item = u64>) {
+    let mut terminal: std::collections::HashMap<u64, usize> = Default::default();
+    for e in events {
+        let id = match e {
+            Event::Done { response } => Some(response.id),
+            Event::Failed { id, retryable: false, .. } => Some(*id),
+            Event::Cancelled { id } => Some(*id),
+            Event::Rejected { id, .. } => Some(*id),
+            _ => None,
+        };
+        if let Some(id) = id {
+            *terminal.entry(id).or_default() += 1;
+        }
+    }
+    for id in ids {
+        assert_eq!(
+            terminal.get(&id).copied().unwrap_or(0),
+            1,
+            "id {id} must resolve exactly once (events: {:?})",
+            sig(events)
+        );
+    }
+}
+
+/// A fault-free reference run over the same request set.
+fn clean_run(reqs: Vec<Request>) -> Vec<Event> {
+    fault::reset();
+    let mut srv = Server::new(engine(3), serve_cfg()).unwrap();
+    let events = run_to_drain(&mut srv, reqs);
+    assert_no_leaks(&srv, &[]);
+    events
+}
+
+#[test]
+fn engine_err_faults_are_contained_and_retries_reproduce_clean_tokens() {
+    let _g = PlaneGuard::lock();
+    let seed = chaos_seed();
+    let reqs = requests(8, 12, 6);
+    let clean = completions(&clean_run(reqs.clone()));
+    assert_eq!(clean.len(), 8, "reference run must complete everything");
+
+    fault::configure(&format!(
+        "site=engine.decode,p=0.08,kind=err,seed={seed};\
+         site=engine.prefill,p=0.05,kind=err,seed={}",
+        seed ^ 0xA5A5
+    ))
+    .unwrap();
+    let mut srv = Server::new(engine(3), serve_cfg()).unwrap();
+    let events = run_to_drain(&mut srv, reqs);
+    fault::reset();
+
+    assert_single_terminal(&events, 0..8);
+    assert_no_leaks(&srv, &[]);
+    // every sequence that completed — faulted-then-retried or untouched —
+    // reproduces the fault-free tokens exactly
+    for (id, tokens) in completions(&events) {
+        assert_eq!(tokens, clean[&id], "seq {id} diverged from the fault-free run");
+    }
+}
+
+#[test]
+fn kv_alloc_and_seal_faults_leak_nothing() {
+    let _g = PlaneGuard::lock();
+    let seed = chaos_seed().wrapping_add(1);
+    let reqs = requests(8, 12, 6);
+    let clean = completions(&clean_run(reqs.clone()));
+
+    fault::configure(&format!("site=kv.*,p=0.05,kind=alloc,seed={seed}")).unwrap();
+    let mut srv = Server::new(engine(3), serve_cfg()).unwrap();
+    let events = run_to_drain(&mut srv, reqs);
+    fault::reset();
+
+    assert_single_terminal(&events, 0..8);
+    assert_no_leaks(&srv, &[]);
+    for (id, tokens) in completions(&events) {
+        assert_eq!(tokens, clean[&id], "seq {id} diverged from the fault-free run");
+    }
+}
+
+#[test]
+fn logit_corruption_quarantines_only_the_victims() {
+    let _g = PlaneGuard::lock();
+    let seed = chaos_seed().wrapping_add(2);
+    let reqs = requests(8, 12, 6);
+    let clean = completions(&clean_run(reqs.clone()));
+
+    fault::configure(&format!("site=engine.logits,p=0.02,kind=logit,seed={seed}")).unwrap();
+    let mut srv = Server::new(engine(3), serve_cfg()).unwrap();
+    let events = run_to_drain(&mut srv, reqs);
+    fault::reset();
+
+    assert_single_terminal(&events, 0..8);
+    assert_no_leaks(&srv, &[]);
+    let quarantined: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Failed { id, reason: "nonfinite_logits", retryable } => {
+                assert!(!retryable, "quarantine must be terminal");
+                Some(*id)
+            }
+            _ => None,
+        })
+        .collect();
+    let done = completions(&events);
+    for id in &quarantined {
+        assert!(!done.contains_key(id), "quarantined seq {id} must not also complete");
+    }
+    // untouched sequences match the fault-free run bitwise
+    for (id, tokens) in &done {
+        assert_eq!(tokens, &clean[id], "untouched seq {id} diverged");
+    }
+    assert_eq!(srv.metrics.quarantined, quarantined.len());
+}
+
+#[test]
+fn adapter_resolve_faults_retry_and_release_all_pins() {
+    let _g = PlaneGuard::lock();
+    let seed = chaos_seed().wrapping_add(3);
+    let model = Model::init(&tiny_cfg(), 3);
+    let base = AdapterFactors::from_model(&model);
+    let mut arng = Rng::new(17);
+    let factors = [base.perturbed(0.05, &mut arng), base.perturbed(0.05, &mut arng)];
+    let build = || {
+        let kv = KvQuantCfg { bits: KvBits::F32, rank: 1, block_tokens: 8 };
+        let mut e = NativeEngine::with_kv(model.clone(), "chaos-mt", kv);
+        e.register_adapter("t0", factors[0].clone()).unwrap();
+        e.register_adapter("t1", factors[1].clone()).unwrap();
+        Server::new(e, serve_cfg()).unwrap()
+    };
+    let tenants = ["base", "t0", "t1"];
+    let reqs = || -> Vec<Request> {
+        requests(6, 12, 6)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.with_adapter(tenants[i % 3]))
+            .collect()
+    };
+    fault::reset();
+    let mut clean_srv = build();
+    let clean = completions(&run_to_drain(&mut clean_srv, reqs()));
+    assert_eq!(clean.len(), 6);
+
+    fault::configure(&format!("site=adapter.resolve,p=0.15,kind=adapter,seed={seed}"))
+        .unwrap();
+    let mut srv = build();
+    let events = run_to_drain(&mut srv, reqs());
+    fault::reset();
+
+    assert_single_terminal(&events, 0..6);
+    assert_no_leaks(&srv, &["t0", "t1"]);
+    for (id, tokens) in completions(&events) {
+        assert_eq!(tokens, clean[&id], "seq {id} diverged from the fault-free run");
+    }
+}
+
+#[test]
+fn cancel_storm_under_wildcard_faults_leaks_nothing() {
+    let _g = PlaneGuard::lock();
+    let seed = chaos_seed().wrapping_add(4);
+    fault::configure(&format!("site=*,p=0.03,kind=err,seed={seed}")).unwrap();
+    let mut srv = Server::new(engine(3), serve_cfg()).unwrap();
+    let reqs = requests(12, 12, 6);
+    let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+    let mut events = Vec::new();
+    for r in reqs {
+        let _ = srv.submit(r);
+    }
+    // storm: cancel every odd id across the first ticks, mid-prefill and
+    // mid-decode, while the wildcard schedule fires everywhere
+    for tick in 0..6 {
+        events.extend(srv.step().expect("faults must never poison a tick"));
+        if tick < ids.len() / 2 {
+            srv.cancel(ids[tick * 2 + 1]);
+        }
+    }
+    let mut ticks = 0;
+    while !srv.is_idle() {
+        events.extend(srv.step().expect("faults must never poison a tick"));
+        ticks += 1;
+        assert!(ticks < 10_000, "server failed to quiesce under cancel storm");
+    }
+    events.extend(srv.drain(10_000).unwrap());
+    fault::reset();
+    assert_single_terminal(&events, ids.into_iter());
+    assert_no_leaks(&srv, &[]);
+}
+
+#[test]
+fn same_seed_replays_a_bit_identical_event_stream() {
+    let _g = PlaneGuard::lock();
+    let seed = chaos_seed().wrapping_add(5);
+    let spec = format!(
+        "site=engine.*,p=0.1,kind=err,seed={seed};site=kv.*,p=0.05,kind=alloc,seed={seed}"
+    );
+    let run = |spec: &str| {
+        fault::reset();
+        fault::configure(spec).unwrap();
+        let mut srv = Server::new(engine(3), serve_cfg()).unwrap();
+        let events = run_to_drain(&mut srv, requests(8, 12, 6));
+        assert_no_leaks(&srv, &[]);
+        sig(&events)
+    };
+    let a = run(&spec);
+    let b = run(&spec);
+    fault::reset();
+    assert_eq!(a, b, "same spec + seed must replay bit-identically");
+}
+
+#[test]
+fn prefix_cache_faults_degrade_without_changing_tokens() {
+    let _g = PlaneGuard::lock();
+    let seed = chaos_seed().wrapping_add(6);
+    // shared-prefix sessions: same prompt so later ones fork from cache
+    let prompt: Vec<usize> = {
+        let mut rng = Rng::new(9);
+        (0..16).map(|_| rng.below(32)).collect()
+    };
+    let shared_reqs =
+        || -> Vec<Request> { (0..4).map(|i| Request::new(i, prompt.clone(), 6)).collect() };
+    fault::reset();
+    let mut clean_srv = Server::new(engine(3), serve_cfg()).unwrap();
+    let clean = completions(&run_to_drain(&mut clean_srv, shared_reqs()));
+    assert_eq!(clean.len(), 4);
+
+    fault::configure(&format!(
+        "site=prefix.claim,p=0.5,kind=err,seed={seed};\
+         site=prefix.publish,p=0.5,kind=err,seed={seed}"
+    ))
+    .unwrap();
+    let mut srv = Server::new(engine(3), serve_cfg()).unwrap();
+    let events = run_to_drain(&mut srv, shared_reqs());
+    fault::reset();
+
+    // cache faults only degrade (counted miss / dropped publish): every
+    // session completes, tokens bitwise-identical, nothing leaks
+    let done = completions(&events);
+    assert_eq!(done.len(), 4, "cache degradation must not fail sequences");
+    for (id, tokens) in &done {
+        assert_eq!(tokens, &clean[id], "shared-prefix seq {id} diverged");
+    }
+    assert_no_leaks(&srv, &[]);
+}
+
+#[test]
+fn deadlines_expire_in_flight_and_release_everything() {
+    let _g = PlaneGuard::lock();
+    // latency faults stretch ticks so a short deadline expires mid-run
+    let seed = chaos_seed().wrapping_add(7);
+    fault::configure(&format!("site=engine.decode,p=1.0,kind=latency,seed={seed}")).unwrap();
+    let mut srv = Server::new(engine(3), serve_cfg()).unwrap();
+    let mut reqs = requests(4, 12, 6);
+    for r in reqs.iter_mut() {
+        // comfortably admits, expires during the slowed decode ticks below
+        r.deadline_ms = 5;
+    }
+    let mut events = Vec::new();
+    for r in reqs {
+        let _ = srv.submit(r); // racing the deadline at the door is fine
+    }
+    let mut ticks = 0;
+    while !srv.is_idle() {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        events.extend(srv.step().unwrap());
+        ticks += 1;
+        assert!(ticks < 10_000);
+    }
+    events.extend(srv.drain(10_000).unwrap());
+    fault::reset();
+    let deadline_events = events
+        .iter()
+        .filter(|e| {
+            matches!(e, Event::Failed { reason: "deadline", retryable: false, .. })
+                || matches!(e, Event::Rejected { reason, .. }
+                    if *reason == lords::coordinator::RejectReason::DeadlineInfeasible)
+        })
+        .count();
+    assert!(deadline_events > 0, "short deadlines must expire: {:?}", sig(&events));
+    assert_no_leaks(&srv, &[]);
+}

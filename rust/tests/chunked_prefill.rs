@@ -162,7 +162,7 @@ fn chunked_schedule_and_prefix_sharing_preserve_token_streams() {
     let run = |chunk: usize, sharing: bool| {
         let mut engine = NativeEngine::with_kv(model.clone(), "sched", kv);
         engine.set_prefix_sharing(sharing);
-        let mut srv = Server::new(engine, serve_cfg(chunk));
+        let mut srv = Server::new(engine, serve_cfg(chunk)).unwrap();
         let report = srv.run_trace(requests()).unwrap();
         assert_eq!(report.metrics.completed, 6);
         report
@@ -216,7 +216,7 @@ fn short_request_streams_while_long_prompt_still_prefilling() {
     let model = Model::init(&cfg, 29);
     let kv = KvQuantCfg { bits: KvBits::F32, rank: 1, block_tokens: 8 };
     let engine = NativeEngine::with_kv(model, "interleave", kv);
-    let mut srv = Server::new(engine, serve_cfg(8));
+    let mut srv = Server::new(engine, serve_cfg(8)).unwrap();
 
     let mut rng = Rng::new(31);
     let long: Vec<usize> = (0..40).map(|_| rng.below(cfg.vocab)).collect();
@@ -260,7 +260,7 @@ fn second_session_reuses_shared_prefix_blocks() {
     let model = Model::init(&cfg, 37);
     let kv = KvQuantCfg { bits: KvBits::F32, rank: 1, block_tokens: 8 };
     let engine = NativeEngine::with_kv(model, "prefix", kv);
-    let mut srv = Server::new(engine, serve_cfg(0));
+    let mut srv = Server::new(engine, serve_cfg(0)).unwrap();
 
     let mut rng = Rng::new(41);
     let prompt: Vec<usize> = (0..20).map(|_| rng.below(cfg.vocab)).collect();
@@ -321,7 +321,7 @@ fn second_session_reuses_shared_prefix_blocks() {
     let mut check = Server::new(
         NativeEngine::with_kv(Model::init(&cfg, 37), "solo", kv),
         serve_cfg(0),
-    );
+    ).unwrap();
     check.submit(Request::new(0, prompt.clone(), 4)).unwrap();
     let solo = drain(&mut check);
     assert_eq!(first, solo, "cached-prefix serving changed the stream");

@@ -244,7 +244,7 @@ fn mixed_tenant_quantized_serve_matches_single_stream_goldens() {
         let mut engine = NativeEngine::with_kv(model.clone(), "mt", kv);
         engine.register_adapter("t0", adapters[0].clone()).unwrap();
         engine.register_adapter("t1", adapters[1].clone()).unwrap();
-        Server::new(engine, serve.clone())
+        Server::new(engine, serve.clone()).unwrap()
     };
     let requests = |only: Option<u64>| -> Vec<Request> {
         let mut rng = Rng::new(33);

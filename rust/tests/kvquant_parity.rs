@@ -115,13 +115,13 @@ fn served_trace_token_match_at_8bit() {
     let cfg = tiny_cfg();
     let model = Model::init(&cfg, 41);
 
-    let mut dense_srv = Server::new(NativeEngine::new(model.clone(), "kv32"), serve_cfg(32));
+    let mut dense_srv = Server::new(NativeEngine::new(model.clone(), "kv32"), serve_cfg(32)).unwrap();
     let dense = dense_srv.run_trace(requests(6, 12, 6, cfg.vocab)).unwrap();
     assert_eq!(dense.metrics.completed, 6);
 
     let kv = KvQuantCfg { bits: KvBits::Int8, rank: 1, block_tokens: 8 };
     let mut packed_srv =
-        Server::new(NativeEngine::with_kv(model, "kv8", kv), serve_cfg(8));
+        Server::new(NativeEngine::with_kv(model, "kv8", kv), serve_cfg(8)).unwrap();
     let packed = packed_srv.run_trace(requests(6, 12, 6, cfg.vocab)).unwrap();
     assert_eq!(packed.metrics.completed, 6);
 

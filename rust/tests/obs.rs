@@ -48,7 +48,7 @@ fn serve_cfg() -> ServeCfg {
 
 fn tiny_server(seed: u64) -> Server<NativeEngine> {
     let cfg = tiny_cfg();
-    Server::new(NativeEngine::new(Model::init(&cfg, seed), "obs"), serve_cfg())
+    Server::new(NativeEngine::new(Model::init(&cfg, seed), "obs"), serve_cfg()).unwrap()
 }
 
 /// Half greedy, half seeded-sampled — sampling exercises the paths most
@@ -326,7 +326,7 @@ fn sentinel_on_is_bitwise_identical_across_kv_tiers() {
             let engine = NativeEngine::with_kv(Model::init(&cfg, 11), "sentinel", kv);
             let serve =
                 ServeCfg { kv_bits, sentinel_every_n_ticks: sentinel, ..serve_cfg() };
-            Server::new(engine, serve)
+            Server::new(engine, serve).unwrap()
         };
         let off = server_with(0).run_trace(requests(6, 12, 6)).unwrap();
         let mut srv = server_with(1);
@@ -385,7 +385,7 @@ fn admin_endpoint_serves_live_metrics_mid_run() {
     let kv = KvQuantCfg::with_bits(KvBits::Int8);
     let engine = NativeEngine::with_kv(Model::init(&cfg, 3), "admin", kv);
     let serve = ServeCfg { kv_bits: 8, sentinel_every_n_ticks: 2, ..serve_cfg() };
-    let mut srv = Server::new(engine, serve);
+    let mut srv = Server::new(engine, serve).unwrap();
     let admin =
         AdminServer::bind("127.0.0.1:0", Arc::clone(&srv.obs.registry)).expect("bind port 0");
     let addr = admin.local_addr();
@@ -400,6 +400,28 @@ fn admin_endpoint_serves_live_metrics_mid_run() {
     let health = get("/healthz");
     assert!(health.starts_with("HTTP/1.1 200"), "{health}");
     assert!(health.ends_with("ok\n"), "{health}");
+
+    // readiness is a separate signal: it flips with `set_ready` while
+    // liveness stays green, and the reason rides in the 503 body
+    let ready = get("/readyz");
+    assert!(ready.starts_with("HTTP/1.1 200"), "{ready}");
+    admin.set_ready(false, "draining");
+    let not_ready = get("/readyz");
+    assert!(not_ready.starts_with("HTTP/1.1 503"), "{not_ready}");
+    assert!(not_ready.ends_with("draining\n"), "{not_ready}");
+    assert!(get("/healthz").starts_with("HTTP/1.1 200"), "liveness must survive not-ready");
+    admin.set_ready(true, "");
+    assert!(get("/readyz").starts_with("HTTP/1.1 200"));
+
+    // the fault-plane read-out is wired even when no faults are armed
+    let fault = get("/fault");
+    assert!(fault.starts_with("HTTP/1.1 200"), "{fault}");
+    let fbody = fault.split("\r\n\r\n").nth(1).expect("fault body");
+    let fdoc = Json::parse(fbody).expect("fault status JSON parses");
+    assert!(
+        matches!(fdoc.get("enabled"), Some(Json::Bool(false))),
+        "no faults armed in this test binary: {fbody}"
+    );
 
     for r in requests(5, 18, 6) {
         srv.submit(r).unwrap();
@@ -456,4 +478,190 @@ fn admin_endpoint_serves_live_metrics_mid_run() {
             .any(|h| h.get("name").unwrap().as_str() == Some("lords_kv_seal_rel_error")),
         "quality snapshot carries the seal-error family"
     );
+}
+
+// ------------------------------------------------------ failure telemetry
+
+use lords::coordinator::engine::SeqState;
+use lords::coordinator::Engine;
+
+/// Deterministic failure harness for the telemetry tests: a delegating
+/// [`Engine`] over [`NativeEngine`] that fails the first
+/// `decode_failures_left` decode calls outright and, independently,
+/// overwrites one victim sequence's logits with NaN exactly once.
+///
+/// Unlike the process-global fault plane (`lords::fault`), failures here
+/// are scheduled by call count on a private engine, so the metric
+/// assertions below are exact rather than probabilistic — and the test
+/// binary's other tests can't be perturbed.
+struct FlakyEngine {
+    inner: NativeEngine,
+    decode_failures_left: usize,
+    corrupt_once: Option<u64>,
+}
+
+impl FlakyEngine {
+    fn new(seed: u64, decode_failures_left: usize, corrupt_once: Option<u64>) -> FlakyEngine {
+        FlakyEngine {
+            inner: NativeEngine::new(Model::init(&tiny_cfg(), seed), "obs"),
+            decode_failures_left,
+            corrupt_once,
+        }
+    }
+}
+
+impl Engine for FlakyEngine {
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+    fn prefill(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        self.inner.prefill(seqs)
+    }
+    fn supports_chunked_prefill(&self) -> bool {
+        self.inner.supports_chunked_prefill()
+    }
+    fn admit_seqs(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        self.inner.admit_seqs(seqs)
+    }
+    fn prefill_chunk(&mut self, seq: &mut SeqState, budget: usize) -> anyhow::Result<usize> {
+        self.inner.prefill_chunk(seq, budget)
+    }
+    fn prefix_hit_tokens(&self, adapter: &str, prompt: &[usize]) -> usize {
+        self.inner.prefix_hit_tokens(adapter, prompt)
+    }
+    fn decode(&mut self, seqs: &mut [SeqState]) -> anyhow::Result<()> {
+        if self.decode_failures_left > 0 {
+            self.decode_failures_left -= 1;
+            anyhow::bail!("injected decode failure (test harness)");
+        }
+        self.inner.decode(seqs)?;
+        if let Some(victim) = self.corrupt_once.take() {
+            match seqs.iter_mut().find(|s| s.id == victim) {
+                Some(s) => s.last_logits.iter_mut().for_each(|v| *v = f32::NAN),
+                None => self.corrupt_once = Some(victim), // not decoding yet
+            }
+        }
+        Ok(())
+    }
+    fn release(&mut self, id: u64) {
+        self.inner.release(id);
+    }
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+    fn kv_init(&mut self, budget_bytes: Option<usize>, max_concurrent: usize) {
+        self.inner.kv_init(budget_bytes, max_concurrent);
+    }
+    fn kv_can_admit(&self, seq_tokens: &[usize]) -> bool {
+        self.inner.kv_can_admit(seq_tokens)
+    }
+    fn supports_adapter(&self, adapter: &str) -> bool {
+        self.inner.supports_adapter(adapter)
+    }
+    fn observe(&mut self, reg: &Registry) {
+        self.inner.observe(reg);
+    }
+    fn install_quality(&mut self, reg: &std::sync::Arc<Registry>, seal_err_threshold: f64) {
+        self.inner.install_quality(reg, seal_err_threshold);
+    }
+    fn sentinel_probe(&mut self, s: &SeqState) -> Option<(bool, f64)> {
+        self.inner.sentinel_probe(s)
+    }
+    fn flush_caches(&mut self) {
+        self.inner.flush_caches();
+    }
+}
+
+/// A retryable engine failure leaves a complete audit trail: the
+/// reason-labelled failure counter, the retry counter, and the flight
+/// recorder's failed → released → retried → done lifecycle — and
+/// retry-by-re-prefill reproduces the exact tokens a clean run serves.
+#[test]
+fn engine_failures_surface_in_metrics_flight_and_retry_counters() {
+    // 4 requests fill the top decode bucket, so all of them are running
+    // when the one injected decode failure lands: exactly 4 failures,
+    // 4 retries, 4 completions.
+    let reqs = || requests(4, 12, 6);
+    let clean = tiny_server(9).run_trace(reqs()).unwrap();
+    assert_eq!(clean.metrics.completed, 4);
+
+    let mut srv = Server::new(FlakyEngine::new(9, 1, None), serve_cfg()).unwrap();
+    let report = srv.run_trace(reqs()).unwrap();
+
+    assert_eq!(report.metrics.completed, 4);
+    assert_eq!(report.metrics.failed, 4);
+    assert_eq!(report.metrics.retries, 4);
+    for (a, b) in clean.responses.iter().zip(&report.responses) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "req {}: retry must reproduce the clean tokens", a.id);
+    }
+
+    let failed = srv
+        .obs
+        .registry
+        .counter("lords_failed_total", &[("reason", "engine_error")])
+        .get();
+    assert_eq!(failed, 4);
+    assert_eq!(srv.obs.registry.counter("lords_retries_total", &[]).get(), 4);
+    let text = srv.obs.registry.render_prometheus();
+    assert!(text.contains("lords_failed_total{reason=\"engine_error\"} 4"), "{text}");
+    assert!(text.contains("lords_retries_total 4"), "{text}");
+    assert!(text.contains("# HELP lords_failed_total "), "{text}");
+
+    // request 0's flight trail: fail, release, retry, then a clean finish
+    let kinds: Vec<&FlightKind> =
+        srv.obs.flight.events().filter(|e| e.seq == 0).map(|e| &e.kind).collect();
+    assert!(
+        kinds.contains(&&FlightKind::Failed { reason: "engine_error", retryable: true }),
+        "{kinds:?}"
+    );
+    assert!(kinds.contains(&&FlightKind::Retried), "{kinds:?}");
+    assert!(kinds.iter().any(|k| matches!(k, FlightKind::Done { .. })), "{kinds:?}");
+    assert_eq!(kinds.last(), Some(&&FlightKind::Released));
+    // the dump renders the failure fields
+    let dump = Json::parse(&srv.obs.flight.dump()).expect("flight dump must parse");
+    let has_failed = dump.get("events").unwrap().as_arr().unwrap().iter().any(|e| {
+        e.get("kind").unwrap().as_str() == Some("failed")
+            && e.get("reason").and_then(Json::as_str) == Some("engine_error")
+            && matches!(e.get("retryable"), Some(Json::Bool(true)))
+    });
+    assert!(has_failed, "dump carries reason + retryable on failed events");
+}
+
+/// Non-finite logits quarantine exactly the victim — terminally, with
+/// the quarantine counter, the flight kind, and the anomaly tripwire all
+/// firing — while every untouched sequence completes.
+#[test]
+fn logit_corruption_is_quarantined_and_observable() {
+    let mut srv = Server::new(FlakyEngine::new(9, 0, Some(1)), serve_cfg()).unwrap();
+    let report = srv.run_trace(requests(4, 12, 6)).unwrap();
+
+    assert_eq!(report.metrics.quarantined, 1);
+    assert_eq!(report.metrics.failed, 1, "quarantine is terminal, not retried");
+    assert_eq!(report.metrics.retries, 0);
+    assert_eq!(report.metrics.completed, 3);
+    assert!(report.responses.iter().all(|r| r.id != 1), "the victim must not complete");
+
+    let q = srv
+        .obs
+        .registry
+        .counter("lords_quarantined_total", &[("reason", "nonfinite_logits")])
+        .get();
+    assert_eq!(q, 1);
+    let text = srv.obs.registry.render_prometheus();
+    assert!(text.contains("lords_quarantined_total{reason=\"nonfinite_logits\"} 1"), "{text}");
+    assert!(text.contains("lords_failed_total{reason=\"nonfinite_logits\"} 1"), "{text}");
+
+    let kinds: Vec<&FlightKind> =
+        srv.obs.flight.events().filter(|e| e.seq == 1).map(|e| &e.kind).collect();
+    assert!(kinds.contains(&&FlightKind::Quarantined), "{kinds:?}");
+    assert!(
+        kinds.contains(&&FlightKind::Failed { reason: "nonfinite_logits", retryable: false }),
+        "{kinds:?}"
+    );
+    assert_eq!(kinds.last(), Some(&&FlightKind::Released), "quarantine released its KV");
+
+    let anomaly = srv.obs.flight.take_anomaly().expect("quarantine must trip the recorder");
+    assert!(anomaly.reason.contains("non-finite"), "{}", anomaly.reason);
+    assert!(Json::parse(&anomaly.dump).is_ok());
 }

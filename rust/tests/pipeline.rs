@@ -89,7 +89,7 @@ fn qat_then_peft_then_serve() {
     let mut server = Server::new(
         NativeEngine::new(m, "lords"),
         ServeCfg { decode_buckets: vec![1, 2, 4], prefill_buckets: vec![1, 2, 4], ..Default::default() },
-    );
+    ).unwrap();
     let report = server.run_trace(reqs).unwrap();
     assert_eq!(report.metrics.completed, 5);
     assert!(report.responses.iter().all(|r| r.tokens.len() == 8));

@@ -66,13 +66,13 @@ fn run_trace_shim_is_token_identical_to_golden_single_streams() {
     let cfg = tiny_cfg();
     let model = Model::init(&cfg, 5);
 
-    let mut srv = Server::new(NativeEngine::new(model.clone(), "shim"), serve_cfg());
+    let mut srv = Server::new(NativeEngine::new(model.clone(), "shim"), serve_cfg()).unwrap();
     let trace = srv.run_trace(requests(8, 12, 6, cfg.vocab)).unwrap();
     assert_eq!(trace.metrics.completed, 8);
 
     // golden reference: every request served alone in a fresh server
     for want in &trace.responses {
-        let mut single = Server::new(NativeEngine::new(model.clone(), "solo"), serve_cfg());
+        let mut single = Server::new(NativeEngine::new(model.clone(), "solo"), serve_cfg()).unwrap();
         let one = requests(8, 12, 6, cfg.vocab).remove(want.id as usize);
         let solo = single.run_trace(vec![one]).unwrap();
         assert_eq!(
@@ -83,7 +83,7 @@ fn run_trace_shim_is_token_identical_to_golden_single_streams() {
     }
 
     // incremental session: submit everything, step to completion by hand
-    let mut online = Server::new(NativeEngine::new(model, "online"), serve_cfg());
+    let mut online = Server::new(NativeEngine::new(model, "online"), serve_cfg()).unwrap();
     for r in requests(8, 12, 6, cfg.vocab) {
         online.submit(r).unwrap();
     }
@@ -134,7 +134,7 @@ fn random_mid_decode_cancels_leak_nothing() {
         // so cancels also land on sequences still in the prefilling set
         let mut scfg = serve_cfg();
         scfg.prefill_chunk_tokens = *g.pick(&[0usize, 16]);
-        let mut srv = Server::new(engine, scfg);
+        let mut srv = Server::new(engine, scfg).unwrap();
 
         let n = g.usize(4..=8);
         let mut ids: Vec<u64> = Vec::new();
@@ -222,7 +222,7 @@ fn seeded_sampling_is_deterministic_across_runs() {
     let cfg = tiny_cfg();
     let model = Model::init(&cfg, 21);
     let sampled = |sample_seed: u64| -> Vec<Vec<usize>> {
-        let mut srv = Server::new(NativeEngine::new(model.clone(), "sampled"), serve_cfg());
+        let mut srv = Server::new(NativeEngine::new(model.clone(), "sampled"), serve_cfg()).unwrap();
         let reqs: Vec<Request> = requests(4, 10, 6, cfg.vocab)
             .into_iter()
             .map(|r| {
@@ -262,7 +262,7 @@ fn kv_aware_admission_packs_short_requests() {
     // 8 KiB: exactly one worst-case sequence (3 x 2 KiB blocks + 2 KiB tail)
     let budget_bytes = 8192usize;
     serve.kv_budget_mib = budget_bytes as f64 / (1024.0 * 1024.0);
-    let mut srv = Server::new(NativeEngine::new(model, "tight"), serve);
+    let mut srv = Server::new(NativeEngine::new(model, "tight"), serve).unwrap();
 
     // short requests: 8-token prompt + 4 new = 12 tokens = 1 block each
     let report = srv.run_trace(requests(6, 8, 4, cfg.vocab)).unwrap();
@@ -306,7 +306,7 @@ fn eviction_while_queued_rejects_only_that_request() {
     let mut arng = Rng::new(42);
     let mut engine = NativeEngine::new(model, "evict");
     engine.register_adapter("doomed", base.perturbed(0.05, &mut arng)).unwrap();
-    let mut srv = Server::new(engine, serve_cfg());
+    let mut srv = Server::new(engine, serve_cfg()).unwrap();
 
     let mut reqs = requests(3, 8, 3, cfg.vocab);
     reqs[1].adapter = "doomed".into();
@@ -339,7 +339,7 @@ fn eviction_while_queued_rejects_only_that_request() {
 fn open_loop_driver_resolves_all_requests_with_latency_metrics() {
     let cfg = tiny_cfg();
     let model = Model::init(&cfg, 51);
-    let mut srv = Server::new(NativeEngine::new(model, "open"), serve_cfg());
+    let mut srv = Server::new(NativeEngine::new(model, "open"), serve_cfg()).unwrap();
     // high rate: arrivals bunch up and the queue actually forms
     let report = run_open_loop(&mut srv, requests(8, 10, 5, cfg.vocab), 500.0, 3).unwrap();
     assert_eq!(report.metrics.completed, 8);

@@ -25,6 +25,8 @@
 //! | E0006 | module-map         | every top-level `pub mod` has a `lib.rs` map row       | `// MODMAP-OK: <why>`   |
 //! | E0007 | bench-discipline   | every `[[bench]]` is smoke-aware and writes a          | `// BENCH-OK: <why>`    |
 //! |       |                    | `BENCH_*.json` baseline                                |                         |
+//! | E0008 | fault-site-table   | every `fault::point!` site name is a string literal    | `// FAULT-OK: <why>`    |
+//! |       |                    | with a row in the README fault-site table              |                         |
 //!
 //! `// REPOLINT-OK: <why>` suppresses any rule at a site. Annotations
 //! count when they sit on the flagged line, or in the comment block (and
@@ -811,6 +813,79 @@ fn check_metrics(
 }
 
 // ---------------------------------------------------------------------------
+// E0008 — fault-site table
+// ---------------------------------------------------------------------------
+
+/// A `fault::point!(..)` injection site found in production source.
+struct FaultSite {
+    file: String,
+    line: usize,
+    arg: Arg,
+    escaped: bool,
+}
+
+/// Both spellings of the site macro. `fault::point!(` also covers the
+/// `crate::fault::point!(` form used inside the crate.
+const FAULT_TOKENS: &[&str] = &["fault::point!(", "fault_point!("];
+
+fn collect_fault_sites(scan: &Scan, rel: &str, sites: &mut Vec<FaultSite>) {
+    for ln in 0..scan.code.len() {
+        if scan.in_test[ln] {
+            continue;
+        }
+        for tok in FAULT_TOKENS {
+            let mut from = 0;
+            while let Some(p) = scan.code[ln][from..].find(tok) {
+                let p = from + p;
+                sites.push(FaultSite {
+                    file: rel.to_string(),
+                    line: ln + 1,
+                    arg: first_arg(scan, ln, p + tok.len()),
+                    escaped: annotated(scan, ln, "FAULT-OK:"),
+                });
+                from = p + tok.len();
+            }
+        }
+    }
+}
+
+/// Every injection site must be a grep-able string literal with a row in
+/// the README fault-site table — operators configure `--fault` specs by
+/// these names, so an undocumented site is unusable and an interpolated
+/// one is unfindable.
+fn check_fault_sites(sites: &[FaultSite], readme: &str, out: &mut Vec<Violation>) {
+    for s in sites {
+        if s.escaped {
+            continue;
+        }
+        let Arg::Lit(name) = &s.arg else {
+            out.push(Violation {
+                rule: "E0008",
+                slug: "fault-site-table",
+                file: s.file.clone(),
+                line: s.line,
+                msg: "fault site name is not a string literal — sites must be grep-able \
+                      constants; use a literal, or annotate `// FAULT-OK: <reason>`"
+                    .to_string(),
+            });
+            continue;
+        };
+        if !readme.contains(&format!("`{name}`")) {
+            out.push(Violation {
+                rule: "E0008",
+                slug: "fault-site-table",
+                file: s.file.clone(),
+                line: s.line,
+                msg: format!(
+                    "fault site `{name}` has no row in the README fault-site table — \
+                     document what the site guards and which kinds apply"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // E0006 — lib.rs module map
 // ---------------------------------------------------------------------------
 
@@ -997,6 +1072,7 @@ fn main() {
         scans.push((rel, scan));
     }
     let mut regs = Vec::new();
+    let mut fault_sites = Vec::new();
     for (rel, scan) in &scans {
         check_unsafe(scan, rel, &mut violations);
         check_panics(scan, rel, &mut violations);
@@ -1009,8 +1085,14 @@ fn main() {
         if rel.starts_with("rust/src/") && rel != "rust/src/obs/metrics.rs" {
             collect_metric_calls(scan, rel, &mut regs);
         }
+        // production sites only: tests and benches may probe ad-hoc names
+        // (e.g. the disabled-plane microcheck's `bench.noop`)
+        if rel.starts_with("rust/src/") {
+            collect_fault_sites(scan, rel, &mut fault_sites);
+        }
     }
     check_metrics(&regs, &consts, &readme, &mut violations);
+    check_fault_sites(&fault_sites, &readme, &mut violations);
     check_benches(&root, &mut violations);
 
     violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
@@ -1018,7 +1100,7 @@ fn main() {
         println!("{v}");
     }
     if violations.is_empty() {
-        println!("repolint: ok — {} files, 7 rules, 0 violations", scans.len());
+        println!("repolint: ok — {} files, 8 rules, 0 violations", scans.len());
     } else {
         eprintln!("repolint: {} violation(s)", violations.len());
         std::process::exit(1);
@@ -1220,6 +1302,57 @@ mod tests {
         check_module_map(&scan(text), "rust/src/lib.rs", &mut v);
         assert_eq!(v.len(), 1);
         assert!(v[0].msg.contains("`stray`"));
+    }
+
+    // -- E0008 ------------------------------------------------------------
+
+    #[test]
+    fn undocumented_fault_site_flagged_documented_one_passes() {
+        let text = "fn seal(&mut self) -> anyhow::Result<()> {\n\
+                    \x20   if let Some(k) = crate::fault::point!(\"kv.seal\") {\n\
+                    \x20       crate::fault::apply_fallible(\"kv.seal\", k)?;\n\
+                    \x20   }\n\
+                    }\n";
+        let mut sites = Vec::new();
+        collect_fault_sites(&scan(text), "rust/src/kvquant/pool.rs", &mut sites);
+        assert_eq!(sites.len(), 1, "only the macro call is a site, not apply_fallible");
+        let mut v = Vec::new();
+        check_fault_sites(&sites, "no table here", &mut v);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "E0008");
+        assert!(v[0].msg.contains("`kv.seal`"));
+        v.clear();
+        check_fault_sites(&sites, "| `kv.seal` | block seal | err, latency |", &mut v);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn non_literal_fault_site_needs_annotation() {
+        let bad = "fn f(site: &str) { let _ = crate::fault::point!(site); }\n";
+        let mut sites = Vec::new();
+        collect_fault_sites(&scan(bad), "rust/src/fault/mod.rs", &mut sites);
+        let mut v = Vec::new();
+        check_fault_sites(&sites, "", &mut v);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("not a string literal"));
+        let ok = "fn f(site: &str) {\n\
+                  \x20   // FAULT-OK: forwarding helper; callers pass documented literals.\n\
+                  \x20   let _ = crate::fault::point!(site);\n\
+                  }\n";
+        sites.clear();
+        collect_fault_sites(&scan(ok), "rust/src/fault/mod.rs", &mut sites);
+        v.clear();
+        check_fault_sites(&sites, "", &mut v);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn fault_sites_in_tests_are_exempt() {
+        let text = "#[cfg(test)]\nmod tests {\n\
+                    \x20   fn t() { let _ = crate::fault::point!(\"test.only\"); }\n}\n";
+        let mut sites = Vec::new();
+        collect_fault_sites(&scan(text), "rust/src/fault/mod.rs", &mut sites);
+        assert!(sites.is_empty());
     }
 
     // -- E0007 ------------------------------------------------------------
